@@ -1,0 +1,27 @@
+//! Fine-tuning (§4.3, MIT67 stand-in): frozen-backbone features, trainable
+//! head, b=16 / B=48 / τ_th=2 — the regime where importance sampling wins
+//! the hardest because most samples are handled correctly almost
+//! immediately. Prints the Fig.-4 comparison.
+//!
+//! ```bash
+//! cargo run --release --example finetune -- [budget_secs]
+//! ```
+
+use isample::figures::runner::{fig4_finetune, FigOptions};
+use isample::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let budget: f64 =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
+    let engine = Engine::load("artifacts")?;
+    let opts = FigOptions {
+        budget_secs: budget,
+        out_dir: "results".into(),
+        seeds: vec![42],
+        quick: budget < 30.0,
+        model: None,
+    };
+    fig4_finetune(&engine, &opts)?;
+    println!("CSV series under results/fig4/");
+    Ok(())
+}

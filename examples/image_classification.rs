@@ -1,0 +1,28 @@
+//! Image classification (the paper's §4.2 workload on the CIFAR stand-in):
+//! trains the convnet with every strategy at a fixed wall-clock budget and
+//! prints the equal-time comparison the paper's Fig. 3 plots.
+//!
+//! ```bash
+//! cargo run --release --example image_classification -- [budget_secs] [model]
+//! ```
+
+use isample::figures::runner::{fig3_image, FigOptions};
+use isample::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let budget: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(45.0);
+    let model = args.get(2).cloned();
+
+    let engine = Engine::load("artifacts")?;
+    let opts = FigOptions {
+        budget_secs: budget,
+        out_dir: "results".into(),
+        seeds: vec![42],
+        quick: budget < 30.0,
+        model,
+    };
+    fig3_image(&engine, &opts)?;
+    println!("CSV series under results/fig3_*/ (one file per strategy+seed, plus summary.csv)");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Sequence classification with an LSTM (§4.4, permuted pixel-by-pixel
+//! stand-in): the generality check — the same Algorithm 1 pipeline, no
+//! architecture-specific changes, on a recurrent model. Prints the Fig.-5
+//! comparison (where the paper shows loss-based sampling actively *hurts*).
+//!
+//! ```bash
+//! cargo run --release --example sequence_lstm -- [budget_secs]
+//! ```
+
+use isample::figures::runner::{fig5_lstm, FigOptions};
+use isample::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let budget: f64 =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
+    let engine = Engine::load("artifacts")?;
+    let opts = FigOptions {
+        budget_secs: budget,
+        out_dir: "results".into(),
+        seeds: vec![42],
+        quick: budget < 30.0,
+        model: None,
+    };
+    fig5_lstm(&engine, &opts)?;
+    println!("CSV series under results/fig5/");
+    Ok(())
+}

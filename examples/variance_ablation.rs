@@ -1,0 +1,30 @@
+//! The §4.1 ablation (Figs. 1 & 2): how much variance does each sampling
+//! scheme remove, and how well do the cheap scores (loss / Eq.-20 upper
+//! bound) track the ideal gradient-norm probabilities?
+//!
+//! ```bash
+//! cargo run --release --example variance_ablation -- [model=mlp10] [--full]
+//! ```
+//! `mlp10` runs in seconds; `cnn100` is the paper's actual ablation model.
+
+use isample::figures::runner::{fig1_variance, fig2_correlation, FigOptions};
+use isample::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "mlp10".into());
+    let quick = !args.iter().any(|a| a == "--full");
+
+    let engine = Engine::load("artifacts")?;
+    let opts = FigOptions {
+        budget_secs: 0.0, // figs 1/2 are step-based, not budget-based
+        out_dir: "results".into(),
+        seeds: vec![42],
+        quick,
+        model: Some(model),
+    };
+    fig1_variance(&engine, &opts)?;
+    fig2_correlation(&engine, &opts)?;
+    println!("CSVs under results/fig1/ and results/fig2/");
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT compiler: lower every (model, entry, batch) to HLO text + manifest.
+
+This is the *only* Python that ever runs: ``make artifacts`` invokes it once,
+it writes ``artifacts/*.hlo.txt`` plus ``artifacts/manifest.json``, and the
+rust coordinator is self-contained from then on.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest tells rust everything it needs to run without Python:
+  * per-model parameter tree (name/shape/init kind) + the SplitMix64 seeding
+    discipline (rng.py) so rust can initialize parameters bit-identically;
+  * per-artifact arg/output arity and shapes;
+  * a ``selfcheck`` block: deterministic inputs (formula-generated) and
+    expected outputs so rust integration tests can assert numerics
+    end-to-end against what Python computed at build time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from . import model as M
+from . import rng as R
+
+SELFCHECK_SEED = 42
+
+# Not every entry is needed for every model (see DESIGN.md §3):
+#   fig1/fig2 oracle (grad_norms)      -> cnn100 (paper's ablation net) + mlp10 (tests)
+#   SVRG substrate (grad, svrg_step)   -> fig6 runs the fig3 image setup + mlp10 (tests)
+ENTRIES_FOR_MODEL = {
+    "mlp10": [
+        "fwd_scores", "train_step", "grad_norms", "grad", "weighted_grad",
+        "svrg_step", "eval_metrics",
+    ],
+    "cnn10": ["fwd_scores", "train_step", "grad", "svrg_step", "eval_metrics"],
+    "cnn100": [
+        "fwd_scores", "train_step", "grad_norms", "grad", "weighted_grad",
+        "svrg_step", "eval_metrics",
+    ],
+    "finetune": ["fwd_scores", "train_step", "eval_metrics"],
+    "lstm": ["fwd_scores", "train_step", "eval_metrics"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def synth_inputs(model: M.Model, batch: int):
+    """Deterministic integer-math inputs shared with rust (selfcheck tests).
+
+    x[i, j] = ((i * D + j) % 97) / 97 - 0.5 ;  y[i] = i % C
+    """
+    d = model.feature_dim
+    idx = np.arange(batch * d, dtype=np.int64).reshape(batch, d)
+    x = ((idx % 97).astype(np.float32) / 97.0) - 0.5
+    y = (np.arange(batch, dtype=np.int64) % model.num_classes).astype(np.int32)
+    return x, y
+
+
+def init_params(model: M.Model, seed: int):
+    return [
+        R.init_tensor(seed, i, p.shape, p.init) for i, p in enumerate(model.params)
+    ]
+
+
+def build_selfcheck(model: M.Model) -> dict:
+    """Run fwd_scores + one train_step in python; bake expected numbers."""
+    params = init_params(model, SELFCHECK_SEED)
+    x, y = synth_inputs(model, model.batch)
+    fn = M.fwd_scores_fn(model)
+    loss, ghat = fn(*params, x, y)
+    loss = np.asarray(loss)
+    ghat = np.asarray(ghat)
+
+    # One uniform train step (w = 1, lr = 0.01), then the mean loss again —
+    # checks the whole train path including momentum/weight-decay plumbing.
+    mom = [np.zeros(p.shape, np.float32) for p in model.params]
+    w = np.ones(model.batch, np.float32)
+    step = M.train_step_fn(model)
+    out = step(*params, *mom, x, y, w, np.float32(0.01))
+    n = len(model.params)
+    new_params = [np.asarray(t) for t in out[:n]]
+    step_loss = float(out[2 * n])
+    loss2, _ = fn(*new_params, x, y)
+    return {
+        "seed": SELFCHECK_SEED,
+        "batch": model.batch,
+        "loss_head": [float(v) for v in loss[:4]],
+        "ghat_head": [float(v) for v in ghat[:4]],
+        "mean_loss": float(loss.mean()),
+        "step_loss": step_loss,
+        "mean_loss_after_step": float(np.asarray(loss2).mean()),
+        # first values of the first weight tensor, to pin the RNG contract
+        "param0_head": [float(v) for v in np.asarray(params[0]).reshape(-1)[:8]],
+    }
+
+
+def lower_entry(model: M.Model, entry: str, batch: int):
+    fn_f, specs_f = M.ENTRIES[entry]
+    fn = fn_f(model)
+    specs = specs_f(model, batch)
+    return jax.jit(fn).lower(*specs), specs
+
+
+def spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--models", default="all", help="comma list or 'all'")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):  # tolerate Makefile-style file target
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = (
+        list(ENTRIES_FOR_MODEL) if args.models == "all" else args.models.split(",")
+    )
+    manifest = {
+        "version": 1,
+        "format": "hlo-text",
+        "rng": {
+            "algo": "splitmix64",
+            "stream": "seed + tensor_index * 0x9E3779B97F4A7C15",
+            "uniform": "(next_u64() >> 11) * 2^-53",
+        },
+        "momentum": M.MOMENTUM,
+        "weight_decay": M.WEIGHT_DECAY,
+        "models": {},
+    }
+
+    for name in names:
+        model = M.MODELS[name]
+        t0 = time.time()
+        entries = []
+        for entry in ENTRIES_FOR_MODEL[name]:
+            for batch in M.entry_batches(model, entry):
+                lowered, specs = lower_entry(model, entry, batch)
+                text = to_hlo_text(lowered)
+                fname = f"{name}_{entry}_b{batch}.hlo.txt"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                entries.append(
+                    {
+                        "entry": entry,
+                        "batch": batch,
+                        "file": fname,
+                        "args": [spec_json(s) for s in specs],
+                    }
+                )
+                if not args.quiet:
+                    print(f"  {fname}: {len(text)} chars, {len(specs)} args")
+        manifest["models"][name] = {
+            "feature_dim": model.feature_dim,
+            "num_classes": model.num_classes,
+            "batch": model.batch,
+            "eval_batch": model.eval_batch,
+            "presample": list(model.presample),
+            "params": [
+                {"name": p.name, "shape": list(p.shape), "init": p.init}
+                for p in model.params
+            ],
+            "entries": entries,
+            "selfcheck": build_selfcheck(model),
+        }
+        if not args.quiet:
+            print(f"{name}: done in {time.time() - t0:.1f}s")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

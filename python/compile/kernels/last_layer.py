@@ -1,0 +1,180 @@
+"""Layer-1 Pallas kernels: fused last-layer loss + importance score.
+
+The paper's per-sample importance score (Eq. 20) is
+
+    ghat_i = || Sigma'_L(z_i) grad_{x^(L)} L ||_2
+
+i.e. the L2 norm of the gradient of the loss w.r.t. the *pre-activation*
+outputs of the last layer. For a linear last layer feeding softmax
+cross-entropy this is exactly
+
+    ghat_i = || softmax(z_i) - onehot(y_i) ||_2
+
+which is computable in closed form from the logits — one forward pass, no
+backprop. These kernels fuse the per-sample loss and the score into a single
+pass over the logits, tiled over the batch so each block lives in VMEM.
+
+Kernels
+-------
+``fused_loss_scores``   (z[b,C], y[b])            -> (loss[b], ghat[b])
+``weighted_xent_grad``  (z[b,C], y[b], w[b], gbar) -> dz[b,C]
+
+The second kernel is the backward twin: d/dz of (1/b) sum_i w_i * loss_i,
+scaled by the incoming cotangent ``gbar``. Together they let the training
+step backprop *through* the Pallas kernel via ``jax.custom_vjp`` (see
+``python/compile/model.py``), so L1 sits on both the scoring and the
+training hot path.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls. The BlockSpec schedule (block rows BT over a
+``grid=(ceil(b/BT),)``) is what a real TPU lowering would use; DESIGN.md
+§Hardware-Adaptation and EXPERIMENTS.md §Perf estimate its VMEM/VPU
+behaviour analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of logits per VMEM block. 3 live f32 blocks of (128, C<=128) are
+# ~196 KiB — far under the 16 MiB VMEM budget; 128 keeps the VPU lanes
+# (8x128) fully occupied on the class axis for C >= 128 and amortizes the
+# grid overhead for small C.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _num_blocks(b: int, bt: int) -> int:
+    return (b + bt - 1) // bt
+
+
+# ---------------------------------------------------------------------------
+# fused_loss_scores
+# ---------------------------------------------------------------------------
+
+
+def _fused_loss_scores_kernel(z_ref, y_ref, loss_ref, g_ref, *, num_classes):
+    """One (BT, C) block: per-row softmax-xent loss and score.
+
+    loss_i = logsumexp(z_i) - z_i[y_i]
+    g_i    = || softmax(z_i) - onehot(y_i) ||_2
+    """
+    z = z_ref[...].astype(jnp.float32)  # (BT, C)
+    y = y_ref[...]  # (BT,) int32
+
+    # Numerically stable logsumexp per row.
+    zmax = jnp.max(z, axis=-1, keepdims=True)  # (BT, 1)
+    ez = jnp.exp(z - zmax)  # (BT, C)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)  # (BT, 1)
+    lse = jnp.log(sez) + zmax  # (BT, 1)
+
+    # Gather z[i, y_i] without dynamic gather: onehot via iota comparison
+    # (TPU-friendly; gathers lower poorly in Mosaic).
+    classes = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)  # (BT, C)
+    onehot = (classes == y[:, None]).astype(jnp.float32)  # (BT, C)
+    z_true = jnp.sum(z * onehot, axis=-1, keepdims=True)  # (BT, 1)
+
+    loss = lse - z_true  # (BT, 1)
+
+    p = ez / sez  # softmax, (BT, C)
+    d = p - onehot
+    g = jnp.sqrt(jnp.sum(d * d, axis=-1, keepdims=True))  # (BT, 1)
+
+    loss_ref[...] = loss[:, 0]
+    g_ref[...] = g[:, 0]
+
+
+def fused_loss_scores(z, y, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Per-sample loss and Eq.-20 upper-bound score from logits.
+
+    Args:
+      z: f32[b, C] logits (pre-activation outputs of the last layer).
+      y: i32[b] integer class labels.
+      block_rows: batch tile height (VMEM block rows).
+
+    Returns:
+      (loss, ghat): two f32[b] vectors.
+    """
+    b, num_classes = z.shape
+    bt = min(block_rows, b)
+    grid = (_num_blocks(b, bt),)
+    kernel = functools.partial(_fused_loss_scores_kernel, num_classes=num_classes)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, num_classes), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(z, y)
+
+
+# ---------------------------------------------------------------------------
+# weighted_xent_grad
+# ---------------------------------------------------------------------------
+
+
+def _weighted_xent_grad_kernel(z_ref, y_ref, w_ref, gbar_ref, dz_ref, *, inv_b):
+    """One (BT, C) block of d/dz [ (1/b) sum_i w_i loss_i ] * gbar."""
+    z = z_ref[...].astype(jnp.float32)
+    y = y_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    gbar = gbar_ref[0]
+
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    p = ez / jnp.sum(ez, axis=-1, keepdims=True)
+
+    classes = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    onehot = (classes == y[:, None]).astype(jnp.float32)
+
+    scale = (w * (inv_b * gbar))[:, None]  # (BT, 1)
+    dz_ref[...] = (p - onehot) * scale
+
+
+def weighted_xent_grad(z, y, w, gbar, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Gradient of the re-weighted mean cross-entropy w.r.t. logits.
+
+    Computes ``dz[i, :] = w[i]/b * (softmax(z_i) - onehot(y_i)) * gbar`` —
+    the VJP of ``(1/b) * sum_i w_i * xent(z_i, y_i)`` with scalar cotangent
+    ``gbar``.
+
+    Args:
+      z: f32[b, C] logits.
+      y: i32[b] labels.
+      w: f32[b] per-sample importance weights (1 for uniform sampling).
+      gbar: f32[1] cotangent of the scalar loss.
+
+    Returns:
+      dz: f32[b, C].
+    """
+    b, num_classes = z.shape
+    bt = min(block_rows, b)
+    grid = (_num_blocks(b, bt),)
+    kernel = functools.partial(_weighted_xent_grad_kernel, inv_b=1.0 / b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, num_classes), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            # gbar is a broadcast scalar: every block sees the same (1,) slab.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, num_classes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, num_classes), jnp.float32),
+        interpret=True,
+    )(z, y, w, gbar)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness ground truth: slow, obvious, no tiling, no fusion.
+pytest (and the hypothesis sweeps in ``python/tests``) assert the Pallas
+kernels match these to tight tolerances across shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent_loss(z, y):
+    """Per-sample softmax cross-entropy loss. f32[b]."""
+    z = z.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    z_true = jnp.take_along_axis(z, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - z_true
+
+
+def upper_bound_scores(z, y):
+    """Eq.-20 score: || softmax(z_i) - onehot(y_i) ||_2. f32[b]."""
+    z = z.astype(jnp.float32)
+    p = jax.nn.softmax(z, axis=-1)
+    onehot = jax.nn.one_hot(y, z.shape[-1], dtype=jnp.float32)
+    return jnp.linalg.norm(p - onehot, axis=-1)
+
+
+def fused_loss_scores(z, y):
+    """Oracle twin of kernels.last_layer.fused_loss_scores."""
+    return softmax_xent_loss(z, y), upper_bound_scores(z, y)
+
+
+def weighted_xent_mean(z, y, w):
+    """(1/b) sum_i w_i * xent(z_i, y_i) — the loss whose d/dz the bwd kernel computes."""
+    return jnp.mean(w * softmax_xent_loss(z, y))
+
+
+def weighted_xent_grad(z, y, w, gbar):
+    """Oracle twin of kernels.last_layer.weighted_xent_grad via autodiff."""
+    g = jax.grad(lambda zz: weighted_xent_mean(zz, y, w))(z.astype(jnp.float32))
+    return g * gbar[0]

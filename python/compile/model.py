@@ -1,0 +1,487 @@
+"""Layer-2: JAX model definitions and AOT entry points.
+
+Every numeric routine the rust coordinator executes at run time is defined
+here, as a pure function over *flat positional arguments* (each parameter
+tensor is its own argument, so the HLO parameter order is unambiguous), and
+lowered once by ``aot.py`` to HLO text.
+
+Models (one per paper task):
+  * ``mlp10``    — small MLP, quickstart + fast tests                (§4.2 proxy)
+  * ``cnn10``    — convnet, 10 classes  (CIFAR-10 stand-in)          (§4.2)
+  * ``cnn100``   — convnet, 100 classes (CIFAR-100 stand-in; also the
+                   Fig-1/Fig-2 ablation model)                       (§4.1, §4.2)
+  * ``finetune`` — frozen-backbone features -> trainable head        (§4.3)
+  * ``lstm``     — LSTM sequence classifier over T steps             (§4.4)
+
+Entry points per model (see ``ENTRIES``):
+  * ``fwd_scores(params, x, y) -> (loss[b], ghat[b])`` — single forward pass
+    producing the per-sample loss and the Eq.-20 upper-bound score, through
+    the L1 Pallas kernel.
+  * ``train_step(params, mom, x, y, w, lr) -> (params', mom', loss)`` —
+    weighted SGD+momentum step (Eq. 2); the backward pass goes through the
+    L1 kernel's custom VJP.
+  * ``grad_norms(params, x, y) -> gnorm[b]`` — *true* per-sample gradient
+    norms (vmap-of-grad); the expensive oracle of Fig. 1/2.
+  * ``grad(params, x, y) -> (grads..., loss)`` — mean minibatch gradient
+    (SVRG/SCSG substrate).
+  * ``svrg_step(params, snap, mu, x, y, lr) -> (params', loss)`` — one SVRG
+    inner step: theta - lr * (g_i(theta) - g_i(snap) + mu).
+  * ``eval_metrics(params, x, y) -> (sum_loss, correct)`` — test-set shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import last_layer as ll
+from .kernels import ref
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+# ---------------------------------------------------------------------------
+# Weighted cross-entropy with a Pallas forward AND backward (custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def weighted_xent(z, y, w):
+    """(1/b) sum_i w_i * xent(z_i, y_i), fwd+bwd through the L1 kernels."""
+    loss, _ = ll.fused_loss_scores(z, y)
+    return jnp.mean(w * loss)
+
+
+def _wx_fwd(z, y, w):
+    loss, _ = ll.fused_loss_scores(z, y)
+    return jnp.mean(w * loss), (z, y, w, loss)
+
+
+def _wx_bwd(residuals, gbar):
+    z, y, w, loss = residuals
+    dz = ll.weighted_xent_grad(z, y, w, jnp.reshape(gbar, (1,)))
+    dw = loss * gbar / z.shape[0]
+    return dz, None, dw
+
+
+weighted_xent.defvjp(_wx_fwd, _wx_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Model definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # rng.init_tensor kind
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A model family: parameter specs + a pure apply(params, x) -> logits."""
+
+    name: str
+    params: Tuple[ParamSpec, ...]
+    feature_dim: int  # per-sample input width (x is f32[b, feature_dim])
+    num_classes: int
+    apply: Callable  # (list[Array], Array[b, feature_dim]) -> Array[b, C]
+    batch: int  # paper's training batch size b
+    presample: Tuple[int, ...]  # presample sizes B to bake
+    eval_batch: int
+
+
+def _mlp_apply(dims: Sequence[int]):
+    def apply(params, x):
+        h = x
+        n = len(dims) - 1
+        for i in range(n):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = h @ w + b
+            if i + 1 < n:
+                h = jax.nn.relu(h)
+        return h
+
+    return apply
+
+
+def _mlp_params(dims: Sequence[int]) -> Tuple[ParamSpec, ...]:
+    out = []
+    for i in range(len(dims) - 1):
+        out.append(ParamSpec(f"w{i}", (dims[i], dims[i + 1]), "glorot_uniform"))
+        out.append(ParamSpec(f"b{i}", (dims[i + 1],), "zeros"))
+    return tuple(out)
+
+
+def _cnn_apply(side: int, chans: Sequence[int]):
+    """conv3x3(c0) -> relu -> conv3x3/2(c1) -> relu -> conv3x3/2(c2) -> relu
+    -> global-avg-pool -> dense. A wide-resnet-lite stand-in sized for CPU."""
+
+    def apply(params, x):
+        b = x.shape[0]
+        h = x.reshape(b, side, side, 3)
+        (k0, b0, k1, b1, k2, b2, wd, bd) = params
+        dnums = ("NHWC", "HWIO", "NHWC")
+        h = jax.lax.conv_general_dilated(
+            h, k0, (1, 1), "SAME", dimension_numbers=dnums
+        )
+        h = jax.nn.relu(h + b0)
+        h = jax.lax.conv_general_dilated(
+            h, k1, (2, 2), "SAME", dimension_numbers=dnums
+        )
+        h = jax.nn.relu(h + b1)
+        h = jax.lax.conv_general_dilated(
+            h, k2, (2, 2), "SAME", dimension_numbers=dnums
+        )
+        h = jax.nn.relu(h + b2)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool -> (b, c2)
+        return h @ wd + bd
+
+    return apply
+
+
+def _cnn_params(chans: Sequence[int], num_classes: int) -> Tuple[ParamSpec, ...]:
+    c0, c1, c2 = chans
+    return (
+        ParamSpec("k0", (3, 3, 3, c0), "scaled_normal"),
+        ParamSpec("cb0", (c0,), "zeros"),
+        ParamSpec("k1", (3, 3, c0, c1), "scaled_normal"),
+        ParamSpec("cb1", (c1,), "zeros"),
+        ParamSpec("k2", (3, 3, c1, c2), "scaled_normal"),
+        ParamSpec("cb2", (c2,), "zeros"),
+        ParamSpec("wd", (c2, num_classes), "glorot_uniform"),
+        ParamSpec("bd", (num_classes,), "zeros"),
+    )
+
+
+def _lstm_apply(hidden: int):
+    def apply(params, x):
+        wx, wh, bias, wo, bo = params
+        b = x.shape[0]
+        h0 = jnp.zeros((b, hidden), jnp.float32)
+        c0 = jnp.zeros((b, hidden), jnp.float32)
+        xs = x.T[:, :, None]  # (T, b, 1)
+
+        def step(carry, xt):
+            h, c = carry
+            gates = xt @ wx + h @ wh + bias  # (b, 4H)
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), xs)
+        return h @ wo + bo
+
+    return apply
+
+
+def _lstm_params(hidden: int, num_classes: int) -> Tuple[ParamSpec, ...]:
+    return (
+        ParamSpec("wx", (1, 4 * hidden), "glorot_uniform"),
+        ParamSpec("wh", (hidden, 4 * hidden), "glorot_uniform"),
+        ParamSpec("bias", (4 * hidden,), "lstm_bias"),
+        ParamSpec("wo", (hidden, num_classes), "glorot_uniform"),
+        ParamSpec("bo", (num_classes,), "zeros"),
+    )
+
+
+def _models() -> Dict[str, Model]:
+    side = 16
+    models = {}
+    models["mlp10"] = Model(
+        name="mlp10",
+        params=_mlp_params([64, 128, 128, 10]),
+        feature_dim=64,
+        num_classes=10,
+        apply=_mlp_apply([64, 128, 128, 10]),
+        batch=128,
+        presample=(384, 640, 1024),
+        eval_batch=512,
+    )
+    for nc in (10, 100):
+        chans = (16, 32, 32)
+        models[f"cnn{nc}"] = Model(
+            name=f"cnn{nc}",
+            params=_cnn_params(chans, nc),
+            feature_dim=side * side * 3,
+            num_classes=nc,
+            apply=_cnn_apply(side, chans),
+            batch=128,
+            presample=(384, 640, 1024),
+            eval_batch=512,
+        )
+    models["finetune"] = Model(
+        name="finetune",
+        params=_mlp_params([512, 256, 67]),
+        feature_dim=512,
+        num_classes=67,
+        apply=_mlp_apply([512, 256, 67]),
+        batch=16,
+        presample=(48,),
+        eval_batch=256,
+    )
+    t, hidden = 64, 64
+    models["lstm"] = Model(
+        name="lstm",
+        params=_lstm_params(hidden, 10),
+        feature_dim=t,
+        num_classes=10,
+        apply=_lstm_apply(hidden),
+        batch=32,
+        presample=(128,),
+        eval_batch=256,
+    )
+    return models
+
+
+MODELS: Dict[str, Model] = _models()
+
+
+# ---------------------------------------------------------------------------
+# Entry points (flat positional args, ready to lower)
+# ---------------------------------------------------------------------------
+
+
+def _param_specs(model: Model):
+    return [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in model.params]
+
+
+def _xy_specs(model: Model, batch: int):
+    return [
+        jax.ShapeDtypeStruct((batch, model.feature_dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+
+
+def fwd_scores_fn(model: Model):
+    n = len(model.params)
+
+    def fn(*args):
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        z = model.apply(params, x)
+        loss, ghat = ll.fused_loss_scores(z, y)
+        return loss, ghat
+
+    return fn
+
+
+def fwd_scores_specs(model: Model, batch: int):
+    return _param_specs(model) + _xy_specs(model, batch)
+
+
+def train_step_fn(model: Model):
+    """Weighted SGD+momentum step that ALSO returns per-sample loss + ghat.
+
+    Single forward pass (``jax.vjp`` through ``model.apply``), with both L1
+    kernels on the hot path: ``fused_loss_scores`` produces the per-sample
+    loss and Eq.-20 score from the logits, ``weighted_xent_grad`` produces
+    the logits cotangent. Returning the scores makes Algorithm 1 line 15
+    ("we compute g_i for free since we have done the forward pass") *true*
+    in the AOT artifact — the warmup phase needs no extra forward pass.
+    """
+    n = len(model.params)
+
+    def fn(*args):
+        params = list(args[:n])
+        mom = list(args[n : 2 * n])
+        x, y, w, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2], args[2 * n + 3]
+
+        z, vjp = jax.vjp(lambda ps: model.apply(ps, x), params)
+        loss_vec, ghat = ll.fused_loss_scores(z, y)
+        loss = jnp.mean(w * loss_vec)
+        dz = ll.weighted_xent_grad(z, y, w, jnp.ones((1,), jnp.float32))
+        (grads,) = vjp(dz)
+
+        new_params, new_mom = [], []
+        for p, m, g in zip(params, mom, grads):
+            # Weight decay on matrices/kernels only (Keras-style kernel L2).
+            if p.ndim > 1:
+                g = g + WEIGHT_DECAY * p
+            m2 = MOMENTUM * m + g
+            new_mom.append(m2)
+            new_params.append(p - lr * m2)
+        return (*new_params, *new_mom, loss, loss_vec, ghat)
+
+    return fn
+
+
+def train_step_specs(model: Model, batch: int):
+    ps = _param_specs(model)
+    return (
+        ps
+        + ps  # momentum slots
+        + _xy_specs(model, batch)
+        + [
+            jax.ShapeDtypeStruct((batch,), jnp.float32),  # w
+            jax.ShapeDtypeStruct((), jnp.float32),  # lr
+        ]
+    )
+
+
+def grad_norms_fn(model: Model):
+    n = len(model.params)
+
+    def fn(*args):
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+
+        def one(xi, yi):
+            def lf(ps):
+                z = model.apply(ps, xi[None])
+                return ref.softmax_xent_loss(z, yi[None])[0]
+
+            gs = jax.grad(lf)(params)
+            sq = sum(jnp.vdot(g, g) for g in gs)
+            return jnp.sqrt(sq)
+
+        return (jax.vmap(one)(x, y),)
+
+    return fn
+
+
+def grad_norms_specs(model: Model, batch: int):
+    return _param_specs(model) + _xy_specs(model, batch)
+
+
+def weighted_grad_fn(model: Model):
+    """Gradient of the re-weighted loss: d/dθ (1/b) Σ w_i loss_i.
+
+    This is exactly the estimator a weighted SGD step applies (Eq. 2); the
+    Fig-1 analysis uses it to measure ||G_b - G_B|| without touching the
+    optimizer state.
+    """
+    n = len(model.params)
+
+    def fn(*args):
+        params = list(args[:n])
+        x, y, w = args[n], args[n + 1], args[n + 2]
+
+        def lf(ps):
+            z = model.apply(ps, x)
+            return weighted_xent(z, y, w)
+
+        loss, gs = jax.value_and_grad(lf)(params)
+        return (*gs, loss)
+
+    return fn
+
+
+def weighted_grad_specs(model: Model, batch: int):
+    return (
+        _param_specs(model)
+        + _xy_specs(model, batch)
+        + [jax.ShapeDtypeStruct((batch,), jnp.float32)]
+    )
+
+
+def grad_fn(model: Model):
+    n = len(model.params)
+
+    def fn(*args):
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+
+        def lf(ps):
+            z = model.apply(ps, x)
+            return jnp.mean(ref.softmax_xent_loss(z, y))
+
+        loss, gs = jax.value_and_grad(lf)(params)
+        return (*gs, loss)
+
+    return fn
+
+
+def grad_specs(model: Model, batch: int):
+    return _param_specs(model) + _xy_specs(model, batch)
+
+
+def svrg_step_fn(model: Model):
+    n = len(model.params)
+
+    def fn(*args):
+        params = list(args[:n])
+        snap = list(args[n : 2 * n])
+        mu = list(args[2 * n : 3 * n])
+        x, y, lr = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        def lf(ps):
+            z = model.apply(ps, x)
+            return jnp.mean(ref.softmax_xent_loss(z, y))
+
+        loss, g_cur = jax.value_and_grad(lf)(params)
+        g_snap = jax.grad(lf)(snap)
+        new_params = [
+            p - lr * (gc - gs + m) for p, gc, gs, m in zip(params, g_cur, g_snap, mu)
+        ]
+        return (*new_params, loss)
+
+    return fn
+
+
+def svrg_step_specs(model: Model, batch: int):
+    ps = _param_specs(model)
+    return (
+        ps
+        + ps  # snapshot params
+        + ps  # mu = full gradient at snapshot
+        + _xy_specs(model, batch)
+        + [jax.ShapeDtypeStruct((), jnp.float32)]
+    )
+
+
+def eval_metrics_fn(model: Model):
+    n = len(model.params)
+
+    def fn(*args):
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        z = model.apply(params, x)
+        loss = ref.softmax_xent_loss(z, y)
+        correct = jnp.sum((jnp.argmax(z, axis=-1) == y).astype(jnp.int32))
+        return jnp.sum(loss), correct
+
+    return fn
+
+
+def eval_metrics_specs(model: Model, batch: int):
+    return _param_specs(model) + _xy_specs(model, batch)
+
+
+def entry_batches(model: Model, entry: str) -> List[int]:
+    """Which batch sizes to bake for each entry point."""
+    b, evalb = model.batch, model.eval_batch
+    pres = list(model.presample)
+    if entry == "fwd_scores":
+        # score at the training batch (warmup line 15 of Alg. 1 is "free")
+        # and at every presample size.
+        return sorted(set([b] + pres))
+    if entry == "train_step":
+        return [b]
+    if entry == "grad_norms":
+        # the Fig-1/2 oracle runs at the largest presample size; the small
+        # training batch is baked too for integration tests.
+        return sorted(set([b, max(pres)]))
+    if entry == "grad":
+        return [b]
+    if entry == "weighted_grad":
+        return [b]
+    if entry == "svrg_step":
+        return [b]
+    if entry == "eval_metrics":
+        return [evalb]
+    raise ValueError(entry)
+
+
+ENTRIES = {
+    "fwd_scores": (fwd_scores_fn, fwd_scores_specs),
+    "train_step": (train_step_fn, train_step_specs),
+    "grad_norms": (grad_norms_fn, grad_norms_specs),
+    "grad": (grad_fn, grad_specs),
+    "weighted_grad": (weighted_grad_fn, weighted_grad_specs),
+    "svrg_step": (svrg_step_fn, svrg_step_specs),
+    "eval_metrics": (eval_metrics_fn, eval_metrics_specs),
+}

@@ -1,0 +1,110 @@
+"""SplitMix64 — the cross-language deterministic RNG.
+
+Parameter initialization happens in **rust** at run time (Python is never on
+the request path), but the AOT self-check (``manifest.json: selfcheck``)
+needs Python to predict exactly which parameter values rust will generate.
+Both sides therefore implement the same SplitMix64 stream:
+
+    state += 0x9E3779B97F4A7C15
+    z = state
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EB
+    z = z ^ (z >> 31)
+
+``uniform()`` maps the top 53 bits to f64 in [0, 1). Tensor ``i`` of a model
+uses the stream seeded with ``seed + i * GOLDEN`` (documented in the
+manifest); draws are row-major over the tensor.
+
+The rust twin is ``rust/src/util/rng.rs``; ``rust/tests`` cross-check the
+first draws against vectors baked into the manifest.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+class SplitMix64:
+    """Exact-u64 SplitMix64, bit-identical to the rust implementation."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def uniform(self) -> float:
+        """f64 in [0, 1): top 53 bits / 2^53 (same expression as rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_range(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.uniform()
+
+
+def tensor_stream(seed: int, tensor_index: int) -> SplitMix64:
+    """The per-tensor stream: independent, order-insensitive across tensors."""
+    return SplitMix64((seed + tensor_index * GOLDEN) & MASK64)
+
+
+def init_tensor(seed: int, tensor_index: int, shape, kind: str):
+    """Generate one parameter tensor exactly as rust's ParamInit does.
+
+    kinds:
+      zeros          — all zeros (biases, momentum slots)
+      glorot_uniform — U(-a, a), a = sqrt(6 / (fan_in + fan_out))
+      lstm_bias      — zeros with the forget-gate quarter set to 1.0
+      scaled_normal  — N(0, 2/fan_in) via Box-Muller (conv kernels)
+    """
+    import numpy as np
+
+    n = 1
+    for d in shape:
+        n *= d
+    if kind == "zeros":
+        return np.zeros(shape, dtype=np.float32)
+    if kind == "lstm_bias":
+        # shape = (4H,): gate order [i, f, g, o]; forget-gate biased to 1.
+        out = np.zeros(shape, dtype=np.float32)
+        h = shape[0] // 4
+        out[h : 2 * h] = 1.0
+        return out
+
+    rng = tensor_stream(seed, tensor_index)
+    if kind == "glorot_uniform":
+        fan_in, fan_out = _fans(shape)
+        a = (6.0 / (fan_in + fan_out)) ** 0.5
+        vals = [rng.uniform_range(-a, a) for _ in range(n)]
+        return np.asarray(vals, dtype=np.float32).reshape(shape)
+    if kind == "scaled_normal":
+        import math
+
+        fan_in, _ = _fans(shape)
+        std = math.sqrt(2.0 / fan_in)
+        vals = []
+        while len(vals) < n:
+            # Box-Muller, same draw order as rust (u1 then u2, both outputs used).
+            u1 = max(rng.uniform(), 1e-12)
+            u2 = rng.uniform()
+            r = math.sqrt(-2.0 * math.log(u1))
+            vals.append(r * math.cos(2.0 * math.pi * u2) * std)
+            vals.append(r * math.sin(2.0 * math.pi * u2) * std)
+        return np.asarray(vals[:n], dtype=np.float32).reshape(shape)
+    raise ValueError(f"unknown init kind {kind!r}")
+
+
+def _fans(shape):
+    """fan_in/fan_out, matching rust: conv HWIO uses receptive-field product."""
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    if len(shape) == 4:  # HWIO
+        rf = shape[0] * shape[1]
+        return shape[2] * rf, shape[3] * rf
+    n = 1
+    for d in shape:
+        n *= d
+    return n, n

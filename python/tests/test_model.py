@@ -1,0 +1,187 @@
+"""L2 correctness: entry points vs independent references.
+
+Validates, for every model family:
+  * ``fwd_scores``'s ghat equals the autodiff ``|| d loss / d logits ||_2``
+    (the quantity Eq. 20 bounds with — exact for a linear last layer);
+  * ``train_step`` equals a hand-rolled SGD+momentum+weight-decay update;
+  * ``grad_norms`` equals per-sample ``jax.grad`` norms;
+  * ``grad`` equals the mean autodiff gradient;
+  * ``svrg_step`` algebra: g_cur - g_snap + mu;
+  * ``eval_metrics`` counts and sums.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.aot import init_params, synth_inputs
+from compile.kernels import ref
+
+SMALL = ["mlp10", "finetune", "lstm"]  # fast enough to test at full batch
+ALL = ["mlp10", "cnn10", "cnn100", "finetune", "lstm"]
+
+
+def setup(name, batch=None, seed=42):
+    m = M.MODELS[name]
+    b = batch or m.batch
+    params = [jnp.asarray(p) for p in init_params(m, seed)]
+    x, y = synth_inputs(m, b)
+    return m, params, jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fwd_scores_ghat_is_last_layer_grad_norm(name):
+    m, params, x, y = setup(name, batch=16)
+    loss, ghat = M.fwd_scores_fn(m)(*params, x, y)
+
+    z = m.apply(params, x)
+    # autodiff per-sample gradient of the loss w.r.t. logits
+    def per_sample(zi, yi):
+        g = jax.grad(lambda zz: ref.softmax_xent_loss(zz[None], yi[None])[0])(zi)
+        return jnp.linalg.norm(g)
+
+    expect = jax.vmap(per_sample)(z, y)
+    np.testing.assert_allclose(ghat, expect, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(loss, ref.softmax_xent_loss(z, y), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_train_step_matches_manual_sgd(name):
+    m, params, x, y = setup(name)
+    n = len(m.params)
+    rng = np.random.RandomState(5)
+    mom = [jnp.asarray(rng.randn(*p.shape).astype(np.float32) * 0.01) for p in m.params]
+    w = jnp.asarray(rng.rand(m.batch).astype(np.float32) + 0.5)
+    lr = np.float32(0.05)
+
+    out = M.train_step_fn(m)(*params, *mom, x, y, w, lr)
+    got_params, got_mom, got_loss = out[:n], out[n : 2 * n], out[2 * n]
+
+    # manual update with pure-jnp loss
+    def loss_fn(ps):
+        z = m.apply(ps, x)
+        return ref.weighted_xent_mean(z, y, w)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    np.testing.assert_allclose(got_loss, loss, rtol=1e-5, atol=1e-6)
+    for p, mo, g, gp, gm in zip(params, mom, grads, got_params, got_mom):
+        if p.ndim > 1:
+            g = g + M.WEIGHT_DECAY * p
+        m2 = M.MOMENTUM * mo + g
+        np.testing.assert_allclose(gm, m2, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(gp, p - lr * m2, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["mlp10"])
+def test_grad_norms_matches_per_sample_grad(name):
+    m, params, x, y = setup(name, batch=8)
+    (got,) = M.grad_norms_fn(m)(*params, x, y)
+
+    for i in range(8):
+        def lf(ps):
+            z = m.apply(ps, x[i : i + 1])
+            return ref.softmax_xent_loss(z, y[i : i + 1])[0]
+
+        gs = jax.grad(lf)(list(params))
+        expect = float(jnp.sqrt(sum(jnp.vdot(g, g) for g in gs)))
+        np.testing.assert_allclose(float(got[i]), expect, rtol=1e-4, atol=1e-6)
+
+
+def test_upper_bound_tracks_grad_norm_after_training():
+    # The paper's claim behind Fig. 2: on a *trained* network ghat is an
+    # excellent (proportional) predictor of the true per-sample grad norm.
+    # (At initialization all scores are near-uniform — also paper-consistent:
+    # §3.3 "during the first iterations ... approximately equal norm".)
+    m, params, x, y = setup("mlp10", batch=128)
+    n = len(m.params)
+    mom = [jnp.zeros(p.shape, jnp.float32) for p in m.params]
+    w = jnp.ones(m.batch, jnp.float32)
+    step = jax.jit(M.train_step_fn(m))
+    params = list(params)
+    for _ in range(200):
+        out = step(*params, *mom, x, y, w, np.float32(0.1))
+        params, mom = list(out[:n]), list(out[n : 2 * n])
+    _, ghat = M.fwd_scores_fn(m)(*params, x, y)
+    (gnorm,) = M.grad_norms_fn(m)(*params, x, y)
+    ghat, gnorm = np.asarray(ghat), np.asarray(gnorm)
+    # Spearman rank correlation, computed by hand (no scipy dependency).
+    def ranks(v):
+        r = np.empty_like(v)
+        r[np.argsort(v)] = np.arange(len(v))
+        return r
+
+    rg, rn = ranks(ghat), ranks(gnorm)
+    rho = np.corrcoef(rg, rn)[0, 1]
+    assert rho > 0.7, f"rank correlation too low: {rho}"
+
+
+@pytest.mark.parametrize("name", ["mlp10"])
+def test_grad_entry(name):
+    m, params, x, y = setup(name)
+    n = len(m.params)
+    out = M.grad_fn(m)(*params, x, y)
+    grads, loss = out[:n], out[n]
+
+    def lf(ps):
+        z = m.apply(ps, x)
+        return jnp.mean(ref.softmax_xent_loss(z, y))
+
+    eloss, egrads = jax.value_and_grad(lf)(list(params))
+    np.testing.assert_allclose(loss, eloss, rtol=1e-5)
+    for g, e in zip(grads, egrads):
+        np.testing.assert_allclose(g, e, rtol=1e-4, atol=1e-7)
+
+
+def test_svrg_step_algebra():
+    m, params, x, y = setup("mlp10")
+    n = len(m.params)
+    rng = np.random.RandomState(9)
+    snap = [p + 0.01 * rng.randn(*p.shape).astype(np.float32) for p in params]
+    mu = [jnp.asarray(rng.randn(*p.shape).astype(np.float32) * 0.001) for p in m.params]
+    lr = np.float32(0.1)
+    out = M.svrg_step_fn(m)(*params, *snap, *mu, x, y, lr)
+    got_params = out[:n]
+
+    def lf(ps):
+        z = m.apply(ps, x)
+        return jnp.mean(ref.softmax_xent_loss(z, y))
+
+    g_cur = jax.grad(lf)(list(params))
+    g_snap = jax.grad(lf)([jnp.asarray(s) for s in snap])
+    for p, gc, gs, mm, gp in zip(params, g_cur, g_snap, mu, got_params):
+        np.testing.assert_allclose(gp, p - lr * (gc - gs + mm), rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["mlp10", "lstm"])
+def test_eval_metrics(name):
+    m, params, x, y = setup(name, batch=m_batch(name))
+    sum_loss, correct = M.eval_metrics_fn(m)(*params, x, y)
+    z = m.apply(params, x)
+    eloss = ref.softmax_xent_loss(z, y)
+    np.testing.assert_allclose(sum_loss, jnp.sum(eloss), rtol=1e-5)
+    ecorrect = int(jnp.sum((jnp.argmax(z, -1) == y).astype(jnp.int32)))
+    assert int(correct) == ecorrect
+
+
+def m_batch(name):
+    return M.MODELS[name].eval_batch
+
+
+def test_training_reduces_loss():
+    # A few hundred steps of uniform SGD on the synthetic inputs must reduce
+    # the loss — the L2 graph actually learns.
+    m, params, x, y = setup("mlp10")
+    n = len(m.params)
+    mom = [jnp.zeros(p.shape, jnp.float32) for p in m.params]
+    w = jnp.ones(m.batch, jnp.float32)
+    step = jax.jit(M.train_step_fn(m))
+    first = None
+    params = list(params)
+    for i in range(200):
+        out = step(*params, *mom, x, y, w, np.float32(0.1))
+        params, mom, loss = list(out[:n]), list(out[n : 2 * n]), float(out[2 * n])
+        if first is None:
+            first = loss
+    assert loss < first * 0.5, f"loss did not drop: {first} -> {loss}"

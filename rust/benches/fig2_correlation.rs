@@ -1,0 +1,26 @@
+//! End-to-end bench regenerating the score-vs-gradnorm correlation + SSE (paper Fig. 2).
+//!
+//! `cargo bench --bench fig2_correlation` runs the harness in quick mode with a
+//! small wall-clock budget and reports total harness time; pass
+//! `-- --budget SECS [--full] [--seeds 1,2,3]` for the paper-scale run.
+
+use isample::config::Args;
+use isample::figures::runner::{run_figure, FigOptions};
+use isample::runtime::Engine;
+use isample::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let engine = Engine::load(args.flag("artifacts").unwrap_or("artifacts"))?;
+    let opts = FigOptions {
+        budget_secs: args.flag_f64("budget", 6.0)?,
+        out_dir: args.flag("out").unwrap_or("results/bench").into(),
+        seeds: args.flag_u64_list("seeds", &[42])?,
+        quick: !args.flag_bool("full"),
+        model: args.flag("model").map(|s| s.to_string()),
+    };
+    let sw = Stopwatch::new();
+    run_figure(&engine, "fig2", &opts)?;
+    println!("bench fig2_correlation: harness completed in {:.1}s", sw.elapsed_secs());
+    Ok(())
+}

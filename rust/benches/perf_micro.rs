@@ -1,0 +1,124 @@
+//! §Perf micro benchmarks: every stage of the L3 hot path in isolation,
+//! plus the PJRT entry points. These are the numbers tracked in
+//! EXPERIMENTS.md §Perf (before/after for each optimization iteration).
+//!
+//! `cargo bench --bench perf_micro` — add `-- --filter NAME` to run a
+//! subset, `--target-ms N` to change per-bench time.
+
+use std::time::Duration;
+
+use isample::config::Args;
+use isample::coordinator::pipeline::gather_rows;
+use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
+use isample::coordinator::sampler::resample_from_scores;
+use isample::coordinator::tau::TauEstimator;
+use isample::data::synthetic::SyntheticImages;
+use isample::data::Dataset;
+use isample::runtime::Engine;
+use isample::util::bench::{bench, black_box};
+use isample::util::rng::SplitMix64;
+use isample::util::stats::normalize_probs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let filter = args.flag("filter").unwrap_or("").to_string();
+    let target = Duration::from_millis(args.flag_u64("target-ms", 1500)?);
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    let engine = Engine::load(args.flag("artifacts").unwrap_or("artifacts"))?;
+    let mut rng = SplitMix64::new(42);
+
+    // ---------------- pure-rust pipeline stages ----------------
+    let scores: Vec<f32> = (0..640).map(|i| 0.01 + ((i * 37) % 100) as f32 / 100.0).collect();
+    let probs = normalize_probs(&scores);
+
+    if run("sampler/alias_build_640") {
+        bench("sampler/alias_build_640", target, || {
+            black_box(AliasSampler::new(black_box(&probs)));
+        });
+    }
+    if run("sampler/cdf_build_640") {
+        bench("sampler/cdf_build_640", target, || {
+            black_box(CumulativeSampler::new(black_box(&probs)));
+        });
+    }
+    if run("sampler/alias_draw128_of_640") {
+        let s = AliasSampler::new(&probs);
+        bench("sampler/alias_draw128_of_640", target, || {
+            black_box(s.sample(&mut rng, 128));
+        });
+    }
+    if run("sampler/cdf_draw128_of_640") {
+        let s = CumulativeSampler::new(&probs);
+        bench("sampler/cdf_draw128_of_640", target, || {
+            black_box(s.sample(&mut rng, 128));
+        });
+    }
+    if run("sampler/full_resample_plan") {
+        bench("sampler/full_resample_plan", target, || {
+            black_box(resample_from_scores(black_box(&scores), 128, &mut rng, true));
+        });
+    }
+    if run("tau/estimate_640") {
+        bench("tau/estimate_640", target, || {
+            black_box(TauEstimator::tau_from_scores(black_box(&scores)));
+        });
+    }
+
+    // data generation (the producer side of the prefetch pipeline)
+    let ds = SyntheticImages::builder(768, 100).samples(16_384).seed(1).augment(true).build();
+    let idx640: Vec<usize> = (0..640).map(|i| i * 17 % 16_384).collect();
+    if run("data/batch640_d768") {
+        bench("data/batch640_d768", target, || {
+            black_box(ds.batch(black_box(&idx640), 1));
+        });
+    }
+    if run("data/gather128_from_640") {
+        let (x, y) = ds.batch(&idx640, 1);
+        let pb = isample::coordinator::pipeline::PrefetchedBatch {
+            indices: idx640.clone(),
+            x,
+            y,
+            epoch: 1,
+        };
+        let positions: Vec<usize> = (0..128).map(|i| (i * 5) % 640).collect();
+        bench("data/gather128_from_640", target, || {
+            black_box(gather_rows(black_box(&pb), black_box(&positions)));
+        });
+    }
+
+    // ---------------- PJRT entry points ----------------
+    for model in ["mlp10", "cnn100", "lstm"] {
+        if engine.model_info(model).is_err() {
+            continue;
+        }
+        engine.warmup(model)?; // exclude compile time from the numbers
+        let info = engine.model_info(model)?.clone();
+        let mut state = engine.init_state(model, 1)?;
+        let d = info.feature_dim;
+        let gen = SyntheticImages::builder(d, info.num_classes).samples(4096).seed(2).build();
+        let bidx: Vec<usize> = (0..info.batch).collect();
+        let (xb, yb) = gen.batch(&bidx, 0);
+        let w = vec![1.0f32; info.batch];
+        if run(&format!("engine/{model}/train_step")) {
+            bench(&format!("engine/{model}/train_step_b{}", info.batch), target, || {
+                black_box(engine.train_step(&mut state, &xb, &yb, &w, 0.01).unwrap());
+            });
+        }
+        let bmax = *info.presample.iter().max().unwrap_or(&info.batch);
+        let pidx: Vec<usize> = (0..bmax).collect();
+        let (xp, yp) = gen.batch(&pidx, 0);
+        if run(&format!("engine/{model}/fwd_scores")) {
+            bench(&format!("engine/{model}/fwd_scores_B{bmax}"), target, || {
+                black_box(engine.fwd_scores(&state, &xp, &yp).unwrap());
+            });
+        }
+        if info.has_entry("grad_norms") && run(&format!("engine/{model}/grad_norms")) {
+            bench(&format!("engine/{model}/grad_norms_B{bmax}"), target, || {
+                black_box(engine.grad_norms(&state, &xp, &yp).unwrap());
+            });
+        }
+    }
+
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig.-2 analysis: how well do the cheap statistics (loss, Eq.-20 upper
+//! bound) predict the ideal sampling probabilities (∝ true gradient norm)?
+//!
+//! The paper plots p(loss) and p(upper-bound) against p(gradient-norm) for
+//! 16 384 samples from a trained network and reports the sum of squared
+//! errors: 0.017 for the loss vs 0.002 for the upper bound — an order of
+//! magnitude. This module reproduces the scatter points and both SSE
+//! numbers (plus rank correlations, a scale-free summary).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, ModelState};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{normalize_probs, pearson, spearman, sse};
+
+/// Scatter points + summary statistics for one model state.
+#[derive(Debug, Clone)]
+pub struct CorrelationReport {
+    /// (p_gradnorm, p_loss, p_upperbound) per sample — the Fig-2 scatter.
+    pub points: Vec<(f32, f32, f32)>,
+    pub sse_loss: f64,
+    pub sse_upper_bound: f64,
+    pub spearman_loss: f64,
+    pub spearman_upper_bound: f64,
+    pub pearson_loss: f64,
+    pub pearson_upper_bound: f64,
+}
+
+/// Compute the Fig-2 correlation over `total` samples (processed in chunks
+/// whose sizes match baked artifacts). Probabilities are normalized within
+/// each chunk of `chunk` samples, mirroring the paper's per-batch
+/// normalization, then pooled.
+pub fn correlation_at_state<D: Dataset>(
+    engine: &Engine,
+    state: &ModelState,
+    data: &D,
+    total: usize,
+    chunk: usize,
+    seed: u64,
+) -> Result<CorrelationReport> {
+    let mut rng = SplitMix64::tensor_stream(seed ^ 0xC0_77E1, 5);
+    let chunks = (total / chunk).max(1);
+    let mut points = Vec::with_capacity(chunks * chunk);
+
+    for _ in 0..chunks {
+        let indices: Vec<usize> = (0..chunk).map(|_| rng.below(data.len())).collect();
+        let (x, y) = data.batch(&indices, 0);
+        let (loss, ub) = engine.fwd_scores(state, &x, &y)?;
+        let gn = engine.grad_norms(state, &x, &y)?;
+        let p_loss = normalize_probs(&loss);
+        let p_ub = normalize_probs(&ub);
+        let p_gn = normalize_probs(&gn);
+        for i in 0..chunk {
+            points.push((p_gn[i], p_loss[i], p_ub[i]));
+        }
+    }
+
+    let gn: Vec<f32> = points.iter().map(|p| p.0).collect();
+    let lo: Vec<f32> = points.iter().map(|p| p.1).collect();
+    let ub: Vec<f32> = points.iter().map(|p| p.2).collect();
+    Ok(CorrelationReport {
+        sse_loss: sse(&lo, &gn),
+        sse_upper_bound: sse(&ub, &gn),
+        spearman_loss: spearman(&lo, &gn),
+        spearman_upper_bound: spearman(&ub, &gn),
+        pearson_loss: pearson(&lo, &gn),
+        pearson_upper_bound: pearson(&ub, &gn),
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::stats::{normalize_probs, sse};
+
+    #[test]
+    fn sse_of_identical_distributions_is_zero() {
+        let p = normalize_probs(&[1.0, 2.0, 3.0]);
+        assert_eq!(sse(&p, &p), 0.0);
+    }
+}

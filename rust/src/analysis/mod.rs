@@ -1,0 +1,3 @@
+//! Fig-1/Fig-2 analyses: variance reduction and score correlation.
+pub mod correlation;
+pub mod variance;

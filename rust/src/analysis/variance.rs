@@ -1,0 +1,191 @@
+//! Fig.-1 analysis: measured variance reduction of each sampling scheme.
+//!
+//! Protocol (§4.1): at checkpoints along a training run, take a large batch
+//! of B = 1024 samples, compute the batch gradient G_B, then resample b =
+//! 128 samples with each scheme and measure `||G_b - G_B||₂` (averaged over
+//! `repeats` resamplings), normalized by the distance uniform sampling
+//! achieves. Lower = more variance reduction; the paper's result is
+//! upper-bound ≈ gradient-norm ≪ loss, with loss *hurting* early.
+//!
+//! The gradient distance is computed exactly, via the `grad` artifact on
+//! the resampled batch (weighted estimator) against the large-batch mean
+//! gradient — not an approximation.
+
+use anyhow::Result;
+
+use crate::baselines::svrg::vecmath;
+use crate::coordinator::sampler::resample_from_scores;
+use crate::data::Dataset;
+use crate::runtime::{Engine, HostTensor, ModelState};
+use crate::util::rng::SplitMix64;
+
+/// One checkpoint's measurement for every scheme, normalized by uniform.
+#[derive(Debug, Clone)]
+pub struct VariancePoint {
+    pub step: u64,
+    /// ||G_b − G_B|| for each scheme, ÷ the uniform value
+    pub uniform: f64,
+    pub loss: f64,
+    pub upper_bound: f64,
+    pub grad_norm: f64,
+    /// the τ estimate at this checkpoint (from upper-bound scores)
+    pub tau: f64,
+}
+
+/// Configuration of the Fig-1 measurement.
+#[derive(Debug, Clone)]
+pub struct VarianceConfig {
+    pub presample: usize,
+    pub batch: usize,
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl Default for VarianceConfig {
+    fn default() -> Self {
+        Self { presample: 1024, batch: 128, repeats: 10, seed: 7 }
+    }
+}
+
+/// Measure variance reduction for all schemes at the current model state.
+pub fn measure_at_state<D: Dataset>(
+    engine: &Engine,
+    state: &ModelState,
+    data: &D,
+    cfg: &VarianceConfig,
+    step: u64,
+) -> Result<VariancePoint> {
+    let mut rng = SplitMix64::tensor_stream(cfg.seed ^ step, 11);
+    let b_large = cfg.presample;
+    let indices: Vec<usize> = (0..b_large).map(|_| rng.below(data.len())).collect();
+    let (x, y) = data.batch(&indices, 0);
+
+    // large-batch mean gradient G_B (via the per-sample-weighted grad:
+    // the `grad` entry averages uniformly, which is exactly G_B)
+    let (gb, _) = grad_of_subset(engine, state, &x, &y, &(0..b_large).collect::<Vec<_>>(), None)?;
+
+    // scores for each scheme
+    let (loss_scores, ub_scores) = engine.fwd_scores(state, &x, &y)?;
+    let gn_scores = engine.grad_norms(state, &x, &y)?;
+    let tau = crate::coordinator::tau::TauEstimator::tau_from_scores(&ub_scores);
+
+    let mut dist = |scores: Option<&[f32]>| -> Result<f64> {
+        let mut total = 0.0;
+        for _ in 0..cfg.repeats {
+            let (positions, weights) = match scores {
+                None => {
+                    let pos: Vec<usize> = (0..cfg.batch).map(|_| rng.below(b_large)).collect();
+                    let w = vec![1.0f32; cfg.batch];
+                    (pos, w)
+                }
+                Some(s) => {
+                    let plan = resample_from_scores(s, cfg.batch, &mut rng, true);
+                    (plan.positions, plan.weights)
+                }
+            };
+            let (g, _) = grad_of_subset(engine, state, &x, &y, &positions, Some(&weights))?;
+            total += l2_dist_params(&g, &gb);
+        }
+        Ok(total / cfg.repeats as f64)
+    };
+
+    let d_uniform = dist(None)?;
+    let d_loss = dist(Some(&loss_scores))?;
+    let d_ub = dist(Some(&ub_scores))?;
+    let d_gn = dist(Some(&gn_scores))?;
+
+    let norm = d_uniform.max(1e-12);
+    Ok(VariancePoint {
+        step,
+        uniform: 1.0,
+        loss: d_loss / norm,
+        upper_bound: d_ub / norm,
+        grad_norm: d_gn / norm,
+        tau,
+    })
+}
+
+/// Weighted mean gradient over selected rows of a presample batch, computed
+/// with the `train_step`-equivalent weighting through the `grad` entry by
+/// gathering rows. Returns host tensors (flattened per-parameter).
+fn grad_of_subset(
+    engine: &Engine,
+    state: &ModelState,
+    x: &HostTensor,
+    y: &[i32],
+    positions: &[usize],
+    weights: Option<&[f32]>,
+) -> Result<(Vec<HostTensor>, f32)> {
+    let info = engine.model_info(&state.model)?;
+    let b = info.batch;
+    let d = x.shape[1];
+    // process in b-sized chunks and average the chunk gradients
+    let mut acc: Option<Vec<HostTensor>> = None;
+    let mut chunks = 0.0f32;
+    let mut loss_total = 0.0f32;
+    let mut start = 0;
+    while start < positions.len() {
+        let take = b.min(positions.len() - start);
+        // pad the final chunk by repeating its first entries with weight 0
+        let mut xs = HostTensor::zeros(vec![b, d]);
+        let mut ys = vec![0i32; b];
+        let mut ws = vec![0.0f32; b];
+        for k in 0..b {
+            let src = if k < take { positions[start + k] } else { positions[start] };
+            xs.data[k * d..(k + 1) * d].copy_from_slice(x.row(src));
+            ys[k] = y[src];
+            ws[k] = if k < take {
+                weights.map(|w| w[start + k]).unwrap_or(1.0)
+            } else {
+                0.0
+            };
+        }
+        // weighted gradient = d/dθ (1/b) Σ w_i loss_i, which is what a
+        // train_step applies; we recover it through `grad` on a synthetic
+        // batch by scaling rows is not possible — so use weighted_grad:
+        let g = engine.weighted_grad(state, &xs, &ys, &ws)?;
+        loss_total += g.1;
+        let gh = vecmath::to_host(&g.0)?;
+        acc = Some(match acc {
+            None => gh,
+            Some(a) => vecmath::lincomb2(1.0, &a, 1.0, &gh),
+        });
+        chunks += 1.0;
+        start += take;
+    }
+    let scale = 1.0 / chunks;
+    let mean = acc
+        .unwrap()
+        .into_iter()
+        .map(|t| {
+            let data = t.data.iter().map(|&v| v * scale).collect();
+            HostTensor::new(t.shape, data)
+        })
+        .collect();
+    Ok((mean, loss_total * scale))
+}
+
+/// L2 distance between two parameter-shaped gradient lists.
+fn l2_dist_params(a: &[HostTensor], b: &[HostTensor]) -> f64 {
+    let mut acc = 0.0f64;
+    for (ta, tb) in a.iter().zip(b) {
+        for (&va, &vb) in ta.data.iter().zip(&tb.data) {
+            let d = va as f64 - vb as f64;
+            acc += d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_dist_params_basic() {
+        let a = vec![HostTensor::new(vec![2], vec![1.0, 2.0])];
+        let b = vec![HostTensor::new(vec![2], vec![4.0, 6.0])];
+        assert!((l2_dist_params(&a, &b) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_dist_params(&a, &a), 0.0);
+    }
+}

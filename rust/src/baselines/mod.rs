@@ -1,0 +1,2 @@
+//! SVRG-family baselines (Appendix C).
+pub mod svrg;

@@ -1,0 +1,406 @@
+//! Stochastic variance-reduced gradient baselines (Appendix C, Fig. 6).
+//!
+//! The paper compares its importance sampling against SVRG (Johnson &
+//! Zhang 2013), Katyusha-accelerated SVRG (Allen-Zhu 2017) and the
+//! mini-batch SCSG (Lei et al. 2017), and finds them *all* slower than
+//! plain SGD with momentum in the deep-learning regime because the control
+//! variate requires expensive (full- or large-batch) gradient snapshots.
+//! This module reproduces all three so Fig. 6 can be regenerated.
+//!
+//! Plain SVRG/SCSG use the fused `svrg_step` artifact; Katyusha's
+//! three-point coupling is composed host-side from `grad` artifacts plus the
+//! [`vecmath`] helpers (these baselines are not hot paths — their losing
+//! wall-clock behaviour is the result being reproduced).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::coordinator::metrics::{MetricsLog, Row};
+use crate::data::Dataset;
+use crate::runtime::engine::clone_literals;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::SplitMix64;
+use crate::util::timer::Stopwatch;
+
+/// Host-side parameter-vector arithmetic for composing optimizers that the
+/// AOT artifacts don't fuse (Katyusha's coupling).
+pub mod vecmath {
+    use super::*;
+
+    pub fn to_host(lits: &[Literal]) -> Result<Vec<HostTensor>> {
+        lits.iter().map(HostTensor::from_literal).collect()
+    }
+
+    pub fn to_literals(ts: &[HostTensor]) -> Result<Vec<Literal>> {
+        ts.iter().map(HostTensor::to_literal).collect()
+    }
+
+    /// out = a*x + b*y (elementwise over the whole parameter list).
+    pub fn lincomb2(a: f32, x: &[HostTensor], b: f32, y: &[HostTensor]) -> Vec<HostTensor> {
+        x.iter()
+            .zip(y)
+            .map(|(xt, yt)| {
+                let data =
+                    xt.data.iter().zip(&yt.data).map(|(&xv, &yv)| a * xv + b * yv).collect();
+                HostTensor::new(xt.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    /// out = a*x + b*y + c*z.
+    pub fn lincomb3(
+        a: f32,
+        x: &[HostTensor],
+        b: f32,
+        y: &[HostTensor],
+        c: f32,
+        z: &[HostTensor],
+    ) -> Vec<HostTensor> {
+        x.iter()
+            .zip(y)
+            .zip(z)
+            .map(|((xt, yt), zt)| {
+                let data = xt
+                    .data
+                    .iter()
+                    .zip(&yt.data)
+                    .zip(&zt.data)
+                    .map(|((&xv, &yv), &zv)| a * xv + b * yv + c * zv)
+                    .collect();
+                HostTensor::new(xt.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    /// x -= lr * g, in place.
+    pub fn axpy_neg(x: &mut [HostTensor], lr: f32, g: &[HostTensor]) {
+        for (xt, gt) in x.iter_mut().zip(g) {
+            for (xv, &gv) in xt.data.iter_mut().zip(&gt.data) {
+                *xv -= lr * gv;
+            }
+        }
+    }
+
+    /// a - b + c over parameter lists (the SVRG control variate).
+    pub fn control_variate(
+        a: &[HostTensor],
+        b: &[HostTensor],
+        c: &[HostTensor],
+    ) -> Vec<HostTensor> {
+        lincomb3(1.0, a, -1.0, b, 1.0, c)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum SvrgVariant {
+    /// Full-batch snapshot gradient every `inner_steps` (Johnson & Zhang).
+    Svrg,
+    /// Large-batch snapshot that grows by `growth` each outer loop (SCSG,
+    /// Lei et al.) — "the most suitable for Deep Learning" per the paper.
+    Scsg { large_batch: usize, growth: f64 },
+    /// Katyusha momentum (Allen-Zhu): negative momentum toward the snapshot.
+    Katyusha { tau1: f32, tau2: f32 },
+}
+
+impl SvrgVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SvrgVariant::Svrg => "svrg",
+            SvrgVariant::Scsg { .. } => "scsg",
+            SvrgVariant::Katyusha { .. } => "katyusha",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SvrgConfig {
+    pub model: String,
+    pub variant: SvrgVariant,
+    /// inner steps per snapshot (m in SVRG literature)
+    pub inner_steps: usize,
+    pub lr: f32,
+    pub budget_secs: Option<f64>,
+    pub max_outer: Option<usize>,
+    pub seed: u64,
+    pub log_every: u64,
+}
+
+impl SvrgConfig {
+    pub fn svrg(model: &str) -> Self {
+        Self {
+            model: model.into(),
+            variant: SvrgVariant::Svrg,
+            inner_steps: 200,
+            lr: 0.05,
+            budget_secs: None,
+            max_outer: Some(3),
+            seed: 42,
+            log_every: 10,
+        }
+    }
+
+    pub fn scsg(model: &str, large_batch: usize) -> Self {
+        Self { variant: SvrgVariant::Scsg { large_batch, growth: 1.5 }, ..Self::svrg(model) }
+    }
+
+    pub fn katyusha(model: &str) -> Self {
+        Self { variant: SvrgVariant::Katyusha { tau1: 0.4, tau2: 0.3 }, ..Self::svrg(model) }
+    }
+
+    pub fn with_budget(mut self, secs: f64) -> Self {
+        self.budget_secs = Some(secs);
+        self.max_outer = None;
+        self
+    }
+}
+
+pub struct SvrgReport {
+    pub log: MetricsLog,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub final_train_loss: f64,
+    pub final_test_err: f64,
+    pub name: &'static str,
+}
+
+/// Run an SVRG-family optimizer on `train`.
+pub fn run_svrg<D: Dataset>(
+    engine: &Engine,
+    cfg: &SvrgConfig,
+    train: &D,
+    test: Option<&D>,
+) -> Result<SvrgReport> {
+    let info = engine.model_info(&cfg.model)?;
+    let b = info.batch;
+    let mut rng = SplitMix64::tensor_stream(cfg.seed ^ 0x5A46, 3);
+    let mut params = engine.init_state(&cfg.model, cfg.seed)?.params;
+    let sw = Stopwatch::new();
+    let mut log = MetricsLog::default();
+    let mut steps: u64 = 0;
+    let mut outer = 0usize;
+    let mut scsg_large = match &cfg.variant {
+        SvrgVariant::Scsg { large_batch, .. } => *large_batch,
+        _ => 0,
+    };
+    // Katyusha sequences
+    let mut kat_z: Option<Vec<HostTensor>> = None;
+    let mut kat_y: Option<Vec<HostTensor>> = None;
+
+    let exhausted = |sw: &Stopwatch, outer: usize| -> bool {
+        if let Some(bud) = cfg.budget_secs {
+            if sw.elapsed_secs() >= bud {
+                return true;
+            }
+        }
+        if let Some(max) = cfg.max_outer {
+            if outer >= max {
+                return true;
+            }
+        }
+        false
+    };
+
+    let mut last_loss = f64::NAN;
+    while !exhausted(&sw, outer) {
+        // ---- snapshot: mu = gradient over the snapshot set ----------------
+        let snap = clone_literals(&params)?;
+        let snapshot_samples = match &cfg.variant {
+            SvrgVariant::Svrg | SvrgVariant::Katyusha { .. } => train.len(),
+            SvrgVariant::Scsg { .. } => scsg_large.min(train.len()),
+        };
+        let mu =
+            mean_grad_over(engine, &cfg.model, &params, train, snapshot_samples, b, &mut rng)?;
+        let mu_host = vecmath::to_host(&mu)?;
+
+        // ---- inner loop ----------------------------------------------------
+        let inner = match &cfg.variant {
+            // SCSG: E[inner] ~ large/b (geometric in the paper; fixed
+            // expectation here for determinism)
+            SvrgVariant::Scsg { .. } => (scsg_large / b).max(1),
+            _ => cfg.inner_steps,
+        };
+        for _ in 0..inner {
+            if let Some(bud) = cfg.budget_secs {
+                if sw.elapsed_secs() >= bud {
+                    break;
+                }
+            }
+            let indices: Vec<usize> = (0..b).map(|_| rng.below(train.len())).collect();
+            let (x, y) = train.batch(&indices, 0);
+            match &cfg.variant {
+                SvrgVariant::Svrg | SvrgVariant::Scsg { .. } => {
+                    let loss =
+                        engine.svrg_step(&cfg.model, &mut params, &snap, &mu, &x, &y, cfg.lr)?;
+                    last_loss = loss as f64;
+                }
+                SvrgVariant::Katyusha { tau1, tau2 } => {
+                    // Katyusha-lite coupling:
+                    //   x_k  = tau1 z + tau2 x~ + (1-tau1-tau2) y
+                    //   g~   = grad_b(x_k) - grad_b(x~) + mu
+                    //   z'   = z - (lr/tau1) g~
+                    //   y'   = x_k - lr g~
+                    let x_host = vecmath::to_host(&params)?;
+                    let z = kat_z.get_or_insert_with(|| x_host.clone());
+                    let yv = kat_y.get_or_insert_with(|| x_host.clone());
+                    let snap_host = vecmath::to_host(&snap)?;
+                    let xk =
+                        vecmath::lincomb3(*tau1, z, *tau2, &snap_host, 1.0 - tau1 - tau2, yv);
+                    let xk_lits = vecmath::to_literals(&xk)?;
+                    let (g_cur, loss) = engine.grad(&cfg.model, &xk_lits, &x, &y)?;
+                    let (g_snap, _) = engine.grad(&cfg.model, &snap, &x, &y)?;
+                    let g = vecmath::control_variate(
+                        &vecmath::to_host(&g_cur)?,
+                        &vecmath::to_host(&g_snap)?,
+                        &mu_host,
+                    );
+                    vecmath::axpy_neg(z, cfg.lr / tau1, &g);
+                    let mut ynew = xk;
+                    vecmath::axpy_neg(&mut ynew, cfg.lr, &g);
+                    params = vecmath::to_literals(&ynew)?;
+                    *yv = ynew;
+                    last_loss = loss as f64;
+                }
+            }
+            steps += 1;
+            if steps % cfg.log_every.max(1) == 0 {
+                log.push(Row {
+                    step: steps,
+                    secs: sw.elapsed_secs(),
+                    train_loss: last_loss,
+                    tau: 0.0,
+                    is_active: false,
+                    lr: cfg.lr as f64,
+                    test_loss: f64::NAN,
+                    test_err: f64::NAN,
+                });
+            }
+        }
+        if let SvrgVariant::Scsg { growth, .. } = &cfg.variant {
+            scsg_large = ((scsg_large as f64) * growth) as usize;
+        }
+        outer += 1;
+    }
+
+    // final eval
+    let (test_loss, test_err) = match test {
+        Some(t) => eval(engine, &cfg.model, &params, t)?,
+        None => (f64::NAN, f64::NAN),
+    };
+    if let Some(r) = log.rows.last_mut() {
+        r.test_loss = test_loss;
+        r.test_err = test_err;
+    }
+    Ok(SvrgReport {
+        steps,
+        wall_secs: sw.elapsed_secs(),
+        final_train_loss: log.trailing_train_loss(10).unwrap_or(last_loss),
+        final_test_err: test_err,
+        name: cfg.variant.name(),
+        log,
+    })
+}
+
+/// Mean gradient over `count` samples of the dataset, in batch-`b` shards.
+fn mean_grad_over<D: Dataset>(
+    engine: &Engine,
+    model: &str,
+    params: &[Literal],
+    train: &D,
+    count: usize,
+    b: usize,
+    rng: &mut SplitMix64,
+) -> Result<Vec<Literal>> {
+    let shards = (count / b).max(1);
+    let mut acc: Option<Vec<HostTensor>> = None;
+    for _ in 0..shards {
+        let indices: Vec<usize> = (0..b).map(|_| rng.below(train.len())).collect();
+        let (x, y) = train.batch(&indices, 0);
+        let (g, _) = engine.grad(model, params, &x, &y)?;
+        let gh = vecmath::to_host(&g)?;
+        acc = Some(match acc {
+            None => gh,
+            Some(a) => vecmath::lincomb2(1.0, &a, 1.0, &gh),
+        });
+    }
+    let scale = 1.0 / shards as f32;
+    let mean: Vec<HostTensor> = acc
+        .unwrap()
+        .into_iter()
+        .map(|t| {
+            let data = t.data.iter().map(|&v| v * scale).collect();
+            HostTensor::new(t.shape, data)
+        })
+        .collect();
+    vecmath::to_literals(&mean)
+}
+
+fn eval<D: Dataset>(
+    engine: &Engine,
+    model: &str,
+    params: &[Literal],
+    test: &D,
+) -> Result<(f64, f64)> {
+    let info = engine.model_info(model)?;
+    let eb = info.eval_batch;
+    let shards = (test.len() / eb).max(1);
+    let state = crate::runtime::ModelState {
+        model: model.to_string(),
+        params: clone_literals(params)?,
+        mom: vec![],
+        step: 0,
+    };
+    let mut sum_loss = 0.0;
+    let mut correct = 0i64;
+    let mut seen = 0usize;
+    for s in 0..shards {
+        let indices: Vec<usize> = (0..eb).map(|k| (s * eb + k) % test.len()).collect();
+        let (x, y) = test.batch(&indices, 0);
+        let (l, c) = engine.eval_metrics(&state, &x, &y)?;
+        sum_loss += l;
+        correct += c;
+        seen += eb;
+    }
+    Ok((sum_loss / seen as f64, 1.0 - correct as f64 / seen as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vecmath::*;
+    use super::SvrgVariant;
+    use crate::runtime::HostTensor;
+
+    fn t(v: &[f32]) -> HostTensor {
+        HostTensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn lincomb_and_axpy() {
+        let x = vec![t(&[1.0, 2.0])];
+        let y = vec![t(&[10.0, 20.0])];
+        let z = vec![t(&[100.0, 200.0])];
+        let l2 = lincomb2(2.0, &x, 0.5, &y);
+        assert_eq!(l2[0].data, vec![7.0, 14.0]);
+        let l3 = lincomb3(1.0, &x, -1.0, &y, 1.0, &z);
+        assert_eq!(l3[0].data, vec![91.0, 182.0]);
+        let mut m = vec![t(&[1.0, 1.0])];
+        axpy_neg(&mut m, 0.5, &[t(&[2.0, 4.0])]);
+        assert_eq!(m[0].data, vec![0.0, -1.0]);
+        let cv = control_variate(&x, &y, &z);
+        assert_eq!(cv[0].data, vec![91.0, 182.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let ts = vec![t(&[1.5, -2.5, 0.0])];
+        let lits = to_literals(&ts).unwrap();
+        let back = to_host(&lits).unwrap();
+        assert_eq!(back, ts);
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(SvrgVariant::Svrg.name(), "svrg");
+        assert_eq!(SvrgVariant::Scsg { large_batch: 512, growth: 1.5 }.name(), "scsg");
+        assert_eq!(SvrgVariant::Katyusha { tau1: 0.4, tau2: 0.3 }.name(), "katyusha");
+    }
+}

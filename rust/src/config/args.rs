@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (the vendored crate set has no `clap`).
+//!
+//! Grammar: `isample <command> [positional...] [--flag value | --flag]`.
+//! Flags may appear anywhere after the command; `--flag` with no value is
+//! recorded as `"true"`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut positional = vec![];
+        let mut flags = BTreeMap::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("empty flag name");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { command, positional, flags })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.flag_u64(name, default as u64)? as usize)
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated u64 list (for `--seeds 1,2,3`).
+    pub fn flag_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("bad --{name} entry {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_positional_flags() {
+        let a = args("train mlp10 --strategy upper-bound --budget 60 --quick");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["mlp10"]);
+        assert_eq!(a.flag("strategy"), Some("upper-bound"));
+        assert_eq!(a.flag_f64("budget", 0.0).unwrap(), 60.0);
+        assert!(a.flag_bool("quick"));
+        assert!(!a.flag_bool("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = args("figure fig3 --seeds=1,2,3 --budget=5.5");
+        assert_eq!(a.flag_u64_list("seeds", &[42]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.flag_f64("budget", 0.0).unwrap(), 5.5);
+        assert_eq!(a.flag_u64_list("other", &[42]).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args("x --budget abc");
+        assert!(a.flag_f64("budget", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("bench");
+        assert_eq!(a.flag_usize("presample", 640).unwrap(), 640);
+        assert_eq!(a.flag_u64("steps", 100).unwrap(), 100);
+    }
+}

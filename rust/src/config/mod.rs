@@ -1,0 +1,3 @@
+//! CLI + config system.
+pub mod args;
+pub use args::Args;

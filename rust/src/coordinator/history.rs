@@ -1,0 +1,325 @@
+//! Loss-history stores for the history-based baselines (§2.2, §4.2):
+//! online batch selection (Loshchilov & Hutter, 2015) and proportional
+//! prioritized sampling (Schaul et al., 2015).
+//!
+//! Both keep a per-sample record of the most recently observed loss and
+//! sample the next batch from it; both suffer the staleness problem the
+//! paper criticizes (values age as the model moves), which is exactly the
+//! behaviour the Fig-3 comparison needs to reproduce.
+
+use crate::util::rng::SplitMix64;
+
+use super::resample::AliasSampler;
+
+/// Latest-loss store with staleness accounting.
+#[derive(Debug, Clone)]
+pub struct LossHistory {
+    losses: Vec<f32>,
+    last_update_step: Vec<u64>,
+    /// Optimistic initial loss for never-seen samples (max priority, as in
+    /// Schaul et al.: new transitions get max priority).
+    init_loss: f32,
+}
+
+impl LossHistory {
+    pub fn new(n: usize, init_loss: f32) -> Self {
+        Self { losses: vec![init_loss; n], last_update_step: vec![0; n], init_loss }
+    }
+
+    pub fn len(&self) -> usize {
+        self.losses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.losses.is_empty()
+    }
+
+    pub fn loss(&self, i: usize) -> f32 {
+        self.losses[i]
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    pub fn record(&mut self, indices: &[usize], losses: &[f32], step: u64) {
+        debug_assert_eq!(indices.len(), losses.len());
+        for (&i, &l) in indices.iter().zip(losses) {
+            self.losses[i] = l;
+            self.last_update_step[i] = step;
+        }
+    }
+
+    pub fn record_all(&mut self, losses: &[f32], step: u64) {
+        debug_assert_eq!(losses.len(), self.losses.len());
+        self.losses.copy_from_slice(losses);
+        for s in self.last_update_step.iter_mut() {
+            *s = step;
+        }
+    }
+
+    /// Mean age (in steps) of the stored values at `now` — the staleness
+    /// metric surfaced in the metrics log.
+    pub fn mean_staleness(&self, now: u64) -> f64 {
+        if self.losses.is_empty() {
+            return 0.0;
+        }
+        self.last_update_step.iter().map(|&s| (now - s) as f64).sum::<f64>()
+            / self.losses.len() as f64
+    }
+
+    pub fn reset(&mut self) {
+        for l in self.losses.iter_mut() {
+            *l = self.init_loss;
+        }
+    }
+}
+
+/// Online batch selection (Loshchilov & Hutter 2015): rank the stored
+/// losses in decreasing order and pick rank r with probability
+/// `p_r ∝ exp(-log(s)/N · r)` so the max/min probability ratio is `s`.
+/// Every `recompute_every` steps the caller refreshes *all* losses (the
+/// expensive full pass the paper criticizes); every `sort_every` steps the
+/// rank order is rebuilt.
+pub struct LoshchilovHutter {
+    pub history: LossHistory,
+    /// max/min selection probability ratio (paper grid: 1, 10, 100).
+    pub s: f64,
+    /// full loss-recompute period in steps (paper grid: 600/1200/3600).
+    pub recompute_every: u64,
+    /// rank-order rebuild period.
+    pub sort_every: u64,
+    /// indices sorted by decreasing stored loss.
+    order: Vec<usize>,
+    /// rank-distribution sampler (over ranks, not indices).
+    rank_sampler: AliasSampler,
+    last_sort_step: u64,
+}
+
+impl LoshchilovHutter {
+    pub fn new(n: usize, s: f64, recompute_every: u64, sort_every: u64) -> Self {
+        let history = LossHistory::new(n, f32::MAX / 2.0);
+        let order: Vec<usize> = (0..n).collect();
+        let rank_sampler = AliasSampler::new(&rank_probs(n, s));
+        Self {
+            history,
+            s,
+            recompute_every,
+            sort_every,
+            order,
+            rank_sampler,
+            last_sort_step: 0,
+        }
+    }
+
+    /// True when the trainer should refresh every stored loss this step.
+    pub fn needs_recompute(&self, step: u64) -> bool {
+        step > 0 && step % self.recompute_every == 0
+    }
+
+    fn maybe_sort(&mut self, step: u64) {
+        if step >= self.last_sort_step + self.sort_every || step == 0 {
+            let losses = &self.history;
+            self.order.sort_by(|&a, &b| {
+                losses.loss(b).partial_cmp(&losses.loss(a)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            self.last_sort_step = step;
+        }
+    }
+
+    /// Select `b` dataset indices for this step.
+    pub fn select(&mut self, b: usize, step: u64, rng: &mut SplitMix64) -> Vec<usize> {
+        self.maybe_sort(step);
+        (0..b).map(|_| self.order[self.rank_sampler.draw(rng)]).collect()
+    }
+
+    pub fn observe(&mut self, indices: &[usize], losses: &[f32], step: u64) {
+        self.history.record(indices, losses, step);
+    }
+}
+
+/// `p_r ∝ exp(-log(s)/N * r)` over ranks r = 0..N-1.
+fn rank_probs(n: usize, s: f64) -> Vec<f32> {
+    let lam = s.ln() / n as f64;
+    let raw: Vec<f64> = (0..n).map(|r| (-lam * r as f64).exp()).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|p| (p / total) as f32).collect()
+}
+
+/// Proportional prioritized sampling (Schaul et al. 2015):
+/// `p_i ∝ (loss_i + eps)^alpha`, importance-corrected with
+/// `w_i = (N p_i)^(-beta)`, normalized by `max w` for stability.
+pub struct SchaulProportional {
+    pub history: LossHistory,
+    pub alpha: f64,
+    pub beta: f64,
+    pub eps: f64,
+    /// Rebuild the alias table only every `refresh_every` steps — building
+    /// is O(N) and the distribution drifts slowly (staleness is inherent to
+    /// the method anyway).
+    pub refresh_every: u64,
+    sampler: Option<AliasSampler>,
+    probs: Vec<f32>,
+    last_refresh: u64,
+}
+
+impl SchaulProportional {
+    pub fn new(n: usize, alpha: f64, beta: f64, refresh_every: u64) -> Self {
+        Self {
+            // optimistic init: max priority for unseen samples
+            history: LossHistory::new(n, 10.0),
+            alpha,
+            beta,
+            eps: 1e-6,
+            refresh_every,
+            sampler: None,
+            probs: vec![],
+            last_refresh: 0,
+        }
+    }
+
+    fn refresh(&mut self, step: u64) {
+        let raw: Vec<f32> = self
+            .history
+            .losses()
+            .iter()
+            .map(|&l| ((l.max(0.0) as f64 + self.eps).powf(self.alpha)) as f32)
+            .collect();
+        self.probs = crate::util::stats::normalize_probs(&raw);
+        self.sampler = Some(AliasSampler::new(&self.probs));
+        self.last_refresh = step;
+    }
+
+    /// Select `b` indices and their bias-correction weights.
+    pub fn select(&mut self, b: usize, step: u64, rng: &mut SplitMix64) -> (Vec<usize>, Vec<f32>) {
+        if self.sampler.is_none() || step >= self.last_refresh + self.refresh_every {
+            self.refresh(step);
+        }
+        let sampler = self.sampler.as_ref().unwrap();
+        let idx: Vec<usize> = (0..b).map(|_| sampler.draw(rng)).collect();
+        let n = self.history.len() as f64;
+        let mut w: Vec<f32> = idx
+            .iter()
+            .map(|&i| ((n * self.probs[i] as f64).max(1e-12)).powf(-self.beta) as f32)
+            .collect();
+        let wmax = w.iter().cloned().fold(f32::MIN, f32::max).max(1e-12);
+        for wi in w.iter_mut() {
+            *wi /= wmax;
+        }
+        (idx, w)
+    }
+
+    pub fn observe(&mut self, indices: &[usize], losses: &[f32], step: u64) {
+        self.history.record(indices, losses, step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_probs_ratio_is_s() {
+        let p = rank_probs(100, 10.0);
+        let ratio = p[0] as f64 / p[99] as f64;
+        // p_0/p_{N-1} = exp(log(s) * (N-1)/N) ~ s
+        assert!((ratio - 10.0f64.powf(0.99)).abs() < 0.05, "ratio {ratio}");
+        let total: f32 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lh_prefers_high_loss_samples() {
+        let mut lh = LoshchilovHutter::new(100, 100.0, 600, 10);
+        // sample 7 has a huge loss, everyone else tiny
+        let losses: Vec<f32> = (0..100).map(|i| if i == 7 { 5.0 } else { 0.01 }).collect();
+        lh.history.record_all(&losses, 0);
+        let mut rng = SplitMix64::new(3);
+        let picks = lh.select(2000, 0, &mut rng);
+        let hits = picks.iter().filter(|&&i| i == 7).count();
+        assert!(hits > 50, "high-loss sample picked only {hits}/2000");
+    }
+
+    #[test]
+    fn lh_recompute_schedule() {
+        let lh = LoshchilovHutter::new(10, 10.0, 600, 10);
+        assert!(!lh.needs_recompute(0));
+        assert!(!lh.needs_recompute(599));
+        assert!(lh.needs_recompute(600));
+        assert!(lh.needs_recompute(1200));
+    }
+
+    #[test]
+    fn lh_resorts_after_observation() {
+        let mut lh = LoshchilovHutter::new(10, 100.0, 600, 1);
+        let mut rng = SplitMix64::new(5);
+        let mut losses = vec![0.01f32; 10];
+        losses[3] = 9.0;
+        lh.observe(&(0..10).collect::<Vec<_>>(), &losses, 1);
+        let picks = lh.select(500, 2, &mut rng);
+        let hits = picks.iter().filter(|&&i| i == 3).count();
+        assert!(hits > 100, "{hits}");
+        // now sample 3 becomes easy, 8 becomes hard; after sort_every the
+        // preference must flip
+        losses[3] = 0.01;
+        losses[8] = 9.0;
+        lh.observe(&(0..10).collect::<Vec<_>>(), &losses, 3);
+        let picks = lh.select(2000, 5, &mut rng);
+        let hits8 = picks.iter().filter(|&&i| i == 8).count();
+        let hits3 = picks.iter().filter(|&&i| i == 3).count();
+        // 8 now holds rank 0; 3 ties with the other easy samples. With
+        // s=100, n=10 adjacent ranks differ by 100^(1/10) ≈ 1.58x.
+        assert!(
+            hits8 as f64 > hits3 as f64 * 1.2,
+            "preference did not flip: hits8={hits8} hits3={hits3}"
+        );
+    }
+
+    #[test]
+    fn schaul_weights_bounded_and_biased_toward_high_loss() {
+        let mut sp = SchaulProportional::new(50, 1.0, 0.5, 1);
+        let losses: Vec<f32> = (0..50).map(|i| if i < 5 { 4.0 } else { 0.05 }).collect();
+        sp.history.record_all(&losses, 0);
+        let mut rng = SplitMix64::new(1);
+        let (idx, w) = sp.select(3000, 1, &mut rng);
+        let hot = idx.iter().filter(|&&i| i < 5).count();
+        assert!(hot > 1500, "hot picks {hot}/3000");
+        assert!(w.iter().all(|&wi| wi > 0.0 && wi <= 1.0 + 1e-6));
+        // high-probability samples get the *smallest* weights
+        let w_hot: Vec<f32> = idx.iter().zip(&w).filter(|(&i, _)| i < 5).map(|(_, &w)| w).collect();
+        let w_cold: Vec<f32> =
+            idx.iter().zip(&w).filter(|(&i, _)| i >= 5).map(|(_, &w)| w).collect();
+        if !w_hot.is_empty() && !w_cold.is_empty() {
+            assert!(
+                crate::util::stats::mean(&w_hot) < crate::util::stats::mean(&w_cold),
+                "bias correction inverted"
+            );
+        }
+    }
+
+    #[test]
+    fn staleness_accounting() {
+        let mut h = LossHistory::new(4, 1.0);
+        h.record(&[0, 1], &[0.5, 0.6], 10);
+        assert_eq!(h.mean_staleness(10), 5.0); // (0+0+10+10)/4
+        assert_eq!(h.loss(0), 0.5);
+        h.reset();
+        assert_eq!(h.loss(0), 1.0);
+    }
+
+    #[test]
+    fn schaul_alpha_zero_is_uniform() {
+        let mut sp = SchaulProportional::new(40, 0.0, 0.5, 1);
+        let losses: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        sp.history.record_all(&losses, 0);
+        let mut rng = SplitMix64::new(9);
+        let (idx, w) = sp.select(8000, 1, &mut rng);
+        let mut counts = vec![0usize; 40];
+        for &i in &idx {
+            counts[i] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*max < min * 2, "alpha=0 should be ~uniform: {min}..{max}");
+        assert!(w.iter().all(|&wi| (wi - 1.0).abs() < 1e-5));
+    }
+}

@@ -1,0 +1,171 @@
+//! Metrics: per-step rows, wall-clock curves and CSV sinks.
+//!
+//! The paper's protocol compares methods at *equal wall-clock time*
+//! (§4.2), so every row carries elapsed seconds; the figure harnesses plot
+//! loss/error against that column rather than against steps.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One logged observation.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub step: u64,
+    pub secs: f64,
+    pub train_loss: f64,
+    /// smoothed τ (Eq. 26); 0 before the first observation
+    pub tau: f64,
+    /// whether importance sampling was active this step
+    pub is_active: bool,
+    pub lr: f64,
+    /// NaN when no eval was run at this row
+    pub test_loss: f64,
+    pub test_err: f64,
+}
+
+/// In-memory metrics log; the figure harnesses read it, `to_csv` persists.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsLog {
+    pub rows: Vec<Row>,
+    /// (phase, total seconds) pairs from the trainer's PhaseTimers
+    pub phase_seconds: Vec<(String, f64)>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    pub fn last_train_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.train_loss)
+    }
+
+    /// Latest row that actually carries an evaluation.
+    pub fn last_eval(&self) -> Option<&Row> {
+        self.rows.iter().rev().find(|r| !r.test_err.is_nan())
+    }
+
+    /// Smoothed train loss over the trailing `k` rows.
+    pub fn trailing_train_loss(&self, k: usize) -> Option<f64> {
+        if self.rows.is_empty() {
+            return None;
+        }
+        let tail = &self.rows[self.rows.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.train_loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// First step at which importance sampling switched on, if ever.
+    pub fn is_switch_on_step(&self) -> Option<u64> {
+        self.rows.iter().find(|r| r.is_active).map(|r| r.step)
+    }
+
+    pub fn to_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        writeln!(f, "step,secs,train_loss,tau,is_active,lr,test_loss,test_err")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{:.3},{:.6},{:.4},{},{:.6},{:.6},{:.6}",
+                r.step,
+                r.secs,
+                r.train_loss,
+                r.tau,
+                r.is_active as u8,
+                r.lr,
+                r.test_loss,
+                r.test_err
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// A generic CSV sink for the figure harnesses (header + f64 rows with an
+/// optional string tag column).
+pub struct CsvSink {
+    file: std::fs::File,
+}
+
+impl CsvSink {
+    pub fn create(path: impl AsRef<Path>, header: &str) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut file = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        writeln!(file, "{header}")?;
+        Ok(Self { file })
+    }
+
+    pub fn row(&mut self, tag: &str, values: &[f64]) -> Result<()> {
+        let mut line = String::from(tag);
+        for v in values {
+            line.push(',');
+            line.push_str(&format!("{v:.6}"));
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(step: u64, active: bool, err: f64) -> Row {
+        Row {
+            step,
+            secs: step as f64 * 0.1,
+            train_loss: 2.0 / (step + 1) as f64,
+            tau: 1.0,
+            is_active: active,
+            lr: 0.1,
+            test_loss: f64::NAN,
+            test_err: err,
+        }
+    }
+
+    #[test]
+    fn log_queries() {
+        let mut log = MetricsLog::default();
+        log.push(row(0, false, f64::NAN));
+        log.push(row(1, false, 0.5));
+        log.push(row(2, true, f64::NAN));
+        assert_eq!(log.is_switch_on_step(), Some(2));
+        assert_eq!(log.last_eval().unwrap().step, 1);
+        assert!(log.trailing_train_loss(2).unwrap() < 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("isample_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        let mut log = MetricsLog::default();
+        log.push(row(0, false, 0.9));
+        log.push(row(1, true, 0.8));
+        log.to_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("step,secs"));
+        assert!(lines[2].contains(",1,")); // is_active column
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_sink_writes_tagged_rows() {
+        let dir = std::env::temp_dir().join(format!("isample_sink_{}", std::process::id()));
+        let path = dir.join("fig.csv");
+        let mut sink = CsvSink::create(&path, "method,x,y").unwrap();
+        sink.row("uniform", &[1.0, 2.0]).unwrap();
+        sink.row("upper-bound", &[1.0, 0.5]).unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("uniform,1.000000,2.000000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`trainer`] — Algorithm 1 (warmup → τ-gated importance sampling) and
+//!   every baseline strategy, under the fixed wall-clock protocol.
+//! * [`sampler`] / [`resample`] — presample-B / resample-b machinery with
+//!   unbiased importance weights.
+//! * [`tau`] — the Eq.-26 variance-reduction estimator and cost model.
+//! * [`history`] — loss-history stores for the published baselines.
+//! * [`pipeline`] — threaded batch prefetch with bounded-channel
+//!   backpressure; PJRT execution stays on the coordinator thread.
+//! * [`metrics`] — wall-clock metric rows and CSV sinks.
+
+pub mod history;
+pub mod metrics;
+pub mod pipeline;
+pub mod resample;
+pub mod sampler;
+pub mod tau;
+pub mod trainer;
+
+pub use sampler::{ScoreKind, StrategyKind};
+pub use tau::TauEstimator;
+pub use trainer::{Report, Trainer, TrainerConfig};

@@ -1,0 +1,224 @@
+//! The streaming data pipeline: worker threads assemble uniform presample
+//! batches ahead of the trainer, with a bounded channel providing
+//! backpressure so workers can never run unboundedly ahead of the consumer.
+//!
+//! PJRT execution stays on the coordinator thread (the `xla` handles are not
+//! `Send`); only *data generation* (feature synthesis + augmentation) is
+//! parallelized — which is exactly the part that would otherwise steal time
+//! from the device in a naive loop.
+//!
+//! Workers are **scoped** (`std::thread::scope`), so datasets are borrowed,
+//! not `Arc`ed, and a crashed worker surfaces at join time instead of
+//! silently starving the trainer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::thread::Scope;
+
+use crate::data::Dataset;
+use crate::runtime::HostTensor;
+use crate::util::rng::SplitMix64;
+
+/// A uniformly-sampled batch, ready for device upload.
+pub struct PrefetchedBatch {
+    /// dataset indices, in row order
+    pub indices: Vec<usize>,
+    pub x: HostTensor,
+    pub y: Vec<i32>,
+    /// the augmentation epoch the features were generated with
+    pub epoch: u64,
+}
+
+/// Shared pipeline counters (exposed for tests and perf accounting).
+#[derive(Default)]
+pub struct PipelineStats {
+    pub produced: AtomicU64,
+    pub consumed: AtomicU64,
+    /// producer-side blocked sends (backpressure engagements)
+    pub backpressured: AtomicU64,
+}
+
+/// A scoped prefetcher producing batches of a fixed size.
+pub struct Prefetcher<'sc> {
+    rx: Receiver<PrefetchedBatch>,
+    stop: &'sc AtomicBool,
+    stats: &'sc PipelineStats,
+    pub batch_size: usize,
+}
+
+impl<'sc> Prefetcher<'sc> {
+    /// Spawn `threads` workers on the scope, each producing `batch_size`
+    /// uniform batches into a channel of capacity `depth`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn<'env, D>(
+        scope: &'sc Scope<'sc, 'env>,
+        dataset: &'env D,
+        batch_size: usize,
+        depth: usize,
+        threads: usize,
+        seed: u64,
+        stop: &'env AtomicBool,
+        stats: &'env PipelineStats,
+        draws: &'env AtomicU64,
+    ) -> Prefetcher<'sc>
+    where
+        D: Dataset + Sync,
+        'env: 'sc,
+    {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<PrefetchedBatch>(depth.max(1));
+        for worker in 0..threads.max(1) {
+            let tx: SyncSender<PrefetchedBatch> = tx.clone();
+            scope.spawn(move || {
+                let mut rng =
+                    SplitMix64::tensor_stream(seed ^ 0xF33D, (batch_size * 1000 + worker) as u64);
+                let n = dataset.len();
+                while !stop.load(Ordering::Relaxed) {
+                    let first_draw = draws.fetch_add(batch_size as u64, Ordering::Relaxed);
+                    let epoch = first_draw / n as u64;
+                    let indices: Vec<usize> =
+                        (0..batch_size).map(|_| rng.below(n)).collect();
+                    let (x, y) = dataset.batch(&indices, epoch);
+                    let batch = PrefetchedBatch { indices, x, y, epoch };
+                    // try_send first so we can count backpressure engagements
+                    match tx.try_send(batch) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(b)) => {
+                            stats.backpressured.fetch_add(1, Ordering::Relaxed);
+                            if tx.send(b).is_err() {
+                                return; // consumer gone
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => return,
+                    }
+                    stats.produced.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        Prefetcher { rx, stop, stats, batch_size }
+    }
+
+    /// Blocking: the next prefetched batch.
+    pub fn next(&self) -> PrefetchedBatch {
+        let b = self.rx.recv().expect("all prefetch workers died");
+        self.stats.consumed.fetch_add(1, Ordering::Relaxed);
+        b
+    }
+
+    /// Signal workers to stop (also triggered by dropping the prefetcher).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // drain so producers blocked on a full channel wake up and exit
+        while self.rx.try_recv().is_ok() {}
+    }
+}
+
+impl Drop for Prefetcher<'_> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Gather the rows of a resample plan out of a presample batch
+/// (resampled indices are positions *within* the presample, so no dataset
+/// regeneration — and no augmentation drift — happens here).
+pub fn gather_rows(batch: &PrefetchedBatch, positions: &[usize]) -> (HostTensor, Vec<i32>) {
+    let d = batch.x.shape[1];
+    let mut x = HostTensor::zeros(vec![positions.len(), d]);
+    let mut y = Vec::with_capacity(positions.len());
+    for (row, &p) in positions.iter().enumerate() {
+        x.data[row * d..(row + 1) * d].copy_from_slice(batch.x.row(p));
+        y.push(batch.y[p]);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticImages;
+
+    fn with_prefetcher<R>(
+        threads: usize,
+        depth: usize,
+        f: impl FnOnce(&Prefetcher, &PipelineStats) -> R,
+    ) -> R {
+        let ds = SyntheticImages::builder(16, 4).samples(256).seed(1).build();
+        let stop = AtomicBool::new(false);
+        let stats = PipelineStats::default();
+        let draws = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let p = Prefetcher::spawn(s, &ds, 32, depth, threads, 7, &stop, &stats, &draws);
+            let r = f(&p, &stats);
+            p.shutdown();
+            r
+        })
+    }
+
+    #[test]
+    fn produces_valid_batches() {
+        with_prefetcher(2, 4, |p, _| {
+            for _ in 0..10 {
+                let b = p.next();
+                assert_eq!(b.x.shape, vec![32, 16]);
+                assert_eq!(b.y.len(), 32);
+                assert_eq!(b.indices.len(), 32);
+                assert!(b.indices.iter().all(|&i| i < 256));
+                assert!(b.y.iter().all(|&c| (0..4).contains(&c)));
+            }
+        });
+    }
+
+    #[test]
+    fn backpressure_engages_with_slow_consumer() {
+        with_prefetcher(2, 2, |p, stats| {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            // consume a couple to let producers cycle
+            let _ = p.next();
+            let _ = p.next();
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            assert!(
+                stats.backpressured.load(Ordering::Relaxed) > 0,
+                "expected blocked sends with a slow consumer"
+            );
+            // bounded: can never have produced unboundedly more than consumed
+            let produced = stats.produced.load(Ordering::Relaxed);
+            let consumed = stats.consumed.load(Ordering::Relaxed);
+            assert!(produced <= consumed + 2 + 2 + 1, "produced {produced} consumed {consumed}");
+        });
+    }
+
+    #[test]
+    fn shutdown_terminates_workers_quickly() {
+        let t0 = std::time::Instant::now();
+        with_prefetcher(4, 2, |p, _| {
+            let _ = p.next();
+        });
+        // scope join must not hang on blocked producers
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn gather_rows_matches_presample() {
+        with_prefetcher(1, 2, |p, _| {
+            let b = p.next();
+            let (x, y) = gather_rows(&b, &[3, 3, 0, 31]);
+            assert_eq!(x.shape, vec![4, 16]);
+            assert_eq!(x.row(0), b.x.row(3));
+            assert_eq!(x.row(1), b.x.row(3));
+            assert_eq!(x.row(2), b.x.row(0));
+            assert_eq!(y[3], b.y[31]);
+        });
+    }
+
+    #[test]
+    fn epochs_advance_with_draws() {
+        // dataset of 256, batch 32: epoch must reach >=1 within 9 batches
+        with_prefetcher(1, 1, |p, _| {
+            let mut max_epoch = 0;
+            for _ in 0..12 {
+                max_epoch = max_epoch.max(p.next().epoch);
+            }
+            assert!(max_epoch >= 1, "epoch never advanced: {max_epoch}");
+        });
+    }
+}

@@ -1,0 +1,228 @@
+//! Weighted re-sampling with replacement (§3.3: "pre-sample a large batch
+//! ... and re-sample a smaller batch with replacement").
+//!
+//! Two interchangeable backends:
+//! * [`CumulativeSampler`] — prefix sums + binary search; O(B) build,
+//!   O(log B) per draw. Simple, branch-predictable baseline.
+//! * [`AliasSampler`] — Vose's alias method; O(B) build, O(1) per draw.
+//!   The hot-path default (see EXPERIMENTS.md §Perf for the measured
+//!   crossover).
+//!
+//! Both consume a probability vector (non-negative, summing to ~1) and a
+//! [`SplitMix64`] stream; identical draw sequences are *not* guaranteed
+//! across backends (they consume different numbers of uniforms), but both
+//! are exact samplers of the given distribution.
+
+use crate::util::rng::SplitMix64;
+
+/// Prefix-sum sampler.
+pub struct CumulativeSampler {
+    cdf: Vec<f64>,
+    total: f64,
+}
+
+impl CumulativeSampler {
+    pub fn new(probs: &[f32]) -> Self {
+        assert!(!probs.is_empty(), "empty probability vector");
+        let mut cdf = Vec::with_capacity(probs.len());
+        let mut acc = 0.0f64;
+        for &p in probs {
+            acc += p.max(0.0) as f64;
+            cdf.push(acc);
+        }
+        Self { total: acc, cdf }
+    }
+
+    #[inline]
+    pub fn draw(&self, rng: &mut SplitMix64) -> usize {
+        // u in (0, total]: strictly positive so zero-probability prefixes
+        // (cdf entries equal to 0) can never be selected, and == total maps
+        // to the first bucket whose cdf reaches the total.
+        let u = (1.0 - rng.uniform()) * self.total.max(f64::MIN_POSITIVE);
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.draw(rng)).collect()
+    }
+}
+
+/// Vose alias sampler: O(1) per draw.
+pub struct AliasSampler {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasSampler {
+    pub fn new(probs: &[f32]) -> Self {
+        let n = probs.len();
+        assert!(n > 0, "empty probability vector");
+        let total: f64 = probs.iter().map(|&p| p.max(0.0) as f64).sum();
+        let scaled: Vec<f64> = if total > 0.0 {
+            probs.iter().map(|&p| p.max(0.0) as f64 * n as f64 / total).collect()
+        } else {
+            vec![1.0; n] // degenerate: uniform
+        };
+
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        let mut rem = scaled;
+        for (i, &p) in rem.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = *large.last().unwrap();
+            prob[s] = rem[s];
+            alias[s] = l;
+            rem[l] = (rem[l] + rem[s]) - 1.0;
+            if rem[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers (fp residue on either stack) saturate to probability 1
+        for i in large.into_iter().chain(small) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn draw(&self, rng: &mut SplitMix64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n);
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.draw(rng)).collect()
+    }
+}
+
+/// Importance weights for a resampled index set: w_i = 1 / (B * p_i)
+/// (Eq. 2 with the unbiasedness condition w = 1/(N p); here N = B, the
+/// presample size). Zero-probability entries can never be drawn, so the
+/// weight is never evaluated for them.
+pub fn importance_weights(probs: &[f32], drawn: &[usize]) -> Vec<f32> {
+    let b_total = probs.len() as f64;
+    drawn
+        .iter()
+        .map(|&i| {
+            let p = probs[i] as f64;
+            debug_assert!(p > 0.0, "drew a zero-probability index");
+            (1.0 / (b_total * p)) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::normalize_probs;
+
+    fn empirical(probs: &[f32], draws: usize, alias: bool) -> Vec<f64> {
+        let mut rng = SplitMix64::new(42);
+        let mut counts = vec![0usize; probs.len()];
+        if alias {
+            let s = AliasSampler::new(probs);
+            for _ in 0..draws {
+                counts[s.draw(&mut rng)] += 1;
+            }
+        } else {
+            let s = CumulativeSampler::new(probs);
+            for _ in 0..draws {
+                counts[s.draw(&mut rng)] += 1;
+            }
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn both_backends_match_target_distribution() {
+        let probs = normalize_probs(&[1.0, 2.0, 3.0, 4.0, 0.0, 10.0]);
+        for alias in [false, true] {
+            let emp = empirical(&probs, 200_000, alias);
+            for (e, &p) in emp.iter().zip(&probs) {
+                assert!(
+                    (e - p as f64).abs() < 0.01,
+                    "backend alias={alias}: {e} vs {p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_probability_never_drawn() {
+        let probs = normalize_probs(&[0.0, 1.0, 0.0, 1.0]);
+        let mut rng = SplitMix64::new(7);
+        let s = AliasSampler::new(&probs);
+        for _ in 0..10_000 {
+            let i = s.draw(&mut rng);
+            assert!(i == 1 || i == 3);
+        }
+        let c = CumulativeSampler::new(&probs);
+        for _ in 0..10_000 {
+            let i = c.draw(&mut rng);
+            assert!(i == 1 || i == 3);
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let mut rng = SplitMix64::new(1);
+        assert_eq!(AliasSampler::new(&[1.0]).draw(&mut rng), 0);
+        assert_eq!(CumulativeSampler::new(&[1.0]).draw(&mut rng), 0);
+    }
+
+    #[test]
+    fn degenerate_all_zero_becomes_uniform_alias() {
+        let s = AliasSampler::new(&[0.0, 0.0, 0.0]);
+        let mut rng = SplitMix64::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[s.draw(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn importance_weights_are_unbiased() {
+        // E_p[w * f] must equal mean(f) when w = 1/(B p): check empirically.
+        let f: Vec<f64> = (0..64).map(|i| (i as f64).sin() + 2.0).collect();
+        let scores: Vec<f32> = (0..64).map(|i| 0.1 + (i % 7) as f32).collect();
+        let probs = normalize_probs(&scores);
+        let s = AliasSampler::new(&probs);
+        let mut rng = SplitMix64::new(11);
+        let draws: Vec<usize> = s.sample(&mut rng, 400_000);
+        let w = importance_weights(&probs, &draws);
+        let est: f64 = draws
+            .iter()
+            .zip(&w)
+            .map(|(&i, &wi)| wi as f64 * f[i])
+            .sum::<f64>()
+            / draws.len() as f64;
+        let truth: f64 = f.iter().sum::<f64>() / f.len() as f64;
+        assert!((est - truth).abs() < 0.01, "estimate {est} vs {truth}");
+    }
+
+    #[test]
+    fn uniform_probs_give_unit_weights() {
+        let probs = vec![1.0 / 8.0; 8];
+        let w = importance_weights(&probs, &[0, 3, 7]);
+        for wi in w {
+            assert!((wi - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Sampling strategies — who decides what the next training batch is.
+//!
+//! * [`StrategyKind::Uniform`] — plain SGD (the paper's `uniform`).
+//! * [`StrategyKind::Presample`] — Algorithm 1: presample B uniformly,
+//!   score, resample b ∝ score with importance weights. The score is the
+//!   Eq.-20 `UpperBound` (the paper's method), the raw `Loss` (the common
+//!   heuristic baseline) or the true `GradNorm` (the expensive oracle).
+//! * [`StrategyKind::LoshchilovHutter`] / [`StrategyKind::Schaul`] — the
+//!   history-based published baselines of §4.2.
+
+use crate::util::rng::SplitMix64;
+use crate::util::stats::normalize_probs;
+
+use super::history::{LoshchilovHutter, SchaulProportional};
+use super::resample::{importance_weights, AliasSampler, CumulativeSampler};
+
+/// Which per-sample statistic drives the presample distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// The paper's Eq.-20 upper bound (`upper-bound` curves).
+    UpperBound,
+    /// Loss-proportional (`loss` curves).
+    Loss,
+    /// True per-sample gradient norm (`gradient-norm`; an order of
+    /// magnitude more expensive — Fig 1/2 oracle).
+    GradNorm,
+}
+
+impl ScoreKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreKind::UpperBound => "upper-bound",
+            ScoreKind::Loss => "loss",
+            ScoreKind::GradNorm => "gradient-norm",
+        }
+    }
+}
+
+/// Strategy configuration (data only — the trainer owns engine access).
+#[derive(Debug, Clone)]
+pub enum StrategyKind {
+    Uniform,
+    Presample { score: ScoreKind },
+    LoshchilovHutter { s: f64, recompute_every: u64, sort_every: u64 },
+    Schaul { alpha: f64, beta: f64, refresh_every: u64 },
+}
+
+impl StrategyKind {
+    pub fn name(&self) -> String {
+        match self {
+            StrategyKind::Uniform => "uniform".into(),
+            StrategyKind::Presample { score } => score.name().into(),
+            StrategyKind::LoshchilovHutter { .. } => "loshchilov-hutter".into(),
+            StrategyKind::Schaul { .. } => "schaul".into(),
+        }
+    }
+
+    /// Parse a CLI name like `uniform`, `upper-bound`, `loss`,
+    /// `gradient-norm`, `loshchilov-hutter`, `schaul`.
+    pub fn parse(name: &str) -> Option<StrategyKind> {
+        Some(match name {
+            "uniform" => StrategyKind::Uniform,
+            "upper-bound" | "upper_bound" | "ub" => {
+                StrategyKind::Presample { score: ScoreKind::UpperBound }
+            }
+            "loss" => StrategyKind::Presample { score: ScoreKind::Loss },
+            "gradient-norm" | "grad-norm" | "gradient_norm" => {
+                StrategyKind::Presample { score: ScoreKind::GradNorm }
+            }
+            "loshchilov-hutter" | "lh" | "online-batch-selection" => {
+                StrategyKind::LoshchilovHutter { s: 100.0, recompute_every: 1200, sort_every: 20 }
+            }
+            "schaul" | "prioritized" => {
+                StrategyKind::Schaul { alpha: 1.0, beta: 0.5, refresh_every: 50 }
+            }
+            _ => return None,
+        })
+    }
+}
+
+/// Runtime state of a history-based strategy (constructed per run since it
+/// is sized to the dataset).
+pub enum HistoryState {
+    None,
+    Lh(LoshchilovHutter),
+    Schaul(SchaulProportional),
+}
+
+impl HistoryState {
+    pub fn for_strategy(kind: &StrategyKind, dataset_len: usize) -> HistoryState {
+        match kind {
+            StrategyKind::LoshchilovHutter { s, recompute_every, sort_every } => {
+                HistoryState::Lh(LoshchilovHutter::new(
+                    dataset_len,
+                    *s,
+                    *recompute_every,
+                    *sort_every,
+                ))
+            }
+            StrategyKind::Schaul { alpha, beta, refresh_every } => HistoryState::Schaul(
+                SchaulProportional::new(dataset_len, *alpha, *beta, *refresh_every),
+            ),
+            _ => HistoryState::None,
+        }
+    }
+}
+
+/// The outcome of resampling a presample batch: positions *within the
+/// presample* (so feature rows can be gathered without regenerating data),
+/// plus the matching importance weights.
+#[derive(Debug, Clone)]
+pub struct ResamplePlan {
+    /// positions in 0..B (NOT dataset indices)
+    pub positions: Vec<usize>,
+    pub weights: Vec<f32>,
+    /// the normalized probability vector used (for analysis/τ)
+    pub probs: Vec<f32>,
+}
+
+/// Resample `b` positions from `scores` (Alg. 1 lines 7–9).
+/// `use_alias` picks the O(1)-per-draw backend.
+pub fn resample_from_scores(
+    scores: &[f32],
+    b: usize,
+    rng: &mut SplitMix64,
+    use_alias: bool,
+) -> ResamplePlan {
+    let probs = normalize_probs(scores);
+    let positions = if use_alias {
+        AliasSampler::new(&probs).sample(rng, b)
+    } else {
+        CumulativeSampler::new(&probs).sample(rng, b)
+    };
+    let weights = importance_weights(&probs, &positions);
+    ResamplePlan { positions, weights, probs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for name in ["uniform", "upper-bound", "loss", "gradient-norm", "lh", "schaul"] {
+            assert!(StrategyKind::parse(name).is_some(), "{name}");
+        }
+        assert!(StrategyKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn resample_plan_invariants() {
+        check("resample invariants", 200, |g| {
+            let scores = g.scores(2..256);
+            let b = g.usize_in(1..64);
+            let use_alias = g.bool();
+            let plan = resample_from_scores(&scores, b, &mut g.rng, use_alias);
+            assert_eq!(plan.positions.len(), b);
+            assert_eq!(plan.weights.len(), b);
+            // probabilities are a distribution
+            let total: f64 = plan.probs.iter().map(|&p| p as f64).sum();
+            assert!((total - 1.0).abs() < 1e-4, "prob sum {total}");
+            // w_i * B * p_i == 1 for every drawn position (unbiasedness)
+            let big_b = plan.probs.len() as f64;
+            for (&pos, &w) in plan.positions.iter().zip(&plan.weights) {
+                let prod = w as f64 * big_b * plan.probs[pos] as f64;
+                assert!((prod - 1.0).abs() < 1e-4, "w*B*p = {prod}");
+            }
+        });
+    }
+
+    #[test]
+    fn uniform_scores_degenerate_to_unit_weights() {
+        let mut rng = SplitMix64::new(4);
+        let plan = resample_from_scores(&[1.0; 64], 16, &mut rng, true);
+        assert!(plan.weights.iter().all(|&w| (w - 1.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn history_state_dispatch() {
+        let lh = HistoryState::for_strategy(
+            &StrategyKind::parse("lh").unwrap(),
+            100,
+        );
+        assert!(matches!(lh, HistoryState::Lh(_)));
+        let sc = HistoryState::for_strategy(&StrategyKind::parse("schaul").unwrap(), 100);
+        assert!(matches!(sc, HistoryState::Schaul(_)));
+        let none = HistoryState::for_strategy(&StrategyKind::Uniform, 100);
+        assert!(matches!(none, HistoryState::None));
+    }
+}

@@ -1,0 +1,205 @@
+//! The variance-reduction estimator τ (Eq. 23–26) — the paper's switch for
+//! *when importance sampling is worth its cost*.
+//!
+//! Given presample scores g_i ∝ ĝ_i (normalized to a distribution), the
+//! variance reduction relative to uniform is equivalent to increasing the
+//! batch size by τ where
+//!
+//! ```text
+//! 1/τ = sqrt( 1 - ||g - u||² / Σ g_i² )          (Eq. 26)
+//! ```
+//!
+//! Algorithm 1 line 17 smooths τ with an EMA (`a_tau`) and switches
+//! importance sampling on when τ > τ_th. The paper's guaranteed-speedup
+//! condition is `B + 3b < 3 τ b` (§3.3), i.e. τ_th = (B + 3b) / (3b); in
+//! practice smaller thresholds already pay off (§4.2 uses 1.5).
+
+use crate::util::stats::{normalize_probs, Ema};
+
+/// Upper clamp for a single τ observation: with B ≤ 4096 presamples the
+/// theoretical max is √B ≈ 64 when all mass sits on one sample; anything
+/// above is fp noise from a near-singular distribution.
+const TAU_CLAMP: f64 = 1e3;
+
+#[derive(Debug, Clone)]
+pub struct TauEstimator {
+    ema: Ema,
+    /// latest smoothed value
+    tau: f64,
+    /// latest raw (unsmoothed) observation
+    last_raw: f64,
+    observations: u64,
+}
+
+impl TauEstimator {
+    /// `a_tau` is the EMA retention factor of Algorithm 1 (paper default in
+    /// the released code: 0.9).
+    pub fn new(a_tau: f64) -> Self {
+        assert!((0.0..1.0).contains(&a_tau), "a_tau must be in [0,1)");
+        Self { ema: Ema::new(a_tau), tau: 0.0, last_raw: 0.0, observations: 0 }
+    }
+
+    /// Eq. 26 for one score vector (un-normalized scores accepted).
+    pub fn tau_from_scores(scores: &[f32]) -> f64 {
+        let g = normalize_probs(scores);
+        let n = g.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let u = 1.0 / n as f64;
+        let mut dist2 = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for &gi in &g {
+            let gi = gi as f64;
+            dist2 += (gi - u) * (gi - u);
+            sumsq += gi * gi;
+        }
+        if sumsq <= 0.0 {
+            return 1.0;
+        }
+        let inv_tau_sq = 1.0 - dist2 / sumsq; // = 1/τ² by Eq. 25–26
+        if inv_tau_sq <= 0.0 {
+            return TAU_CLAMP;
+        }
+        (1.0 / inv_tau_sq.sqrt()).clamp(1.0, TAU_CLAMP)
+    }
+
+    /// Feed one presample's scores; returns the smoothed τ.
+    pub fn update(&mut self, scores: &[f32]) -> f64 {
+        self.last_raw = Self::tau_from_scores(scores);
+        self.tau = self.ema.update(self.last_raw);
+        self.observations += 1;
+        self.tau
+    }
+
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+
+    pub fn last_raw(&self) -> f64 {
+        self.last_raw
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+}
+
+/// The paper's cost model (§3.3), assuming the backward pass costs twice
+/// the forward pass: scoring B forwards + b forward+backwards, against
+/// uniform's B-sample-equivalent progress.
+pub mod cost_model {
+    /// Guaranteed speedup condition: `B + 3b < 3 τ b`.
+    pub fn guaranteed_speedup(presample: usize, batch: usize, tau: f64) -> bool {
+        (presample + 3 * batch) as f64 / (3.0 * batch as f64) < tau
+    }
+
+    /// The τ threshold above which speedup is guaranteed: (B + 3b) / (3b).
+    pub fn tau_threshold(presample: usize, batch: usize) -> f64 {
+        (presample + 3 * batch) as f64 / (3.0 * batch as f64)
+    }
+
+    /// Maximum achievable variance reduction with presample B and batch b
+    /// (§3.3): 1/b² − 1/B².
+    pub fn max_variance_reduction(presample: usize, batch: usize) -> f64 {
+        1.0 / (batch * batch) as f64 - 1.0 / (presample * presample) as f64
+    }
+
+    /// Best-case time-per-equal-variance ratio (B + 3b)/(3B): < 1 means
+    /// importance sampling can win.
+    pub fn max_speedup_ratio(presample: usize, batch: usize) -> f64 {
+        (presample + 3 * batch) as f64 / (3.0 * presample as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn uniform_scores_give_tau_one() {
+        let t = TauEstimator::tau_from_scores(&[0.5; 64]);
+        assert!((t - 1.0).abs() < 1e-9, "tau {t}");
+    }
+
+    #[test]
+    fn concentrated_scores_give_large_tau() {
+        let mut scores = vec![1e-6f32; 64];
+        scores[7] = 1.0;
+        let t = TauEstimator::tau_from_scores(&scores);
+        assert!(t > 7.0, "tau {t}"); // ~sqrt(64)=8 at full concentration
+    }
+
+    #[test]
+    fn tau_monotone_in_concentration() {
+        // mixing a peaked distribution toward uniform must not increase tau
+        let n = 128;
+        let mut prev = f64::INFINITY;
+        for mix in [0.0f32, 0.25, 0.5, 0.75, 1.0] {
+            let scores: Vec<f32> = (0..n)
+                .map(|i| {
+                    let peaked = if i == 0 { 1.0 } else { 0.001 };
+                    let uniform = 1.0 / n as f32;
+                    (1.0 - mix) * peaked + mix * uniform
+                })
+                .collect();
+            let t = TauEstimator::tau_from_scores(&scores);
+            assert!(t <= prev + 1e-9, "tau not monotone: {t} after {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn ema_smoothing_and_observation_count() {
+        let mut est = TauEstimator::new(0.9);
+        let peaked: Vec<f32> = (0..32).map(|i| if i == 0 { 1.0 } else { 0.01 }).collect();
+        let first = est.update(&peaked);
+        assert_eq!(est.observations(), 1);
+        assert!((first - est.last_raw()).abs() < 1e-12, "first sample initializes EMA");
+        let mut prev = est.tau();
+        for _ in 0..50 {
+            est.update(&[1.0; 32]); // uniform: raw tau = 1
+            assert!(est.tau() <= prev + 1e-12);
+            prev = est.tau();
+        }
+        assert!((est.tau() - 1.0).abs() < 0.05, "EMA should approach 1, got {}", est.tau());
+    }
+
+    #[test]
+    fn paper_threshold_examples() {
+        // §4.2: B=640, b=128 -> tau_th for guaranteed speedup = (640+384)/384 ≈ 2.67
+        let th = cost_model::tau_threshold(640, 128);
+        assert!((th - 1024.0 / 384.0).abs() < 1e-12);
+        // §4.4: B=128, b=32 -> (128+96)/96 ≈ 2.33 (paper quotes 2.33)
+        let th2 = cost_model::tau_threshold(128, 32);
+        assert!((th2 - 2.3333).abs() < 1e-3);
+        assert!(cost_model::guaranteed_speedup(640, 128, 3.0));
+        assert!(!cost_model::guaranteed_speedup(640, 128, 2.0));
+    }
+
+    #[test]
+    fn property_tau_bounds() {
+        // 1 <= tau <= sqrt(B) for any non-negative score vector
+        check("tau in [1, sqrt(B)]", 300, |g: &mut Gen| {
+            let scores = g.scores(1..256);
+            let t = TauEstimator::tau_from_scores(&scores);
+            let bound = (scores.len() as f64).sqrt() + 1e-6;
+            assert!(t >= 1.0 - 1e-12, "tau {t} < 1");
+            assert!(t <= bound, "tau {t} > sqrt(B) {bound}");
+        });
+    }
+
+    #[test]
+    fn property_scale_invariance() {
+        // tau(c * scores) == tau(scores): the estimator sees a distribution
+        check("tau scale invariant", 200, |g: &mut Gen| {
+            let scores = g.scores(2..128);
+            let c = g.f32_in(0.001..1000.0);
+            let scaled: Vec<f32> = scores.iter().map(|&s| s * c).collect();
+            let a = TauEstimator::tau_from_scores(&scores);
+            let b = TauEstimator::tau_from_scores(&scaled);
+            assert!((a - b).abs() < 1e-6 * a.max(1.0), "{a} vs {b}");
+        });
+    }
+}

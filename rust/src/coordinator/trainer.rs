@@ -1,0 +1,620 @@
+//! The training coordinator — Algorithm 1 of the paper, plus the uniform
+//! and history-based baselines, under the paper's fixed wall-clock
+//! protocol.
+//!
+//! ```text
+//! repeat
+//!   if τ > τ_th:                         (importance sampling active)
+//!     U  <- B uniformly presampled points          (prefetch pipeline)
+//!     g  <- ĝ scores of U                          (fwd_scores artifact)
+//!     G  <- b points resampled from U with p ∝ g   (alias sampler)
+//!     w  <- 1/(B g_i)                              (unbiased weights)
+//!     θ  <- sgd_step(w, G)                          (train_step artifact)
+//!   else:                                 (uniform warmup)
+//!     U  <- b uniform points
+//!     θ  <- sgd_step(1, U)
+//!     g  <- scores of U                   (free: same forward pass)
+//!   τ <- a_τ τ + (1-a_τ) (1 - ||g-u||²/Σg²)^(-1/2)  (Eq. 26)
+//! until budget exhausted
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicU64};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, ModelState};
+use crate::util::rng::SplitMix64;
+use crate::util::timer::{PhaseTimers, Stopwatch};
+
+/// Time an expression into `$timers` under `$phase` without closing over
+/// `self` (the expression may itself borrow `self` mutably).
+macro_rules! timed {
+    ($timers:expr, $phase:expr, $e:expr) => {{
+        let __t0 = std::time::Instant::now();
+        let __out = $e;
+        $timers.record($phase, __t0.elapsed());
+        __out
+    }};
+}
+
+use super::history::{LoshchilovHutter, SchaulProportional};
+use super::metrics::{MetricsLog, Row};
+use super::pipeline::{gather_rows, PrefetchedBatch, Prefetcher, PipelineStats};
+use super::sampler::{resample_from_scores, ScoreKind, StrategyKind};
+use super::tau::TauEstimator;
+
+/// Where training batches come from: a background prefetch pipeline
+/// (multi-core) or inline synchronous assembly (`prefetch_threads = 0`,
+/// the single-core fast path — §Perf iter 6).
+pub enum BatchSource<'a, D: Dataset> {
+    Sync { dataset: &'a D, batch: usize, rng: SplitMix64, draws: u64 },
+    Prefetched(Prefetcher<'a>),
+}
+
+impl<'a, D: Dataset> BatchSource<'a, D> {
+    pub fn sync(dataset: &'a D, batch: usize, seed: u64) -> Self {
+        // same stream as prefetch worker 0, so sync and 1-worker runs align
+        let rng = SplitMix64::tensor_stream(seed ^ 0xF33D, (batch * 1000) as u64);
+        BatchSource::Sync { dataset, batch, rng, draws: 0 }
+    }
+
+    pub fn prefetched(p: Prefetcher<'a>) -> Self {
+        BatchSource::Prefetched(p)
+    }
+
+    pub fn next(&mut self) -> PrefetchedBatch {
+        match self {
+            BatchSource::Sync { dataset, batch, rng, draws } => {
+                let n = dataset.len();
+                let epoch = *draws / n as u64;
+                *draws += *batch as u64;
+                let indices: Vec<usize> = (0..*batch).map(|_| rng.below(n)).collect();
+                let (x, y) = dataset.batch(&indices, epoch);
+                PrefetchedBatch { indices, x, y, epoch }
+            }
+            BatchSource::Prefetched(p) => p.next(),
+        }
+    }
+}
+
+/// Everything configurable about one training run.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub model: String,
+    pub strategy: StrategyKind,
+    /// presample size B (Alg. 1). Must match a baked fwd_scores artifact.
+    pub presample: usize,
+    /// τ threshold above which importance sampling switches on.
+    pub tau_th: f64,
+    /// EMA retention a_τ of Alg. 1 line 17.
+    pub a_tau: f64,
+    pub base_lr: f32,
+    /// (progress fraction, multiplier) — multiplier applies from that
+    /// fraction of the budget (or of max_steps) onward. Mirrors the paper's
+    /// wall-clock learning-rate schedule (§4.2).
+    pub lr_milestones: Vec<(f64, f32)>,
+    /// wall-clock budget; None = run to max_steps.
+    pub budget_secs: Option<f64>,
+    pub max_steps: Option<u64>,
+    /// evaluate on the test split every this many seconds (0 = never).
+    pub eval_every_secs: f64,
+    pub seed: u64,
+    /// O(1) alias sampler vs O(log B) cumulative sampler.
+    pub use_alias: bool,
+    pub prefetch_depth: usize,
+    /// Prefetch worker count. NOTE: with more than one worker the batch
+    /// arrival order is nondeterministic (by design — it is a racy queue);
+    /// set to 1 for bit-reproducible runs.
+    pub prefetch_threads: usize,
+    /// record a metrics row every `log_every` steps.
+    pub log_every: u64,
+    /// The paper's §5 future-work extension: when importance sampling is
+    /// active, scale the learning rate by min(τ, cap) — the linear-scaling
+    /// rule applied to the τ-equivalent batch-size increase ("increasing
+    /// the learning rate proportionally to the batch increment"). 0 = off
+    /// (the paper's main algorithm).
+    pub adaptive_lr_cap: f64,
+}
+
+impl TrainerConfig {
+    /// Paper defaults for a model; strategy = the paper's upper-bound.
+    pub fn upper_bound(model: &str) -> Self {
+        Self::base(model, StrategyKind::Presample { score: ScoreKind::UpperBound })
+    }
+
+    pub fn uniform(model: &str) -> Self {
+        Self::base(model, StrategyKind::Uniform)
+    }
+
+    pub fn loss(model: &str) -> Self {
+        Self::base(model, StrategyKind::Presample { score: ScoreKind::Loss })
+    }
+
+    pub fn grad_norm(model: &str) -> Self {
+        Self::base(model, StrategyKind::Presample { score: ScoreKind::GradNorm })
+    }
+
+    pub fn loshchilov_hutter(model: &str) -> Self {
+        Self::base(
+            model,
+            StrategyKind::LoshchilovHutter { s: 100.0, recompute_every: 1200, sort_every: 20 },
+        )
+    }
+
+    pub fn schaul(model: &str) -> Self {
+        Self::base(model, StrategyKind::Schaul { alpha: 1.0, beta: 0.5, refresh_every: 50 })
+    }
+
+    pub fn base(model: &str, strategy: StrategyKind) -> Self {
+        Self {
+            model: model.to_string(),
+            strategy,
+            presample: 0, // 0 = use the model's default (largest baked B if unset)
+            tau_th: 1.5,
+            a_tau: 0.9,
+            base_lr: 0.1,
+            lr_milestones: vec![(0.4, 0.2), (0.8, 0.2)],
+            budget_secs: None,
+            max_steps: Some(2_000),
+            eval_every_secs: 0.0,
+            seed: 42,
+            use_alias: true,
+            // Default: synchronous batch assembly. On multi-core machines
+            // set prefetch_threads >= 1 to overlap data generation with the
+            // device; on this single-core testbed worker threads only add
+            // contention (~40 ms/step measured — EXPERIMENTS.md §Perf
+            // iter 6), so 0 is the right default.
+            prefetch_depth: 2,
+            prefetch_threads: 0,
+            log_every: 10,
+            adaptive_lr_cap: 0.0,
+        }
+    }
+
+    pub fn with_budget(mut self, secs: f64) -> Self {
+        self.budget_secs = Some(secs);
+        self.max_steps = None;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: u64) -> Self {
+        self.max_steps = Some(steps);
+        self
+    }
+
+    pub fn with_presample(mut self, b: usize) -> Self {
+        self.presample = b;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.base_lr = lr;
+        self
+    }
+
+    pub fn with_tau_th(mut self, t: f64) -> Self {
+        self.tau_th = t;
+        self
+    }
+
+    pub fn with_eval_every(mut self, secs: f64) -> Self {
+        self.eval_every_secs = secs;
+        self
+    }
+
+    /// Enable the §5 τ-adaptive learning rate (see `adaptive_lr_cap`).
+    pub fn with_adaptive_lr(mut self, cap: f64) -> Self {
+        self.adaptive_lr_cap = cap;
+        self
+    }
+}
+
+/// Result of one run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub log: MetricsLog,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub final_train_loss: f64,
+    pub final_test_loss: f64,
+    pub final_test_err: f64,
+    /// step at which importance sampling first switched on (None = never)
+    pub is_switch_step: Option<u64>,
+    pub strategy: String,
+}
+
+/// The coordinator. Owns the model state; borrows the engine.
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: TrainerConfig,
+    pub state: ModelState,
+    pub tau: TauEstimator,
+    pub timers: PhaseTimers,
+    rng: SplitMix64,
+    presample: usize,
+    batch: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, mut cfg: TrainerConfig) -> Result<Self> {
+        let info = engine.model_info(&cfg.model)?;
+        let batch = info.batch;
+        if cfg.presample == 0 {
+            cfg.presample = info.presample.iter().copied().max().unwrap_or(batch);
+        }
+        if matches!(cfg.strategy, StrategyKind::Presample { .. }) {
+            // fail fast if the requested B has no baked artifact
+            info.entry("fwd_scores", cfg.presample).with_context(|| {
+                format!("presample {} has no fwd_scores artifact", cfg.presample)
+            })?;
+        }
+        if matches!(
+            cfg.strategy,
+            StrategyKind::Presample { score: ScoreKind::GradNorm }
+        ) {
+            info.entry("grad_norms", cfg.presample).context(
+                "gradient-norm strategy requires a grad_norms artifact at the presample size",
+            )?;
+        }
+        // Pre-compile the entries this strategy will execute so the first
+        // training step is not a compile stall inside the measured budget
+        // (all strategies then compare on pure steady-state wall-clock).
+        let batch_ = info.batch;
+        let eval_batch = info.eval_batch;
+        engine.executable(&cfg.model, "train_step", batch_)?;
+        engine.executable(&cfg.model, "eval_metrics", eval_batch)?;
+        match &cfg.strategy {
+            StrategyKind::Presample { score: ScoreKind::GradNorm } => {
+                engine.executable(&cfg.model, "grad_norms", cfg.presample)?;
+            }
+            StrategyKind::Presample { .. } => {
+                engine.executable(&cfg.model, "fwd_scores", cfg.presample)?;
+            }
+            StrategyKind::LoshchilovHutter { .. } => {
+                engine.executable(&cfg.model, "fwd_scores", batch_)?;
+            }
+            _ => {}
+        }
+        let state = engine.init_state(&cfg.model, cfg.seed)?;
+        let rng = SplitMix64::tensor_stream(cfg.seed ^ 0x7 & u64::MAX, 1);
+        Ok(Self {
+            engine,
+            tau: TauEstimator::new(cfg.a_tau),
+            state,
+            rng: rng.clone(),
+            presample: cfg.presample,
+            batch,
+            timers: PhaseTimers::default(),
+            cfg,
+        })
+    }
+
+    /// Learning rate at a given progress fraction.
+    fn lr_at(&self, progress: f64) -> f32 {
+        let mut lr = self.cfg.base_lr;
+        for &(frac, mult) in &self.cfg.lr_milestones {
+            if progress >= frac {
+                lr *= mult;
+            }
+        }
+        lr
+    }
+
+    /// Evaluate on full shards of the test set (no augmentation).
+    pub fn evaluate<D: Dataset + ?Sized>(&mut self, test: &D) -> Result<(f64, f64)> {
+        let info = self.engine.model_info(&self.cfg.model)?;
+        let eb = info.eval_batch;
+        let shards = test.len() / eb;
+        if shards == 0 {
+            bail!("test set smaller than eval batch ({} < {eb})", test.len());
+        }
+        let mut sum_loss = 0.0;
+        let mut correct = 0i64;
+        let mut seen = 0usize;
+        for s in 0..shards {
+            let indices: Vec<usize> = (s * eb..(s + 1) * eb).collect();
+            let (x, y) = test.batch(&indices, 0);
+            let (l, c) = self.engine.eval_metrics(&self.state, &x, &y)?;
+            sum_loss += l;
+            correct += c;
+            seen += eb;
+        }
+        Ok((sum_loss / seen as f64, 1.0 - correct as f64 / seen as f64))
+    }
+
+    /// Run the configured strategy on `train`, optionally evaluating on
+    /// `test` along the way. The paper's protocol: fixed wall-clock budget,
+    /// lr schedule keyed to elapsed time.
+    pub fn run<D: Dataset + Sync>(&mut self, train: &D, test: Option<&D>) -> Result<Report> {
+        if train.feature_dim() != self.engine.model_info(&self.cfg.model)?.feature_dim {
+            bail!(
+                "dataset feature_dim {} != model feature_dim {}",
+                train.feature_dim(),
+                self.engine.model_info(&self.cfg.model)?.feature_dim
+            );
+        }
+        let stop = AtomicBool::new(false);
+        let stats_small = PipelineStats::default();
+        let stats_large = PipelineStats::default();
+        let draws = AtomicU64::new(0);
+        let needs_large = matches!(self.cfg.strategy, StrategyKind::Presample { .. });
+        let (depth, threads) = (self.cfg.prefetch_depth, self.cfg.prefetch_threads);
+        let (batch, presample, seed) = (self.batch, self.presample, self.cfg.seed);
+
+        if threads == 0 {
+            // synchronous mode: on single-core machines the worker threads
+            // cannot overlap with PJRT compute and only add contention
+            // (§Perf iter 6); assemble batches inline instead.
+            let mut small = BatchSource::sync(train, batch, seed);
+            let mut large = needs_large.then(|| BatchSource::sync(train, presample, seed ^ 0xB16));
+            return self.run_inner(train, test, &mut small, large.as_mut());
+        }
+        std::thread::scope(|s| {
+            let mut small = BatchSource::prefetched(Prefetcher::spawn(
+                s, train, batch, depth, threads, seed, &stop, &stats_small, &draws,
+            ));
+            let mut large = if needs_large {
+                Some(BatchSource::prefetched(Prefetcher::spawn(
+                    s,
+                    train,
+                    presample,
+                    depth,
+                    threads,
+                    seed ^ 0xB16,
+                    &stop,
+                    &stats_large,
+                    &draws,
+                )))
+            } else {
+                None
+            };
+            let report = self.run_inner(train, test, &mut small, large.as_mut());
+            if let BatchSource::Prefetched(p) = &small {
+                p.shutdown();
+            }
+            if let Some(BatchSource::Prefetched(p)) = &large {
+                p.shutdown();
+            }
+            report
+        })
+    }
+
+    fn run_inner<D: Dataset + Sync>(
+        &mut self,
+        train: &D,
+        test: Option<&D>,
+        small: &mut BatchSource<D>,
+        mut large_src: Option<&mut BatchSource<D>>,
+    ) -> Result<Report> {
+        let sw = Stopwatch::new();
+        let mut log = MetricsLog::default();
+        let mut last_eval = -f64::INFINITY;
+        let mut step: u64 = 0;
+        let strategy = self.cfg.strategy.clone();
+
+        // history-based baselines carry per-dataset state
+        let mut lh: Option<LoshchilovHutter> = match &strategy {
+            StrategyKind::LoshchilovHutter { s, recompute_every, sort_every } => Some(
+                LoshchilovHutter::new(train.len(), *s, *recompute_every, *sort_every),
+            ),
+            _ => None,
+        };
+        let mut schaul: Option<SchaulProportional> = match &strategy {
+            StrategyKind::Schaul { alpha, beta, refresh_every } => {
+                Some(SchaulProportional::new(train.len(), *alpha, *beta, *refresh_every))
+            }
+            _ => None,
+        };
+
+        loop {
+            // -- termination ---------------------------------------------------
+            let elapsed = sw.elapsed_secs();
+            if let Some(budget) = self.cfg.budget_secs {
+                if elapsed >= budget {
+                    break;
+                }
+            }
+            if let Some(max) = self.cfg.max_steps {
+                if step >= max {
+                    break;
+                }
+            }
+            let progress = match (self.cfg.budget_secs, self.cfg.max_steps) {
+                (Some(b), _) => elapsed / b,
+                (None, Some(m)) => step as f64 / m as f64,
+                _ => 0.0,
+            };
+            let lr = self.lr_at(progress);
+
+            // -- one step ------------------------------------------------------
+            let is_active;
+            let loss;
+            match &strategy {
+                StrategyKind::Uniform => {
+                    is_active = false;
+                    let b = timed!(self.timers, "data", small.next());
+                    let out = timed!(
+                        self.timers,
+                        "step",
+                        self.engine.train_step(&mut self.state, &b.x, &b.y, &vec![1.0; b.y.len()], lr)
+                    )?;
+                    // free scores: log τ for observability (uniform never acts on it)
+                    self.tau.update(&out.scores);
+                    loss = out.loss as f64;
+                }
+                StrategyKind::Presample { score } => {
+                    let tau_on =
+                        self.tau.observations() > 0 && self.tau.tau() > self.cfg.tau_th;
+                    if tau_on {
+                        is_active = true;
+                        let pb = timed!(self.timers, "data", large_src.as_deref_mut().expect("presample source").next());
+                        let scores = timed!(
+                            self.timers,
+                            "score",
+                            match score {
+                                ScoreKind::UpperBound => {
+                                    self.engine.fwd_scores(&self.state, &pb.x, &pb.y).map(|o| o.1)
+                                }
+                                ScoreKind::Loss => {
+                                    self.engine.fwd_scores(&self.state, &pb.x, &pb.y).map(|o| o.0)
+                                }
+                                ScoreKind::GradNorm => {
+                                    self.engine.grad_norms(&self.state, &pb.x, &pb.y)
+                                }
+                            }
+                        )?;
+                        let plan = timed!(
+                            self.timers,
+                            "resample",
+                            resample_from_scores(&scores, self.batch, &mut self.rng, self.cfg.use_alias)
+                        );
+                        let (x, y) = gather_rows(&pb, &plan.positions);
+                        // §5 extension: linear-scaling rule on the
+                        // τ-equivalent batch increase (off when cap = 0)
+                        let step_lr = if self.cfg.adaptive_lr_cap > 0.0 {
+                            lr * self.tau.tau().clamp(1.0, self.cfg.adaptive_lr_cap) as f32
+                        } else {
+                            lr
+                        };
+                        let out = timed!(
+                            self.timers,
+                            "step",
+                            self.engine.train_step(&mut self.state, &x, &y, &plan.weights, step_lr)
+                        )?;
+                        self.tau.update(&scores);
+                        loss = out.loss as f64;
+                    } else {
+                        is_active = false;
+                        let b = timed!(self.timers, "data", small.next());
+                        let out = timed!(
+                            self.timers,
+                            "step",
+                            self.engine.train_step(
+                                &mut self.state,
+                                &b.x,
+                                &b.y,
+                                &vec![1.0; b.y.len()],
+                                lr,
+                            )
+                        )?;
+                        // Alg. 1 line 15: scores from the warmup step are free.
+                        self.tau.update(&out.scores);
+                        loss = out.loss as f64;
+                    }
+                }
+                StrategyKind::LoshchilovHutter { .. } => {
+                    is_active = true;
+                    let h = lh.as_mut().unwrap();
+                    if h.needs_recompute(step) {
+                        let losses = self.recompute_all_losses(train)?;
+                        h.history.record_all(&losses, step);
+                    }
+                    let idx = h.select(self.batch, step, &mut self.rng);
+                    let (x, y) = timed!(self.timers, "data", train.batch(&idx, 0));
+                    let out = timed!(
+                        self.timers,
+                        "step",
+                        self.engine.train_step(&mut self.state, &x, &y, &vec![1.0; y.len()], lr)
+                    )?;
+                    h.observe(&idx, &out.loss_vec, step);
+                    self.tau.update(&out.scores);
+                    loss = out.loss as f64;
+                }
+                StrategyKind::Schaul { .. } => {
+                    is_active = true;
+                    let h = schaul.as_mut().unwrap();
+                    let (idx, w) = h.select(self.batch, step, &mut self.rng);
+                    let (x, y) = timed!(self.timers, "data", train.batch(&idx, 0));
+                    let out = timed!(
+                        self.timers,
+                        "step",
+                        self.engine.train_step(&mut self.state, &x, &y, &w, lr)
+                    )?;
+                    h.observe(&idx, &out.loss_vec, step);
+                    self.tau.update(&out.scores);
+                    loss = out.loss as f64;
+                }
+            }
+            step += 1;
+
+            // -- logging / eval -------------------------------------------------
+            let mut row_due = step % self.cfg.log_every.max(1) == 0 || step == 1;
+            let mut test_loss = f64::NAN;
+            let mut test_err = f64::NAN;
+            if let Some(t) = test {
+                let now = sw.elapsed_secs();
+                if self.cfg.eval_every_secs > 0.0 && now - last_eval >= self.cfg.eval_every_secs
+                {
+                    let (l, e) = timed!(self.timers, "eval", self.evaluate(t))?;
+                    test_loss = l;
+                    test_err = e;
+                    last_eval = now;
+                    row_due = true;
+                }
+            }
+            if row_due {
+                log.push(Row {
+                    step,
+                    secs: sw.elapsed_secs(),
+                    train_loss: loss,
+                    tau: self.tau.tau(),
+                    is_active,
+                    lr: lr as f64,
+                    test_loss,
+                    test_err,
+                });
+            }
+        }
+
+        // final eval
+        let (final_test_loss, final_test_err) = match test {
+            Some(t) => timed!(self.timers, "eval", self.evaluate(t))?,
+            None => (f64::NAN, f64::NAN),
+        };
+        let final_train_loss = log.trailing_train_loss(10).unwrap_or(f64::NAN);
+        if let Some(last) = log.rows.last_mut() {
+            if last.test_err.is_nan() {
+                last.test_loss = final_test_loss;
+                last.test_err = final_test_err;
+            }
+        }
+        for (name, dur, _) in self.timers.phases() {
+            log.phase_seconds.push((name.clone(), dur.as_secs_f64()));
+        }
+        Ok(Report {
+            steps: step,
+            wall_secs: sw.elapsed_secs(),
+            final_train_loss,
+            final_test_loss,
+            final_test_err,
+            is_switch_step: log.is_switch_on_step(),
+            strategy: self.cfg.strategy.name(),
+            log,
+        })
+    }
+
+    /// Full loss refresh over the dataset (the expensive pass of the
+    /// Loshchilov-Hutter baseline), in training-batch shards.
+    fn recompute_all_losses<D: Dataset + ?Sized>(&mut self, train: &D) -> Result<Vec<f32>> {
+        let n = train.len();
+        let b = self.batch;
+        let mut out = vec![0.0f32; n];
+        let mut start = 0;
+        while start < n {
+            let indices: Vec<usize> = (0..b).map(|k| (start + k) % n).collect();
+            let (x, y) = train.batch(&indices, 0);
+            let (loss, _) =
+                timed!(self.timers, "recompute", self.engine.fwd_scores(&self.state, &x, &y))?;
+            let take = b.min(n - start);
+            out[start..start + take].copy_from_slice(&loss[..take]);
+            start += take;
+        }
+        Ok(out)
+    }
+}

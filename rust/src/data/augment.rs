@@ -1,0 +1,112 @@
+//! Deterministic augmentation stream.
+//!
+//! The paper pre-augments CIFAR into 1.5M images so that history-based
+//! baselines (which key off a fixed sample identity) remain applicable.
+//! Our generators instead key a small jitter off `(seed, index, epoch)`:
+//! the same sample re-visited in a later epoch is a *slightly different*
+//! view — exactly what random crops/flips do — while staying fully
+//! deterministic and storage-free.
+
+use crate::util::rng::SplitMix64;
+
+/// Magnitude of the per-epoch jitter relative to the feature scale.
+pub const JITTER_STD: f64 = 0.08;
+
+/// Jitter hits one feature in `JITTER_STRIDE` per view (§Perf: additive
+/// noise on a strided subset gives the same decorrelation-across-epochs
+/// effect at a quarter of the RNG cost; the stride *offset* varies per
+/// view so all features get perturbed across epochs).
+pub const JITTER_STRIDE: usize = 4;
+
+/// Fraction of features randomly zeroed per view (cutout-like).
+pub const DROP_FRAC: f64 = 0.05;
+
+/// Apply the epoch-keyed jitter in place.
+pub fn jitter(seed: u64, sample_key: u64, epoch: u64, features: &mut [f32]) {
+    let mut rng = SplitMix64::new(
+        seed ^ 0xA46_0000 ^ sample_key.rotate_left(17) ^ epoch.wrapping_mul(0x9E37_79B9),
+    );
+    let d = features.len();
+    // additive Gaussian jitter on a strided subset (offset varies per view)
+    let offset = rng.below(JITTER_STRIDE);
+    let mut k = offset;
+    while k < d {
+        let (a, b) = rng.fast_normal_pair();
+        features[k] += (a * JITTER_STD) as f32;
+        let k2 = k + JITTER_STRIDE;
+        if k2 < d {
+            features[k2] += (b * JITTER_STD) as f32;
+        }
+        k += 2 * JITTER_STRIDE;
+    }
+    // cutout: zero a contiguous run of DROP_FRAC features
+    let run = ((d as f64 * DROP_FRAC) as usize).max(1);
+    let start = rng.below(d.saturating_sub(run).max(1));
+    for v in features.iter_mut().skip(start).take(run) {
+        *v = 0.0;
+    }
+    // horizontal-flip stand-in: reverse with probability 1/2
+    if rng.next_u64() & 1 == 1 {
+        features.reverse();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_key() {
+        let mut a = vec![1.0f32; 32];
+        let mut b = vec![1.0f32; 32];
+        jitter(1, 2, 3, &mut a);
+        jitter(1, 2, 3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn varies_across_epochs_and_samples() {
+        let base = vec![1.0f32; 32];
+        let mut e1 = base.clone();
+        let mut e2 = base.clone();
+        let mut s2 = base.clone();
+        jitter(1, 2, 1, &mut e1);
+        jitter(1, 2, 2, &mut e2);
+        jitter(1, 3, 1, &mut s2);
+        assert_ne!(e1, e2);
+        assert_ne!(e1, s2);
+    }
+
+    #[test]
+    fn cutout_zeroes_a_run() {
+        let mut v = vec![10.0f32; 100];
+        jitter(9, 9, 9, &mut v);
+        let zeros = v.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros >= 5, "expected a cutout run, got {zeros} zeros");
+    }
+
+    #[test]
+    fn perturbation_is_bounded() {
+        let mut v = vec![0.0f32; 64];
+        jitter(4, 4, 4, &mut v);
+        // all non-cutout values within ~6 sigma
+        assert!(v.iter().all(|&x| x.abs() < (6.0 * JITTER_STD) as f32 + 1e-6));
+    }
+
+    #[test]
+    fn all_features_perturbed_across_epochs() {
+        // the stride offset rotates, so over many epochs every position
+        // must see noise at some point
+        let mut touched = vec![false; 32];
+        for epoch in 1..50 {
+            let mut v = vec![0.0f32; 32];
+            jitter(9, 1, epoch, &mut v);
+            for (t, &x) in touched.iter_mut().zip(&v) {
+                if x != 0.0 {
+                    *t = true;
+                }
+            }
+        }
+        assert!(touched.iter().all(|&t| t), "{touched:?}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Fine-tuning features — the MIT67 stand-in (§4.3).
+//!
+//! The paper fine-tunes an ImageNet ResNet-50 on 67 indoor-scene classes.
+//! We simulate the *output of the frozen backbone*: class-structured latent
+//! vectors pushed through a fixed random projection + ReLU (the "backbone"),
+//! yielding features that are (a) mostly linearly separable — the
+//! fine-tuning regime where most samples are handled correctly almost
+//! immediately, giving importance sampling its biggest win — and (b)
+//! non-Gaussian, thanks to the ReLU.
+//!
+//! Difficulty mix mirrors `synthetic.rs` but with a *larger* easy fraction
+//! (85%), matching the paper's observation that fine-tuning disperses
+//! scores extremely fast (τ crosses the threshold within minutes).
+
+use super::{Dataset, Split, Tier};
+use crate::util::rng::SplitMix64;
+
+pub struct FinetuneFeaturesBuilder {
+    latent_dim: usize,
+    feature_dim: usize,
+    num_classes: usize,
+    samples: usize,
+    test_samples: usize,
+    seed: u64,
+    easy_frac: f64,
+    boundary_frac: f64,
+}
+
+impl FinetuneFeaturesBuilder {
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    pub fn test_samples(mut self, n: usize) -> Self {
+        self.test_samples = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn build(self) -> FinetuneFeatures {
+        FinetuneFeatures::new(self, 0)
+    }
+
+    pub fn split(self) -> Split<FinetuneFeatures> {
+        let mut tb = FinetuneFeaturesBuilder { ..self };
+        tb.samples = self.test_samples;
+        let train = FinetuneFeatures::new(self, 0);
+        let test = FinetuneFeatures::new(tb, 0x7E57_0000_0000_0000);
+        Split { train, test }
+    }
+}
+
+impl Clone for FinetuneFeaturesBuilder {
+    fn clone(&self) -> Self {
+        Self { ..*self }
+    }
+}
+impl Copy for FinetuneFeaturesBuilder {}
+
+pub struct FinetuneFeatures {
+    cfg: FinetuneFeaturesBuilder,
+    /// `num_classes * latent_dim` class centers.
+    centers: Vec<f32>,
+    /// `latent_dim * feature_dim` frozen backbone projection.
+    backbone: Vec<f32>,
+    index_offset: u64,
+    /// Materialized features (no augmentation stream on this dataset, so
+    /// the cache is exact); §Perf L3 optimization.
+    cache: Option<Vec<f32>>,
+}
+
+impl FinetuneFeatures {
+    pub fn builder(feature_dim: usize, num_classes: usize) -> FinetuneFeaturesBuilder {
+        FinetuneFeaturesBuilder {
+            latent_dim: 32,
+            feature_dim,
+            num_classes,
+            samples: 5_360, // ~80 images/class, like MIT67's train split
+            test_samples: 1_340,
+            seed: 0,
+            easy_frac: 0.85,
+            boundary_frac: 0.10,
+        }
+    }
+
+    fn new(cfg: FinetuneFeaturesBuilder, index_offset: u64) -> Self {
+        let mut rng = SplitMix64::tensor_stream(cfg.seed ^ 0xF17E, u64::MAX);
+        let mut centers = Vec::with_capacity(cfg.num_classes * cfg.latent_dim);
+        while centers.len() < cfg.num_classes * cfg.latent_dim {
+            let (a, b) = rng.normal_pair();
+            // spread centers out: scale 2 keeps classes mostly separable
+            centers.push(2.0 * a as f32);
+            centers.push(2.0 * b as f32);
+        }
+        centers.truncate(cfg.num_classes * cfg.latent_dim);
+
+        let mut backbone = Vec::with_capacity(cfg.latent_dim * cfg.feature_dim);
+        let scale = (1.0 / cfg.latent_dim as f64).sqrt();
+        while backbone.len() < cfg.latent_dim * cfg.feature_dim {
+            let (a, b) = rng.normal_pair();
+            backbone.push((a * scale) as f32);
+            backbone.push((b * scale) as f32);
+        }
+        backbone.truncate(cfg.latent_dim * cfg.feature_dim);
+        let mut ds = Self { cfg, centers, backbone, index_offset, cache: None };
+        if ds.cfg.samples * ds.cfg.feature_dim * 4 <= 256 << 20 {
+            let d = ds.cfg.feature_dim;
+            let mut cache = vec![0.0f32; ds.cfg.samples * d];
+            for i in 0..ds.cfg.samples {
+                ds.generate_features(i, &mut cache[i * d..(i + 1) * d]);
+            }
+            ds.cache = Some(cache);
+        }
+        ds
+    }
+
+    fn sample_rng(&self, i: usize) -> SplitMix64 {
+        SplitMix64::tensor_stream(
+            self.cfg.seed ^ 0xF1_7E5A,
+            self.index_offset.wrapping_add(i as u64),
+        )
+    }
+
+    fn center(&self, class: usize) -> &[f32] {
+        let d = self.cfg.latent_dim;
+        &self.centers[class * d..(class + 1) * d]
+    }
+}
+
+impl Dataset for FinetuneFeatures {
+    fn len(&self) -> usize {
+        self.cfg.samples
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.cfg.feature_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.cfg.num_classes
+    }
+
+    fn label(&self, i: usize) -> i32 {
+        let mut rng = self.sample_rng(i);
+        rng.below(self.cfg.num_classes) as i32
+    }
+
+    fn tier(&self, i: usize) -> Option<Tier> {
+        let mut rng = self.sample_rng(i);
+        let _ = rng.below(self.cfg.num_classes);
+        let u = rng.uniform();
+        Some(if u < self.cfg.easy_frac {
+            Tier::Easy
+        } else if u < self.cfg.easy_frac + self.cfg.boundary_frac {
+            Tier::Boundary
+        } else {
+            Tier::Outlier
+        })
+    }
+
+    fn write_features(&self, i: usize, _epoch: u64, out: &mut [f32]) {
+        if let Some(c) = &self.cache {
+            let d = self.cfg.feature_dim;
+            out.copy_from_slice(&c[i * d..(i + 1) * d]);
+            return;
+        }
+        self.generate_features(i, out);
+    }
+}
+
+impl FinetuneFeatures {
+    fn generate_features(&self, i: usize, out: &mut [f32]) {
+        let ld = self.cfg.latent_dim;
+        let fd = self.cfg.feature_dim;
+        debug_assert_eq!(out.len(), fd);
+        let mut rng = self.sample_rng(i);
+        let class = rng.below(self.cfg.num_classes);
+        let u = rng.uniform();
+        let (noise, mix) = if u < self.cfg.easy_frac {
+            (0.4, None)
+        } else if u < self.cfg.easy_frac + self.cfg.boundary_frac {
+            let confuser = {
+                let c = rng.below(self.cfg.num_classes - 1);
+                if c >= class {
+                    c + 1
+                } else {
+                    c
+                }
+            };
+            (0.4, Some((confuser, rng.uniform_range(0.35, 0.5))))
+        } else {
+            (2.0, None)
+        };
+
+        // latent vector
+        let mut latent = vec![0.0f32; ld];
+        let center = self.center(class);
+        let confuser = mix.map(|(c, a)| (self.center(c), a));
+        let mut k = 0;
+        while k < ld {
+            let (n1, n2) = rng.normal_pair();
+            for (off, n) in [(0usize, n1), (1usize, n2)] {
+                let j = k + off;
+                if j >= ld {
+                    break;
+                }
+                let base = match confuser {
+                    Some((cp, a)) => center[j] as f64 * (1.0 - a) + cp[j] as f64 * a,
+                    None => center[j] as f64,
+                };
+                latent[j] = (base + n * noise) as f32;
+            }
+            k += 2;
+        }
+
+        // frozen backbone: ReLU(latent @ backbone)
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (l, &lv) in latent.iter().enumerate() {
+                acc += lv as f64 * self.backbone[l * fd + j] as f64;
+            }
+            *o = (acc.max(0.0)) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let ds = FinetuneFeatures::builder(512, 67).samples(200).seed(3).build();
+        assert_eq!(ds.feature_dim(), 512);
+        assert_eq!(ds.num_classes(), 67);
+        let mut a = vec![0.0; 512];
+        let mut b = vec![0.0; 512];
+        ds.write_features(10, 0, &mut a);
+        ds.write_features(10, 5, &mut b); // no augmentation: epoch ignored
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn features_are_relu_nonnegative() {
+        let ds = FinetuneFeatures::builder(128, 10).samples(50).seed(4).build();
+        let mut v = vec![0.0; 128];
+        for i in 0..50 {
+            ds.write_features(i, 0, &mut v);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn same_class_samples_are_closer_than_cross_class() {
+        let ds = FinetuneFeatures::builder(128, 5).samples(500).seed(5).build();
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![vec![]; 5];
+        let mut buf = vec![0.0; 128];
+        for i in 0..200 {
+            ds.write_features(i, 0, &mut buf);
+            by_class[ds.label(i) as usize].push(buf.clone());
+        }
+        let d = |a: &[f32], b: &[f32]| crate::util::stats::l2_dist(a, b);
+        let within = d(&by_class[0][0], &by_class[0][1]);
+        let across = d(&by_class[0][0], &by_class[1][0]);
+        assert!(within < across, "within {within} !< across {across}");
+    }
+
+    #[test]
+    fn split_sizes() {
+        let s = FinetuneFeatures::builder(64, 10).samples(100).test_samples(40).split();
+        assert_eq!(s.train.len(), 100);
+        assert_eq!(s.test.len(), 40);
+    }
+}

@@ -1,0 +1,369 @@
+//! Synthetic image classification — the CIFAR-10/100 stand-in (§4.2).
+//!
+//! Each class has a Gaussian prototype vector; each sample is generated
+//! deterministically from `(seed, index)` as one of three difficulty tiers
+//! (DESIGN.md §2):
+//!
+//! * **Easy** (default 70%): `prototype + small noise` — learned quickly,
+//!   gradients collapse early (the "could be ignored" mass of the paper).
+//! * **Boundary** (20%): convex mix of the true prototype and a confuser
+//!   class — stays informative for many epochs.
+//! * **Outlier** (10%): heavy noise over the prototype — keeps producing
+//!   large gradients essentially forever.
+//!
+//! This explicit tier control is what makes the generator a faithful test
+//! bed for importance sampling: the *dispersion* of per-sample gradient
+//! norms — the only property Alg. 1 exploits — is reproduced by
+//! construction, without the original pixels.
+
+use super::{Dataset, Split, Tier};
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone)]
+pub struct SyntheticImagesBuilder {
+    feature_dim: usize,
+    num_classes: usize,
+    samples: usize,
+    test_samples: usize,
+    seed: u64,
+    easy_frac: f64,
+    boundary_frac: f64,
+    easy_noise: f64,
+    outlier_noise: f64,
+    augment: bool,
+}
+
+impl SyntheticImagesBuilder {
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    pub fn test_samples(mut self, n: usize) -> Self {
+        self.test_samples = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Fractions of easy/boundary samples (the remainder is outliers).
+    pub fn tiers(mut self, easy: f64, boundary: f64) -> Self {
+        assert!(easy >= 0.0 && boundary >= 0.0 && easy + boundary <= 1.0);
+        self.easy_frac = easy;
+        self.boundary_frac = boundary;
+        self
+    }
+
+    pub fn noise(mut self, easy: f64, outlier: f64) -> Self {
+        self.easy_noise = easy;
+        self.outlier_noise = outlier;
+        self
+    }
+
+    /// Enable the deterministic augmentation stream (per-epoch jitter), the
+    /// stand-in for the paper's 1.5M pre-augmented CIFAR images.
+    pub fn augment(mut self, on: bool) -> Self {
+        self.augment = on;
+        self
+    }
+
+    pub fn build(self) -> SyntheticImages {
+        SyntheticImages::new(self, 0)
+    }
+
+    /// Build a train/test split (test uses a disjoint index space and no
+    /// augmentation).
+    pub fn split(self) -> Split<SyntheticImages> {
+        let mut test_builder = self.clone();
+        test_builder.samples = self.test_samples;
+        test_builder.augment = false;
+        let train = SyntheticImages::new(self, 0);
+        // index-space offset decorrelates test samples from train samples
+        let test = SyntheticImages::new(test_builder, 0x7E57_0000_0000_0000);
+        Split { train, test }
+    }
+}
+
+pub struct SyntheticImages {
+    cfg: SyntheticImagesBuilder,
+    /// `num_classes * feature_dim` prototype matrix.
+    prototypes: Vec<f32>,
+    index_offset: u64,
+    /// Materialized base features (`samples * feature_dim`), built once at
+    /// construction when the dataset fits the cache budget. Turns the batch
+    /// hot path into a memcpy (+ per-epoch jitter); §Perf L3 optimization.
+    cache: Option<Vec<f32>>,
+}
+
+impl SyntheticImages {
+    pub fn builder(feature_dim: usize, num_classes: usize) -> SyntheticImagesBuilder {
+        SyntheticImagesBuilder {
+            feature_dim,
+            num_classes,
+            samples: 16_384,
+            test_samples: 2_048,
+            seed: 0,
+            easy_frac: 0.7,
+            boundary_frac: 0.2,
+            easy_noise: 0.25,
+            outlier_noise: 1.5,
+            augment: false,
+        }
+    }
+
+    fn new(cfg: SyntheticImagesBuilder, index_offset: u64) -> Self {
+        // Prototypes: unit-ish Gaussian directions, one per class, from a
+        // dedicated stream so sample streams never alias them.
+        let mut rng = SplitMix64::tensor_stream(cfg.seed, u64::MAX);
+        let mut prototypes = Vec::with_capacity(cfg.num_classes * cfg.feature_dim);
+        while prototypes.len() < cfg.num_classes * cfg.feature_dim {
+            let (a, b) = rng.normal_pair();
+            prototypes.push(a as f32);
+            prototypes.push(b as f32);
+        }
+        prototypes.truncate(cfg.num_classes * cfg.feature_dim);
+        let mut ds = Self { cfg, prototypes, index_offset, cache: None };
+        let bytes = ds.cfg.samples * ds.cfg.feature_dim * 4;
+        if bytes <= CACHE_BUDGET_BYTES {
+            let d = ds.cfg.feature_dim;
+            let mut cache = vec![0.0f32; ds.cfg.samples * d];
+            for i in 0..ds.cfg.samples {
+                ds.generate_features(i, &mut cache[i * d..(i + 1) * d]);
+            }
+            ds.cache = Some(cache);
+        }
+        ds
+    }
+
+    fn sample_rng(&self, i: usize) -> SplitMix64 {
+        SplitMix64::tensor_stream(
+            self.cfg.seed ^ 0xDA7A_5E7,
+            self.index_offset.wrapping_add(i as u64),
+        )
+    }
+
+    fn prototype(&self, class: usize) -> &[f32] {
+        let d = self.cfg.feature_dim;
+        &self.prototypes[class * d..(class + 1) * d]
+    }
+
+    fn tier_of(&self, rng: &mut SplitMix64) -> Tier {
+        let u = rng.uniform();
+        if u < self.cfg.easy_frac {
+            Tier::Easy
+        } else if u < self.cfg.easy_frac + self.cfg.boundary_frac {
+            Tier::Boundary
+        } else {
+            Tier::Outlier
+        }
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn len(&self) -> usize {
+        self.cfg.samples
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.cfg.feature_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.cfg.num_classes
+    }
+
+    fn label(&self, i: usize) -> i32 {
+        // label is the first draw of the sample stream
+        let mut rng = self.sample_rng(i);
+        rng.below(self.cfg.num_classes) as i32
+    }
+
+    fn tier(&self, i: usize) -> Option<Tier> {
+        let mut rng = self.sample_rng(i);
+        let _class = rng.below(self.cfg.num_classes);
+        Some(self.tier_of(&mut rng))
+    }
+
+    fn write_features(&self, i: usize, epoch: u64, out: &mut [f32]) {
+        let d = self.cfg.feature_dim;
+        debug_assert_eq!(out.len(), d);
+        match &self.cache {
+            Some(c) => out.copy_from_slice(&c[i * d..(i + 1) * d]),
+            None => self.generate_features(i, out),
+        }
+        if self.cfg.augment && epoch > 0 {
+            super::augment::jitter(self.cfg.seed, self.index_offset + i as u64, epoch, out);
+        }
+    }
+}
+
+/// Datasets whose base features fit under this budget are materialized at
+/// construction (16384 x 768 f32 = 48 MiB comfortably qualifies).
+const CACHE_BUDGET_BYTES: usize = 256 << 20;
+
+impl SyntheticImages {
+    /// Generate the (un-augmented) base features of sample `i`.
+    fn generate_features(&self, i: usize, out: &mut [f32]) {
+        let d = self.cfg.feature_dim;
+        let mut rng = self.sample_rng(i);
+        let class = rng.below(self.cfg.num_classes);
+        let tier = self.tier_of(&mut rng);
+        let proto = self.prototype(class);
+
+        let (noise, mix): (f64, Option<(usize, f64)>) = match tier {
+            Tier::Easy => (self.cfg.easy_noise, None),
+            Tier::Outlier => (self.cfg.outlier_noise, None),
+            Tier::Boundary => {
+                // confuser class and mixing coefficient in [0.35, 0.5]:
+                // closer to 0.5 = closer to the decision boundary.
+                let confuser = {
+                    let c = rng.below(self.cfg.num_classes - 1);
+                    if c >= class {
+                        c + 1
+                    } else {
+                        c
+                    }
+                };
+                let alpha = rng.uniform_range(0.35, 0.5);
+                (self.cfg.easy_noise, Some((confuser, alpha)))
+            }
+        };
+
+        let confuser_proto = mix.map(|(c, a)| (self.prototype(c), a));
+        let mut k = 0;
+        while k < d {
+            let (n1, n2) = rng.fast_normal_pair();
+            for (off, n) in [(0usize, n1), (1usize, n2)] {
+                let j = k + off;
+                if j >= d {
+                    break;
+                }
+                let base = match confuser_proto {
+                    Some((cp, a)) => {
+                        proto[j] as f64 * (1.0 - a) + cp[j] as f64 * a
+                    }
+                    None => proto[j] as f64,
+                };
+                out[j] = (base + n * noise) as f32;
+            }
+            k += 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn ds() -> SyntheticImages {
+        SyntheticImages::builder(64, 10).samples(2000).seed(7).build()
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let d = ds();
+        let mut a = vec![0.0; 64];
+        let mut b = vec![0.0; 64];
+        d.write_features(123, 0, &mut a);
+        d.write_features(123, 0, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(d.label(123), d.label(123));
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let d = ds();
+        let mut a = vec![0.0; 64];
+        let mut b = vec![0.0; 64];
+        d.write_features(1, 0, &mut a);
+        d.write_features(2, 0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let d = ds();
+        let mut seen = vec![false; 10];
+        for i in 0..500 {
+            seen[d.label(i) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn tier_mix_roughly_matches_config() {
+        let d = ds();
+        let mut counts = [0usize; 3];
+        let n = 4000;
+        let d2 = SyntheticImages::builder(64, 10).samples(n).seed(7).build();
+        for i in 0..n {
+            match d2.tier(i).unwrap() {
+                Tier::Easy => counts[0] += 1,
+                Tier::Boundary => counts[1] += 1,
+                Tier::Outlier => counts[2] += 1,
+            }
+        }
+        let f = |c: usize| c as f64 / n as f64;
+        assert!((f(counts[0]) - 0.7).abs() < 0.05, "easy {}", f(counts[0]));
+        assert!((f(counts[1]) - 0.2).abs() < 0.05, "boundary {}", f(counts[1]));
+        assert!((f(counts[2]) - 0.1).abs() < 0.05, "outlier {}", f(counts[2]));
+        drop(d);
+    }
+
+    #[test]
+    fn easy_samples_cluster_near_prototype() {
+        // mean distance-to-prototype must be clearly smaller for easy
+        // samples than for outliers — the heavy-tail construction.
+        let d = ds();
+        let mut buf = vec![0.0f32; 64];
+        let (mut easy, mut outlier) = (vec![], vec![]);
+        for i in 0..2000 {
+            let class = d.label(i) as usize;
+            d.write_features(i, 0, &mut buf);
+            let dist = stats::l2_dist(&buf, d.prototype(class)) as f32;
+            match d.tier(i).unwrap() {
+                Tier::Easy => easy.push(dist),
+                Tier::Outlier => outlier.push(dist),
+                _ => {}
+            }
+        }
+        assert!(stats::mean(&easy) * 2.0 < stats::mean(&outlier));
+    }
+
+    #[test]
+    fn split_is_disjoint_and_unaugmented() {
+        let split = SyntheticImages::builder(32, 5)
+            .samples(100)
+            .test_samples(50)
+            .seed(1)
+            .augment(true)
+            .split();
+        assert_eq!(split.train.len(), 100);
+        assert_eq!(split.test.len(), 50);
+        let mut a = vec![0.0; 32];
+        let mut b = vec![0.0; 32];
+        split.train.write_features(0, 0, &mut a);
+        split.test.write_features(0, 0, &mut b);
+        assert_ne!(a, b, "train/test index spaces must be disjoint");
+        // test set ignores epochs (no augmentation)
+        split.test.write_features(0, 3, &mut a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn augmentation_changes_with_epoch_but_is_deterministic() {
+        let d = SyntheticImages::builder(32, 5).samples(10).seed(2).augment(true).build();
+        let mut e0 = vec![0.0; 32];
+        let mut e1 = vec![0.0; 32];
+        let mut e1b = vec![0.0; 32];
+        d.write_features(3, 0, &mut e0);
+        d.write_features(3, 1, &mut e1);
+        d.write_features(3, 1, &mut e1b);
+        assert_ne!(e0, e1);
+        assert_eq!(e1, e1b);
+    }
+}

@@ -1,0 +1,2 @@
+//! One harness per paper figure; each writes a CSV under results/.
+pub mod runner;

@@ -1,0 +1,478 @@
+//! One harness per paper figure. Each writes CSVs under `results/<fig>/`
+//! with the same series the paper plots, and prints a short summary with
+//! the paper-vs-measured comparison hooks used by EXPERIMENTS.md.
+//!
+//! | harness | paper result                                             |
+//! |---------|----------------------------------------------------------|
+//! | fig1    | variance reduction vs uniform over training              |
+//! | fig2    | p(loss)/p(ub) vs p(gradnorm) scatter + SSE               |
+//! | fig3    | image classification wall-clock curves, all baselines    |
+//! | fig4    | fine-tuning wall-clock curves                            |
+//! | fig5    | LSTM sequence classification wall-clock curves           |
+//! | fig6    | SVRG/Katyusha/SCSG comparison                            |
+//! | fig7    | presample-size (B) ablation                              |
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::correlation::correlation_at_state;
+use crate::analysis::variance::{measure_at_state, VarianceConfig};
+use crate::baselines::svrg::{run_svrg, SvrgConfig};
+use crate::coordinator::metrics::CsvSink;
+use crate::coordinator::trainer::{Trainer, TrainerConfig};
+use crate::data::finetune::FinetuneFeatures;
+use crate::data::sequence::PermutedSequences;
+use crate::data::synthetic::SyntheticImages;
+use crate::data::{Dataset, Split};
+use crate::runtime::Engine;
+
+/// Shared options for every figure harness.
+#[derive(Debug, Clone)]
+pub struct FigOptions {
+    /// wall-clock budget per training run (seconds)
+    pub budget_secs: f64,
+    pub out_dir: PathBuf,
+    /// independent seeds to average over (paper: 3)
+    pub seeds: Vec<u64>,
+    /// smaller datasets / fewer checkpoints for smoke runs
+    pub quick: bool,
+    /// override the model used by figures that allow it
+    pub model: Option<String>,
+}
+
+impl Default for FigOptions {
+    fn default() -> Self {
+        Self {
+            budget_secs: 60.0,
+            out_dir: PathBuf::from("results"),
+            seeds: vec![42],
+            quick: false,
+            model: None,
+        }
+    }
+}
+
+/// A dataset matched to a model's feature_dim/num_classes (DESIGN.md §2).
+pub enum AnyDataset {
+    Images(SyntheticImages),
+    Finetune(FinetuneFeatures),
+    Sequences(PermutedSequences),
+}
+
+impl Dataset for AnyDataset {
+    fn len(&self) -> usize {
+        match self {
+            AnyDataset::Images(d) => d.len(),
+            AnyDataset::Finetune(d) => d.len(),
+            AnyDataset::Sequences(d) => d.len(),
+        }
+    }
+
+    fn feature_dim(&self) -> usize {
+        match self {
+            AnyDataset::Images(d) => d.feature_dim(),
+            AnyDataset::Finetune(d) => d.feature_dim(),
+            AnyDataset::Sequences(d) => d.feature_dim(),
+        }
+    }
+
+    fn num_classes(&self) -> usize {
+        match self {
+            AnyDataset::Images(d) => d.num_classes(),
+            AnyDataset::Finetune(d) => d.num_classes(),
+            AnyDataset::Sequences(d) => d.num_classes(),
+        }
+    }
+
+    fn label(&self, i: usize) -> i32 {
+        match self {
+            AnyDataset::Images(d) => d.label(i),
+            AnyDataset::Finetune(d) => d.label(i),
+            AnyDataset::Sequences(d) => d.label(i),
+        }
+    }
+
+    fn write_features(&self, i: usize, epoch: u64, out: &mut [f32]) {
+        match self {
+            AnyDataset::Images(d) => d.write_features(i, epoch, out),
+            AnyDataset::Finetune(d) => d.write_features(i, epoch, out),
+            AnyDataset::Sequences(d) => d.write_features(i, epoch, out),
+        }
+    }
+}
+
+/// Build the matched train/test split for a model (DESIGN.md §2 table).
+pub fn dataset_for(engine: &Engine, model: &str, seed: u64, quick: bool) -> Result<Split<AnyDataset>> {
+    let info = engine.model_info(model)?;
+    let (d, c) = (info.feature_dim, info.num_classes);
+    let scale = if quick { 4 } else { 1 };
+    Ok(match model {
+        "mlp10" | "cnn10" | "cnn100" => {
+            // The cnn workloads are tuned into the paper's regime: training
+            // stays gradient-noise-limited for the whole budget (CIFAR with
+            // a wideresnet never reaches ~zero train loss in the paper's
+            // window either). 55% easy / 30% boundary / 15% outliers with
+            // wider easy noise keeps a heavy informative tail.
+            let hard = model.starts_with("cnn");
+            let mut b = SyntheticImages::builder(d, c)
+                .samples(16_384 / scale)
+                .test_samples(2_048.min(4_096 / scale))
+                .seed(seed)
+                .augment(true);
+            if hard {
+                b = b.tiers(0.55, 0.30).noise(0.4, 1.5);
+            }
+            let s = b.split();
+            Split { train: AnyDataset::Images(s.train), test: AnyDataset::Images(s.test) }
+        }
+        "finetune" => {
+            let s = FinetuneFeatures::builder(d, c)
+                .samples(5_360 / scale)
+                .test_samples(1_340.min(1_340 / scale.min(2)))
+                .seed(seed)
+                .split();
+            Split { train: AnyDataset::Finetune(s.train), test: AnyDataset::Finetune(s.test) }
+        }
+        "lstm" => {
+            let s = PermutedSequences::builder(d, c)
+                .samples(8_192 / scale)
+                .test_samples(1_024)
+                .seed(seed)
+                .split();
+            Split { train: AnyDataset::Sequences(s.train), test: AnyDataset::Sequences(s.test) }
+        }
+        _ => bail!("no dataset mapping for model {model:?}"),
+    })
+}
+
+fn fig_dir(opts: &FigOptions, fig: &str) -> Result<PathBuf> {
+    let dir = opts.out_dir.join(fig);
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Dispatch by figure name.
+pub fn run_figure(engine: &Engine, name: &str, opts: &FigOptions) -> Result<()> {
+    match name {
+        "fig1" => fig1_variance(engine, opts),
+        "fig2" => fig2_correlation(engine, opts),
+        "fig3" => fig3_image(engine, opts),
+        "fig4" => fig4_finetune(engine, opts),
+        "fig5" => fig5_lstm(engine, opts),
+        "fig6" => fig6_svrg(engine, opts),
+        "fig7" => fig7_presample(engine, opts),
+        "ablation" => ablation_extensions(engine, opts),
+        "all" => {
+            for f in ["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7"] {
+                run_figure(engine, f, opts)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown figure {name:?} (fig1..fig7 or all)"),
+    }
+}
+
+/// Fig 1: variance reduction vs uniform at checkpoints along a training
+/// run, for loss / upper-bound / gradient-norm sampling.
+pub fn fig1_variance(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
+    let info = engine.model_info(&model)?;
+    if !info.has_entry("grad_norms") {
+        bail!("fig1 needs grad_norms artifacts; use model cnn100 or mlp10");
+    }
+    let dir = fig_dir(opts, "fig1")?;
+    let split = dataset_for(engine, &model, 1, opts.quick)?;
+    let vcfg = VarianceConfig {
+        presample: *info.presample.iter().max().unwrap(),
+        batch: info.batch,
+        repeats: if opts.quick { 3 } else { 10 },
+        seed: 7,
+    };
+    let checkpoints = if opts.quick { 4 } else { 8 };
+    let steps_between = if opts.quick { 50 } else { 300 };
+
+    let mut sink = CsvSink::create(
+        dir.join("variance.csv"),
+        "model,step,uniform,loss,upper_bound,grad_norm,tau",
+    )?;
+    // train with uniform SGD (the paper measures along a normal training
+    // trajectory) and measure at checkpoints
+    let cfg = TrainerConfig::uniform(&model).with_steps(steps_between as u64);
+    let mut trainer = Trainer::new(engine, cfg)?;
+    for ck in 0..=checkpoints {
+        if ck > 0 {
+            trainer.cfg.max_steps = Some(steps_between as u64);
+            let _ = trainer.run(&split.train, None)?;
+        }
+        let step = ck as u64 * steps_between as u64;
+        let p = measure_at_state(engine, &trainer.state, &split.train, &vcfg, step)?;
+        println!(
+            "fig1 [{model}] step {step}: loss {:.3} upper-bound {:.3} grad-norm {:.3} (uniform=1, tau {:.2})",
+            p.loss, p.upper_bound, p.grad_norm, p.tau
+        );
+        sink.row(&model, &[step as f64, p.uniform, p.loss, p.upper_bound, p.grad_norm, p.tau])?;
+    }
+    Ok(())
+}
+
+/// Fig 2: scatter of p(loss), p(upper-bound) against p(gradient-norm) on a
+/// trained network + the SSE numbers quoted in §4.1.
+pub fn fig2_correlation(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
+    let info = engine.model_info(&model)?;
+    if !info.has_entry("grad_norms") {
+        bail!("fig2 needs grad_norms artifacts; use model cnn100 or mlp10");
+    }
+    let dir = fig_dir(opts, "fig2")?;
+    let split = dataset_for(engine, &model, 1, opts.quick)?;
+
+    // train to a reasonable state first (paper uses a trained wideresnet)
+    let steps = if opts.quick { 200 } else { 2_000 };
+    let mut trainer = Trainer::new(engine, TrainerConfig::uniform(&model).with_steps(steps))?;
+    let _ = trainer.run(&split.train, None)?;
+
+    let total = if opts.quick { 2_048 } else { 16_384 };
+    let chunk = *info.presample.iter().max().unwrap();
+    let rep = correlation_at_state(engine, &trainer.state, &split.train, total, chunk, 7)?;
+
+    let mut sink = CsvSink::create(dir.join("scatter.csv"), "tag,p_gradnorm,p_loss,p_upper_bound")?;
+    for (gn, lo, ub) in &rep.points {
+        sink.row(&model, &[*gn as f64, *lo as f64, *ub as f64])?;
+    }
+    let mut summary = CsvSink::create(
+        dir.join("summary.csv"),
+        "model,sse_loss,sse_upper_bound,spearman_loss,spearman_ub,pearson_loss,pearson_ub",
+    )?;
+    summary.row(
+        &model,
+        &[
+            rep.sse_loss,
+            rep.sse_upper_bound,
+            rep.spearman_loss,
+            rep.spearman_upper_bound,
+            rep.pearson_loss,
+            rep.pearson_upper_bound,
+        ],
+    )?;
+    println!(
+        "fig2 [{model}]: SSE loss {:.4} vs upper-bound {:.4} (paper: 0.017 vs 0.002); spearman {:.3} vs {:.3}",
+        rep.sse_loss, rep.sse_upper_bound, rep.spearman_loss, rep.spearman_upper_bound
+    );
+    Ok(())
+}
+
+/// Run one strategy config for every seed; write per-run CSVs; return the
+/// across-seed mean (final train loss, final test err).
+fn run_strategies(
+    engine: &Engine,
+    dir: &PathBuf,
+    model: &str,
+    configs: Vec<(String, TrainerConfig)>,
+    opts: &FigOptions,
+) -> Result<()> {
+    let mut summary = CsvSink::create(
+        dir.join("summary.csv"),
+        "strategy,seeds,final_train_loss,final_test_err,steps_per_sec,switch_step",
+    )?;
+    for (tag, cfg) in configs {
+        let mut losses = vec![];
+        let mut errs = vec![];
+        let mut sps = vec![];
+        let mut switch = f64::NAN;
+        for &seed in &opts.seeds {
+            let split = dataset_for(engine, model, seed, opts.quick)?;
+            let mut c = cfg.clone().with_seed(seed);
+            c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
+            let mut trainer = Trainer::new(engine, c)?;
+            let report = trainer.run(&split.train, Some(&split.test))?;
+            report.log.to_csv(dir.join(format!("{tag}_seed{seed}.csv")))?;
+            losses.push(report.final_train_loss);
+            errs.push(report.final_test_err);
+            sps.push(report.steps as f64 / report.wall_secs.max(1e-9));
+            if let Some(s) = report.is_switch_step {
+                switch = s as f64;
+            }
+            println!(
+                "  {tag} seed {seed}: {} steps, train loss {:.4}, test err {:.4}, IS@{:?}",
+                report.steps, report.final_train_loss, report.final_test_err,
+                report.is_switch_step
+            );
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        summary.row(
+            &tag,
+            &[opts.seeds.len() as f64, mean(&losses), mean(&errs), mean(&sps), switch],
+        )?;
+    }
+    Ok(())
+}
+
+/// Fig 3: image classification (CIFAR-10/100 stand-ins) — uniform vs loss
+/// vs upper-bound vs Loshchilov-Hutter vs Schaul, equal wall-clock.
+pub fn fig3_image(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let models: Vec<String> = match &opts.model {
+        Some(m) => vec![m.clone()],
+        None => vec!["cnn10".into(), "cnn100".into()],
+    };
+    for model in models {
+        println!("fig3 [{model}] budget {}s x{} seeds", opts.budget_secs, opts.seeds.len());
+        let dir = fig_dir(opts, &format!("fig3_{model}"))?;
+        let budget = opts.budget_secs;
+        // §4.2: B=640, tau_th=1.5, lr 0.1 /5 at 40%/80% of the time budget
+        let mk = |mut c: TrainerConfig| {
+            c.presample = 640;
+            c.tau_th = 1.5;
+            c.lr_milestones = vec![(0.4, 0.2), (0.8, 0.2)];
+            c.with_budget(budget)
+        };
+        let configs = vec![
+            ("uniform".into(), mk(TrainerConfig::uniform(&model))),
+            ("loss".into(), mk(TrainerConfig::loss(&model))),
+            ("upper-bound".into(), mk(TrainerConfig::upper_bound(&model))),
+            ("loshchilov-hutter".into(), mk(TrainerConfig::loshchilov_hutter(&model))),
+            ("schaul".into(), mk(TrainerConfig::schaul(&model))),
+        ];
+        run_strategies(engine, &dir, &model, configs, opts)?;
+    }
+    Ok(())
+}
+
+/// Fig 4: fine-tuning (MIT67 stand-in) — uniform vs loss vs upper-bound.
+pub fn fig4_finetune(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = "finetune";
+    println!("fig4 [{model}] budget {}s", opts.budget_secs);
+    let dir = fig_dir(opts, "fig4")?;
+    // §4.3: b=16, B=48, lr 1e-3, tau_th = 2 (designated by Eq. 26)
+    let mk = |mut c: TrainerConfig| {
+        c.presample = 48;
+        c.tau_th = 2.0;
+        c.base_lr = 1e-3;
+        c.lr_milestones = vec![];
+        c.with_budget(opts.budget_secs)
+    };
+    let configs = vec![
+        ("uniform".into(), mk(TrainerConfig::uniform(model))),
+        ("loss".into(), mk(TrainerConfig::loss(model))),
+        ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
+    ];
+    run_strategies(engine, &dir, model, configs, opts)
+}
+
+/// Fig 5: pixel-by-pixel sequence classification with an LSTM.
+pub fn fig5_lstm(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = "lstm";
+    println!("fig5 [{model}] budget {}s", opts.budget_secs);
+    let dir = fig_dir(opts, "fig5")?;
+    // §4.4: b=32, B=128, tau_th=1.8, Adam in the paper — we keep SGD+mom
+    // with a smaller lr (documented deviation; same comparison protocol).
+    let mk = |mut c: TrainerConfig| {
+        c.presample = 128;
+        c.tau_th = 1.8;
+        c.base_lr = 0.05;
+        c.lr_milestones = vec![];
+        c.with_budget(opts.budget_secs)
+    };
+    let configs = vec![
+        ("uniform".into(), mk(TrainerConfig::uniform(model))),
+        ("loss".into(), mk(TrainerConfig::loss(model))),
+        ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
+    ];
+    run_strategies(engine, &dir, model, configs, opts)
+}
+
+/// Fig 6 (App. C): SVRG / Katyusha / SCSG vs SGD-uniform vs upper-bound.
+pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| "cnn10".into());
+    println!("fig6 [{model}] budget {}s", opts.budget_secs);
+    let dir = fig_dir(opts, "fig6")?;
+    let budget = opts.budget_secs;
+    let seed = opts.seeds[0];
+    let split = dataset_for(engine, &model, seed, opts.quick)?;
+
+    // SGD strategies via the trainer
+    let sgd_cfgs = vec![
+        ("uniform".to_string(), TrainerConfig::uniform(&model).with_budget(budget)),
+        (
+            "upper-bound".to_string(),
+            TrainerConfig::upper_bound(&model).with_presample(640).with_budget(budget),
+        ),
+    ];
+    let mut summary = CsvSink::create(
+        dir.join("summary.csv"),
+        "method,steps,final_train_loss,final_test_err",
+    )?;
+    for (tag, cfg) in sgd_cfgs {
+        let mut trainer = Trainer::new(engine, cfg.with_seed(seed))?;
+        let report = trainer.run(&split.train, Some(&split.test))?;
+        report.log.to_csv(dir.join(format!("{tag}.csv")))?;
+        summary.row(
+            &tag,
+            &[report.steps as f64, report.final_train_loss, report.final_test_err],
+        )?;
+        println!(
+            "  {tag}: {} steps, train loss {:.4}, test err {:.4}",
+            report.steps, report.final_train_loss, report.final_test_err
+        );
+    }
+
+    // SVRG family
+    for cfg in [
+        SvrgConfig::svrg(&model).with_budget(budget),
+        SvrgConfig::katyusha(&model).with_budget(budget),
+        SvrgConfig::scsg(&model, 1024).with_budget(budget),
+    ] {
+        let report = run_svrg(engine, &cfg, &split.train, Some(&split.test))?;
+        report.log.to_csv(dir.join(format!("{}.csv", report.name)))?;
+        summary.row(
+            report.name,
+            &[report.steps as f64, report.final_train_loss, report.final_test_err],
+        )?;
+        println!(
+            "  {}: {} steps, train loss {:.4}, test err {:.4}",
+            report.name, report.steps, report.final_train_loss, report.final_test_err
+        );
+    }
+    Ok(())
+}
+
+/// Extension ablation (paper §5 future work): τ-adaptive learning rate on
+/// top of the upper-bound sampler, vs the paper's main algorithm, vs
+/// uniform. Writes results/ablation/summary.csv.
+pub fn ablation_extensions(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
+    println!("ablation [{model}] budget {}s", opts.budget_secs);
+    let dir = fig_dir(opts, "ablation")?;
+    let mk = |c: TrainerConfig| c.with_presample(640).with_tau_th(1.5).with_budget(opts.budget_secs);
+    let configs = vec![
+        ("uniform".to_string(), mk(TrainerConfig::uniform(&model))),
+        ("upper-bound".to_string(), mk(TrainerConfig::upper_bound(&model))),
+        (
+            "upper-bound+adaptive-lr".to_string(),
+            mk(TrainerConfig::upper_bound(&model)).with_adaptive_lr(2.0),
+        ),
+    ];
+    run_strategies(engine, &dir, &model, configs, opts)
+}
+
+/// Fig 7 (App. D): ablation on the presample size B.
+pub fn fig7_presample(engine: &Engine, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| "cnn10".into());
+    let info = engine.model_info(&model)?;
+    println!("fig7 [{model}] budget {}s", opts.budget_secs);
+    let dir = fig_dir(opts, "fig7")?;
+    let mut configs = vec![(
+        "uniform".to_string(),
+        TrainerConfig::uniform(&model).with_budget(opts.budget_secs),
+    )];
+    for &b in &info.presample {
+        configs.push((
+            format!("B{b}"),
+            TrainerConfig::upper_bound(&model)
+                .with_presample(b)
+                .with_tau_th(1.5)
+                .with_budget(opts.budget_secs),
+        ));
+    }
+    run_strategies(engine, &dir, &model, configs, opts)
+}

@@ -1,0 +1,23 @@
+//! # isample — Deep Learning with Importance Sampling
+//!
+//! A full-system reproduction of *"Not All Samples Are Created Equal: Deep
+//! Learning with Importance Sampling"* (Katharopoulos & Fleuret, ICML 2018)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernel fusing the
+//!   per-sample loss with the Eq.-20 gradient-norm upper bound.
+//! * **L2** (`python/compile/model.py`) — JAX models + training/scoring
+//!   entry points, AOT-lowered to HLO text by `make artifacts`.
+//! * **L3** (this crate) — the paper's *system* contribution: the
+//!   importance-sampling data pipeline (Algorithm 1), the variance-reduction
+//!   estimator τ (Eq. 26), baselines, analyses and benchmarks, all running
+//!   over the PJRT CPU client with Python never on the hot path.
+
+pub mod analysis;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,153 @@
+//! `isample` — CLI for the importance-sampling training system.
+//!
+//! ```text
+//! isample train <model> [--strategy upper-bound] [--steps N | --budget SECS]
+//!                       [--presample B] [--tau-th X] [--lr F] [--seed S]
+//!                       [--out results/run.csv] [--checkpoint path.ckpt]
+//! isample figure <fig1..fig7|all> [--budget SECS] [--seeds 1,2,3] [--quick]
+//!                                 [--model NAME] [--out results]
+//! isample selfcheck                      # manifest numerics vs live execution
+//! isample info                           # list models + artifacts
+//! ```
+
+use anyhow::{bail, Context, Result};
+use isample::config::Args;
+use isample::coordinator::trainer::{Trainer, TrainerConfig};
+use isample::coordinator::StrategyKind;
+use isample::figures::runner::{dataset_for, run_figure, FigOptions};
+use isample::runtime::{checkpoint, Engine};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    match args.command.as_str() {
+        "train" => cmd_train(&args, &artifacts),
+        "figure" => cmd_figure(&args, &artifacts),
+        "selfcheck" => cmd_selfcheck(&artifacts),
+        "info" => cmd_info(&artifacts),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `isample help`"),
+    }
+}
+
+const HELP: &str = r#"isample — Deep Learning with Importance Sampling (ICML 2018) reproduction
+
+USAGE:
+  isample train <model> [--strategy S] [--steps N | --budget SECS] [flags]
+  isample figure <fig1..fig7|all> [--budget SECS] [--seeds 1,2,3] [--quick] [--model M]
+  isample selfcheck
+  isample info
+
+MODELS    mlp10 cnn10 cnn100 finetune lstm
+STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
+FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
+          --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
+"#;
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let model = args.positional.first().context("usage: isample train <model>")?.clone();
+    let strategy_name = args.flag("strategy").unwrap_or("upper-bound");
+    let strategy = StrategyKind::parse(strategy_name)
+        .with_context(|| format!("unknown strategy {strategy_name:?}"))?;
+    let engine = Engine::load(artifacts)?;
+    let mut cfg = TrainerConfig::base(&model, strategy);
+    cfg.presample = args.flag_usize("presample", 0)?;
+    cfg.tau_th = args.flag_f64("tau-th", cfg.tau_th)?;
+    cfg.a_tau = args.flag_f64("a-tau", cfg.a_tau)?;
+    cfg.base_lr = args.flag_f64("lr", cfg.base_lr as f64)? as f32;
+    cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    cfg.eval_every_secs = args.flag_f64("eval-every", 10.0)?;
+    if let Some(b) = args.flag("budget") {
+        cfg = cfg.with_budget(b.parse().context("--budget")?);
+    } else {
+        cfg = cfg.with_steps(args.flag_u64("steps", 1000)?);
+    }
+
+    let quick = args.flag_bool("quick");
+    let split = dataset_for(&engine, &model, cfg.seed, quick)?;
+    println!(
+        "training {model} with {} (b from manifest, B={}, tau_th={})",
+        cfg.strategy.name(),
+        cfg.presample,
+        cfg.tau_th
+    );
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let report = trainer.run(&split.train, Some(&split.test))?;
+    println!(
+        "done: {} steps in {:.1}s | train loss {:.4} | test err {:.4} | IS on at {:?}",
+        report.steps,
+        report.wall_secs,
+        report.final_train_loss,
+        report.final_test_err,
+        report.is_switch_step
+    );
+    println!("{}", trainer.timers.report());
+    if let Some(out) = args.flag("out") {
+        report.log.to_csv(out)?;
+        println!("metrics -> {out}");
+    }
+    if let Some(ckpt) = args.flag("checkpoint") {
+        checkpoint::save(&trainer.state, ckpt)?;
+        println!("checkpoint -> {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
+    let fig = args.positional.first().context("usage: isample figure <fig1..fig7|all>")?;
+    let engine = Engine::load(artifacts)?;
+    let opts = FigOptions {
+        budget_secs: args.flag_f64("budget", 60.0)?,
+        out_dir: args.flag("out").unwrap_or("results").into(),
+        seeds: args.flag_u64_list("seeds", &[42])?,
+        quick: args.flag_bool("quick"),
+        model: args.flag("model").map(|s| s.to_string()),
+    };
+    run_figure(&engine, fig, &opts)
+}
+
+/// Execute the manifest selfcheck: init params by the manifest RNG recipe,
+/// run fwd_scores + one train_step, compare against the numbers Python
+/// computed at AOT time.
+fn cmd_selfcheck(artifacts: &str) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    let models: Vec<String> = engine.manifest.models.keys().cloned().collect();
+    let mut failed = 0;
+    for model in &models {
+        match isample::runtime::selfcheck::run(&engine, model) {
+            Ok(rep) => println!("{model}: OK ({rep})"),
+            Err(e) => {
+                failed += 1;
+                println!("{model}: FAILED — {e:#}");
+            }
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} selfchecks failed");
+    }
+    Ok(())
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    println!("platform: {}", engine.platform());
+    for (name, info) in &engine.manifest.models {
+        println!(
+            "{name}: D={} C={} b={} eval_b={} B={:?} params={} ({} tensors)",
+            info.feature_dim,
+            info.num_classes,
+            info.batch,
+            info.eval_batch,
+            info.presample,
+            info.total_param_elements(),
+            info.num_params(),
+        );
+        for e in &info.entries {
+            println!("    {}@{} <- {}", e.entry, e.batch, e.file);
+        }
+    }
+    Ok(())
+}

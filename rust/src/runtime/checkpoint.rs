@@ -1,0 +1,160 @@
+//! Checkpointing: save/restore a [`ModelState`] to a small self-describing
+//! binary format (magic, version, model name, per-tensor shape + f32 data).
+//! No external serialization crates are available offline, so the format is
+//! hand-rolled and covered by round-trip tests.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::ModelState;
+use super::tensor::HostTensor;
+
+const MAGIC: &[u8; 8] = b"ISAMPLE\x01";
+
+/// Serialize params + momentum + step counter.
+pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    write_str(&mut f, &state.model)?;
+    f.write_all(&state.step.to_le_bytes())?;
+    for group in [&state.params, &state.mom] {
+        f.write_all(&(group.len() as u32).to_le_bytes())?;
+        for lit in group {
+            let t = HostTensor::from_literal(lit)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(&bytes)?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore a state saved by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an isample checkpoint: bad magic");
+    }
+    let model = read_str(&mut f)?;
+    let step = read_u64(&mut f)?;
+    let mut groups = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let count = read_u32(&mut f)? as usize;
+        let mut lits = Vec::with_capacity(count);
+        for _ in 0..count {
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let nbytes = read_u64(&mut f)? as usize;
+            if nbytes != shape.iter().product::<usize>() * 4 {
+                bail!("checkpoint tensor size mismatch");
+            }
+            let mut buf = vec![0u8; nbytes];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            lits.push(HostTensor::new(shape, data).to_literal()?);
+        }
+        groups.push(lits);
+    }
+    let mom = groups.pop().unwrap();
+    let params = groups.pop().unwrap();
+    Ok(ModelState { model, params, mom, step })
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let len = read_u32(f)? as usize;
+    if len > 1 << 16 {
+        bail!("unreasonable string length in checkpoint");
+    }
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("invalid utf8 in checkpoint")
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_state() -> ModelState {
+        ModelState {
+            model: "test".into(),
+            params: vec![
+                HostTensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]).to_literal().unwrap(),
+                HostTensor::new(vec![3], vec![0.1, 0.2, 0.3]).to_literal().unwrap(),
+            ],
+            mom: vec![
+                HostTensor::zeros(vec![2, 2]).to_literal().unwrap(),
+                HostTensor::new(vec![3], vec![9.0, 8.0, 7.0]).to_literal().unwrap(),
+            ],
+            step: 1234,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("isample_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let state = tiny_state();
+        save(&state, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.model, "test");
+        assert_eq!(back.step, 1234);
+        for (a, b) in state.params.iter().zip(&back.params) {
+            assert_eq!(
+                HostTensor::from_literal(a).unwrap(),
+                HostTensor::from_literal(b).unwrap()
+            );
+        }
+        for (a, b) in state.mom.iter().zip(&back.mom) {
+            assert_eq!(
+                HostTensor::from_literal(a).unwrap(),
+                HostTensor::from_literal(b).unwrap()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("isample_ckpt_g_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

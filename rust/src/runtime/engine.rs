@@ -1,0 +1,390 @@
+//! The PJRT execution engine: loads AOT artifacts (HLO text), compiles them
+//! once on the CPU PJRT client, and exposes typed entry points
+//! (`fwd_scores`, `train_step`, `eval_metrics`, `grad_norms`, `grad`,
+//! `svrg_step`) over host tensors.
+//!
+//! Design notes:
+//! * Executables are compiled lazily and cached per (model, entry, batch).
+//! * Model parameters live as `xla::Literal`s (host buffers on the CPU
+//!   plugin) inside [`ModelState`]; `train_step` swaps them wholesale from
+//!   the executable's output tuple, so the steady-state hot loop does no
+//!   re-encoding of parameters.
+//! * The engine is deliberately **not** `Send`: all PJRT calls happen on the
+//!   coordinator thread; data production happens on worker threads that
+//!   communicate through channels (see `coordinator::pipeline`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::init;
+use super::manifest::{EntryInfo, Manifest, ModelInfo};
+use super::tensor::{
+    f32_scalar_literal, f32_vec_literal, i32_vec_literal, literal_to_f32_scalar,
+    literal_to_f32_vec, literal_to_i32_scalar, HostTensor,
+};
+
+/// Parameters + optimizer slots for one model instance.
+pub struct ModelState {
+    pub model: String,
+    pub params: Vec<Literal>,
+    pub mom: Vec<Literal>,
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Deep-copy the parameter literals (snapshots for SVRG / checkpoints).
+    pub fn clone_params(&self) -> Result<Vec<Literal>> {
+        clone_literals(&self.params)
+    }
+
+    /// Pull every parameter back to `Vec<f32>` (checkpointing, analysis).
+    pub fn params_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(literal_to_f32_vec).collect()
+    }
+}
+
+/// Everything one `train_step` execution returns besides the new state.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// Weighted mean loss of the step.
+    pub loss: f32,
+    /// Per-sample (unweighted) losses from the step's forward pass.
+    pub loss_vec: Vec<f32>,
+    /// Per-sample Eq.-20 upper-bound scores from the same forward pass.
+    pub scores: Vec<f32>,
+}
+
+/// Deep-copy literals via host round-trip (Literal is not Clone).
+pub fn clone_literals(lits: &[Literal]) -> Result<Vec<Literal>> {
+    lits.iter()
+        .map(|l| {
+            let t = HostTensor::from_literal(l)?;
+            t.to_literal()
+        })
+        .collect()
+}
+
+type ExeKey = (String, String, usize);
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<ExeKey, Rc<PjRtLoadedExecutable>>>,
+    /// Executions performed, per entry name (perf accounting).
+    exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn model_info(&self, model: &str) -> Result<&ModelInfo> {
+        self.manifest.model(model)
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry point.
+    pub fn executable(
+        &self,
+        model: &str,
+        entry: &str,
+        batch: usize,
+    ) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = (model.to_string(), entry.to_string(), batch);
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.model(model)?;
+        let e = info.entry(entry, batch)?;
+        let path = self.manifest.artifact_path(e);
+        let proto = HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {model}/{entry}@{batch}"))?;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of a model (startup warmup so the
+    /// first training step isn't a compile stall).
+    pub fn warmup(&self, model: &str) -> Result<usize> {
+        let entries: Vec<(String, usize)> = self
+            .manifest
+            .model(model)?
+            .entries
+            .iter()
+            .map(|e| (e.entry.clone(), e.batch))
+            .collect();
+        for (entry, batch) in &entries {
+            self.executable(model, entry, *batch)?;
+        }
+        Ok(entries.len())
+    }
+
+    /// Execute an entry point; returns the decomposed output tuple.
+    pub fn run(
+        &self,
+        model: &str,
+        entry: &str,
+        batch: usize,
+        args: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.executable(model, entry, batch)?;
+        *self.exec_counts.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+        let outs = exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {model}/{entry}@{batch}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {model}/{entry}@{batch}"))?;
+        tuple.to_tuple().context("decomposing output tuple")
+    }
+
+    pub fn exec_count(&self, entry: &str) -> u64 {
+        self.exec_counts.borrow().get(entry).copied().unwrap_or(0)
+    }
+
+    /// Initialize a fresh model state per the manifest init specs.
+    pub fn init_state(&self, model: &str, seed: u64) -> Result<ModelState> {
+        let info = self.manifest.model(model)?;
+        let mut params = Vec::with_capacity(info.params.len());
+        let mut mom = Vec::with_capacity(info.params.len());
+        for (i, p) in info.params.iter().enumerate() {
+            let data = init::init_tensor(seed, i as u64, &p.shape, p.init);
+            params.push(HostTensor::new(p.shape.clone(), data).to_literal()?);
+            mom.push(HostTensor::zeros(p.shape.clone()).to_literal()?);
+        }
+        Ok(ModelState { model: model.to_string(), params, mom, step: 0 })
+    }
+
+    fn check_batch_inputs(
+        &self,
+        info: &ModelInfo,
+        e: &EntryInfo,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<()> {
+        if x.shape != [e.batch, info.feature_dim] {
+            bail!(
+                "x shape {:?} does not match {}/{}@{} expectation [{}, {}]",
+                x.shape,
+                info.name,
+                e.entry,
+                e.batch,
+                e.batch,
+                info.feature_dim
+            );
+        }
+        if y.len() != e.batch {
+            bail!("y length {} != batch {}", y.len(), e.batch);
+        }
+        Ok(())
+    }
+
+    /// One forward pass: per-sample loss + Eq.-20 upper-bound scores.
+    /// Batch size is inferred from `x` and must match a baked artifact.
+    pub fn fwd_scores(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let info = self.manifest.model(&state.model)?;
+        let batch = x.shape[0];
+        let e = info.entry("fwd_scores", batch)?;
+        self.check_batch_inputs(info, e, x, y)?;
+
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let mut args: Vec<&Literal> = state.params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let out = self.run(&state.model, "fwd_scores", batch, &args)?;
+        if out.len() != 2 {
+            bail!("fwd_scores returned {} outputs, expected 2", out.len());
+        }
+        Ok((literal_to_f32_vec(&out[0])?, literal_to_f32_vec(&out[1])?))
+    }
+
+    /// One weighted SGD+momentum step (Eq. 2). Updates `state` in place.
+    /// Returns the weighted mean loss plus the per-sample loss and Eq.-20
+    /// score vectors that the step's forward pass produced "for free"
+    /// (Algorithm 1 line 15) — the warmup phase feeds them straight into
+    /// the τ estimator without a second forward pass.
+    pub fn train_step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let info = self.manifest.model(&state.model)?;
+        let batch = x.shape[0];
+        let e = info.entry("train_step", batch)?;
+        self.check_batch_inputs(info, e, x, y)?;
+        if w.len() != batch {
+            bail!("w length {} != batch {}", w.len(), batch);
+        }
+
+        let n = info.num_params();
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let wl = f32_vec_literal(w);
+        let lrl = f32_scalar_literal(lr);
+        let mut args: Vec<&Literal> = Vec::with_capacity(2 * n + 4);
+        args.extend(state.params.iter());
+        args.extend(state.mom.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&wl);
+        args.push(&lrl);
+
+        let mut out = self.run(&state.model, "train_step", batch, &args)?;
+        if out.len() != 2 * n + 3 {
+            bail!("train_step returned {} outputs, expected {}", out.len(), 2 * n + 3);
+        }
+        let loss = literal_to_f32_scalar(&out[2 * n])?;
+        let loss_vec = literal_to_f32_vec(&out[2 * n + 1])?;
+        let scores = literal_to_f32_vec(&out[2 * n + 2])?;
+        out.truncate(2 * n);
+        let mom = out.split_off(n);
+        state.params = out;
+        state.mom = mom;
+        state.step += 1;
+        Ok(StepOutput { loss, loss_vec, scores })
+    }
+
+    /// Evaluation shard: (sum of losses, number of correct predictions).
+    pub fn eval_metrics(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(f64, i64)> {
+        let batch = x.shape[0];
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let mut args: Vec<&Literal> = state.params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let out = self.run(&state.model, "eval_metrics", batch, &args)?;
+        Ok((
+            literal_to_f32_scalar(&out[0])? as f64,
+            literal_to_i32_scalar(&out[1])? as i64,
+        ))
+    }
+
+    /// True per-sample gradient norms (the expensive Fig-1/2 oracle).
+    pub fn grad_norms(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<Vec<f32>> {
+        let batch = x.shape[0];
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let mut args: Vec<&Literal> = state.params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let out = self.run(&state.model, "grad_norms", batch, &args)?;
+        literal_to_f32_vec(&out[0])
+    }
+
+    /// Mean minibatch gradient (SVRG substrate): (grads, mean loss).
+    pub fn grad(
+        &self,
+        model: &str,
+        params: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        let info = self.manifest.model(model)?;
+        let n = info.num_params();
+        let batch = x.shape[0];
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let mut out = self.run(model, "grad", batch, &args)?;
+        let loss = literal_to_f32_scalar(&out[n])?;
+        out.truncate(n);
+        Ok((out, loss))
+    }
+
+    /// Gradient of the re-weighted loss d/dθ (1/b) Σ wᵢ·lossᵢ — the exact
+    /// estimator a weighted SGD step applies (Fig-1 analysis substrate).
+    pub fn weighted_grad(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        let info = self.manifest.model(&state.model)?;
+        let n = info.num_params();
+        let batch = x.shape[0];
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let wl = f32_vec_literal(w);
+        let mut args: Vec<&Literal> = state.params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&wl);
+        let mut out = self.run(&state.model, "weighted_grad", batch, &args)?;
+        let loss = literal_to_f32_scalar(&out[n])?;
+        out.truncate(n);
+        Ok((out, loss))
+    }
+
+    /// One SVRG inner step: params <- params - lr (g(params) - g(snap) + mu).
+    /// Returns the minibatch loss at the *current* params.
+    #[allow(clippy::too_many_arguments)]
+    pub fn svrg_step(
+        &self,
+        model: &str,
+        params: &mut Vec<Literal>,
+        snap: &[Literal],
+        mu: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let info = self.manifest.model(model)?;
+        let n = info.num_params();
+        let batch = x.shape[0];
+        let xl = x.to_literal()?;
+        let yl = i32_vec_literal(y);
+        let lrl = f32_scalar_literal(lr);
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(params.iter());
+        args.extend(snap.iter());
+        args.extend(mu.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&lrl);
+        let mut out = self.run(model, "svrg_step", batch, &args)?;
+        let loss = literal_to_f32_scalar(&out[n])?;
+        out.truncate(n);
+        *params = out;
+        Ok(loss)
+    }
+}

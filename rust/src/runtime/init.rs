@@ -1,0 +1,118 @@
+//! Parameter initialization — the rust twin of `python/compile/rng.py`'s
+//! `init_tensor`. Bit-compatible draws (SplitMix64 + identical f64 math)
+//! so the manifest selfcheck can pin exact expected values.
+
+use crate::runtime::manifest::{InitKind, ParamSpec};
+use crate::util::rng::SplitMix64;
+
+/// fan_in/fan_out, matching python: 2-D is (rows, cols); 4-D is HWIO conv
+/// with receptive-field scaling; anything else degenerates to (n, n).
+pub fn fans(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        2 => (shape[0], shape[1]),
+        4 => {
+            let rf = shape[0] * shape[1];
+            (shape[2] * rf, shape[3] * rf)
+        }
+        _ => {
+            let n: usize = shape.iter().product();
+            (n, n)
+        }
+    }
+}
+
+/// Generate one parameter tensor (row-major) exactly as python's
+/// `rng.init_tensor(seed, tensor_index, shape, kind)` does.
+pub fn init_tensor(seed: u64, tensor_index: u64, shape: &[usize], kind: InitKind) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    match kind {
+        InitKind::Zeros => vec![0.0; n],
+        InitKind::LstmBias => {
+            // shape = (4H,): gate order [i, f, g, o]; forget gate biased to 1.
+            let mut out = vec![0.0f32; n];
+            let h = n / 4;
+            for v in out.iter_mut().skip(h).take(h) {
+                *v = 1.0;
+            }
+            out
+        }
+        InitKind::GlorotUniform => {
+            let (fan_in, fan_out) = fans(shape);
+            let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let mut rng = SplitMix64::tensor_stream(seed, tensor_index);
+            (0..n).map(|_| rng.uniform_range(-a, a) as f32).collect()
+        }
+        InitKind::ScaledNormal => {
+            let (fan_in, _) = fans(shape);
+            let std = (2.0 / fan_in as f64).sqrt();
+            let mut rng = SplitMix64::tensor_stream(seed, tensor_index);
+            let mut vals = Vec::with_capacity(n + 1);
+            while vals.len() < n {
+                // Box-Muller in the same draw order as python (both outputs).
+                let (a, b) = rng.normal_pair();
+                vals.push((a * std) as f32);
+                vals.push((b * std) as f32);
+            }
+            vals.truncate(n);
+            vals
+        }
+    }
+}
+
+/// Initialize every parameter of a model, in manifest order.
+pub fn init_params(seed: u64, specs: &[ParamSpec]) -> Vec<Vec<f32>> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, p)| init_tensor(seed, i as u64, &p.shape, p.init))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_bounds_and_spread() {
+        let t = init_tensor(7, 0, &[64, 128], InitKind::GlorotUniform);
+        let a = (6.0f64 / (64 + 128) as f64).sqrt() as f32;
+        assert_eq!(t.len(), 64 * 128);
+        assert!(t.iter().all(|&x| (-a..=a).contains(&x)));
+        let std = crate::util::stats::variance(&t).sqrt() as f32;
+        assert!(std > a / 4.0, "degenerate init std={std}");
+    }
+
+    #[test]
+    fn lstm_bias_gates() {
+        let t = init_tensor(7, 3, &[256], InitKind::LstmBias);
+        assert!(t[64..128].iter().all(|&x| x == 1.0));
+        assert!(t[..64].iter().all(|&x| x == 0.0));
+        assert!(t[128..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scaled_normal_moments() {
+        let t = init_tensor(7, 1, &[3, 3, 16, 32], InitKind::ScaledNormal);
+        let fan_in = 3 * 3 * 16;
+        let std = (2.0f64 / fan_in as f64).sqrt();
+        let got = crate::util::stats::variance(&t).sqrt();
+        assert!((got - std).abs() < std * 0.15, "std {got} vs {std}");
+        assert!(crate::util::stats::mean(&t).abs() < std * 0.1);
+    }
+
+    #[test]
+    fn conv_fans_use_receptive_field() {
+        assert_eq!(fans(&[3, 3, 16, 32]), (144, 288));
+        assert_eq!(fans(&[64, 128]), (64, 128));
+        assert_eq!(fans(&[5]), (5, 5));
+    }
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let a = init_tensor(42, 0, &[10, 10], InitKind::GlorotUniform);
+        let b = init_tensor(42, 0, &[10, 10], InitKind::GlorotUniform);
+        let c = init_tensor(42, 1, &[10, 10], InitKind::GlorotUniform);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

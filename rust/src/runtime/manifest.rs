@@ -1,0 +1,288 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! Python AOT step and the rust coordinator.
+//!
+//! The manifest records, per model: the parameter tree (name/shape/init
+//! kind, in stream order), every lowered entry point with its batch size and
+//! argument shapes, and a `selfcheck` block of expected numerics computed by
+//! Python at build time (asserted by `rust/tests/selfcheck.rs`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parameter initialization kinds — must mirror `python/compile/rng.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Zeros,
+    GlorotUniform,
+    ScaledNormal,
+    LstmBias,
+}
+
+impl InitKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "zeros" => InitKind::Zeros,
+            "glorot_uniform" => InitKind::GlorotUniform,
+            "scaled_normal" => InitKind::ScaledNormal,
+            "lstm_bias" => InitKind::LstmBias,
+            _ => bail!("unknown init kind {s:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub entry: String,
+    pub batch: usize,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Expected numerics computed by Python at AOT time (fixed seed + formula
+/// inputs). Lets rust assert, end to end, that artifact execution matches
+/// what jax computed — without Python at run time.
+#[derive(Debug, Clone)]
+pub struct Selfcheck {
+    pub seed: u64,
+    pub batch: usize,
+    pub loss_head: Vec<f64>,
+    pub ghat_head: Vec<f64>,
+    pub mean_loss: f64,
+    pub step_loss: f64,
+    pub mean_loss_after_step: f64,
+    pub param0_head: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub feature_dim: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub presample: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub entries: Vec<EntryInfo>,
+    pub selfcheck: Selfcheck,
+}
+
+impl ModelInfo {
+    pub fn entry(&self, entry: &str, batch: usize) -> Result<&EntryInfo> {
+        self.entries
+            .iter()
+            .find(|e| e.entry == entry && e.batch == batch)
+            .with_context(|| {
+                let have: Vec<String> = self
+                    .entries
+                    .iter()
+                    .map(|e| format!("{}@{}", e.entry, e.batch))
+                    .collect();
+                format!(
+                    "model {:?} has no artifact for entry {entry:?} at batch {batch} (have: {})",
+                    self.name,
+                    have.join(", ")
+                )
+            })
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.entries.iter().any(|e| e.entry == entry)
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(dir, &root)
+    }
+
+    pub fn from_json(dir: PathBuf, root: &Json) -> Result<Self> {
+        if root.req("format")?.as_str() != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().context("models not an object")? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest {
+            dir,
+            momentum: root.req("momentum")?.as_f64().context("momentum")?,
+            weight_decay: root.req("weight_decay")?.as_f64().context("weight_decay")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "unknown model {name:?}; manifest has: {}",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, e: &EntryInfo) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let params = m
+        .req("params")?
+        .as_arr()
+        .context("params not an array")?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req("name")?.as_str().context("param name")?.to_string(),
+                shape: p.req("shape")?.usize_array().context("param shape")?,
+                init: InitKind::parse(p.req("init")?.as_str().context("param init")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let entries = m
+        .req("entries")?
+        .as_arr()
+        .context("entries not an array")?
+        .iter()
+        .map(|e| {
+            Ok(EntryInfo {
+                entry: e.req("entry")?.as_str().context("entry name")?.to_string(),
+                batch: e.req("batch")?.as_usize().context("entry batch")?,
+                file: e.req("file")?.as_str().context("entry file")?.to_string(),
+                args: e
+                    .req("args")?
+                    .as_arr()
+                    .context("entry args")?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArgSpec {
+                            shape: a.req("shape")?.usize_array().context("arg shape")?,
+                            dtype: a.req("dtype")?.as_str().context("arg dtype")?.to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let sc = m.req("selfcheck")?;
+    let selfcheck = Selfcheck {
+        seed: sc.req("seed")?.as_usize().context("seed")? as u64,
+        batch: sc.req("batch")?.as_usize().context("batch")?,
+        loss_head: sc.req("loss_head")?.f64_array().context("loss_head")?,
+        ghat_head: sc.req("ghat_head")?.f64_array().context("ghat_head")?,
+        mean_loss: sc.req("mean_loss")?.as_f64().context("mean_loss")?,
+        step_loss: sc.req("step_loss")?.as_f64().context("step_loss")?,
+        mean_loss_after_step: sc
+            .req("mean_loss_after_step")?
+            .as_f64()
+            .context("mean_loss_after_step")?,
+        param0_head: sc.req("param0_head")?.f64_array().context("param0_head")?,
+    };
+
+    Ok(ModelInfo {
+        name: name.to_string(),
+        feature_dim: m.req("feature_dim")?.as_usize().context("feature_dim")?,
+        num_classes: m.req("num_classes")?.as_usize().context("num_classes")?,
+        batch: m.req("batch")?.as_usize().context("batch")?,
+        eval_batch: m.req("eval_batch")?.as_usize().context("eval_batch")?,
+        presample: m.req("presample")?.usize_array().context("presample")?,
+        params,
+        entries,
+        selfcheck,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        Json::parse(
+            r#"{
+            "version": 1, "format": "hlo-text", "momentum": 0.9, "weight_decay": 0.0005,
+            "models": {"m": {
+                "feature_dim": 4, "num_classes": 3, "batch": 8, "eval_batch": 16,
+                "presample": [16, 32],
+                "params": [{"name": "w0", "shape": [4, 3], "init": "glorot_uniform"},
+                           {"name": "b0", "shape": [3], "init": "zeros"}],
+                "entries": [{"entry": "fwd_scores", "batch": 8, "file": "m_fwd_scores_b8.hlo.txt",
+                             "args": [{"shape": [4, 3], "dtype": "float32"},
+                                      {"shape": [3], "dtype": "float32"},
+                                      {"shape": [8, 4], "dtype": "float32"},
+                                      {"shape": [8], "dtype": "int32"}]}],
+                "selfcheck": {"seed": 42, "batch": 8,
+                    "loss_head": [1.0, 1.1, 1.2, 1.3], "ghat_head": [0.9, 0.9, 0.9, 0.9],
+                    "mean_loss": 1.1, "step_loss": 1.1, "mean_loss_after_step": 1.05,
+                    "param0_head": [0.1, -0.2, 0.3, 0.0, 0.0, 0.1, 0.2, -0.1]}
+            }}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_info() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &mini_manifest()).unwrap();
+        assert_eq!(m.momentum, 0.9);
+        let info = m.model("m").unwrap();
+        assert_eq!(info.num_params(), 2);
+        assert_eq!(info.total_param_elements(), 15);
+        assert_eq!(info.params[0].init, InitKind::GlorotUniform);
+        let e = info.entry("fwd_scores", 8).unwrap();
+        assert_eq!(e.args.len(), 4);
+        assert_eq!(e.args[3].dtype, "int32");
+        assert!(info.entry("fwd_scores", 99).is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_init_kind_rejected() {
+        assert!(InitKind::parse("bogus").is_err());
+        assert_eq!(InitKind::parse("lstm_bias").unwrap(), InitKind::LstmBias);
+    }
+}

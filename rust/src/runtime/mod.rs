@@ -1,0 +1,18 @@
+//! Layer-3 runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text + manifest), compiles them on the PJRT CPU client via the
+//! `xla` crate, and exposes typed entry points over host tensors.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod init;
+pub mod manifest;
+pub mod selfcheck;
+pub mod tensor;
+
+pub use engine::{clone_literals, Engine, ModelState};
+pub use manifest::{InitKind, Manifest, ModelInfo};
+pub use tensor::HostTensor;

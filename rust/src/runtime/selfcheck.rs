@@ -1,0 +1,81 @@
+//! End-to-end numerics selfcheck: rust-initialized parameters + rust-built
+//! inputs, executed through the compiled artifacts, must match the numbers
+//! Python/jax computed at AOT time (baked into the manifest).
+//!
+//! This is the strongest cross-language guarantee in the repo: it pins the
+//! SplitMix64 init contract, the input formula, the HLO round-trip and the
+//! PJRT execution in one assertion.
+
+use anyhow::{bail, Result};
+
+use super::engine::Engine;
+use super::tensor::HostTensor;
+
+/// Deterministic integer-math inputs, the twin of python
+/// `aot.synth_inputs`: x[i,j] = ((i*D+j) % 97)/97 - 0.5 ; y[i] = i % C.
+pub fn synth_inputs(feature_dim: usize, num_classes: usize, batch: usize) -> (HostTensor, Vec<i32>) {
+    let mut x = HostTensor::zeros(vec![batch, feature_dim]);
+    for i in 0..batch {
+        for j in 0..feature_dim {
+            let idx = (i * feature_dim + j) % 97;
+            x.data[i * feature_dim + j] = idx as f32 / 97.0 - 0.5;
+        }
+    }
+    let y: Vec<i32> = (0..batch).map(|i| (i % num_classes) as i32).collect();
+    (x, y)
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Run the selfcheck for one model; returns a short summary string.
+pub fn run(engine: &Engine, model: &str) -> Result<String> {
+    let info = engine.model_info(model)?.clone();
+    let sc = &info.selfcheck;
+    let mut state = engine.init_state(model, sc.seed)?;
+
+    // 1. RNG contract: first 8 values of the first parameter tensor
+    let p0 = HostTensor::from_literal(&state.params[0])?;
+    for (k, &expect) in sc.param0_head.iter().enumerate() {
+        let got = p0.data[k] as f64;
+        if !close(got, expect, 1e-6) {
+            bail!("param0[{k}] = {got} != {expect} (RNG contract broken)");
+        }
+    }
+
+    // 2. fwd_scores numerics
+    let (x, y) = synth_inputs(info.feature_dim, info.num_classes, sc.batch);
+    let (loss, ghat) = engine.fwd_scores(&state, &x, &y)?;
+    for (k, &expect) in sc.loss_head.iter().enumerate() {
+        if !close(loss[k] as f64, expect, 2e-4) {
+            bail!("loss[{k}] = {} != {expect}", loss[k]);
+        }
+    }
+    for (k, &expect) in sc.ghat_head.iter().enumerate() {
+        if !close(ghat[k] as f64, expect, 2e-4) {
+            bail!("ghat[{k}] = {} != {expect}", ghat[k]);
+        }
+    }
+    let mean_loss = loss.iter().map(|&v| v as f64).sum::<f64>() / loss.len() as f64;
+    if !close(mean_loss, sc.mean_loss, 2e-4) {
+        bail!("mean loss {mean_loss} != {}", sc.mean_loss);
+    }
+
+    // 3. one uniform train step at lr 0.01, then the loss again
+    let w = vec![1.0f32; sc.batch];
+    let out = engine.train_step(&mut state, &x, &y, &w, 0.01)?;
+    if !close(out.loss as f64, sc.step_loss, 2e-4) {
+        bail!("step loss {} != {}", out.loss, sc.step_loss);
+    }
+    let (loss2, _) = engine.fwd_scores(&state, &x, &y)?;
+    let mean2 = loss2.iter().map(|&v| v as f64).sum::<f64>() / loss2.len() as f64;
+    if !close(mean2, sc.mean_loss_after_step, 5e-4) {
+        bail!("post-step mean loss {mean2} != {}", sc.mean_loss_after_step);
+    }
+
+    Ok(format!(
+        "mean loss {mean_loss:.6} -> {mean2:.6} after one step; {} params checked",
+        info.num_params()
+    ))
+}

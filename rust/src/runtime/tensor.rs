@@ -1,0 +1,125 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+//!
+//! Everything the coordinator touches is f32 (features, params, scores) or
+//! i32 (labels); this module keeps the conversion noise in one place.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(&self.data).reshape(&dims).context("reshaping f32 literal")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal is not f32")?;
+        Ok(Self::new(dims, data))
+    }
+}
+
+/// Build a `f32[b]` literal (importance weights, per-sample vectors).
+pub fn f32_vec_literal(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+/// Build an `s32[b]` literal (labels).
+pub fn i32_vec_literal(v: &[i32]) -> Literal {
+    Literal::vec1(v)
+}
+
+/// Build an `f32[]` scalar literal (learning rate).
+pub fn f32_scalar_literal(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Read back a `f32[n]` literal.
+pub fn literal_to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("expected f32 literal")
+}
+
+/// Read back a scalar f32 (accepts rank-0 or single-element).
+pub fn literal_to_f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().context("expected f32 literal")?;
+    if v.is_empty() {
+        bail!("empty literal where scalar expected");
+    }
+    Ok(v[0])
+}
+
+/// Read back a scalar i32.
+pub fn literal_to_i32_scalar(lit: &Literal) -> Result<i32> {
+    let v = lit.to_vec::<i32>().context("expected i32 literal")?;
+    if v.is_empty() {
+        bail!("empty literal where scalar expected");
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let t = HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = f32_scalar_literal(0.125);
+        assert_eq!(literal_to_f32_scalar(&lit).unwrap(), 0.125);
+    }
+
+    #[test]
+    fn i32_vec() {
+        let lit = i32_vec_literal(&[3, 1, 4, 1, 5]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![3, 1, 4, 1, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,115 @@
+//! A small benchmarking kit (the vendored crate set has no `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` are plain `harness = false`
+//! binaries built on this module: auto-calibrated iteration counts, warmup,
+//! mean/min/p50/p95 per-iteration timings, and a one-line criterion-style
+//! report. Used both by the per-figure end-to-end benches and the §Perf
+//! micro benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter  (min {}, p50 {}, p95 {}, {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up, auto-calibrate the iteration count to hit
+/// `target` total time, then time each iteration individually.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (target.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 10_000.0) as u64;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: samples[0],
+        p50_ns: pct(0.5),
+        p95_ns: pct(0.95),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Convenience: bench with the default 2-second target.
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_secs(2), f)
+}
+
+/// Guard against the optimizer deleting the benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", Duration::from_millis(50), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min_ns <= r.mean_ns);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

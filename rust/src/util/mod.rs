@@ -1,0 +1,11 @@
+//! Substrate utilities the vendored crate set does not provide:
+//! a deterministic RNG shared bit-for-bit with the Python AOT step, a JSON
+//! parser for the artifact manifest, statistics helpers, timers, and a tiny
+//! property-testing kit used by the coordinator invariants.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

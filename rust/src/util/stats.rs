@@ -1,0 +1,166 @@
+//! Small statistics helpers used by the tau estimator, the Fig-1/Fig-2
+//! analyses and the metrics pipeline. All f64 accumulation for stability.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+}
+
+/// Population variance; 0 for empty input.
+pub fn variance(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let m = mean(v);
+    v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / v.len() as f64
+}
+
+/// L2 norm of a vector.
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// L2 distance between two equal-length vectors.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Pearson correlation coefficient; NaN-free (returns 0 when degenerate).
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        let (dx, dy) = (x as f64 - ma, y as f64 - mb);
+        num += dx * dy;
+        da += dx * dx;
+        db += dy * dy;
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da * db).sqrt()
+}
+
+/// Ranks of the values (ties broken by index, like `np.argsort` twice).
+pub fn ranks(v: &[f32]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; v.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        out[i] = rank as f64;
+    }
+    out
+}
+
+/// Spearman rank correlation.
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    let ra: Vec<f32> = ranks(a).into_iter().map(|x| x as f32).collect();
+    let rb: Vec<f32> = ranks(b).into_iter().map(|x| x as f32).collect();
+    pearson(&ra, &rb)
+}
+
+/// Sum of squared errors between two vectors.
+pub fn sse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum()
+}
+
+/// Normalize a non-negative vector into a probability distribution.
+/// All-zero input maps to the uniform distribution (paper: early training
+/// has ~equal scores; uniform is the correct degenerate limit).
+pub fn normalize_probs(scores: &[f32]) -> Vec<f32> {
+    let sum: f64 = scores.iter().map(|&s| s.max(0.0) as f64).sum();
+    let n = scores.len();
+    if sum <= 0.0 || !sum.is_finite() {
+        return vec![1.0 / n as f32; n];
+    }
+    scores.iter().map(|&s| (s.max(0.0) as f64 / sum) as f32).collect()
+}
+
+/// Exponential moving average helper.
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    /// `alpha` is the *retention* factor: v <- alpha * v + (1-alpha) * x.
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * v + (1.0 - self.alpha) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let v = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&v) - 2.5).abs() < 1e-12);
+        assert!((variance(&v) - 1.25).abs() < 1e-12);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        let c = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&a, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0f32, 8.0, 27.0, 64.0, 125.0]; // x^3: nonlinear, same order
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_handles_zeros_and_sums_to_one() {
+        let p = normalize_probs(&[0.0, 0.0, 0.0]);
+        assert_eq!(p, vec![1.0 / 3.0; 3]);
+        let q = normalize_probs(&[1.0, 3.0]);
+        assert!((q[0] - 0.25).abs() < 1e-7 && (q[1] - 0.75).abs() < 1e-7);
+        let s: f32 = normalize_probs(&[0.3, 0.1, 2.7, 0.0]).iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.9);
+        assert_eq!(e.update(10.0), 10.0); // first sample initializes
+        for _ in 0..200 {
+            e.update(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-6);
+    }
+}

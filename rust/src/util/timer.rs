@@ -1,0 +1,157 @@
+//! Wall-clock timing: stopwatches, per-phase accumulators and the fixed
+//! time-budget used by the paper's evaluation protocol (§4.2: "we use a
+//! learning-rate schedule based on wall-clock time and fix the total seconds
+//! available for training").
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates time across named phases of the training pipeline
+/// (score / resample / step / eval / data). Used by the §Perf profile and
+/// the pipeline-busyness metric.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    phases: Vec<(String, Duration, u64)>,
+}
+
+impl PhaseTimers {
+    pub fn record(&mut self, phase: &str, d: Duration) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _, _)| n == phase) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.phases.push((phase.to_string(), d, 1));
+        }
+    }
+
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _, _)| n == phase)
+            .map(|(_, d, _)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.iter().find(|(n, _, _)| n == phase).map(|(_, _, c)| *c).unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let grand: f64 = self.phases.iter().map(|(_, d, _)| d.as_secs_f64()).sum();
+        for (name, d, c) in &self.phases {
+            let s = d.as_secs_f64();
+            out.push_str(&format!(
+                "{name:>12}: {s:>9.3}s  ({c:>7} calls, {:>9.1}us/call, {:>5.1}%)\n",
+                s * 1e6 / (*c).max(1) as f64,
+                100.0 * s / grand.max(1e-12),
+            ));
+        }
+        out
+    }
+
+    pub fn phases(&self) -> &[(String, Duration, u64)] {
+        &self.phases
+    }
+}
+
+/// The paper's protocol: a fixed wall-clock budget; schedules key off
+/// elapsed seconds rather than step counts.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeBudget {
+    sw: Stopwatch,
+    budget: Duration,
+}
+
+impl TimeBudget {
+    pub fn new(budget: Duration) -> Self {
+        Self { sw: Stopwatch::new(), budget }
+    }
+
+    pub fn from_secs(secs: f64) -> Self {
+        Self::new(Duration::from_secs_f64(secs))
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.sw.elapsed() >= self.budget
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.sw.elapsed_secs()
+    }
+
+    /// Fraction of the budget consumed, in [0, 1].
+    pub fn progress(&self) -> f64 {
+        (self.sw.elapsed_secs() / self.budget.as_secs_f64()).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timers_accumulate() {
+        let mut t = PhaseTimers::default();
+        t.record("step", Duration::from_millis(5));
+        t.record("step", Duration::from_millis(7));
+        t.record("score", Duration::from_millis(1));
+        assert_eq!(t.total("step"), Duration::from_millis(12));
+        assert_eq!(t.count("step"), 2);
+        assert_eq!(t.count("nope"), 0);
+        assert!(t.report().contains("step"));
+    }
+
+    #[test]
+    fn budget_progress() {
+        let b = TimeBudget::from_secs(1000.0);
+        assert!(!b.exhausted());
+        assert!(b.progress() < 0.01);
+    }
+
+    #[test]
+    fn timed_closure_runs() {
+        let mut t = PhaseTimers::default();
+        let v = t.time("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("work"), 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; they are the rust half of the
+//! cross-language contract (the python half bakes the expected numbers into
+//! the manifest). Engine construction is shared through a thread-local
+//! because the PJRT handles are not Send.
+
+use isample::coordinator::trainer::{Trainer, TrainerConfig};
+use isample::coordinator::StrategyKind;
+use isample::data::synthetic::SyntheticImages;
+use isample::data::Dataset;
+use isample::runtime::{checkpoint, selfcheck, Engine};
+
+fn with_engine<R>(f: impl FnOnce(&Engine) -> R) -> R {
+    thread_local! {
+        static ENGINE: Engine = Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            .expect("run `make artifacts` before `cargo test`");
+    }
+    ENGINE.with(|e| f(e))
+}
+
+fn mlp_split() -> isample::data::Split<SyntheticImages> {
+    SyntheticImages::builder(64, 10).samples(4_096).test_samples(1_024).seed(9).split()
+}
+
+#[test]
+fn selfcheck_every_model_matches_python_numerics() {
+    with_engine(|engine| {
+        for model in engine.manifest.models.keys() {
+            selfcheck::run(engine, model).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        }
+    });
+}
+
+#[test]
+fn training_reduces_loss_and_importance_sampling_switches_on() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let cfg = TrainerConfig::upper_bound("mlp10")
+            .with_steps(300)
+            .with_presample(384)
+            .with_tau_th(1.2);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let report = tr.run(&split.train, Some(&split.test)).unwrap();
+        assert_eq!(report.steps, 300);
+        let first = report.log.rows.first().unwrap().train_loss;
+        assert!(
+            report.final_train_loss < first * 0.5,
+            "loss did not halve: {first} -> {}",
+            report.final_train_loss
+        );
+        assert!(report.is_switch_step.is_some(), "IS never switched on");
+        assert!(report.final_test_err < 0.5, "test err {}", report.final_test_err);
+        // tau is observed every step
+        assert!(tr.tau.observations() >= 300);
+    });
+}
+
+#[test]
+fn uniform_strategy_never_activates_is() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let cfg = TrainerConfig::uniform("mlp10").with_steps(50);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let report = tr.run(&split.train, None).unwrap();
+        assert_eq!(report.is_switch_step, None);
+        assert!(report.log.rows.iter().all(|r| !r.is_active));
+    });
+}
+
+#[test]
+fn high_tau_threshold_keeps_sampling_uniform() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        // tau can never exceed sqrt(B) = ~19.6; a threshold of 100 keeps
+        // Algorithm 1 in its warmup branch forever.
+        let cfg = TrainerConfig::upper_bound("mlp10")
+            .with_steps(60)
+            .with_presample(384)
+            .with_tau_th(100.0);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let report = tr.run(&split.train, None).unwrap();
+        assert_eq!(report.is_switch_step, None);
+    });
+}
+
+#[test]
+fn loss_and_gradnorm_strategies_run() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        for cfg in [
+            TrainerConfig::loss("mlp10").with_steps(40).with_presample(384).with_tau_th(1.1),
+            TrainerConfig::grad_norm("mlp10")
+                .with_steps(40)
+                .with_presample(1024)
+                .with_tau_th(1.1),
+        ] {
+            let name = cfg.strategy.name();
+            let mut tr = Trainer::new(engine, cfg).unwrap();
+            let report = tr.run(&split.train, None).unwrap();
+            assert_eq!(report.steps, 40, "{name}");
+            assert!(report.final_train_loss.is_finite(), "{name}");
+        }
+    });
+}
+
+#[test]
+fn history_baselines_run_and_learn() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        for cfg in [
+            TrainerConfig::loshchilov_hutter("mlp10").with_steps(120),
+            TrainerConfig::schaul("mlp10").with_steps(120),
+        ] {
+            let name = cfg.strategy.name();
+            let mut tr = Trainer::new(engine, cfg).unwrap();
+            let report = tr.run(&split.train, None).unwrap();
+            let first = report.log.rows.first().unwrap().train_loss;
+            assert!(
+                report.final_train_loss < first,
+                "{name}: {first} -> {}",
+                report.final_train_loss
+            );
+        }
+    });
+}
+
+#[test]
+fn lh_full_recompute_path_is_exercised() {
+    with_engine(|engine| {
+        let split = SyntheticImages::builder(64, 10).samples(512).seed(3).split();
+        let mut cfg = TrainerConfig::base(
+            "mlp10",
+            StrategyKind::LoshchilovHutter { s: 10.0, recompute_every: 20, sort_every: 5 },
+        );
+        cfg = cfg.with_steps(45);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let _ = tr.run(&split.train, None).unwrap();
+        // 45 steps with recompute_every=20 -> recompute at steps 20 and 40,
+        // each scanning ceil(512/128) = 4 shards
+        assert!(tr.timers.count("recompute") >= 8, "recompute ran {}", tr.timers.count("recompute"));
+    });
+}
+
+#[test]
+fn deterministic_given_seed() {
+    with_engine(|engine| {
+        let run = || {
+            let split = mlp_split();
+            // determinism contract: a single prefetch worker (multi-worker
+            // channel arrival order is racy by design) + unaugmented data
+            let mut cfg = TrainerConfig::upper_bound("mlp10")
+                .with_steps(30)
+                .with_presample(384)
+                .with_tau_th(1.2)
+                .with_seed(7);
+            cfg.prefetch_threads = 1;
+            let mut tr = Trainer::new(engine, cfg).unwrap();
+            tr.run(&split.train, None).unwrap().final_train_loss
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed must give identical trajectories");
+    });
+}
+
+#[test]
+fn different_seeds_differ() {
+    with_engine(|engine| {
+        let run = |seed| {
+            let split = mlp_split();
+            let cfg = TrainerConfig::uniform("mlp10").with_steps(20).with_seed(seed);
+            let mut tr = Trainer::new(engine, cfg).unwrap();
+            tr.run(&split.train, None).unwrap().final_train_loss
+        };
+        assert_ne!(run(1), run(2));
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let cfg = TrainerConfig::uniform("mlp10").with_steps(25);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let _ = tr.run(&split.train, None).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("isample_it_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        checkpoint::save(&tr.state, &path).unwrap();
+        let restored = checkpoint::load(&path).unwrap();
+        assert_eq!(restored.step, tr.state.step);
+
+        // restored params must produce identical scores
+        let (x, y) = split.train.batch(&(0..128).collect::<Vec<_>>(), 0);
+        let (l1, g1) = engine.fwd_scores(&tr.state, &x, &y).unwrap();
+        let (l2, g2) = engine.fwd_scores(&restored, &x, &y).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn wrong_dataset_dimension_is_rejected() {
+    with_engine(|engine| {
+        let bad = SyntheticImages::builder(32, 10).samples(256).seed(1).build(); // 32 != 64
+        let cfg = TrainerConfig::uniform("mlp10").with_steps(5);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        assert!(tr.run(&bad, None).is_err());
+    });
+}
+
+#[test]
+fn invalid_presample_is_rejected_at_construction() {
+    with_engine(|engine| {
+        let cfg = TrainerConfig::upper_bound("mlp10").with_presample(999);
+        assert!(Trainer::new(engine, cfg).is_err());
+    });
+}
+
+#[test]
+fn unknown_model_is_rejected() {
+    with_engine(|engine| {
+        assert!(Trainer::new(engine, TrainerConfig::uniform("nope")).is_err());
+    });
+}
+
+#[test]
+fn eval_metrics_agree_with_scores() {
+    with_engine(|engine| {
+        // mean test loss from eval_metrics must match the mean of the
+        // per-sample losses from fwd_scores on the same shard
+        let split = mlp_split();
+        let state = engine.init_state("mlp10", 5).unwrap();
+        let info = engine.model_info("mlp10").unwrap();
+        let idx: Vec<usize> = (0..info.eval_batch).collect();
+        let (x, y) = split.test.batch(&idx, 0);
+        let (sum_loss, correct) = engine.eval_metrics(&state, &x, &y).unwrap();
+        // same shard through fwd_scores at eval_batch is not baked; use b-
+        // sized chunks instead
+        let b = info.batch;
+        let mut total = 0.0f64;
+        for c in 0..(info.eval_batch / b) {
+            let sub: Vec<usize> = (c * b..(c + 1) * b).collect();
+            let (xs, ys) = split.test.batch(&sub, 0);
+            let (l, _) = engine.fwd_scores(&state, &xs, &ys).unwrap();
+            total += l.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        assert!(
+            (total - sum_loss).abs() < 1e-2 * sum_loss.abs().max(1.0),
+            "{total} vs {sum_loss}"
+        );
+        assert!((0..=info.eval_batch as i64).contains(&correct));
+    });
+}
+
+#[test]
+fn adaptive_lr_extension_runs_and_learns() {
+    // §5 future-work feature: lr scaled by min(tau, cap) while IS is active.
+    with_engine(|engine| {
+        let split = mlp_split();
+        let cfg = TrainerConfig::upper_bound("mlp10")
+            .with_steps(120)
+            .with_presample(384)
+            .with_tau_th(1.2)
+            .with_adaptive_lr(2.0);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let report = tr.run(&split.train, None).unwrap();
+        assert!(report.is_switch_step.is_some());
+        let first = report.log.rows.first().unwrap().train_loss;
+        assert!(
+            report.final_train_loss < first * 0.7,
+            "adaptive-lr run diverged: {first} -> {}",
+            report.final_train_loss
+        );
+    });
+}

@@ -1,0 +1,191 @@
+//! Property-based tests over coordinator invariants (no artifacts needed —
+//! these cover the pure-rust layers under randomized inputs, with failing
+//! seeds reported for replay).
+
+use isample::coordinator::resample::{importance_weights, AliasSampler, CumulativeSampler};
+use isample::coordinator::sampler::resample_from_scores;
+use isample::coordinator::tau::{cost_model, TauEstimator};
+use isample::data::sequence::PermutedSequences;
+use isample::data::synthetic::SyntheticImages;
+use isample::data::Dataset;
+use isample::util::json::Json;
+use isample::util::prop::{check, Gen};
+use isample::util::rng::SplitMix64;
+use isample::util::stats::normalize_probs;
+
+#[test]
+fn prop_alias_and_cdf_agree_in_distribution() {
+    // Both backends sample the same target distribution: compare empirical
+    // frequencies on small supports with many draws.
+    check("alias==cdf in distribution", 25, |g: &mut Gen| {
+        let n = g.usize_in(2..12);
+        let scores: Vec<f32> = (0..n).map(|_| g.f32_in(0.0..1.0)).collect();
+        let probs = normalize_probs(&scores);
+        let draws = 40_000;
+        let mut ca = vec![0f64; n];
+        let mut cc = vec![0f64; n];
+        let alias = AliasSampler::new(&probs);
+        let cdf = CumulativeSampler::new(&probs);
+        for _ in 0..draws {
+            ca[alias.draw(&mut g.rng)] += 1.0;
+            cc[cdf.draw(&mut g.rng)] += 1.0;
+        }
+        for i in 0..n {
+            let (fa, fc) = (ca[i] / draws as f64, cc[i] / draws as f64);
+            assert!(
+                (fa - fc).abs() < 0.02,
+                "backend disagreement at {i}: alias {fa} vs cdf {fc} (p={})",
+                probs[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_estimator_is_unbiased() {
+    // E_p[w f] == mean(f) for w = 1/(B p): the core unbiasedness identity
+    // behind Eq. 2. Tested empirically over random score vectors.
+    check("unbiased importance estimator", 10, |g: &mut Gen| {
+        let n = g.usize_in(8..64);
+        let scores: Vec<f32> = (0..n).map(|_| g.f32_in(0.01..2.0)).collect();
+        let f: Vec<f64> = (0..n).map(|_| g.f64_in(-3.0..3.0)).collect();
+        let probs = normalize_probs(&scores);
+        let s = AliasSampler::new(&probs);
+        let draws: Vec<usize> = s.sample(&mut g.rng, 300_000);
+        let w = importance_weights(&probs, &draws);
+        let est = draws.iter().zip(&w).map(|(&i, &wi)| wi as f64 * f[i]).sum::<f64>()
+            / draws.len() as f64;
+        let truth = f.iter().sum::<f64>() / n as f64;
+        assert!((est - truth).abs() < 0.05, "estimate {est} vs {truth}");
+    });
+}
+
+#[test]
+fn prop_tau_threshold_consistency() {
+    // guaranteed_speedup(B, b, tau) <=> tau > tau_threshold(B, b)
+    check("cost model consistency", 300, |g: &mut Gen| {
+        let b = g.usize_in(1..512);
+        let big = b + g.usize_in(0..4096);
+        let tau = g.f64_in(1.0..50.0);
+        let th = cost_model::tau_threshold(big, b);
+        assert_eq!(cost_model::guaranteed_speedup(big, b, tau), tau > th);
+        // the threshold is always > 1 (scoring is never free)
+        assert!(th > 1.0);
+        // max variance reduction is positive whenever B > b
+        if big > b {
+            assert!(cost_model::max_variance_reduction(big, b) > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_tau_detects_concentration() {
+    // one dominant score among n uniform ones must raise tau strictly
+    check("tau detects outliers", 200, |g: &mut Gen| {
+        let n = g.usize_in(4..256);
+        let base = g.f32_in(0.01..1.0);
+        let mut scores = vec![base; n];
+        let uniform_tau = TauEstimator::tau_from_scores(&scores);
+        scores[g.usize_in(0..n)] = base * g.f32_in(20.0..100.0);
+        let concentrated_tau = TauEstimator::tau_from_scores(&scores);
+        assert!((uniform_tau - 1.0).abs() < 1e-6);
+        assert!(concentrated_tau > uniform_tau + 0.05, "tau {concentrated_tau}");
+    });
+}
+
+#[test]
+fn prop_resample_positions_within_presample() {
+    check("resample positions bounded", 300, |g: &mut Gen| {
+        let scores = g.scores(1..512);
+        let b = g.usize_in(1..256);
+        let use_alias = g.bool();
+        let plan = resample_from_scores(&scores, b, &mut g.rng, use_alias);
+        assert!(plan.positions.iter().all(|&p| p < scores.len()));
+        assert!(plan.weights.iter().all(|&w| w.is_finite() && w > 0.0));
+    });
+}
+
+#[test]
+fn prop_dataset_determinism_and_bounds() {
+    check("dataset generators deterministic", 60, |g: &mut Gen| {
+        let d = g.usize_in(4..64);
+        let c = g.usize_in(2..20);
+        let n = g.usize_in(10..500);
+        let seed = g.rng.next_u64();
+        let ds = SyntheticImages::builder(d, c).samples(n).seed(seed).build();
+        let i = g.usize_in(0..n);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        ds.write_features(i, 0, &mut a);
+        ds.write_features(i, 0, &mut b);
+        assert_eq!(a, b);
+        assert!((0..c as i32).contains(&ds.label(i)));
+        assert!(a.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_sequences_are_permutation_consistent() {
+    check("sequence generator", 40, |g: &mut Gen| {
+        let t = g.usize_in(8..128);
+        let c = g.usize_in(2..10);
+        let seed = g.rng.next_u64();
+        let ds = PermutedSequences::builder(t, c).samples(64).seed(seed).build();
+        let mut a = vec![0.0f32; t];
+        ds.write_features(g.usize_in(0..64), 0, &mut a);
+        assert!(a.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_numbers() {
+    check("json number roundtrip", 500, |g: &mut Gen| {
+        let x = g.f64_in(-1e9..1e9);
+        let text = format!("{x:.9}");
+        let v = Json::parse(&text).unwrap();
+        let back = v.as_f64().unwrap();
+        assert!((back - x).abs() <= 1e-8 * x.abs().max(1.0), "{x} vs {back}");
+    });
+}
+
+#[test]
+fn prop_json_never_panics_on_garbage() {
+    // fuzz: random bytes must produce Ok or Err, never a panic
+    check("json fuzz", 2000, |g: &mut Gen| {
+        let len = g.usize_in(0..64);
+        const CHARSET: &[u8] = b" {}[]\",:0123456789truefalsenul\\eE+-.";
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| CHARSET[g.usize_in(0..CHARSET.len())])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Json::parse(&s);
+    });
+}
+
+#[test]
+fn prop_splitmix_streams_do_not_collide() {
+    check("rng stream separation", 100, |g: &mut Gen| {
+        let seed = g.rng.next_u64();
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::tensor_stream(seed, 0);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::tensor_stream(seed, 1);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+    });
+}
+
+#[test]
+fn prop_normalize_probs_is_distribution() {
+    check("normalize_probs", 500, |g: &mut Gen| {
+        let scores = g.scores(1..512);
+        let p = normalize_probs(&scores);
+        assert_eq!(p.len(), scores.len());
+        let total: f64 = p.iter().map(|&x| x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-4, "sum {total}");
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    });
+}

@@ -1,0 +1,123 @@
+//! Integration tests for the SVRG baselines and the Fig-1/Fig-2 analyses.
+
+use isample::analysis::correlation::correlation_at_state;
+use isample::analysis::variance::{measure_at_state, VarianceConfig};
+use isample::baselines::svrg::{run_svrg, SvrgConfig};
+use isample::coordinator::trainer::{Trainer, TrainerConfig};
+use isample::data::synthetic::SyntheticImages;
+use isample::runtime::Engine;
+
+fn with_engine<R>(f: impl FnOnce(&Engine) -> R) -> R {
+    thread_local! {
+        static ENGINE: Engine = Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            .expect("run `make artifacts` before `cargo test`");
+    }
+    ENGINE.with(|e| f(e))
+}
+
+fn mlp_split() -> isample::data::Split<SyntheticImages> {
+    SyntheticImages::builder(64, 10).samples(2_048).test_samples(1_024).seed(4).split()
+}
+
+#[test]
+fn svrg_takes_steps_and_stays_finite() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let mut cfg = SvrgConfig::svrg("mlp10");
+        cfg.inner_steps = 10;
+        cfg.max_outer = Some(2);
+        let report = run_svrg(engine, &cfg, &split.train, Some(&split.test)).unwrap();
+        assert_eq!(report.steps, 20);
+        assert!(report.final_train_loss.is_finite());
+        assert!(report.final_test_err.is_finite());
+    });
+}
+
+#[test]
+fn scsg_grows_its_large_batch_and_runs() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let mut cfg = SvrgConfig::scsg("mlp10", 256);
+        cfg.max_outer = Some(3);
+        let report = run_svrg(engine, &cfg, &split.train, None).unwrap();
+        // inner steps: 256/128=2, then 384/128=3, then 576/128=4
+        assert_eq!(report.steps, 2 + 3 + 4);
+    });
+}
+
+#[test]
+fn katyusha_coupling_runs_and_learns() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let mut cfg = SvrgConfig::katyusha("mlp10");
+        cfg.inner_steps = 15;
+        cfg.max_outer = Some(2);
+        cfg.lr = 0.02;
+        let report = run_svrg(engine, &cfg, &split.train, None).unwrap();
+        assert_eq!(report.steps, 30);
+        assert!(report.final_train_loss.is_finite());
+        let first = report.log.rows.first().unwrap().train_loss;
+        assert!(
+            report.final_train_loss < first * 1.2,
+            "katyusha diverged: {first} -> {}",
+            report.final_train_loss
+        );
+    });
+}
+
+#[test]
+fn variance_analysis_shows_upper_bound_beats_loss_late_in_training() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        // train a while so scores disperse (paper: late-stage behaviour)
+        let cfg = TrainerConfig::uniform("mlp10").with_steps(400);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let _ = tr.run(&split.train, None).unwrap();
+
+        let vcfg = VarianceConfig { presample: 1024, batch: 128, repeats: 5, seed: 3 };
+        let p = measure_at_state(engine, &tr.state, &split.train, &vcfg, 400).unwrap();
+        assert_eq!(p.uniform, 1.0);
+        // the paper's core claims, in miniature:
+        assert!(
+            p.upper_bound < 1.0,
+            "upper-bound must reduce variance vs uniform: {}",
+            p.upper_bound
+        );
+        assert!(
+            p.upper_bound <= p.grad_norm * 1.35,
+            "upper-bound ({}) should be close to the grad-norm oracle ({})",
+            p.upper_bound,
+            p.grad_norm
+        );
+        assert!(p.tau >= 1.0);
+    });
+}
+
+#[test]
+fn correlation_analysis_upper_bound_dominates_loss() {
+    with_engine(|engine| {
+        let split = mlp_split();
+        let cfg = TrainerConfig::uniform("mlp10").with_steps(400);
+        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let _ = tr.run(&split.train, None).unwrap();
+
+        let rep =
+            correlation_at_state(engine, &tr.state, &split.train, 2048, 1024, 7).unwrap();
+        assert_eq!(rep.points.len(), 2048);
+        // §4.1: the upper bound's probabilities track the gradient-norm
+        // probabilities far better than the loss's do.
+        assert!(
+            rep.sse_upper_bound < rep.sse_loss,
+            "SSE(ub) {} !< SSE(loss) {}",
+            rep.sse_upper_bound,
+            rep.sse_loss
+        );
+        assert!(
+            rep.spearman_upper_bound > rep.spearman_loss,
+            "spearman(ub) {} !> spearman(loss) {}",
+            rep.spearman_upper_bound,
+            rep.spearman_loss
+        );
+        assert!(rep.spearman_upper_bound > 0.9, "{}", rep.spearman_upper_bound);
+    });
+}
