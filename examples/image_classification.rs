@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![42],
         quick: budget < 30.0,
         model,
+        ..FigOptions::default()
     };
     fig3_image(&engine, &opts)?;
     println!("CSV series under results/fig3_*/ (one file per strategy+seed, plus summary.csv)");

@@ -15,11 +15,7 @@ fn main() -> anyhow::Result<()> {
     println!("PJRT platform: {}", engine.platform());
 
     // synthetic "image" classification set matching mlp10 (64 features, 10 classes)
-    let split = SyntheticImages::builder(64, 10)
-        .samples(8_192)
-        .test_samples(2_048)
-        .seed(1)
-        .split();
+    let split = SyntheticImages::builder(64, 10).samples(8_192).test_samples(2_048).seed(1).split();
 
     for cfg in [
         TrainerConfig::uniform("mlp10").with_steps(600),

@@ -11,8 +11,7 @@ use isample::figures::runner::{fig5_lstm, FigOptions};
 use isample::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
-    let budget: f64 =
-        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
+    let budget: f64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
     let engine = Engine::load("artifacts")?;
     let opts = FigOptions {
         budget_secs: budget,
@@ -20,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![42],
         quick: budget < 30.0,
         model: None,
+        ..FigOptions::default()
     };
     fig5_lstm(&engine, &opts)?;
     println!("CSV series under results/fig5/");

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![42],
         quick,
         model: Some(model),
+        ..FigOptions::default()
     };
     fig1_variance(&engine, &opts)?;
     fig2_correlation(&engine, &opts)?;

@@ -18,6 +18,7 @@ fn main() -> anyhow::Result<()> {
         seeds: args.flag_u64_list("seeds", &[42])?,
         quick: !args.flag_bool("full"),
         model: args.flag("model").map(|s| s.to_string()),
+        score_workers: args.flag_score_workers()?,
     };
     let sw = Stopwatch::new();
     run_figure(&engine, "fig3", &opts)?;

@@ -3,7 +3,16 @@
 //! EXPERIMENTS.md §Perf (before/after for each optimization iteration).
 //!
 //! `cargo bench --bench perf_micro` — add `-- --filter NAME` to run a
-//! subset, `--target-ms N` to change per-bench time.
+//! subset, `--target-ms N` to change per-bench time (the
+//! `ISAMPLE_BENCH_TARGET_MS` env var caps it too — CI's quick mode).
+//!
+//! The `score/` section measures serial-vs-sharded presample scoring on
+//! the pure-rust [`NativeScorer`] (no artifacts needed), asserts the
+//! parallel path is bit-identical to serial, and writes the
+//! serial/parallel throughput comparison to `BENCH_scoring.json`
+//! (`--out-json PATH` to relocate) — the per-PR perf trajectory artifact.
+//!
+//! PJRT engine benches run only when AOT artifacts are present.
 
 use std::time::Duration;
 
@@ -14,18 +23,19 @@ use isample::coordinator::sampler::resample_from_scores;
 use isample::coordinator::tau::TauEstimator;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
+use isample::runtime::score::{default_score_workers, NativeScorer, ScoreBackend, ScoreKind};
 use isample::runtime::Engine;
-use isample::util::bench::{bench, black_box};
+use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
 use isample::util::rng::SplitMix64;
 use isample::util::stats::normalize_probs;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
     let filter = args.flag("filter").unwrap_or("").to_string();
-    let target = Duration::from_millis(args.flag_u64("target-ms", 1500)?);
+    let default_ms = target_from_env(1500).as_millis() as u64;
+    let target = Duration::from_millis(args.flag_u64("target-ms", default_ms)?);
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
 
-    let engine = Engine::load(args.flag("artifacts").unwrap_or("artifacts"))?;
     let mut rng = SplitMix64::new(42);
 
     // ---------------- pure-rust pipeline stages ----------------
@@ -87,7 +97,69 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // ---------------- PJRT entry points ----------------
+    // ---------------- sharded presample scoring ----------------
+    // B=640 at CIFAR-ish dims (§4.2 configuration), scored by the native
+    // MLP so the serial/parallel comparison runs without artifacts. The
+    // speedup metric in BENCH_scoring.json is the acceptance number.
+    if run("score/") {
+        let mut suite = BenchSuite::new();
+        let scorer = NativeScorer::new(768, 256, 100, 42);
+        let (xp, yp) = ds.batch(&idx640, 0);
+
+        let serial_scores = ScoreBackend::Serial.score(&scorer, &xp, &yp, ScoreKind::UpperBound)?;
+        let r_serial = bench("score/native_B640_serial", target, || {
+            black_box(
+                ScoreBackend::Serial
+                    .score(black_box(&scorer), &xp, &yp, ScoreKind::UpperBound)
+                    .unwrap(),
+            );
+        });
+        suite.metric("rows", 640.0);
+        suite.metric("serial_rows_per_sec", r_serial.rows_per_sec(640));
+
+        let mut worker_counts = vec![2usize, 4];
+        let avail = default_score_workers();
+        if avail > 4 {
+            worker_counts.push(avail);
+        }
+        for &workers in &worker_counts {
+            let backend = ScoreBackend::from_workers(workers);
+            let parallel_scores = backend.score(&scorer, &xp, &yp, ScoreKind::UpperBound)?;
+            assert_eq!(
+                parallel_scores, serial_scores,
+                "parallel scoring must be bit-identical to serial ({workers} workers)"
+            );
+            let r = bench(&format!("score/native_B640_w{workers}"), target, || {
+                black_box(
+                    backend.score(black_box(&scorer), &xp, &yp, ScoreKind::UpperBound).unwrap(),
+                );
+            });
+            let speedup = r_serial.mean_ns / r.mean_ns.max(1e-9);
+            println!(
+                "score: {workers} workers -> {:.2}x vs serial ({:.0} rows/s)",
+                speedup,
+                r.rows_per_sec(640)
+            );
+            suite.metric(&format!("speedup_w{workers}_vs_serial"), speedup);
+            suite.metric(&format!("w{workers}_rows_per_sec"), r.rows_per_sec(640));
+            suite.push(r);
+        }
+        suite.push(r_serial);
+        suite.metric("available_parallelism", avail as f64);
+
+        let out = args.flag("out-json").unwrap_or("BENCH_scoring.json");
+        suite.write_json(out)?;
+        println!("scoring bench results -> {out}");
+    }
+
+    // ---------------- PJRT entry points (need AOT artifacts) -----------
+    let engine = match Engine::load(args.flag("artifacts").unwrap_or("artifacts")) {
+        Ok(engine) => engine,
+        Err(e) => {
+            println!("skipping PJRT engine benches (no artifacts): {e:#}");
+            return Ok(());
+        }
+    };
     for model in ["mlp10", "cnn100", "lstm"] {
         if engine.model_info(model).is_err() {
             continue;

@@ -2,7 +2,9 @@
 //!
 //! Grammar: `isample <command> [positional...] [--flag value | --flag]`.
 //! Flags may appear anywhere after the command; `--flag` with no value is
-//! recorded as `"true"`.
+//! recorded as `"true"`. When the first argument is itself a flag the
+//! command is empty — that is how the bench binaries are invoked
+//! (`cargo bench --bench perf_micro -- --filter score/`).
 
 use std::collections::BTreeMap;
 
@@ -18,7 +20,11 @@ pub struct Args {
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut it = argv.into_iter().peekable();
-        let command = it.next().unwrap_or_default();
+        let command = if it.peek().is_some_and(|a| a.starts_with("--")) {
+            String::new()
+        } else {
+            it.next().unwrap_or_default()
+        };
         let mut positional = vec![];
         let mut flags = BTreeMap::new();
         while let Some(a) = it.next() {
@@ -68,6 +74,17 @@ impl Args {
 
     pub fn flag_bool(&self, name: &str) -> bool {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// `--score-workers N` — presample scoring worker threads. Defaults to
+    /// one per available core (`runtime::score::default_score_workers`);
+    /// 1 forces the serial path; 0 is rejected.
+    pub fn flag_score_workers(&self) -> Result<usize> {
+        let n = self.flag_usize("score-workers", crate::runtime::score::default_score_workers())?;
+        if n == 0 {
+            bail!("--score-workers must be >= 1 (got 0)");
+        }
+        Ok(n)
     }
 
     /// Comma-separated u64 list (for `--seeds 1,2,3`).
@@ -120,5 +137,25 @@ mod tests {
         let a = args("bench");
         assert_eq!(a.flag_usize("presample", 640).unwrap(), 640);
         assert_eq!(a.flag_u64("steps", 100).unwrap(), 100);
+    }
+
+    #[test]
+    fn leading_flag_means_no_command() {
+        // bench binaries are invoked flags-first: nothing may be swallowed
+        let a = args("--filter score/ --out-json BENCH_scoring.json --target-ms 10");
+        assert_eq!(a.command, "");
+        assert!(a.positional.is_empty());
+        assert_eq!(a.flag("filter"), Some("score/"));
+        assert_eq!(a.flag("out-json"), Some("BENCH_scoring.json"));
+        assert_eq!(a.flag_u64("target-ms", 1500).unwrap(), 10);
+    }
+
+    #[test]
+    fn score_workers_flag() {
+        assert_eq!(args("train --score-workers 4").flag_score_workers().unwrap(), 4);
+        assert_eq!(args("train --score-workers=1").flag_score_workers().unwrap(), 1);
+        assert!(args("train").flag_score_workers().unwrap() >= 1);
+        assert!(args("train --score-workers 0").flag_score_workers().is_err());
+        assert!(args("train --score-workers lots").flag_score_workers().is_err());
     }
 }

@@ -101,15 +101,7 @@ impl LoshchilovHutter {
         let history = LossHistory::new(n, f32::MAX / 2.0);
         let order: Vec<usize> = (0..n).collect();
         let rank_sampler = AliasSampler::new(&rank_probs(n, s));
-        Self {
-            history,
-            s,
-            recompute_every,
-            sort_every,
-            order,
-            rank_sampler,
-            last_sort_step: 0,
-        }
+        Self { history, s, recompute_every, sort_every, order, rank_sampler, last_sort_step: 0 }
     }
 
     /// True when the trainer should refresh every stored loss this step.

@@ -7,7 +7,8 @@
 //! * [`tau`] — the Eq.-26 variance-reduction estimator and cost model.
 //! * [`history`] — loss-history stores for the published baselines.
 //! * [`pipeline`] — threaded batch prefetch with bounded-channel
-//!   backpressure; PJRT execution stays on the coordinator thread.
+//!   backpressure; training steps stay on the coordinator thread while
+//!   presample scoring shards across workers (`runtime::score`).
 //! * [`metrics`] — wall-clock metric rows and CSV sinks.
 
 pub mod history;

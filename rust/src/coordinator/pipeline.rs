@@ -2,10 +2,12 @@
 //! batches ahead of the trainer, with a bounded channel providing
 //! backpressure so workers can never run unboundedly ahead of the consumer.
 //!
-//! PJRT execution stays on the coordinator thread (the `xla` handles are not
-//! `Send`); only *data generation* (feature synthesis + augmentation) is
-//! parallelized — which is exactly the part that would otherwise steal time
-//! from the device in a naive loop.
+//! Training-step execution stays on the coordinator thread; *data
+//! generation* (feature synthesis + augmentation) is parallelized here —
+//! exactly the part that would otherwise steal time from the device in a
+//! naive loop. Presample *scoring* is parallelized separately by
+//! `runtime::score::ScoreBackend`, which reuses this module's scoped-worker
+//! idiom on the now `Send + Sync` engine.
 //!
 //! Workers are **scoped** (`std::thread::scope`), so datasets are borrowed,
 //! not `Arc`ed, and a crashed worker surfaces at join time instead of
@@ -75,8 +77,7 @@ impl<'sc> Prefetcher<'sc> {
                 while !stop.load(Ordering::Relaxed) {
                     let first_draw = draws.fetch_add(batch_size as u64, Ordering::Relaxed);
                     let epoch = first_draw / n as u64;
-                    let indices: Vec<usize> =
-                        (0..batch_size).map(|_| rng.below(n)).collect();
+                    let indices: Vec<usize> = (0..batch_size).map(|_| rng.below(n)).collect();
                     let (x, y) = dataset.batch(&indices, epoch);
                     let batch = PrefetchedBatch { indices, x, y, epoch };
                     // try_send first so we can count backpressure engagements

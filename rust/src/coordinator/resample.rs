@@ -155,10 +155,7 @@ mod tests {
         for alias in [false, true] {
             let emp = empirical(&probs, 200_000, alias);
             for (e, &p) in emp.iter().zip(&probs) {
-                assert!(
-                    (e - p as f64).abs() < 0.01,
-                    "backend alias={alias}: {e} vs {p}"
-                );
+                assert!((e - p as f64).abs() < 0.01, "backend alias={alias}: {e} vs {p}");
             }
         }
     }

@@ -14,27 +14,10 @@ use crate::util::stats::normalize_probs;
 use super::history::{LoshchilovHutter, SchaulProportional};
 use super::resample::{importance_weights, AliasSampler, CumulativeSampler};
 
-/// Which per-sample statistic drives the presample distribution.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ScoreKind {
-    /// The paper's Eq.-20 upper bound (`upper-bound` curves).
-    UpperBound,
-    /// Loss-proportional (`loss` curves).
-    Loss,
-    /// True per-sample gradient norm (`gradient-norm`; an order of
-    /// magnitude more expensive — Fig 1/2 oracle).
-    GradNorm,
-}
-
-impl ScoreKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            ScoreKind::UpperBound => "upper-bound",
-            ScoreKind::Loss => "loss",
-            ScoreKind::GradNorm => "gradient-norm",
-        }
-    }
-}
+// `ScoreKind` is owned by the scoring subsystem (`runtime::score`) since
+// the sharded-scoring refactor; re-exported here so existing paths keep
+// working.
+pub use crate::runtime::score::ScoreKind;
 
 /// Strategy configuration (data only — the trainer owns engine access).
 #[derive(Debug, Clone)]
@@ -178,10 +161,7 @@ mod tests {
 
     #[test]
     fn history_state_dispatch() {
-        let lh = HistoryState::for_strategy(
-            &StrategyKind::parse("lh").unwrap(),
-            100,
-        );
+        let lh = HistoryState::for_strategy(&StrategyKind::parse("lh").unwrap(), 100);
         assert!(matches!(lh, HistoryState::Lh(_)));
         let sc = HistoryState::for_strategy(&StrategyKind::parse("schaul").unwrap(), 100);
         assert!(matches!(sc, HistoryState::Schaul(_)));

@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64};
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
+use crate::runtime::score::{default_score_workers, EngineScorer, ScoreBackend};
 use crate::runtime::{Engine, ModelState};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::{PhaseTimers, Stopwatch};
@@ -107,6 +108,13 @@ pub struct TrainerConfig {
     /// arrival order is nondeterministic (by design — it is a racy queue);
     /// set to 1 for bit-reproducible runs.
     pub prefetch_threads: usize,
+    /// Presample scoring worker threads (`runtime::score`). 1 = serial.
+    /// Unlike prefetching, parallel scoring is bit-identical to serial for
+    /// a fixed seed (chunks merge in presample order), so this is safe to
+    /// raise on reproducibility-sensitive runs. The threaded backend only
+    /// engages when `B / score_workers` chunk sizes have baked artifacts;
+    /// otherwise it transparently falls back to the serial full-B pass.
+    pub score_workers: usize,
     /// record a metrics row every `log_every` steps.
     pub log_every: u64,
     /// The paper's §5 future-work extension: when importance sampling is
@@ -167,6 +175,7 @@ impl TrainerConfig {
             // iter 6), so 0 is the right default.
             prefetch_depth: 2,
             prefetch_threads: 0,
+            score_workers: default_score_workers(),
             log_every: 10,
             adaptive_lr_cap: 0.0,
         }
@@ -213,6 +222,12 @@ impl TrainerConfig {
         self.adaptive_lr_cap = cap;
         self
     }
+
+    /// Set the presample scoring worker count (see `score_workers`).
+    pub fn with_score_workers(mut self, workers: usize) -> Self {
+        self.score_workers = workers.max(1);
+        self
+    }
 }
 
 /// Result of one run.
@@ -254,10 +269,7 @@ impl<'e> Trainer<'e> {
                 format!("presample {} has no fwd_scores artifact", cfg.presample)
             })?;
         }
-        if matches!(
-            cfg.strategy,
-            StrategyKind::Presample { score: ScoreKind::GradNorm }
-        ) {
+        if matches!(cfg.strategy, StrategyKind::Presample { score: ScoreKind::GradNorm }) {
             info.entry("grad_norms", cfg.presample).context(
                 "gradient-norm strategy requires a grad_norms artifact at the presample size",
             )?;
@@ -282,6 +294,18 @@ impl<'e> Trainer<'e> {
             _ => {}
         }
         let state = engine.init_state(&cfg.model, cfg.seed)?;
+        // Pre-compile the chunk-sized scoring entries the threaded backend
+        // will hit (when B / score_workers is baked); otherwise it falls
+        // back to the serial full-B artifact warmed above.
+        if let StrategyKind::Presample { score } = &cfg.strategy {
+            let backend = ScoreBackend::from_workers(cfg.score_workers);
+            let scorer = EngineScorer { engine, state: &state };
+            if let Some(chunks) = backend.plan(&scorer, cfg.presample, *score) {
+                for (_, len) in chunks {
+                    engine.executable(&cfg.model, score.entry(), len)?;
+                }
+            }
+        }
         let rng = SplitMix64::tensor_stream(cfg.seed ^ 0x7 & u64::MAX, 1);
         Ok(Self {
             engine,
@@ -442,37 +466,45 @@ impl<'e> Trainer<'e> {
                     let out = timed!(
                         self.timers,
                         "step",
-                        self.engine.train_step(&mut self.state, &b.x, &b.y, &vec![1.0; b.y.len()], lr)
+                        self.engine.train_step(
+                            &mut self.state,
+                            &b.x,
+                            &b.y,
+                            &vec![1.0; b.y.len()],
+                            lr,
+                        )
                     )?;
                     // free scores: log τ for observability (uniform never acts on it)
                     self.tau.update(&out.scores);
                     loss = out.loss as f64;
                 }
                 StrategyKind::Presample { score } => {
-                    let tau_on =
-                        self.tau.observations() > 0 && self.tau.tau() > self.cfg.tau_th;
+                    let tau_on = self.tau.observations() > 0 && self.tau.tau() > self.cfg.tau_th;
                     if tau_on {
                         is_active = true;
-                        let pb = timed!(self.timers, "data", large_src.as_deref_mut().expect("presample source").next());
-                        let scores = timed!(
+                        let pb = timed!(
                             self.timers,
-                            "score",
-                            match score {
-                                ScoreKind::UpperBound => {
-                                    self.engine.fwd_scores(&self.state, &pb.x, &pb.y).map(|o| o.1)
-                                }
-                                ScoreKind::Loss => {
-                                    self.engine.fwd_scores(&self.state, &pb.x, &pb.y).map(|o| o.0)
-                                }
-                                ScoreKind::GradNorm => {
-                                    self.engine.grad_norms(&self.state, &pb.x, &pb.y)
-                                }
-                            }
-                        )?;
+                            "data",
+                            large_src.as_deref_mut().expect("presample source").next()
+                        );
+                        // Sharded scoring: chunks fan out to score_workers
+                        // scoped threads and merge in presample order, so
+                        // the scores (and therefore the resampled indices)
+                        // are bit-identical to the serial path.
+                        let scores = timed!(self.timers, "score", {
+                            let scorer = EngineScorer { engine: self.engine, state: &self.state };
+                            ScoreBackend::from_workers(self.cfg.score_workers)
+                                .score(&scorer, &pb.x, &pb.y, *score)
+                        })?;
                         let plan = timed!(
                             self.timers,
                             "resample",
-                            resample_from_scores(&scores, self.batch, &mut self.rng, self.cfg.use_alias)
+                            resample_from_scores(
+                                &scores,
+                                self.batch,
+                                &mut self.rng,
+                                self.cfg.use_alias,
+                            )
                         );
                         let (x, y) = gather_rows(&pb, &plan.positions);
                         // §5 extension: linear-scaling rule on the

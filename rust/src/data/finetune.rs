@@ -15,6 +15,7 @@
 use super::{Dataset, Split, Tier};
 use crate::util::rng::SplitMix64;
 
+#[derive(Clone, Copy)]
 pub struct FinetuneFeaturesBuilder {
     latent_dim: usize,
     feature_dim: usize,
@@ -47,20 +48,13 @@ impl FinetuneFeaturesBuilder {
     }
 
     pub fn split(self) -> Split<FinetuneFeatures> {
-        let mut tb = FinetuneFeaturesBuilder { ..self };
+        let mut tb = self;
         tb.samples = self.test_samples;
         let train = FinetuneFeatures::new(self, 0);
         let test = FinetuneFeatures::new(tb, 0x7E57_0000_0000_0000);
         Split { train, test }
     }
 }
-
-impl Clone for FinetuneFeaturesBuilder {
-    fn clone(&self) -> Self {
-        Self { ..*self }
-    }
-}
-impl Copy for FinetuneFeaturesBuilder {}
 
 pub struct FinetuneFeatures {
     cfg: FinetuneFeaturesBuilder,

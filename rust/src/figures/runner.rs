@@ -12,7 +12,7 @@
 //! | fig6    | SVRG/Katyusha/SCSG comparison                            |
 //! | fig7    | presample-size (B) ablation                              |
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
@@ -25,6 +25,7 @@ use crate::data::finetune::FinetuneFeatures;
 use crate::data::sequence::PermutedSequences;
 use crate::data::synthetic::SyntheticImages;
 use crate::data::{Dataset, Split};
+use crate::runtime::score::default_score_workers;
 use crate::runtime::Engine;
 
 /// Shared options for every figure harness.
@@ -39,6 +40,8 @@ pub struct FigOptions {
     pub quick: bool,
     /// override the model used by figures that allow it
     pub model: Option<String>,
+    /// presample scoring workers for every training run (1 = serial)
+    pub score_workers: usize,
 }
 
 impl Default for FigOptions {
@@ -49,11 +52,13 @@ impl Default for FigOptions {
             seeds: vec![42],
             quick: false,
             model: None,
+            score_workers: default_score_workers(),
         }
     }
 }
 
-/// A dataset matched to a model's feature_dim/num_classes (DESIGN.md §2).
+/// A dataset matched to a model's `feature_dim`/`num_classes`
+/// (DESIGN.md §2).
 pub enum AnyDataset {
     Images(SyntheticImages),
     Finetune(FinetuneFeatures),
@@ -103,7 +108,12 @@ impl Dataset for AnyDataset {
 }
 
 /// Build the matched train/test split for a model (DESIGN.md §2 table).
-pub fn dataset_for(engine: &Engine, model: &str, seed: u64, quick: bool) -> Result<Split<AnyDataset>> {
+pub fn dataset_for(
+    engine: &Engine,
+    model: &str,
+    seed: u64,
+    quick: bool,
+) -> Result<Split<AnyDataset>> {
     let info = engine.model_info(model)?;
     let (d, c) = (info.feature_dim, info.num_classes);
     let scale = if quick { 4 } else { 1 };
@@ -266,7 +276,7 @@ pub fn fig2_correlation(engine: &Engine, opts: &FigOptions) -> Result<()> {
 /// across-seed mean (final train loss, final test err).
 fn run_strategies(
     engine: &Engine,
-    dir: &PathBuf,
+    dir: &Path,
     model: &str,
     configs: Vec<(String, TrainerConfig)>,
     opts: &FigOptions,
@@ -282,7 +292,7 @@ fn run_strategies(
         let mut switch = f64::NAN;
         for &seed in &opts.seeds {
             let split = dataset_for(engine, model, seed, opts.quick)?;
-            let mut c = cfg.clone().with_seed(seed);
+            let mut c = cfg.clone().with_seed(seed).with_score_workers(opts.score_workers);
             c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
             let mut trainer = Trainer::new(engine, c)?;
             let report = trainer.run(&split.train, Some(&split.test))?;
@@ -403,13 +413,11 @@ pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
         "method,steps,final_train_loss,final_test_err",
     )?;
     for (tag, cfg) in sgd_cfgs {
-        let mut trainer = Trainer::new(engine, cfg.with_seed(seed))?;
+        let cfg = cfg.with_seed(seed).with_score_workers(opts.score_workers);
+        let mut trainer = Trainer::new(engine, cfg)?;
         let report = trainer.run(&split.train, Some(&split.test))?;
         report.log.to_csv(dir.join(format!("{tag}.csv")))?;
-        summary.row(
-            &tag,
-            &[report.steps as f64, report.final_train_loss, report.final_test_err],
-        )?;
+        summary.row(&tag, &[report.steps as f64, report.final_train_loss, report.final_test_err])?;
         println!(
             "  {tag}: {} steps, train loss {:.4}, test err {:.4}",
             report.steps, report.final_train_loss, report.final_test_err
@@ -443,7 +451,9 @@ pub fn ablation_extensions(engine: &Engine, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
     println!("ablation [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "ablation")?;
-    let mk = |c: TrainerConfig| c.with_presample(640).with_tau_th(1.5).with_budget(opts.budget_secs);
+    let mk = |c: TrainerConfig| {
+        c.with_presample(640).with_tau_th(1.5).with_budget(opts.budget_secs)
+    };
     let configs = vec![
         ("uniform".to_string(), mk(TrainerConfig::uniform(&model))),
         ("upper-bound".to_string(), mk(TrainerConfig::upper_bound(&model))),

@@ -44,6 +44,7 @@ USAGE:
 MODELS    mlp10 cnn10 cnn100 finetune lstm
 STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
 FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
+          --score-workers N (presample scoring threads; default = cores)
           --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
 "#;
 
@@ -59,6 +60,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.a_tau = args.flag_f64("a-tau", cfg.a_tau)?;
     cfg.base_lr = args.flag_f64("lr", cfg.base_lr as f64)? as f32;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    cfg.score_workers = args.flag_score_workers()?;
     cfg.eval_every_secs = args.flag_f64("eval-every", 10.0)?;
     if let Some(b) = args.flag("budget") {
         cfg = cfg.with_budget(b.parse().context("--budget")?);
@@ -105,6 +107,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         seeds: args.flag_u64_list("seeds", &[42])?,
         quick: args.flag_bool("quick"),
         model: args.flag("model").map(|s| s.to_string()),
+        score_workers: args.flag_score_workers()?,
     };
     run_figure(&engine, fig, &opts)
 }

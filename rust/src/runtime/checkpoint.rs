@@ -134,16 +134,10 @@ mod tests {
         assert_eq!(back.model, "test");
         assert_eq!(back.step, 1234);
         for (a, b) in state.params.iter().zip(&back.params) {
-            assert_eq!(
-                HostTensor::from_literal(a).unwrap(),
-                HostTensor::from_literal(b).unwrap()
-            );
+            assert_eq!(HostTensor::from_literal(a).unwrap(), HostTensor::from_literal(b).unwrap());
         }
         for (a, b) in state.mom.iter().zip(&back.mom) {
-            assert_eq!(
-                HostTensor::from_literal(a).unwrap(),
-                HostTensor::from_literal(b).unwrap()
-            );
+            assert_eq!(HostTensor::from_literal(a).unwrap(), HostTensor::from_literal(b).unwrap());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

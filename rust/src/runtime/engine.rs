@@ -9,14 +9,15 @@
 //!   plugin) inside [`ModelState`]; `train_step` swaps them wholesale from
 //!   the executable's output tuple, so the steady-state hot loop does no
 //!   re-encoding of parameters.
-//! * The engine is deliberately **not** `Send`: all PJRT calls happen on the
-//!   coordinator thread; data production happens on worker threads that
-//!   communicate through channels (see `coordinator::pipeline`).
+//! * The engine is `Send + Sync`: the executable cache and perf counters
+//!   sit behind mutexes, and compiled executables are `Arc`-shared, so the
+//!   sharded scoring backend (`runtime::score`) can run `fwd_scores` /
+//!   `grad_norms` chunks concurrently from scoped worker threads while the
+//!   coordinator keeps exclusive ownership of the mutable [`ModelState`].
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
@@ -74,9 +75,9 @@ type ExeKey = (String, String, usize);
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<ExeKey, Rc<PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<ExeKey, Arc<PjRtLoadedExecutable>>>,
     /// Executions performed, per entry name (perf accounting).
-    exec_counts: RefCell<HashMap<String, u64>>,
+    exec_counts: Mutex<HashMap<String, u64>>,
 }
 
 impl Engine {
@@ -87,8 +88,8 @@ impl Engine {
         Ok(Self {
             client,
             manifest,
-            exes: RefCell::new(HashMap::new()),
-            exec_counts: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
         })
     }
 
@@ -101,14 +102,16 @@ impl Engine {
     }
 
     /// Compile (or fetch from cache) the executable for an entry point.
+    /// Concurrent callers racing on an uncached key may compile it twice;
+    /// both get a working executable and the cache keeps one (benign).
     pub fn executable(
         &self,
         model: &str,
         entry: &str,
         batch: usize,
-    ) -> Result<Rc<PjRtLoadedExecutable>> {
+    ) -> Result<Arc<PjRtLoadedExecutable>> {
         let key = (model.to_string(), entry.to_string(), batch);
-        if let Some(exe) = self.exes.borrow().get(&key) {
+        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
         let info = self.manifest.model(model)?;
@@ -121,8 +124,8 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {model}/{entry}@{batch}"))?;
-        let exe = Rc::new(exe);
-        self.exes.borrow_mut().insert(key, exe.clone());
+        let exe = Arc::new(exe);
+        self.exes.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -151,7 +154,7 @@ impl Engine {
         args: &[&Literal],
     ) -> Result<Vec<Literal>> {
         let exe = self.executable(model, entry, batch)?;
-        *self.exec_counts.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+        *self.exec_counts.lock().unwrap().entry(entry.to_string()).or_insert(0) += 1;
         let outs = exe
             .execute::<&Literal>(args)
             .with_context(|| format!("executing {model}/{entry}@{batch}"))?;
@@ -162,7 +165,7 @@ impl Engine {
     }
 
     pub fn exec_count(&self, entry: &str) -> u64 {
-        self.exec_counts.borrow().get(entry).copied().unwrap_or(0)
+        self.exec_counts.lock().unwrap().get(entry).copied().unwrap_or(0)
     }
 
     /// Initialize a fresh model state per the manifest init specs.
@@ -290,10 +293,7 @@ impl Engine {
         args.push(&xl);
         args.push(&yl);
         let out = self.run(&state.model, "eval_metrics", batch, &args)?;
-        Ok((
-            literal_to_f32_scalar(&out[0])? as f64,
-            literal_to_i32_scalar(&out[1])? as i64,
-        ))
+        Ok((literal_to_f32_scalar(&out[0])? as f64, literal_to_i32_scalar(&out[1])? as i64))
     }
 
     /// True per-sample gradient norms (the expensive Fig-1/2 oracle).

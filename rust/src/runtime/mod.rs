@@ -5,14 +5,23 @@
 //! Flow (see /opt/xla-example/load_hlo for the reference wiring):
 //! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
 //! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//!
+//! [`score`] adds the sharded presample-scoring subsystem: a
+//! [`ScoreBackend`] that fans `fwd_scores` / `grad_norms` chunks out to
+//! scoped worker threads and merges them in deterministic presample order.
 
 pub mod checkpoint;
 pub mod engine;
 pub mod init;
 pub mod manifest;
+pub mod score;
 pub mod selfcheck;
 pub mod tensor;
 
 pub use engine::{clone_literals, Engine, ModelState};
 pub use manifest::{InitKind, Manifest, ModelInfo};
+pub use score::{
+    default_score_workers, EngineScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
+    ScoreKind,
+};
 pub use tensor::HostTensor;

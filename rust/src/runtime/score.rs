@@ -1,0 +1,507 @@
+//! Sharded presample scoring — the hot path of Algorithm 1, parallelized.
+//!
+//! Importance sampling only pays off when scoring the large presample batch
+//! `B` is much cheaper than training on it (§3.3 cost model), so scoring
+//! throughput is the number this system lives or dies by. The seed scored
+//! the whole presample serially on the coordinator thread; this module
+//! makes scoring scale with cores:
+//!
+//! * [`SampleScorer`] — anything that can score a chunk of presample rows
+//!   (per-sample loss, Eq.-20 upper bound, or true gradient norm).
+//! * [`EngineScorer`] — scores through the PJRT engine's baked entry
+//!   points. The engine is `Send + Sync`, so one engine serves all workers.
+//! * [`NativeScorer`] — a deterministic pure-rust two-layer MLP scorer used
+//!   by the scoring benches and tests (no AOT artifacts required).
+//! * [`ScoreBackend`] — the serial path, plus a threaded backend that
+//!   splits the batch into contiguous per-worker chunks, scores them on
+//!   scoped worker threads (the same std-only idiom as
+//!   `coordinator::pipeline`), and merges results back in presample order.
+//!
+//! **Determinism contract.** Scorers must be row-wise deterministic: a
+//! row's score depends only on that row and the model state. Chunked
+//! scoring then reproduces the serial score vector bit for bit, so the
+//! downstream resampler draws *identical* indices for a fixed seed —
+//! parallelism never changes the training trajectory.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::{Engine, ModelState};
+use super::tensor::HostTensor;
+use crate::util::rng::SplitMix64;
+
+/// Which per-sample statistic drives the presample distribution.
+/// (Owned by the scoring subsystem; `coordinator::sampler` re-exports it.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// The paper's Eq.-20 upper bound (`upper-bound` curves).
+    UpperBound,
+    /// Loss-proportional (`loss` curves).
+    Loss,
+    /// True per-sample gradient norm (`gradient-norm`; an order of
+    /// magnitude more expensive — Fig 1/2 oracle).
+    GradNorm,
+}
+
+impl ScoreKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreKind::UpperBound => "upper-bound",
+            ScoreKind::Loss => "loss",
+            ScoreKind::GradNorm => "gradient-norm",
+        }
+    }
+
+    /// The engine entry point that computes this statistic.
+    pub fn entry(self) -> &'static str {
+        match self {
+            ScoreKind::GradNorm => "grad_norms",
+            _ => "fwd_scores",
+        }
+    }
+}
+
+/// Scoring workers to use when the user does not say: one per core.
+pub fn default_score_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A borrowed, contiguous block of presample rows — what the threaded
+/// backend hands each worker, so sharding never copies feature data.
+#[derive(Clone, Copy)]
+pub struct RowChunk<'a> {
+    pub data: &'a [f32],
+    pub rows: usize,
+    pub dim: usize,
+}
+
+impl<'a> RowChunk<'a> {
+    pub fn new(data: &'a [f32], rows: usize, dim: usize) -> Self {
+        assert_eq!(data.len(), rows * dim, "row chunk shape mismatch");
+        Self { data, rows, dim }
+    }
+
+    /// View an entire 2-D host tensor as one chunk.
+    pub fn from_tensor(x: &'a HostTensor) -> Self {
+        assert_eq!(x.shape.len(), 2, "presample batch must be 2-D");
+        Self::new(&x.data, x.shape[0], x.shape[1])
+    }
+
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Materialize as an owned tensor (the engine upload path needs one).
+    pub fn to_tensor(&self) -> HostTensor {
+        HostTensor::new(vec![self.rows, self.dim], self.data.to_vec())
+    }
+}
+
+/// Anything that can score a chunk of presample rows.
+///
+/// Implementations must be **row-wise deterministic** (see the module
+/// docs); `Sync` because chunks are scored from scoped worker threads.
+pub trait SampleScorer: Sync {
+    /// Score every row of `x`/`y`; returns one score per row, in row order.
+    fn score_chunk(&self, x: &HostTensor, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>>;
+
+    /// Score a borrowed row block. The default materializes a tensor and
+    /// defers to [`score_chunk`](Self::score_chunk) (what the engine needs
+    /// for its upload path anyway); scorers that can work straight off the
+    /// borrow — like [`NativeScorer`] — override this to keep the threaded
+    /// hot path copy-free.
+    fn score_rows(&self, x: RowChunk<'_>, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
+        self.score_chunk(&x.to_tensor(), y, kind)
+    }
+
+    /// Whether a chunk of exactly `rows` rows can be scored (the engine
+    /// needs a baked artifact at that batch size; native scorers take any).
+    fn supports_rows(&self, rows: usize, kind: ScoreKind) -> bool;
+}
+
+/// Scores through the PJRT engine's baked entry points.
+pub struct EngineScorer<'a> {
+    pub engine: &'a Engine,
+    pub state: &'a ModelState,
+}
+
+impl SampleScorer for EngineScorer<'_> {
+    fn score_chunk(&self, x: &HostTensor, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
+        match kind {
+            ScoreKind::UpperBound => self.engine.fwd_scores(self.state, x, y).map(|o| o.1),
+            ScoreKind::Loss => self.engine.fwd_scores(self.state, x, y).map(|o| o.0),
+            ScoreKind::GradNorm => self.engine.grad_norms(self.state, x, y),
+        }
+    }
+
+    fn supports_rows(&self, rows: usize, kind: ScoreKind) -> bool {
+        match self.engine.model_info(&self.state.model) {
+            Ok(info) => info.entry(kind.entry(), rows).is_ok(),
+            Err(_) => false,
+        }
+    }
+}
+
+/// A self-contained pure-rust scorer: a deterministic two-layer MLP whose
+/// per-sample loss and Eq.-20 upper bound are computed natively. Lets the
+/// scoring benches and the determinism tests exercise the parallel path —
+/// and measure its speedup — without AOT artifacts or a PJRT runtime.
+pub struct NativeScorer {
+    feature_dim: usize,
+    hidden: usize,
+    num_classes: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl NativeScorer {
+    pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, seed: u64) -> Self {
+        let glorot = |rng: &mut SplitMix64, fan_in: usize, fan_out: usize, n: usize| {
+            let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            (0..n).map(|_| rng.uniform_range(-a, a) as f32).collect::<Vec<f32>>()
+        };
+        let mut r1 = SplitMix64::tensor_stream(seed, 0);
+        let mut r2 = SplitMix64::tensor_stream(seed, 1);
+        Self {
+            feature_dim,
+            hidden,
+            num_classes,
+            w1: glorot(&mut r1, feature_dim, hidden, feature_dim * hidden),
+            b1: vec![0.0; hidden],
+            w2: glorot(&mut r2, hidden, num_classes, hidden * num_classes),
+            b2: vec![0.0; num_classes],
+        }
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Score one row: forward pass, softmax cross-entropy loss, and the
+    /// Eq.-20 bound ‖softmax(z) − onehot(y)‖₂ on the last-layer pre-act
+    /// gradient (which is also the stand-in for the full gradient norm).
+    fn score_row(&self, x: &[f32], y: i32, kind: ScoreKind) -> f32 {
+        let (h, c) = (self.hidden, self.num_classes);
+        let mut hidden = vec![0.0f32; h];
+        for (j, hj) in hidden.iter_mut().enumerate() {
+            let mut acc = self.b1[j];
+            for (i, &xi) in x.iter().enumerate() {
+                acc += xi * self.w1[i * h + j];
+            }
+            *hj = acc.max(0.0);
+        }
+        let mut logits = vec![0.0f32; c];
+        for (k, lk) in logits.iter_mut().enumerate() {
+            let mut acc = self.b2[k];
+            for (j, &hj) in hidden.iter().enumerate() {
+                acc += hj * self.w2[j * c + k];
+            }
+            *lk = acc;
+        }
+        let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut denom = 0.0f32;
+        for l in logits.iter_mut() {
+            *l = (*l - max).exp();
+            denom += *l;
+        }
+        let y = (y as usize).min(c - 1);
+        match kind {
+            ScoreKind::Loss => -(logits[y] / denom + 1e-12).ln(),
+            ScoreKind::UpperBound | ScoreKind::GradNorm => {
+                let mut norm2 = 0.0f32;
+                for (k, &e) in logits.iter().enumerate() {
+                    let p = e / denom;
+                    let g = if k == y { p - 1.0 } else { p };
+                    norm2 += g * g;
+                }
+                norm2.sqrt()
+            }
+        }
+    }
+}
+
+impl SampleScorer for NativeScorer {
+    fn score_chunk(&self, x: &HostTensor, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
+        if x.shape.len() != 2 {
+            bail!("native scorer expects a 2-D batch, got {:?}", x.shape);
+        }
+        self.score_rows(RowChunk::from_tensor(x), y, kind)
+    }
+
+    fn score_rows(&self, x: RowChunk<'_>, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
+        if x.dim != self.feature_dim {
+            bail!("native scorer expects {}-dim features, got {}", self.feature_dim, x.dim);
+        }
+        if y.len() != x.rows {
+            bail!("labels ({}) do not match rows ({})", y.len(), x.rows);
+        }
+        Ok((0..x.rows).map(|r| self.score_row(x.row(r), y[r], kind)).collect())
+    }
+
+    fn supports_rows(&self, _rows: usize, _kind: ScoreKind) -> bool {
+        true
+    }
+}
+
+/// How a presample batch is scored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreBackend {
+    /// One call covering the whole batch, on the caller's thread.
+    Serial,
+    /// `workers` scoped threads, each scoring a contiguous chunk; falls
+    /// back to the serial path when the scorer cannot handle the chunk
+    /// sizes (e.g. no baked artifact at `B / workers`).
+    Threaded { workers: usize },
+}
+
+impl ScoreBackend {
+    /// `workers <= 1` is the serial path.
+    pub fn from_workers(workers: usize) -> ScoreBackend {
+        if workers <= 1 {
+            ScoreBackend::Serial
+        } else {
+            ScoreBackend::Threaded { workers }
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        match self {
+            ScoreBackend::Serial => 1,
+            ScoreBackend::Threaded { workers } => (*workers).max(1),
+        }
+    }
+
+    /// The `(start, len)` chunks this backend would score `rows` with, or
+    /// `None` when it would run serially (one worker, or an unsupported
+    /// chunk size).
+    pub fn plan(
+        &self,
+        scorer: &dyn SampleScorer,
+        rows: usize,
+        kind: ScoreKind,
+    ) -> Option<Vec<(usize, usize)>> {
+        let workers = self.workers().min(rows.max(1));
+        if workers <= 1 {
+            return None;
+        }
+        let chunks = split_rows(rows, workers);
+        if chunks.iter().all(|&(_, len)| scorer.supports_rows(len, kind)) {
+            Some(chunks)
+        } else {
+            None
+        }
+    }
+
+    /// Score a full presample batch. Bit-identical to the serial path for
+    /// any row-wise deterministic scorer (see module docs).
+    pub fn score(
+        &self,
+        scorer: &dyn SampleScorer,
+        x: &HostTensor,
+        y: &[i32],
+        kind: ScoreKind,
+    ) -> Result<Vec<f32>> {
+        if x.shape.len() != 2 {
+            bail!("presample batch must be 2-D, got shape {:?}", x.shape);
+        }
+        let rows = x.shape[0];
+        if y.len() != rows {
+            bail!("labels ({}) do not match presample rows ({rows})", y.len());
+        }
+        match self.plan(scorer, rows, kind) {
+            None => {
+                let scores = scorer.score_chunk(x, y, kind)?;
+                if scores.len() != rows {
+                    bail!("scorer returned {} scores for {rows} rows", scores.len());
+                }
+                Ok(scores)
+            }
+            Some(chunks) => score_chunks_threaded(scorer, x, y, kind, &chunks),
+        }
+    }
+}
+
+/// Split `rows` into `workers` contiguous chunks, balanced to within one
+/// row, in presample order.
+fn split_rows(rows: usize, workers: usize) -> Vec<(usize, usize)> {
+    let base = rows / workers;
+    let rem = rows % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        if len > 0 {
+            out.push((start, len));
+            start += len;
+        }
+    }
+    out
+}
+
+/// Score chunks concurrently on scoped worker threads and merge the
+/// results back in presample order. Workers receive borrowed [`RowChunk`]
+/// views — no feature data is copied by the sharding itself (thread spawn
+/// is the only per-call overhead; at presample scale it is dwarfed by the
+/// scoring work, and scoped threads keep the backend allocation-free and
+/// borrowing, matching the `coordinator::pipeline` idiom).
+fn score_chunks_threaded(
+    scorer: &dyn SampleScorer,
+    x: &HostTensor,
+    y: &[i32],
+    kind: ScoreKind,
+    chunks: &[(usize, usize)],
+) -> Result<Vec<f32>> {
+    let d = x.shape[1];
+    let results: Vec<Result<Vec<f32>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(start, len)| {
+                s.spawn(move || {
+                    let view = RowChunk::new(&x.data[start * d..(start + len) * d], len, d);
+                    scorer.score_rows(view, &y[start..start + len], kind)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("score worker panicked"))))
+            .collect()
+    });
+    let mut out = vec![0.0f32; x.shape[0]];
+    for (&(start, len), chunk) in chunks.iter().zip(results) {
+        let scores = chunk?;
+        if scores.len() != len {
+            bail!("scorer returned {} scores for a {len}-row chunk", scores.len());
+        }
+        out[start..start + len].copy_from_slice(&scores);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(rows: usize, d: usize, classes: usize) -> (HostTensor, Vec<i32>) {
+        let mut x = HostTensor::zeros(vec![rows, d]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 31 + 7) % 113) as f32 / 113.0 - 0.5;
+        }
+        let y: Vec<i32> = (0..rows).map(|i| (i % classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn engine_and_state_are_shareable_across_threads() {
+        fn check<T: Send + Sync>() {}
+        check::<Engine>();
+        check::<ModelState>();
+        check::<NativeScorer>();
+    }
+
+    #[test]
+    fn split_rows_is_balanced_and_ordered() {
+        for (rows, workers) in [(640, 4), (641, 4), (7, 3), (5, 8), (1, 2)] {
+            let chunks = split_rows(rows, workers);
+            let total: usize = chunks.iter().map(|&(_, len)| len).sum();
+            assert_eq!(total, rows, "{rows}/{workers}");
+            let mut next = 0;
+            for &(start, len) in &chunks {
+                assert_eq!(start, next);
+                assert!(len > 0);
+                next = start + len;
+            }
+            let lens: Vec<usize> = chunks.iter().map(|&(_, len)| len).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced {lens:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_scores_are_bit_identical_to_serial() {
+        let scorer = NativeScorer::new(24, 16, 5, 3);
+        let (x, y) = toy_batch(101, 24, 5);
+        for kind in [ScoreKind::UpperBound, ScoreKind::Loss, ScoreKind::GradNorm] {
+            let serial = ScoreBackend::Serial.score(&scorer, &x, &y, kind).unwrap();
+            assert_eq!(serial.len(), 101);
+            assert!(serial.iter().all(|s| s.is_finite()));
+            for workers in [2, 3, 4, 9, 200] {
+                let backend = ScoreBackend::from_workers(workers);
+                let par = backend.score(&scorer, &x, &y, kind).unwrap();
+                assert_eq!(par, serial, "workers={workers} kind={}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_chunks_fall_back_to_serial() {
+        /// Accepts only full batches — like an engine with a single baked
+        /// artifact size.
+        struct FullOnly {
+            inner: NativeScorer,
+            full: usize,
+        }
+        impl SampleScorer for FullOnly {
+            fn score_chunk(&self, x: &HostTensor, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
+                assert_eq!(x.shape[0], self.full, "must never receive a partial chunk");
+                self.inner.score_chunk(x, y, kind)
+            }
+            fn supports_rows(&self, rows: usize, _kind: ScoreKind) -> bool {
+                rows == self.full
+            }
+        }
+        let inner = NativeScorer::new(8, 8, 3, 1);
+        let (x, y) = toy_batch(64, 8, 3);
+        let reference = ScoreBackend::Serial.score(&inner, &x, &y, ScoreKind::UpperBound).unwrap();
+        let gated = FullOnly { inner, full: 64 };
+        let backend = ScoreBackend::from_workers(4);
+        assert!(backend.plan(&gated, 64, ScoreKind::UpperBound).is_none());
+        let out = backend.score(&gated, &x, &y, ScoreKind::UpperBound).unwrap();
+        assert_eq!(out, reference);
+    }
+
+    #[test]
+    fn worker_errors_propagate() {
+        struct Failing;
+        impl SampleScorer for Failing {
+            fn score_chunk(&self, _: &HostTensor, _: &[i32], _: ScoreKind) -> Result<Vec<f32>> {
+                bail!("scorer exploded")
+            }
+            fn supports_rows(&self, _: usize, _: ScoreKind) -> bool {
+                true
+            }
+        }
+        let (x, y) = toy_batch(16, 4, 2);
+        let err = ScoreBackend::from_workers(4)
+            .score(&Failing, &x, &y, ScoreKind::Loss)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("exploded"));
+    }
+
+    #[test]
+    fn backend_construction() {
+        assert_eq!(ScoreBackend::from_workers(0), ScoreBackend::Serial);
+        assert_eq!(ScoreBackend::from_workers(1), ScoreBackend::Serial);
+        assert_eq!(ScoreBackend::from_workers(4), ScoreBackend::Threaded { workers: 4 });
+        assert_eq!(ScoreBackend::from_workers(4).workers(), 4);
+        assert!(default_score_workers() >= 1);
+        assert_eq!(ScoreKind::GradNorm.entry(), "grad_norms");
+        assert_eq!(ScoreKind::UpperBound.entry(), "fwd_scores");
+    }
+
+    #[test]
+    fn native_scorer_shape_checks() {
+        let scorer = NativeScorer::new(8, 4, 3, 1);
+        assert_eq!(scorer.feature_dim(), 8);
+        assert_eq!(scorer.num_classes(), 3);
+        let (x, y) = toy_batch(4, 6, 3); // wrong feature dim
+        assert!(scorer.score_chunk(&x, &y, ScoreKind::Loss).is_err());
+        let (x, _) = toy_batch(4, 8, 3);
+        assert!(scorer.score_chunk(&x, &[0, 1], ScoreKind::Loss).is_err());
+    }
+}

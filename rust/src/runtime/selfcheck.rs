@@ -13,7 +13,11 @@ use super::tensor::HostTensor;
 
 /// Deterministic integer-math inputs, the twin of python
 /// `aot.synth_inputs`: x[i,j] = ((i*D+j) % 97)/97 - 0.5 ; y[i] = i % C.
-pub fn synth_inputs(feature_dim: usize, num_classes: usize, batch: usize) -> (HostTensor, Vec<i32>) {
+pub fn synth_inputs(
+    feature_dim: usize,
+    num_classes: usize,
+    batch: usize,
+) -> (HostTensor, Vec<i32>) {
     let mut x = HostTensor::zeros(vec![batch, feature_dim]);
     for i in 0..batch {
         for j in 0..feature_dim {

@@ -6,6 +6,7 @@
 //! report. Used both by the per-figure end-to-end benches and the §Perf
 //! micro benches.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -20,6 +21,24 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Throughput in rows/second for a benchmark processing `rows` rows
+    /// per iteration.
+    pub fn rows_per_sec(&self, rows: usize) -> f64 {
+        rows as f64 * 1e9 / self.mean_ns.max(1e-9)
+    }
+
+    fn json_object(&self) -> String {
+        format!(
+            "{{\"name\":{:?},\"iters\":{},\"mean_ns\":{},\"min_ns\":{},\"p50_ns\":{},\"p95_ns\":{}}}",
+            self.name,
+            self.iters,
+            json_num(self.mean_ns),
+            json_num(self.min_ns),
+            json_num(self.p50_ns),
+            json_num(self.p95_ns),
+        )
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>12}/iter  (min {}, p50 {}, p95 {}, {} iters)",
@@ -80,6 +99,70 @@ pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench(name, Duration::from_secs(2), f)
 }
 
+/// Per-bench time target with an environment cap: the
+/// `ISAMPLE_BENCH_TARGET_MS` variable (CI's bench-smoke quick mode)
+/// overrides `default_ms`; an explicit `--target-ms` flag should override
+/// both (callers check the flag first).
+pub fn target_from_env(default_ms: u64) -> Duration {
+    let ms = std::env::var("ISAMPLE_BENCH_TARGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(default_ms);
+    Duration::from_millis(ms.max(1))
+}
+
+/// Render an f64 as a JSON number (non-finite values become null).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Collects [`BenchResult`]s plus named scalar metrics and renders them as
+/// a small JSON document — the `BENCH_*.json` files CI uploads so the perf
+/// trajectory is visible per PR.
+#[derive(Debug, Default)]
+pub struct BenchSuite {
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Record a derived scalar (throughput, speedup, ...).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty() && self.metrics.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        let results: Vec<String> = self.results.iter().map(BenchResult::json_object).collect();
+        let metrics: Vec<String> =
+            self.metrics.iter().map(|(k, v)| format!("{k:?}:{}", json_num(*v))).collect();
+        format!(
+            "{{\n  \"results\": [\n    {}\n  ],\n  \"metrics\": {{{}}}\n}}\n",
+            results.join(",\n    "),
+            metrics.join(",")
+        )
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 /// Guard against the optimizer deleting the benchmarked work.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -111,5 +194,38 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50us");
         assert_eq!(fmt_ns(2.5e6), "2.50ms");
         assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    fn suite_emits_valid_json() {
+        let mut suite = BenchSuite::new();
+        assert!(suite.is_empty());
+        let r = BenchResult {
+            name: "score/serial".into(),
+            iters: 10,
+            mean_ns: 2e6,
+            min_ns: 1.5e6,
+            p50_ns: 1.9e6,
+            p95_ns: 3e6,
+        };
+        assert!((r.rows_per_sec(640) - 640.0 / 2e-3).abs() < 1e-6);
+        suite.push(r);
+        suite.metric("speedup_w4_vs_serial", 2.5);
+        suite.metric("bad", f64::NAN);
+        let text = suite.to_json();
+        let v = crate::util::json::Json::parse(&text).expect("suite JSON must parse");
+        let results = v.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req("name").unwrap().as_str(), Some("score/serial"));
+        assert_eq!(results[0].req("iters").unwrap().as_usize(), Some(10));
+        let metrics = v.req("metrics").unwrap();
+        assert_eq!(metrics.req("speedup_w4_vs_serial").unwrap().as_f64(), Some(2.5));
+        assert!(metrics.req("bad").unwrap().as_f64().is_none()); // null
+    }
+
+    #[test]
+    fn env_capped_target() {
+        // no env set in tests: the default passes through
+        assert_eq!(target_from_env(1500), Duration::from_millis(1500));
     }
 }

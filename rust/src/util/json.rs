@@ -56,7 +56,7 @@ impl Json {
 
     /// Object field lookup that errors with the missing key name.
     pub fn req(&self, key: &str) -> Result<&Json, JsonError> {
-        self.get(key).ok_or(JsonError { pos: 0, msg: format!("missing key {key:?}") })
+        self.get(key).ok_or_else(|| JsonError { pos: 0, msg: format!("missing key {key:?}") })
     }
 
     pub fn as_f64(&self) -> Option<f64> {
@@ -139,7 +139,7 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek().ok_or(self.err("eof"))? {
+        match self.peek().ok_or_else(|| self.err("eof"))? {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
@@ -206,12 +206,12 @@ impl<'a> Parser<'a> {
         self.eat(b'"')?;
         let mut s = String::new();
         loop {
-            let c = self.peek().ok_or(self.err("eof in string"))?;
+            let c = self.peek().ok_or_else(|| self.err("eof in string"))?;
             self.i += 1;
             match c {
                 b'"' => return Ok(s),
                 b'\\' => {
-                    let e = self.peek().ok_or(self.err("eof in escape"))?;
+                    let e = self.peek().ok_or_else(|| self.err("eof in escape"))?;
                     self.i += 1;
                     match e {
                         b'"' => s.push('"'),

