@@ -3,16 +3,19 @@
 //! the hardest because most samples are handled correctly almost
 //! immediately. Prints the Fig.-4 comparison.
 //!
+//! The `finetune` model is PJRT-only (needs AOT artifacts); the autodetect
+//! fallback reports a clear error listing native models otherwise.
+//!
 //! ```bash
 //! cargo run --release --example finetune -- [budget_secs]
 //! ```
 
 use isample::figures::runner::{fig4_finetune, FigOptions};
-use isample::runtime::Engine;
+use isample::runtime::backend;
 
 fn main() -> anyhow::Result<()> {
     let budget: f64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
-    let engine = Engine::load("artifacts")?;
+    let backend = backend::autodetect("artifacts")?;
     let opts = FigOptions {
         budget_secs: budget,
         out_dir: "results".into(),
@@ -21,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         model: None,
         ..FigOptions::default()
     };
-    fig4_finetune(&engine, &opts)?;
+    fig4_finetune(backend.as_ref(), &opts)?;
     println!("CSV series under results/fig4/");
     Ok(())
 }

@@ -2,19 +2,23 @@
 //! trains the convnet with every strategy at a fixed wall-clock budget and
 //! prints the equal-time comparison the paper's Fig. 3 plots.
 //!
+//! With AOT artifacts the PJRT convnets run; without them the native
+//! backend runs its MLP stand-ins (mlp10 / mlp100).
+//!
 //! ```bash
 //! cargo run --release --example image_classification -- [budget_secs] [model]
 //! ```
 
 use isample::figures::runner::{fig3_image, FigOptions};
-use isample::runtime::Engine;
+use isample::runtime::backend;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let budget: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(45.0);
     let model = args.get(2).cloned();
 
-    let engine = Engine::load("artifacts")?;
+    let backend = backend::autodetect("artifacts")?;
+    println!("backend: {}", backend.name());
     let opts = FigOptions {
         budget_secs: budget,
         out_dir: "results".into(),
@@ -23,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         model,
         ..FigOptions::default()
     };
-    fig3_image(&engine, &opts)?;
+    fig3_image(backend.as_ref(), &opts)?;
     println!("CSV series under results/fig3_*/ (one file per strategy+seed, plus summary.csv)");
     Ok(())
 }

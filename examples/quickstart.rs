@@ -2,17 +2,20 @@
 //! importance-sampling pipeline and compare against uniform SGD at an equal
 //! step budget.
 //!
+//! Runs out of the box — with AOT artifacts it uses the PJRT engine,
+//! without them it falls back to the pure-rust native backend:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
-use isample::runtime::Engine;
+use isample::runtime::backend;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
+    let backend = backend::autodetect("artifacts")?;
+    println!("backend: {}", backend.name());
 
     // synthetic "image" classification set matching mlp10 (64 features, 10 classes)
     let split = SyntheticImages::builder(64, 10).samples(8_192).test_samples(2_048).seed(1).split();
@@ -25,7 +28,7 @@ fn main() -> anyhow::Result<()> {
             .with_tau_th(1.2),
     ] {
         let name = cfg.strategy.name();
-        let mut trainer = Trainer::new(&engine, cfg)?;
+        let mut trainer = Trainer::new(backend.as_ref(), cfg)?;
         let report = trainer.run(&split.train, Some(&split.test))?;
         println!(
             "{name:>12}: {} steps in {:.1}s | train loss {:.4} | test err {:.4} | IS on at step {:?} | tau {:.2}",

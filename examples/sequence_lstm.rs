@@ -3,16 +3,19 @@
 //! architecture-specific changes, on a recurrent model. Prints the Fig.-5
 //! comparison (where the paper shows loss-based sampling actively *hurts*).
 //!
+//! The `lstm` model is PJRT-only (needs AOT artifacts); the autodetect
+//! fallback reports a clear error listing native models otherwise.
+//!
 //! ```bash
 //! cargo run --release --example sequence_lstm -- [budget_secs]
 //! ```
 
 use isample::figures::runner::{fig5_lstm, FigOptions};
-use isample::runtime::Engine;
+use isample::runtime::backend;
 
 fn main() -> anyhow::Result<()> {
     let budget: f64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(40.0);
-    let engine = Engine::load("artifacts")?;
+    let backend = backend::autodetect("artifacts")?;
     let opts = FigOptions {
         budget_secs: budget,
         out_dir: "results".into(),
@@ -21,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         model: None,
         ..FigOptions::default()
     };
-    fig5_lstm(&engine, &opts)?;
+    fig5_lstm(backend.as_ref(), &opts)?;
     println!("CSV series under results/fig5/");
     Ok(())
 }

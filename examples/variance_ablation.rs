@@ -5,17 +5,19 @@
 //! ```bash
 //! cargo run --release --example variance_ablation -- [model=mlp10] [--full]
 //! ```
-//! `mlp10` runs in seconds; `cnn100` is the paper's actual ablation model.
+//! `mlp10` runs in seconds (on PJRT or the native fallback backend);
+//! `cnn100` is the paper's actual ablation model (PJRT artifacts only).
 
 use isample::figures::runner::{fig1_variance, fig2_correlation, FigOptions};
-use isample::runtime::Engine;
+use isample::runtime::backend;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let model = args.get(1).cloned().unwrap_or_else(|| "mlp10".into());
     let quick = !args.iter().any(|a| a == "--full");
 
-    let engine = Engine::load("artifacts")?;
+    let backend = backend::autodetect("artifacts")?;
+    println!("backend: {}", backend.name());
     let opts = FigOptions {
         budget_secs: 0.0, // figs 1/2 are step-based, not budget-based
         out_dir: "results".into(),
@@ -24,8 +26,8 @@ fn main() -> anyhow::Result<()> {
         model: Some(model),
         ..FigOptions::default()
     };
-    fig1_variance(&engine, &opts)?;
-    fig2_correlation(&engine, &opts)?;
+    fig1_variance(backend.as_ref(), &opts)?;
+    fig2_correlation(backend.as_ref(), &opts)?;
     println!("CSVs under results/fig1/ and results/fig2/");
     Ok(())
 }

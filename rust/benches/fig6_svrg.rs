@@ -2,16 +2,18 @@
 //!
 //! `cargo bench --bench fig6_svrg` runs the harness in quick mode with a
 //! small wall-clock budget and reports total harness time; pass
-//! `-- --budget SECS [--full] [--seeds 1,2,3]` for the paper-scale run.
+//! `-- --budget SECS [--full] [--seeds 1,2,3]` for the paper-scale run and
+//! `-- --backend native` to run artifact-free on the native CPU engine.
 
 use isample::config::Args;
 use isample::figures::runner::{run_figure, FigOptions};
-use isample::runtime::Engine;
+use isample::runtime::backend;
 use isample::util::timer::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
-    let engine = Engine::load(args.flag("artifacts").unwrap_or("artifacts"))?;
+    let backend =
+        backend::load(args.flag_backend()?, args.flag("artifacts").unwrap_or("artifacts"))?;
     let opts = FigOptions {
         budget_secs: args.flag_f64("budget", 6.0)?,
         out_dir: args.flag("out").unwrap_or("results/bench").into(),
@@ -21,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         score_workers: args.flag_score_workers()?,
     };
     let sw = Stopwatch::new();
-    run_figure(&engine, "fig6", &opts)?;
+    run_figure(backend.as_ref(), "fig6", &opts)?;
     println!("bench fig6_svrg: harness completed in {:.1}s", sw.elapsed_secs());
     Ok(())
 }

@@ -12,6 +12,11 @@
 //! serial/parallel throughput comparison to `BENCH_scoring.json`
 //! (`--out-json PATH` to relocate) — the per-PR perf trajectory artifact.
 //!
+//! The `train/` section runs real end-to-end Algorithm-1 training on the
+//! native CPU backend (uniform and upper-bound at equal step counts) and
+//! writes steps/sec to `BENCH_train.json` (`--out-json-train PATH`,
+//! `--train-steps N`) — the training-throughput trajectory artifact.
+//!
 //! PJRT engine benches run only when AOT artifacts are present.
 
 use std::time::Duration;
@@ -21,10 +26,11 @@ use isample::coordinator::pipeline::gather_rows;
 use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::coordinator::tau::TauEstimator;
+use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
 use isample::runtime::score::{default_score_workers, NativeScorer, ScoreBackend, ScoreKind};
-use isample::runtime::Engine;
+use isample::runtime::{Engine, NativeEngine};
 use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
 use isample::util::rng::SplitMix64;
 use isample::util::stats::normalize_probs;
@@ -150,6 +156,42 @@ fn main() -> anyhow::Result<()> {
         let out = args.flag("out-json").unwrap_or("BENCH_scoring.json");
         suite.write_json(out)?;
         println!("scoring bench results -> {out}");
+    }
+
+    // ---------------- native end-to-end training throughput ------------
+    // Real Algorithm-1 runs on the pure-rust backend: uniform vs
+    // upper-bound (warmup -> tau switch -> presample/score/resample) at an
+    // equal step count. Steps/sec is the BENCH_train.json acceptance
+    // number; the final losses ride along as a sanity signal.
+    if run("train/") {
+        let mut suite = BenchSuite::new();
+        let native = NativeEngine::with_default_models();
+        let steps = args.flag_u64("train-steps", 300)?;
+        let split =
+            SyntheticImages::builder(64, 10).samples(8_192).test_samples(1_024).seed(3).split();
+        for (tag, cfg) in [
+            ("uniform", TrainerConfig::uniform("mlp10")),
+            (
+                "upper_bound",
+                TrainerConfig::upper_bound("mlp10").with_presample(384).with_tau_th(1.2),
+            ),
+        ] {
+            let cfg =
+                cfg.with_steps(steps).with_seed(17).with_score_workers(args.flag_score_workers()?);
+            let mut trainer = Trainer::new(&native, cfg)?;
+            let report = trainer.run(&split.train, None)?;
+            let sps = report.steps as f64 / report.wall_secs.max(1e-9);
+            println!(
+                "train/native_mlp10_{tag}: {} steps -> {sps:.1} steps/s (final loss {:.4}, IS@{:?})",
+                report.steps, report.final_train_loss, report.is_switch_step
+            );
+            suite.metric(&format!("{tag}_steps_per_sec"), sps);
+            suite.metric(&format!("{tag}_final_train_loss"), report.final_train_loss);
+        }
+        suite.metric("train_steps", steps as f64);
+        let out = args.flag("out-json-train").unwrap_or("BENCH_train.json");
+        suite.write_json(out)?;
+        println!("training bench results -> {out}");
     }
 
     // ---------------- PJRT entry points (need AOT artifacts) -----------

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::runtime::{Engine, ModelState};
+use crate::runtime::{Backend, ModelState};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{normalize_probs, pearson, spearman, sse};
 
@@ -32,7 +32,7 @@ pub struct CorrelationReport {
 /// each chunk of `chunk` samples, mirroring the paper's per-batch
 /// normalization, then pooled.
 pub fn correlation_at_state<D: Dataset>(
-    engine: &Engine,
+    backend: &dyn Backend,
     state: &ModelState,
     data: &D,
     total: usize,
@@ -46,8 +46,8 @@ pub fn correlation_at_state<D: Dataset>(
     for _ in 0..chunks {
         let indices: Vec<usize> = (0..chunk).map(|_| rng.below(data.len())).collect();
         let (x, y) = data.batch(&indices, 0);
-        let (loss, ub) = engine.fwd_scores(state, &x, &y)?;
-        let gn = engine.grad_norms(state, &x, &y)?;
+        let (loss, ub) = backend.fwd_scores(state, &x, &y)?;
+        let gn = backend.grad_norms(state, &x, &y)?;
         let p_loss = normalize_probs(&loss);
         let p_ub = normalize_probs(&ub);
         let p_gn = normalize_probs(&gn);

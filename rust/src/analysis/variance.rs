@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::baselines::svrg::vecmath;
 use crate::coordinator::sampler::resample_from_scores;
 use crate::data::Dataset;
-use crate::runtime::{Engine, HostTensor, ModelState};
+use crate::runtime::{Backend, HostTensor, ModelState};
 use crate::util::rng::SplitMix64;
 
 /// One checkpoint's measurement for every scheme, normalized by uniform.
@@ -49,7 +49,7 @@ impl Default for VarianceConfig {
 
 /// Measure variance reduction for all schemes at the current model state.
 pub fn measure_at_state<D: Dataset>(
-    engine: &Engine,
+    backend: &dyn Backend,
     state: &ModelState,
     data: &D,
     cfg: &VarianceConfig,
@@ -62,11 +62,11 @@ pub fn measure_at_state<D: Dataset>(
 
     // large-batch mean gradient G_B (via the per-sample-weighted grad:
     // the `grad` entry averages uniformly, which is exactly G_B)
-    let (gb, _) = grad_of_subset(engine, state, &x, &y, &(0..b_large).collect::<Vec<_>>(), None)?;
+    let (gb, _) = grad_of_subset(backend, state, &x, &y, &(0..b_large).collect::<Vec<_>>(), None)?;
 
     // scores for each scheme
-    let (loss_scores, ub_scores) = engine.fwd_scores(state, &x, &y)?;
-    let gn_scores = engine.grad_norms(state, &x, &y)?;
+    let (loss_scores, ub_scores) = backend.fwd_scores(state, &x, &y)?;
+    let gn_scores = backend.grad_norms(state, &x, &y)?;
     let tau = crate::coordinator::tau::TauEstimator::tau_from_scores(&ub_scores);
 
     let mut dist = |scores: Option<&[f32]>| -> Result<f64> {
@@ -83,7 +83,7 @@ pub fn measure_at_state<D: Dataset>(
                     (plan.positions, plan.weights)
                 }
             };
-            let (g, _) = grad_of_subset(engine, state, &x, &y, &positions, Some(&weights))?;
+            let (g, _) = grad_of_subset(backend, state, &x, &y, &positions, Some(&weights))?;
             total += l2_dist_params(&g, &gb);
         }
         Ok(total / cfg.repeats as f64)
@@ -109,14 +109,14 @@ pub fn measure_at_state<D: Dataset>(
 /// with the `train_step`-equivalent weighting through the `grad` entry by
 /// gathering rows. Returns host tensors (flattened per-parameter).
 fn grad_of_subset(
-    engine: &Engine,
+    backend: &dyn Backend,
     state: &ModelState,
     x: &HostTensor,
     y: &[i32],
     positions: &[usize],
     weights: Option<&[f32]>,
 ) -> Result<(Vec<HostTensor>, f32)> {
-    let info = engine.model_info(&state.model)?;
+    let info = backend.model_info(&state.model)?;
     let b = info.batch;
     let d = x.shape[1];
     // process in b-sized chunks and average the chunk gradients
@@ -143,7 +143,7 @@ fn grad_of_subset(
         // weighted gradient = d/dθ (1/b) Σ w_i loss_i, which is what a
         // train_step applies; we recover it through `grad` on a synthetic
         // batch by scaling rows is not possible — so use weighted_grad:
-        let g = engine.weighted_grad(state, &xs, &ys, &ws)?;
+        let g = backend.weighted_grad(state, &xs, &ys, &ws)?;
         loss_total += g.1;
         let gh = vecmath::to_host(&g.0)?;
         acc = Some(match acc {

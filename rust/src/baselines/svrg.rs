@@ -12,13 +12,13 @@
 //! [`vecmath`] helpers (these baselines are not hot paths — their losing
 //! wall-clock behaviour is the result being reproduced).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use xla::Literal;
 
 use crate::coordinator::metrics::{MetricsLog, Row};
 use crate::data::Dataset;
 use crate::runtime::engine::clone_literals;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Backend, HostTensor};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::Stopwatch;
 
@@ -165,15 +165,15 @@ pub struct SvrgReport {
 
 /// Run an SVRG-family optimizer on `train`.
 pub fn run_svrg<D: Dataset>(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &SvrgConfig,
     train: &D,
     test: Option<&D>,
 ) -> Result<SvrgReport> {
-    let info = engine.model_info(&cfg.model)?;
+    let info = backend.model_info(&cfg.model)?;
     let b = info.batch;
     let mut rng = SplitMix64::tensor_stream(cfg.seed ^ 0x5A46, 3);
-    let mut params = engine.init_state(&cfg.model, cfg.seed)?.params;
+    let mut params = backend.init_state(&cfg.model, cfg.seed)?.params;
     let sw = Stopwatch::new();
     let mut log = MetricsLog::default();
     let mut steps: u64 = 0;
@@ -209,7 +209,7 @@ pub fn run_svrg<D: Dataset>(
             SvrgVariant::Scsg { .. } => scsg_large.min(train.len()),
         };
         let mu =
-            mean_grad_over(engine, &cfg.model, &params, train, snapshot_samples, b, &mut rng)?;
+            mean_grad_over(backend, &cfg.model, &params, train, snapshot_samples, b, &mut rng)?;
         let mu_host = vecmath::to_host(&mu)?;
 
         // ---- inner loop ----------------------------------------------------
@@ -230,7 +230,7 @@ pub fn run_svrg<D: Dataset>(
             match &cfg.variant {
                 SvrgVariant::Svrg | SvrgVariant::Scsg { .. } => {
                     let loss =
-                        engine.svrg_step(&cfg.model, &mut params, &snap, &mu, &x, &y, cfg.lr)?;
+                        backend.svrg_step(&cfg.model, &mut params, &snap, &mu, &x, &y, cfg.lr)?;
                     last_loss = loss as f64;
                 }
                 SvrgVariant::Katyusha { tau1, tau2 } => {
@@ -246,8 +246,8 @@ pub fn run_svrg<D: Dataset>(
                     let xk =
                         vecmath::lincomb3(*tau1, z, *tau2, &snap_host, 1.0 - tau1 - tau2, yv);
                     let xk_lits = vecmath::to_literals(&xk)?;
-                    let (g_cur, loss) = engine.grad(&cfg.model, &xk_lits, &x, &y)?;
-                    let (g_snap, _) = engine.grad(&cfg.model, &snap, &x, &y)?;
+                    let (g_cur, loss) = backend.grad(&cfg.model, &xk_lits, &x, &y)?;
+                    let (g_snap, _) = backend.grad(&cfg.model, &snap, &x, &y)?;
                     let g = vecmath::control_variate(
                         &vecmath::to_host(&g_cur)?,
                         &vecmath::to_host(&g_snap)?,
@@ -283,7 +283,7 @@ pub fn run_svrg<D: Dataset>(
 
     // final eval
     let (test_loss, test_err) = match test {
-        Some(t) => eval(engine, &cfg.model, &params, t)?,
+        Some(t) => eval(backend, &cfg.model, &params, t)?,
         None => (f64::NAN, f64::NAN),
     };
     if let Some(r) = log.rows.last_mut() {
@@ -302,7 +302,7 @@ pub fn run_svrg<D: Dataset>(
 
 /// Mean gradient over `count` samples of the dataset, in batch-`b` shards.
 fn mean_grad_over<D: Dataset>(
-    engine: &Engine,
+    backend: &dyn Backend,
     model: &str,
     params: &[Literal],
     train: &D,
@@ -315,7 +315,7 @@ fn mean_grad_over<D: Dataset>(
     for _ in 0..shards {
         let indices: Vec<usize> = (0..b).map(|_| rng.below(train.len())).collect();
         let (x, y) = train.batch(&indices, 0);
-        let (g, _) = engine.grad(model, params, &x, &y)?;
+        let (g, _) = backend.grad(model, params, &x, &y)?;
         let gh = vecmath::to_host(&g)?;
         acc = Some(match acc {
             None => gh,
@@ -334,33 +334,57 @@ fn mean_grad_over<D: Dataset>(
     vecmath::to_literals(&mean)
 }
 
+/// Whole-test-set evaluation with the same tail handling as
+/// `Trainer::evaluate`: exact partial shard when the backend supports it,
+/// wrapped shard weighted by `rem / eval_batch` otherwise — so the SVRG
+/// rows of fig6 are computed over the same test set as the SGD rows.
 fn eval<D: Dataset>(
-    engine: &Engine,
+    backend: &dyn Backend,
     model: &str,
     params: &[Literal],
     test: &D,
 ) -> Result<(f64, f64)> {
-    let info = engine.model_info(model)?;
+    let info = backend.model_info(model)?;
     let eb = info.eval_batch;
-    let shards = (test.len() / eb).max(1);
+    let n = test.len();
+    if n == 0 {
+        bail!("cannot evaluate on an empty test set");
+    }
     let state = crate::runtime::ModelState {
         model: model.to_string(),
         params: clone_literals(params)?,
         mom: vec![],
         step: 0,
     };
+    let shards = n / eb;
+    let rem = n % eb;
     let mut sum_loss = 0.0;
-    let mut correct = 0i64;
-    let mut seen = 0usize;
+    let mut correct = 0.0f64;
     for s in 0..shards {
-        let indices: Vec<usize> = (0..eb).map(|k| (s * eb + k) % test.len()).collect();
+        let indices: Vec<usize> = (s * eb..(s + 1) * eb).collect();
         let (x, y) = test.batch(&indices, 0);
-        let (l, c) = engine.eval_metrics(&state, &x, &y)?;
+        let (l, c) = backend.eval_metrics(&state, &x, &y)?;
         sum_loss += l;
-        correct += c;
-        seen += eb;
+        correct += c as f64;
     }
-    Ok((sum_loss / seen as f64, 1.0 - correct as f64 / seen as f64))
+    if rem > 0 {
+        let start = shards * eb;
+        if backend.supports(model, "eval_metrics", rem)? {
+            let indices: Vec<usize> = (start..n).collect();
+            let (x, y) = test.batch(&indices, 0);
+            let (l, c) = backend.eval_metrics(&state, &x, &y)?;
+            sum_loss += l;
+            correct += c as f64;
+        } else {
+            let indices: Vec<usize> = (0..eb).map(|k| (start + k) % n).collect();
+            let (x, y) = test.batch(&indices, 0);
+            let (l, c) = backend.eval_metrics(&state, &x, &y)?;
+            let frac = rem as f64 / eb as f64;
+            sum_loss += l * frac;
+            correct += c as f64 * frac;
+        }
+    }
+    Ok((sum_loss / n as f64, 1.0 - correct / n as f64))
 }
 
 #[cfg(test)]

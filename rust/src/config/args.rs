@@ -87,6 +87,16 @@ impl Args {
         Ok(n)
     }
 
+    /// `--backend native|pjrt` — which execution substrate to run on.
+    /// `native` is the artifact-free pure-rust engine; `pjrt` (the default)
+    /// executes AOT artifacts.
+    pub fn flag_backend(&self) -> Result<&str> {
+        match self.flag("backend").unwrap_or("pjrt") {
+            b @ ("native" | "pjrt") => Ok(b),
+            other => bail!("--backend must be `native` or `pjrt`, got {other:?}"),
+        }
+    }
+
     /// Comma-separated u64 list (for `--seeds 1,2,3`).
     pub fn flag_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
         match self.flags.get(name) {
@@ -148,6 +158,14 @@ mod tests {
         assert_eq!(a.flag("filter"), Some("score/"));
         assert_eq!(a.flag("out-json"), Some("BENCH_scoring.json"));
         assert_eq!(a.flag_u64("target-ms", 1500).unwrap(), 10);
+    }
+
+    #[test]
+    fn backend_flag() {
+        assert_eq!(args("train").flag_backend().unwrap(), "pjrt");
+        assert_eq!(args("train --backend native").flag_backend().unwrap(), "native");
+        assert_eq!(args("train --backend=pjrt").flag_backend().unwrap(), "pjrt");
+        assert!(args("train --backend tpu").flag_backend().is_err());
     }
 
     #[test]

@@ -109,13 +109,25 @@ impl LoshchilovHutter {
         step > 0 && step % self.recompute_every == 0
     }
 
+    /// Record a full loss refresh *and resort immediately*: after the
+    /// expensive recompute the fresh values must drive selection now, not
+    /// up to `sort_every` steps later on the stale rank order.
+    pub fn record_all(&mut self, losses: &[f32], step: u64) {
+        self.history.record_all(losses, step);
+        self.resort(step);
+    }
+
+    fn resort(&mut self, step: u64) {
+        let losses = &self.history;
+        self.order.sort_by(|&a, &b| {
+            losses.loss(b).partial_cmp(&losses.loss(a)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        self.last_sort_step = step;
+    }
+
     fn maybe_sort(&mut self, step: u64) {
         if step >= self.last_sort_step + self.sort_every || step == 0 {
-            let losses = &self.history;
-            self.order.sort_by(|&a, &b| {
-                losses.loss(b).partial_cmp(&losses.loss(a)).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            self.last_sort_step = step;
+            self.resort(step);
         }
     }
 
@@ -265,6 +277,30 @@ mod tests {
             hits8 as f64 > hits3 as f64 * 1.2,
             "preference did not flip: hits8={hits8} hits3={hits3}"
         );
+    }
+
+    #[test]
+    fn record_all_resorts_immediately() {
+        // sort_every is huge: without the forced resort bundled into
+        // record_all, a full recompute would keep selecting from the stale
+        // rank order for up to sort_every further steps.
+        let mut lh = LoshchilovHutter::new(50, 100.0, 600, 1_000_000);
+        let mut rng = SplitMix64::new(8);
+        let mut losses = vec![0.01f32; 50];
+        losses[4] = 9.0;
+        lh.record_all(&losses, 0);
+        let picks = lh.select(1000, 1, &mut rng);
+        let hits4 = picks.iter().filter(|&&i| i == 4).count();
+        assert!(hits4 > 30, "initial hot sample under-selected: {hits4}");
+        // the recompute flips the hot sample from 4 to 31 at step 10; on
+        // the stale ranking sample 31 sits near rank 31 (~5/1000 picks),
+        // freshly resorted it holds rank 0 (~93/1000 with s=100, n=50)
+        losses[4] = 0.01;
+        losses[31] = 9.0;
+        lh.record_all(&losses, 10);
+        let picks = lh.select(1000, 10, &mut rng);
+        let hits31 = picks.iter().filter(|&&i| i == 31).count();
+        assert!(hits31 > 60, "fresh recompute did not drive selection: hits31={hits31}");
     }
 
     #[test]

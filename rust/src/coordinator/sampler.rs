@@ -11,7 +11,6 @@
 use crate::util::rng::SplitMix64;
 use crate::util::stats::normalize_probs;
 
-use super::history::{LoshchilovHutter, SchaulProportional};
 use super::resample::{importance_weights, AliasSampler, CumulativeSampler};
 
 // `ScoreKind` is owned by the scoring subsystem (`runtime::score`) since
@@ -58,33 +57,6 @@ impl StrategyKind {
             }
             _ => return None,
         })
-    }
-}
-
-/// Runtime state of a history-based strategy (constructed per run since it
-/// is sized to the dataset).
-pub enum HistoryState {
-    None,
-    Lh(LoshchilovHutter),
-    Schaul(SchaulProportional),
-}
-
-impl HistoryState {
-    pub fn for_strategy(kind: &StrategyKind, dataset_len: usize) -> HistoryState {
-        match kind {
-            StrategyKind::LoshchilovHutter { s, recompute_every, sort_every } => {
-                HistoryState::Lh(LoshchilovHutter::new(
-                    dataset_len,
-                    *s,
-                    *recompute_every,
-                    *sort_every,
-                ))
-            }
-            StrategyKind::Schaul { alpha, beta, refresh_every } => HistoryState::Schaul(
-                SchaulProportional::new(dataset_len, *alpha, *beta, *refresh_every),
-            ),
-            _ => HistoryState::None,
-        }
     }
 }
 
@@ -159,13 +131,4 @@ mod tests {
         assert!(plan.weights.iter().all(|&w| (w - 1.0).abs() < 1e-5));
     }
 
-    #[test]
-    fn history_state_dispatch() {
-        let lh = HistoryState::for_strategy(&StrategyKind::parse("lh").unwrap(), 100);
-        assert!(matches!(lh, HistoryState::Lh(_)));
-        let sc = HistoryState::for_strategy(&StrategyKind::parse("schaul").unwrap(), 100);
-        assert!(matches!(sc, HistoryState::Schaul(_)));
-        let none = HistoryState::for_strategy(&StrategyKind::Uniform, 100);
-        assert!(matches!(none, HistoryState::None));
-    }
 }

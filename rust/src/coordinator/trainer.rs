@@ -17,14 +17,17 @@
 //!   τ <- a_τ τ + (1-a_τ) (1 - ||g-u||²/Σg²)^(-1/2)  (Eq. 26)
 //! until budget exhausted
 //! ```
+//!
+//! The trainer runs against any [`Backend`] — the PJRT engine (AOT
+//! artifacts) or the native CPU engine (`--backend native`, artifact-free).
 
-use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::data::Dataset;
-use crate::runtime::score::{default_score_workers, EngineScorer, ScoreBackend};
-use crate::runtime::{Engine, ModelState};
+use crate::runtime::score::{default_score_workers, BackendScorer, ScoreBackend};
+use crate::runtime::{Backend, ModelState};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::{PhaseTimers, Stopwatch};
 
@@ -41,23 +44,28 @@ macro_rules! timed {
 
 use super::history::{LoshchilovHutter, SchaulProportional};
 use super::metrics::{MetricsLog, Row};
-use super::pipeline::{gather_rows, PrefetchedBatch, Prefetcher, PipelineStats};
+use super::pipeline::{gather_rows, PipelineStats, PrefetchedBatch, Prefetcher};
 use super::sampler::{resample_from_scores, ScoreKind, StrategyKind};
 use super::tau::TauEstimator;
 
 /// Where training batches come from: a background prefetch pipeline
 /// (multi-core) or inline synchronous assembly (`prefetch_threads = 0`,
 /// the single-core fast path — §Perf iter 6).
+///
+/// **Augmentation-epoch contract** (same in both modes): all sources of a
+/// run share one `draws` counter; a batch's epoch is `draws-so-far / n`,
+/// i.e. the epoch advances with the *total* samples drawn across the small
+/// batch and the presample, exactly as the prefetch pipeline counts them.
 pub enum BatchSource<'a, D: Dataset> {
-    Sync { dataset: &'a D, batch: usize, rng: SplitMix64, draws: u64 },
+    Sync { dataset: &'a D, batch: usize, rng: SplitMix64, draws: &'a AtomicU64 },
     Prefetched(Prefetcher<'a>),
 }
 
 impl<'a, D: Dataset> BatchSource<'a, D> {
-    pub fn sync(dataset: &'a D, batch: usize, seed: u64) -> Self {
+    pub fn sync(dataset: &'a D, batch: usize, seed: u64, draws: &'a AtomicU64) -> Self {
         // same stream as prefetch worker 0, so sync and 1-worker runs align
         let rng = SplitMix64::tensor_stream(seed ^ 0xF33D, (batch * 1000) as u64);
-        BatchSource::Sync { dataset, batch, rng, draws: 0 }
+        BatchSource::Sync { dataset, batch, rng, draws }
     }
 
     pub fn prefetched(p: Prefetcher<'a>) -> Self {
@@ -68,8 +76,8 @@ impl<'a, D: Dataset> BatchSource<'a, D> {
         match self {
             BatchSource::Sync { dataset, batch, rng, draws } => {
                 let n = dataset.len();
-                let epoch = *draws / n as u64;
-                *draws += *batch as u64;
+                let first_draw = draws.fetch_add(*batch as u64, Ordering::Relaxed);
+                let epoch = first_draw / n as u64;
                 let indices: Vec<usize> = (0..*batch).map(|_| rng.below(n)).collect();
                 let (x, y) = dataset.batch(&indices, epoch);
                 PrefetchedBatch { indices, x, y, epoch }
@@ -244,9 +252,9 @@ pub struct Report {
     pub strategy: String,
 }
 
-/// The coordinator. Owns the model state; borrows the engine.
+/// The coordinator. Owns the model state; borrows the execution backend.
 pub struct Trainer<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     pub cfg: TrainerConfig,
     pub state: ModelState,
     pub tau: TauEstimator,
@@ -257,61 +265,59 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, mut cfg: TrainerConfig) -> Result<Self> {
-        let info = engine.model_info(&cfg.model)?;
+    pub fn new(backend: &'e dyn Backend, mut cfg: TrainerConfig) -> Result<Self> {
+        let info = backend.model_info(&cfg.model)?;
         let batch = info.batch;
+        let eval_batch = info.eval_batch;
         if cfg.presample == 0 {
             cfg.presample = info.presample.iter().copied().max().unwrap_or(batch);
         }
-        if matches!(cfg.strategy, StrategyKind::Presample { .. }) {
-            // fail fast if the requested B has no baked artifact
-            info.entry("fwd_scores", cfg.presample).with_context(|| {
-                format!("presample {} has no fwd_scores artifact", cfg.presample)
-            })?;
-        }
-        if matches!(cfg.strategy, StrategyKind::Presample { score: ScoreKind::GradNorm }) {
-            info.entry("grad_norms", cfg.presample).context(
-                "gradient-norm strategy requires a grad_norms artifact at the presample size",
-            )?;
-        }
-        // Pre-compile the entries this strategy will execute so the first
-        // training step is not a compile stall inside the measured budget
-        // (all strategies then compare on pure steady-state wall-clock).
-        let batch_ = info.batch;
-        let eval_batch = info.eval_batch;
-        engine.executable(&cfg.model, "train_step", batch_)?;
-        engine.executable(&cfg.model, "eval_metrics", eval_batch)?;
-        match &cfg.strategy {
-            StrategyKind::Presample { score: ScoreKind::GradNorm } => {
-                engine.executable(&cfg.model, "grad_norms", cfg.presample)?;
+        if let StrategyKind::Presample { score } = &cfg.strategy {
+            // fail fast if the backend cannot score at the requested B
+            // (PJRT: no baked artifact; native: always fine)
+            if !backend.supports(&cfg.model, score.entry(), cfg.presample)? {
+                bail!(
+                    "{} backend cannot run {} at presample {} for model {:?}",
+                    backend.name(),
+                    score.entry(),
+                    cfg.presample,
+                    cfg.model
+                );
             }
-            StrategyKind::Presample { .. } => {
-                engine.executable(&cfg.model, "fwd_scores", cfg.presample)?;
+        }
+        // Warm the entries this strategy will execute so the first training
+        // step is not a compile stall inside the measured budget (all
+        // strategies then compare on pure steady-state wall-clock).
+        backend.prepare(&cfg.model, "train_step", batch)?;
+        backend.prepare(&cfg.model, "eval_metrics", eval_batch)?;
+        match &cfg.strategy {
+            StrategyKind::Presample { score } => {
+                backend.prepare(&cfg.model, score.entry(), cfg.presample)?;
             }
             StrategyKind::LoshchilovHutter { .. } => {
-                engine.executable(&cfg.model, "fwd_scores", batch_)?;
+                backend.prepare(&cfg.model, "fwd_scores", batch)?;
             }
             _ => {}
         }
-        let state = engine.init_state(&cfg.model, cfg.seed)?;
-        // Pre-compile the chunk-sized scoring entries the threaded backend
-        // will hit (when B / score_workers is baked); otherwise it falls
-        // back to the serial full-B artifact warmed above.
+        let state = backend.init_state(&cfg.model, cfg.seed)?;
+        // Warm the chunk-sized scoring entries the threaded backend will hit
+        // (when B / score_workers is supported); otherwise it transparently
+        // falls back to the serial full-B pass warmed above.
         if let StrategyKind::Presample { score } = &cfg.strategy {
-            let backend = ScoreBackend::from_workers(cfg.score_workers);
-            let scorer = EngineScorer { engine, state: &state };
-            if let Some(chunks) = backend.plan(&scorer, cfg.presample, *score) {
+            let sb = ScoreBackend::from_workers(cfg.score_workers);
+            let scorer = BackendScorer { backend, state: &state };
+            if let Some(chunks) = sb.plan(&scorer, cfg.presample, *score) {
                 for (_, len) in chunks {
-                    engine.executable(&cfg.model, score.entry(), len)?;
+                    backend.prepare(&cfg.model, score.entry(), len)?;
                 }
             }
         }
-        let rng = SplitMix64::tensor_stream(cfg.seed ^ 0x7 & u64::MAX, 1);
+        let rng = SplitMix64::tensor_stream(cfg.seed ^ 0x7, 1);
         Ok(Self {
-            engine,
+            backend,
             tau: TauEstimator::new(cfg.a_tau),
             state,
-            rng: rng.clone(),
+            rng,
             presample: cfg.presample,
             batch,
             timers: PhaseTimers::default(),
@@ -330,37 +336,62 @@ impl<'e> Trainer<'e> {
         lr
     }
 
-    /// Evaluate on full shards of the test set (no augmentation).
+    /// Evaluate on the *whole* test set (no augmentation), full shards
+    /// first. The tail (`test.len() % eval_batch`) is not dropped: backends
+    /// that evaluate arbitrary batch sizes (native) get an exact partial
+    /// shard; fixed-artifact backends (PJRT) get a wrapped full shard — as
+    /// `recompute_all_losses` pads — whose aggregate is weighted by
+    /// `rem / eval_batch` so every sample contributes with ~unit weight.
     pub fn evaluate<D: Dataset + ?Sized>(&mut self, test: &D) -> Result<(f64, f64)> {
-        let info = self.engine.model_info(&self.cfg.model)?;
+        let info = self.backend.model_info(&self.cfg.model)?;
         let eb = info.eval_batch;
-        let shards = test.len() / eb;
-        if shards == 0 {
-            bail!("test set smaller than eval batch ({} < {eb})", test.len());
+        let n = test.len();
+        if n == 0 {
+            bail!("cannot evaluate on an empty test set");
         }
+        let shards = n / eb;
+        let rem = n % eb;
         let mut sum_loss = 0.0;
-        let mut correct = 0i64;
+        let mut correct = 0.0f64;
         let mut seen = 0usize;
         for s in 0..shards {
             let indices: Vec<usize> = (s * eb..(s + 1) * eb).collect();
             let (x, y) = test.batch(&indices, 0);
-            let (l, c) = self.engine.eval_metrics(&self.state, &x, &y)?;
+            let (l, c) = self.backend.eval_metrics(&self.state, &x, &y)?;
             sum_loss += l;
-            correct += c;
+            correct += c as f64;
             seen += eb;
         }
-        Ok((sum_loss / seen as f64, 1.0 - correct as f64 / seen as f64))
+        if rem > 0 {
+            let start = shards * eb;
+            if self.backend.supports(&self.cfg.model, "eval_metrics", rem)? {
+                let indices: Vec<usize> = (start..n).collect();
+                let (x, y) = test.batch(&indices, 0);
+                let (l, c) = self.backend.eval_metrics(&self.state, &x, &y)?;
+                sum_loss += l;
+                correct += c as f64;
+            } else {
+                let indices: Vec<usize> = (0..eb).map(|k| (start + k) % n).collect();
+                let (x, y) = test.batch(&indices, 0);
+                let (l, c) = self.backend.eval_metrics(&self.state, &x, &y)?;
+                let frac = rem as f64 / eb as f64;
+                sum_loss += l * frac;
+                correct += c as f64 * frac;
+            }
+            seen += rem;
+        }
+        Ok((sum_loss / seen as f64, 1.0 - correct / seen as f64))
     }
 
     /// Run the configured strategy on `train`, optionally evaluating on
     /// `test` along the way. The paper's protocol: fixed wall-clock budget,
     /// lr schedule keyed to elapsed time.
     pub fn run<D: Dataset + Sync>(&mut self, train: &D, test: Option<&D>) -> Result<Report> {
-        if train.feature_dim() != self.engine.model_info(&self.cfg.model)?.feature_dim {
+        if train.feature_dim() != self.backend.model_info(&self.cfg.model)?.feature_dim {
             bail!(
                 "dataset feature_dim {} != model feature_dim {}",
                 train.feature_dim(),
-                self.engine.model_info(&self.cfg.model)?.feature_dim
+                self.backend.model_info(&self.cfg.model)?.feature_dim
             );
         }
         let stop = AtomicBool::new(false);
@@ -373,10 +404,13 @@ impl<'e> Trainer<'e> {
 
         if threads == 0 {
             // synchronous mode: on single-core machines the worker threads
-            // cannot overlap with PJRT compute and only add contention
-            // (§Perf iter 6); assemble batches inline instead.
-            let mut small = BatchSource::sync(train, batch, seed);
-            let mut large = needs_large.then(|| BatchSource::sync(train, presample, seed ^ 0xB16));
+            // cannot overlap with device compute and only add contention
+            // (§Perf iter 6); assemble batches inline instead. Both sources
+            // share `draws` so augmentation epochs advance exactly as in
+            // prefetched mode (see the BatchSource docs).
+            let mut small = BatchSource::sync(train, batch, seed, &draws);
+            let mut large =
+                needs_large.then(|| BatchSource::sync(train, presample, seed ^ 0xB16, &draws));
             return self.run_inner(train, test, &mut small, large.as_mut());
         }
         std::thread::scope(|s| {
@@ -420,6 +454,9 @@ impl<'e> Trainer<'e> {
         let mut log = MetricsLog::default();
         let mut last_eval = -f64::INFINITY;
         let mut step: u64 = 0;
+        // the exact step importance sampling first switched on — recorded
+        // here, not reconstructed from the (log_every-quantized) rows
+        let mut switch_step: Option<u64> = None;
         let strategy = self.cfg.strategy.clone();
 
         // history-based baselines carry per-dataset state
@@ -466,7 +503,7 @@ impl<'e> Trainer<'e> {
                     let out = timed!(
                         self.timers,
                         "step",
-                        self.engine.train_step(
+                        self.backend.train_step(
                             &mut self.state,
                             &b.x,
                             &b.y,
@@ -492,7 +529,8 @@ impl<'e> Trainer<'e> {
                         // the scores (and therefore the resampled indices)
                         // are bit-identical to the serial path.
                         let scores = timed!(self.timers, "score", {
-                            let scorer = EngineScorer { engine: self.engine, state: &self.state };
+                            let scorer =
+                                BackendScorer { backend: self.backend, state: &self.state };
                             ScoreBackend::from_workers(self.cfg.score_workers)
                                 .score(&scorer, &pb.x, &pb.y, *score)
                         })?;
@@ -517,7 +555,7 @@ impl<'e> Trainer<'e> {
                         let out = timed!(
                             self.timers,
                             "step",
-                            self.engine.train_step(&mut self.state, &x, &y, &plan.weights, step_lr)
+                            self.backend.train_step(&mut self.state, &x, &y, &plan.weights, step_lr)
                         )?;
                         self.tau.update(&scores);
                         loss = out.loss as f64;
@@ -527,7 +565,7 @@ impl<'e> Trainer<'e> {
                         let out = timed!(
                             self.timers,
                             "step",
-                            self.engine.train_step(
+                            self.backend.train_step(
                                 &mut self.state,
                                 &b.x,
                                 &b.y,
@@ -545,14 +583,16 @@ impl<'e> Trainer<'e> {
                     let h = lh.as_mut().unwrap();
                     if h.needs_recompute(step) {
                         let losses = self.recompute_all_losses(train)?;
-                        h.history.record_all(&losses, step);
+                        // records *and* resorts: the fresh ranking must
+                        // drive selection immediately, not sort_every later
+                        h.record_all(&losses, step);
                     }
                     let idx = h.select(self.batch, step, &mut self.rng);
                     let (x, y) = timed!(self.timers, "data", train.batch(&idx, 0));
                     let out = timed!(
                         self.timers,
                         "step",
-                        self.engine.train_step(&mut self.state, &x, &y, &vec![1.0; y.len()], lr)
+                        self.backend.train_step(&mut self.state, &x, &y, &vec![1.0; y.len()], lr)
                     )?;
                     h.observe(&idx, &out.loss_vec, step);
                     self.tau.update(&out.scores);
@@ -566,7 +606,7 @@ impl<'e> Trainer<'e> {
                     let out = timed!(
                         self.timers,
                         "step",
-                        self.engine.train_step(&mut self.state, &x, &y, &w, lr)
+                        self.backend.train_step(&mut self.state, &x, &y, &w, lr)
                     )?;
                     h.observe(&idx, &out.loss_vec, step);
                     self.tau.update(&out.scores);
@@ -574,6 +614,9 @@ impl<'e> Trainer<'e> {
                 }
             }
             step += 1;
+            if is_active && switch_step.is_none() {
+                switch_step = Some(step);
+            }
 
             // -- logging / eval -------------------------------------------------
             let mut row_due = step % self.cfg.log_every.max(1) == 0 || step == 1;
@@ -625,7 +668,7 @@ impl<'e> Trainer<'e> {
             final_train_loss,
             final_test_loss,
             final_test_err,
-            is_switch_step: log.is_switch_on_step(),
+            is_switch_step: switch_step,
             strategy: self.cfg.strategy.name(),
             log,
         })
@@ -642,11 +685,65 @@ impl<'e> Trainer<'e> {
             let indices: Vec<usize> = (0..b).map(|k| (start + k) % n).collect();
             let (x, y) = train.batch(&indices, 0);
             let (loss, _) =
-                timed!(self.timers, "recompute", self.engine.fwd_scores(&self.state, &x, &y))?;
+                timed!(self.timers, "recompute", self.backend.fwd_scores(&self.state, &x, &y))?;
             let take = b.min(n - start);
             out[start..start + take].copy_from_slice(&loss[..take]);
             start += take;
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{PipelineStats, Prefetcher};
+    use crate::data::synthetic::SyntheticImages;
+
+    #[test]
+    fn sync_sources_share_one_draw_counter() {
+        // Epoch = total draws across *all* sources / n — the same
+        // accounting the prefetch pipeline uses (satellite of ISSUE 2).
+        let ds = SyntheticImages::builder(16, 4).samples(64).seed(1).build();
+        let draws = AtomicU64::new(0);
+        let mut small = BatchSource::sync(&ds, 32, 7, &draws);
+        let mut large = BatchSource::sync(&ds, 64, 7 ^ 0xB16, &draws);
+        assert_eq!(small.next().epoch, 0); // draws 0..32
+        assert_eq!(large.next().epoch, 0); // draws 32..96 start at 32 < 64
+        assert_eq!(small.next().epoch, 1); // draws start at 96 >= 64
+        assert_eq!(large.next().epoch, 2); // draws start at 128
+        assert_eq!(draws.load(Ordering::Relaxed), 192);
+    }
+
+    #[test]
+    fn sync_mode_matches_single_worker_prefetch_stream() {
+        // Both modes must produce the same (indices, epoch) sequence for a
+        // single uniform source: the sync rng stream is prefetch worker 0's
+        // and both derive epochs from the shared draw counter.
+        let ds = SyntheticImages::builder(16, 4).samples(128).seed(2).build();
+        let sync_draws = AtomicU64::new(0);
+        let mut sync = BatchSource::sync(&ds, 32, 9, &sync_draws);
+        let sync_batches: Vec<(Vec<usize>, u64)> = (0..8)
+            .map(|_| {
+                let b = sync.next();
+                (b.indices, b.epoch)
+            })
+            .collect();
+
+        let stop = AtomicBool::new(false);
+        let stats = PipelineStats::default();
+        let draws = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let p = Prefetcher::spawn(s, &ds, 32, 1, 1, 9, &stop, &stats, &draws);
+            let mut pre = BatchSource::<SyntheticImages>::prefetched(p);
+            for (k, expect) in sync_batches.iter().enumerate() {
+                let b = pre.next();
+                assert_eq!(&b.indices, &expect.0, "batch {k} indices diverged");
+                assert_eq!(b.epoch, expect.1, "batch {k} epoch diverged");
+            }
+            if let BatchSource::Prefetched(p) = &pre {
+                p.shutdown();
+            }
+        });
     }
 }

@@ -26,7 +26,7 @@ use crate::data::sequence::PermutedSequences;
 use crate::data::synthetic::SyntheticImages;
 use crate::data::{Dataset, Split};
 use crate::runtime::score::default_score_workers;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// Shared options for every figure harness.
 #[derive(Debug, Clone)]
@@ -109,22 +109,23 @@ impl Dataset for AnyDataset {
 
 /// Build the matched train/test split for a model (DESIGN.md §2 table).
 pub fn dataset_for(
-    engine: &Engine,
+    backend: &dyn Backend,
     model: &str,
     seed: u64,
     quick: bool,
 ) -> Result<Split<AnyDataset>> {
-    let info = engine.model_info(model)?;
+    let info = backend.model_info(model)?;
     let (d, c) = (info.feature_dim, info.num_classes);
     let scale = if quick { 4 } else { 1 };
     Ok(match model {
-        "mlp10" | "cnn10" | "cnn100" => {
-            // The cnn workloads are tuned into the paper's regime: training
-            // stays gradient-noise-limited for the whole budget (CIFAR with
-            // a wideresnet never reaches ~zero train loss in the paper's
-            // window either). 55% easy / 30% boundary / 15% outliers with
-            // wider easy noise keeps a heavy informative tail.
-            let hard = model.starts_with("cnn");
+        "mlp10" | "mlp100" | "cnn10" | "cnn100" => {
+            // The cnn/mlp100 workloads are tuned into the paper's regime:
+            // training stays gradient-noise-limited for the whole budget
+            // (CIFAR with a wideresnet never reaches ~zero train loss in
+            // the paper's window either). 55% easy / 30% boundary / 15%
+            // outliers with wider easy noise keeps a heavy informative
+            // tail.
+            let hard = model.starts_with("cnn") || model == "mlp100";
             let mut b = SyntheticImages::builder(d, c)
                 .samples(16_384 / scale)
                 .test_samples(2_048.min(4_096 / scale))
@@ -162,20 +163,30 @@ fn fig_dir(opts: &FigOptions, fig: &str) -> Result<PathBuf> {
     Ok(dir)
 }
 
+/// The model a figure defaults to when the caller does not pick one: the
+/// paper's CIFAR-100 convnet on PJRT, its native MLP stand-in otherwise.
+fn default_model(backend: &dyn Backend, pjrt: &str, native: &str) -> String {
+    if backend.name() == "native" {
+        native.into()
+    } else {
+        pjrt.into()
+    }
+}
+
 /// Dispatch by figure name.
-pub fn run_figure(engine: &Engine, name: &str, opts: &FigOptions) -> Result<()> {
+pub fn run_figure(backend: &dyn Backend, name: &str, opts: &FigOptions) -> Result<()> {
     match name {
-        "fig1" => fig1_variance(engine, opts),
-        "fig2" => fig2_correlation(engine, opts),
-        "fig3" => fig3_image(engine, opts),
-        "fig4" => fig4_finetune(engine, opts),
-        "fig5" => fig5_lstm(engine, opts),
-        "fig6" => fig6_svrg(engine, opts),
-        "fig7" => fig7_presample(engine, opts),
-        "ablation" => ablation_extensions(engine, opts),
+        "fig1" => fig1_variance(backend, opts),
+        "fig2" => fig2_correlation(backend, opts),
+        "fig3" => fig3_image(backend, opts),
+        "fig4" => fig4_finetune(backend, opts),
+        "fig5" => fig5_lstm(backend, opts),
+        "fig6" => fig6_svrg(backend, opts),
+        "fig7" => fig7_presample(backend, opts),
+        "ablation" => ablation_extensions(backend, opts),
         "all" => {
             for f in ["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7"] {
-                run_figure(engine, f, opts)?;
+                run_figure(backend, f, opts)?;
             }
             Ok(())
         }
@@ -185,16 +196,17 @@ pub fn run_figure(engine: &Engine, name: &str, opts: &FigOptions) -> Result<()> 
 
 /// Fig 1: variance reduction vs uniform at checkpoints along a training
 /// run, for loss / upper-bound / gradient-norm sampling.
-pub fn fig1_variance(engine: &Engine, opts: &FigOptions) -> Result<()> {
-    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
-    let info = engine.model_info(&model)?;
-    if !info.has_entry("grad_norms") {
-        bail!("fig1 needs grad_norms artifacts; use model cnn100 or mlp10");
+pub fn fig1_variance(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
+    let info = backend.model_info(&model)?;
+    let presample = *info.presample.iter().max().unwrap();
+    if !backend.supports(&model, "grad_norms", presample)? {
+        bail!("fig1 needs grad_norms support; use model cnn100 or mlp10");
     }
     let dir = fig_dir(opts, "fig1")?;
-    let split = dataset_for(engine, &model, 1, opts.quick)?;
+    let split = dataset_for(backend, &model, 1, opts.quick)?;
     let vcfg = VarianceConfig {
-        presample: *info.presample.iter().max().unwrap(),
+        presample,
         batch: info.batch,
         repeats: if opts.quick { 3 } else { 10 },
         seed: 7,
@@ -209,14 +221,14 @@ pub fn fig1_variance(engine: &Engine, opts: &FigOptions) -> Result<()> {
     // train with uniform SGD (the paper measures along a normal training
     // trajectory) and measure at checkpoints
     let cfg = TrainerConfig::uniform(&model).with_steps(steps_between as u64);
-    let mut trainer = Trainer::new(engine, cfg)?;
+    let mut trainer = Trainer::new(backend, cfg)?;
     for ck in 0..=checkpoints {
         if ck > 0 {
             trainer.cfg.max_steps = Some(steps_between as u64);
             let _ = trainer.run(&split.train, None)?;
         }
         let step = ck as u64 * steps_between as u64;
-        let p = measure_at_state(engine, &trainer.state, &split.train, &vcfg, step)?;
+        let p = measure_at_state(backend, &trainer.state, &split.train, &vcfg, step)?;
         println!(
             "fig1 [{model}] step {step}: loss {:.3} upper-bound {:.3} grad-norm {:.3} (uniform=1, tau {:.2})",
             p.loss, p.upper_bound, p.grad_norm, p.tau
@@ -228,23 +240,23 @@ pub fn fig1_variance(engine: &Engine, opts: &FigOptions) -> Result<()> {
 
 /// Fig 2: scatter of p(loss), p(upper-bound) against p(gradient-norm) on a
 /// trained network + the SSE numbers quoted in §4.1.
-pub fn fig2_correlation(engine: &Engine, opts: &FigOptions) -> Result<()> {
-    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
-    let info = engine.model_info(&model)?;
-    if !info.has_entry("grad_norms") {
-        bail!("fig2 needs grad_norms artifacts; use model cnn100 or mlp10");
+pub fn fig2_correlation(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
+    let info = backend.model_info(&model)?;
+    let chunk = *info.presample.iter().max().unwrap();
+    if !backend.supports(&model, "grad_norms", chunk)? {
+        bail!("fig2 needs grad_norms support; use model cnn100 or mlp10");
     }
     let dir = fig_dir(opts, "fig2")?;
-    let split = dataset_for(engine, &model, 1, opts.quick)?;
+    let split = dataset_for(backend, &model, 1, opts.quick)?;
 
     // train to a reasonable state first (paper uses a trained wideresnet)
     let steps = if opts.quick { 200 } else { 2_000 };
-    let mut trainer = Trainer::new(engine, TrainerConfig::uniform(&model).with_steps(steps))?;
+    let mut trainer = Trainer::new(backend, TrainerConfig::uniform(&model).with_steps(steps))?;
     let _ = trainer.run(&split.train, None)?;
 
     let total = if opts.quick { 2_048 } else { 16_384 };
-    let chunk = *info.presample.iter().max().unwrap();
-    let rep = correlation_at_state(engine, &trainer.state, &split.train, total, chunk, 7)?;
+    let rep = correlation_at_state(backend, &trainer.state, &split.train, total, chunk, 7)?;
 
     let mut sink = CsvSink::create(dir.join("scatter.csv"), "tag,p_gradnorm,p_loss,p_upper_bound")?;
     for (gn, lo, ub) in &rep.points {
@@ -275,7 +287,7 @@ pub fn fig2_correlation(engine: &Engine, opts: &FigOptions) -> Result<()> {
 /// Run one strategy config for every seed; write per-run CSVs; return the
 /// across-seed mean (final train loss, final test err).
 fn run_strategies(
-    engine: &Engine,
+    backend: &dyn Backend,
     dir: &Path,
     model: &str,
     configs: Vec<(String, TrainerConfig)>,
@@ -291,10 +303,10 @@ fn run_strategies(
         let mut sps = vec![];
         let mut switch = f64::NAN;
         for &seed in &opts.seeds {
-            let split = dataset_for(engine, model, seed, opts.quick)?;
+            let split = dataset_for(backend, model, seed, opts.quick)?;
             let mut c = cfg.clone().with_seed(seed).with_score_workers(opts.score_workers);
             c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
-            let mut trainer = Trainer::new(engine, c)?;
+            let mut trainer = Trainer::new(backend, c)?;
             let report = trainer.run(&split.train, Some(&split.test))?;
             report.log.to_csv(dir.join(format!("{tag}_seed{seed}.csv")))?;
             losses.push(report.final_train_loss);
@@ -320,9 +332,10 @@ fn run_strategies(
 
 /// Fig 3: image classification (CIFAR-10/100 stand-ins) — uniform vs loss
 /// vs upper-bound vs Loshchilov-Hutter vs Schaul, equal wall-clock.
-pub fn fig3_image(engine: &Engine, opts: &FigOptions) -> Result<()> {
+pub fn fig3_image(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let models: Vec<String> = match &opts.model {
         Some(m) => vec![m.clone()],
+        None if backend.name() == "native" => vec!["mlp10".into(), "mlp100".into()],
         None => vec!["cnn10".into(), "cnn100".into()],
     };
     for model in models {
@@ -343,13 +356,13 @@ pub fn fig3_image(engine: &Engine, opts: &FigOptions) -> Result<()> {
             ("loshchilov-hutter".into(), mk(TrainerConfig::loshchilov_hutter(&model))),
             ("schaul".into(), mk(TrainerConfig::schaul(&model))),
         ];
-        run_strategies(engine, &dir, &model, configs, opts)?;
+        run_strategies(backend, &dir, &model, configs, opts)?;
     }
     Ok(())
 }
 
 /// Fig 4: fine-tuning (MIT67 stand-in) — uniform vs loss vs upper-bound.
-pub fn fig4_finetune(engine: &Engine, opts: &FigOptions) -> Result<()> {
+pub fn fig4_finetune(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = "finetune";
     println!("fig4 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig4")?;
@@ -366,11 +379,11 @@ pub fn fig4_finetune(engine: &Engine, opts: &FigOptions) -> Result<()> {
         ("loss".into(), mk(TrainerConfig::loss(model))),
         ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
     ];
-    run_strategies(engine, &dir, model, configs, opts)
+    run_strategies(backend, &dir, model, configs, opts)
 }
 
 /// Fig 5: pixel-by-pixel sequence classification with an LSTM.
-pub fn fig5_lstm(engine: &Engine, opts: &FigOptions) -> Result<()> {
+pub fn fig5_lstm(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = "lstm";
     println!("fig5 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig5")?;
@@ -388,17 +401,17 @@ pub fn fig5_lstm(engine: &Engine, opts: &FigOptions) -> Result<()> {
         ("loss".into(), mk(TrainerConfig::loss(model))),
         ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
     ];
-    run_strategies(engine, &dir, model, configs, opts)
+    run_strategies(backend, &dir, model, configs, opts)
 }
 
 /// Fig 6 (App. C): SVRG / Katyusha / SCSG vs SGD-uniform vs upper-bound.
-pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
-    let model = opts.model.clone().unwrap_or_else(|| "cnn10".into());
+pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn10", "mlp10"));
     println!("fig6 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig6")?;
     let budget = opts.budget_secs;
     let seed = opts.seeds[0];
-    let split = dataset_for(engine, &model, seed, opts.quick)?;
+    let split = dataset_for(backend, &model, seed, opts.quick)?;
 
     // SGD strategies via the trainer
     let sgd_cfgs = vec![
@@ -414,7 +427,7 @@ pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
     )?;
     for (tag, cfg) in sgd_cfgs {
         let cfg = cfg.with_seed(seed).with_score_workers(opts.score_workers);
-        let mut trainer = Trainer::new(engine, cfg)?;
+        let mut trainer = Trainer::new(backend, cfg)?;
         let report = trainer.run(&split.train, Some(&split.test))?;
         report.log.to_csv(dir.join(format!("{tag}.csv")))?;
         summary.row(&tag, &[report.steps as f64, report.final_train_loss, report.final_test_err])?;
@@ -430,7 +443,7 @@ pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
         SvrgConfig::katyusha(&model).with_budget(budget),
         SvrgConfig::scsg(&model, 1024).with_budget(budget),
     ] {
-        let report = run_svrg(engine, &cfg, &split.train, Some(&split.test))?;
+        let report = run_svrg(backend, &cfg, &split.train, Some(&split.test))?;
         report.log.to_csv(dir.join(format!("{}.csv", report.name)))?;
         summary.row(
             report.name,
@@ -447,8 +460,8 @@ pub fn fig6_svrg(engine: &Engine, opts: &FigOptions) -> Result<()> {
 /// Extension ablation (paper §5 future work): τ-adaptive learning rate on
 /// top of the upper-bound sampler, vs the paper's main algorithm, vs
 /// uniform. Writes results/ablation/summary.csv.
-pub fn ablation_extensions(engine: &Engine, opts: &FigOptions) -> Result<()> {
-    let model = opts.model.clone().unwrap_or_else(|| "cnn100".into());
+pub fn ablation_extensions(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
     println!("ablation [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "ablation")?;
     let mk = |c: TrainerConfig| {
@@ -462,13 +475,13 @@ pub fn ablation_extensions(engine: &Engine, opts: &FigOptions) -> Result<()> {
             mk(TrainerConfig::upper_bound(&model)).with_adaptive_lr(2.0),
         ),
     ];
-    run_strategies(engine, &dir, &model, configs, opts)
+    run_strategies(backend, &dir, &model, configs, opts)
 }
 
 /// Fig 7 (App. D): ablation on the presample size B.
-pub fn fig7_presample(engine: &Engine, opts: &FigOptions) -> Result<()> {
-    let model = opts.model.clone().unwrap_or_else(|| "cnn10".into());
-    let info = engine.model_info(&model)?;
+pub fn fig7_presample(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn10", "mlp10"));
+    let info = backend.model_info(&model)?;
     println!("fig7 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig7")?;
     let mut configs = vec![(
@@ -484,5 +497,5 @@ pub fn fig7_presample(engine: &Engine, opts: &FigOptions) -> Result<()> {
                 .with_budget(opts.budget_secs),
         ));
     }
-    run_strategies(engine, &dir, &model, configs, opts)
+    run_strategies(backend, &dir, &model, configs, opts)
 }

@@ -1,13 +1,14 @@
 //! `isample` — CLI for the importance-sampling training system.
 //!
 //! ```text
-//! isample train <model> [--strategy upper-bound] [--steps N | --budget SECS]
-//!                       [--presample B] [--tau-th X] [--lr F] [--seed S]
+//! isample train <model> [--backend native|pjrt] [--strategy upper-bound]
+//!                       [--steps N | --budget SECS] [--presample B]
+//!                       [--tau-th X] [--lr F] [--seed S]
 //!                       [--out results/run.csv] [--checkpoint path.ckpt]
-//! isample figure <fig1..fig7|all> [--budget SECS] [--seeds 1,2,3] [--quick]
-//!                                 [--model NAME] [--out results]
+//! isample figure <fig1..fig7|all> [--backend native|pjrt] [--budget SECS]
+//!                                 [--seeds 1,2,3] [--quick] [--model NAME]
 //! isample selfcheck                      # manifest numerics vs live execution
-//! isample info                           # list models + artifacts
+//! isample info [--backend native|pjrt]   # list models + artifacts
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -15,7 +16,7 @@ use isample::config::Args;
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::coordinator::StrategyKind;
 use isample::figures::runner::{dataset_for, run_figure, FigOptions};
-use isample::runtime::{checkpoint, Engine};
+use isample::runtime::{backend, checkpoint, Engine, NativeEngine};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -24,7 +25,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args, &artifacts),
         "figure" => cmd_figure(&args, &artifacts),
         "selfcheck" => cmd_selfcheck(&artifacts),
-        "info" => cmd_info(&artifacts),
+        "info" => cmd_info(&args, &artifacts),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -41,7 +42,9 @@ USAGE:
   isample selfcheck
   isample info
 
-MODELS    mlp10 cnn10 cnn100 finetune lstm
+BACKENDS  --backend pjrt (default; executes AOT artifacts from --artifacts DIR)
+          --backend native (pure-rust two-layer MLP engine; no artifacts needed)
+MODELS    pjrt: mlp10 cnn10 cnn100 finetune lstm | native: mlp10 mlp100
 STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
 FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
           --score-workers N (presample scoring threads; default = cores)
@@ -53,7 +56,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let strategy_name = args.flag("strategy").unwrap_or("upper-bound");
     let strategy = StrategyKind::parse(strategy_name)
         .with_context(|| format!("unknown strategy {strategy_name:?}"))?;
-    let engine = Engine::load(artifacts)?;
+    let backend = backend::load(args.flag_backend()?, artifacts)?;
     let mut cfg = TrainerConfig::base(&model, strategy);
     cfg.presample = args.flag_usize("presample", 0)?;
     cfg.tau_th = args.flag_f64("tau-th", cfg.tau_th)?;
@@ -69,14 +72,15 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     }
 
     let quick = args.flag_bool("quick");
-    let split = dataset_for(&engine, &model, cfg.seed, quick)?;
+    let split = dataset_for(backend.as_ref(), &model, cfg.seed, quick)?;
     println!(
-        "training {model} with {} (b from manifest, B={}, tau_th={})",
+        "training {model} on {} with {} (B={}, tau_th={})",
+        backend.name(),
         cfg.strategy.name(),
         cfg.presample,
         cfg.tau_th
     );
-    let mut trainer = Trainer::new(&engine, cfg)?;
+    let mut trainer = Trainer::new(backend.as_ref(), cfg)?;
     let report = trainer.run(&split.train, Some(&split.test))?;
     println!(
         "done: {} steps in {:.1}s | train loss {:.4} | test err {:.4} | IS on at {:?}",
@@ -100,7 +104,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 
 fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
     let fig = args.positional.first().context("usage: isample figure <fig1..fig7|all>")?;
-    let engine = Engine::load(artifacts)?;
+    let backend = backend::load(args.flag_backend()?, artifacts)?;
     let opts = FigOptions {
         budget_secs: args.flag_f64("budget", 60.0)?,
         out_dir: args.flag("out").unwrap_or("results").into(),
@@ -109,7 +113,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         model: args.flag("model").map(|s| s.to_string()),
         score_workers: args.flag_score_workers()?,
     };
-    run_figure(&engine, fig, &opts)
+    run_figure(backend.as_ref(), fig, &opts)
 }
 
 /// Execute the manifest selfcheck: init params by the manifest RNG recipe,
@@ -134,7 +138,25 @@ fn cmd_selfcheck(artifacts: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(artifacts: &str) -> Result<()> {
+fn cmd_info(args: &Args, artifacts: &str) -> Result<()> {
+    if args.flag_backend()? == "native" {
+        let native = NativeEngine::with_default_models();
+        println!("platform: native (pure-rust CPU; any batch size, no artifacts)");
+        for name in native.model_names() {
+            let info = isample::runtime::Backend::model_info(&native, &name)?;
+            println!(
+                "{name}: D={} C={} b={} eval_b={} B={:?} params={} ({} tensors)",
+                info.feature_dim,
+                info.num_classes,
+                info.batch,
+                info.eval_batch,
+                info.presample,
+                info.total_param_elements(),
+                info.num_params(),
+            );
+        }
+        return Ok(());
+    }
     let engine = Engine::load(artifacts)?;
     println!("platform: {}", engine.platform());
     for (name, info) in &engine.manifest.models {

@@ -1,0 +1,248 @@
+//! The [`Backend`] trait — one execution substrate interface for the whole
+//! coordinator stack.
+//!
+//! Two implementations exist:
+//!
+//! * [`Engine`] (PJRT) — executes AOT-lowered HLO artifacts; entry points
+//!   exist only at the batch sizes that were baked by `make artifacts`.
+//! * [`NativeEngine`](super::native::NativeEngine) — a pure-rust
+//!   forward/backward/SGD implementation of the two-layer MLP family; every
+//!   entry works at any batch size and needs no artifacts at all, which is
+//!   what lets `cargo test` run real Algorithm-1 training end to end.
+//!
+//! The trait is deliberately shaped after the engine's entry points
+//! (`train_step`, `fwd_scores`, `eval_metrics`, `grad_norms`, `grad`,
+//! `weighted_grad`, `svrg_step`) so the trainer, the scoring subsystem, the
+//! figure harnesses and the SVRG baselines all run unchanged over
+//! `&dyn Backend`. Capability differences are expressed through
+//! [`supports`](Backend::supports) (PJRT: is there a baked artifact at this
+//! batch size? native: is the entry implemented?) and
+//! [`prepare`](Backend::prepare) (PJRT: compile now, outside the measured
+//! budget; native: no-op).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::engine::{Engine, ModelState, StepOutput};
+use super::manifest::ModelInfo;
+use super::native::NativeEngine;
+use super::tensor::HostTensor;
+
+/// An execution substrate for training, scoring and evaluation.
+///
+/// `Sync` because the sharded scoring backend (`runtime::score`) calls
+/// `fwd_scores` / `grad_norms` from scoped worker threads while the
+/// coordinator keeps exclusive ownership of the mutable [`ModelState`].
+pub trait Backend: Sync {
+    /// Short backend identifier: `"pjrt"` or `"native"`.
+    fn name(&self) -> &'static str;
+
+    /// Static description of a model (shapes, default batch sizes, params).
+    fn model_info(&self, model: &str) -> Result<&ModelInfo>;
+
+    /// Whether `entry` can execute at exactly `batch` rows. Errors only on
+    /// unknown models; an unsupported batch size is `Ok(false)`.
+    fn supports(&self, model: &str, entry: &str, batch: usize) -> Result<bool>;
+
+    /// Make `entry@batch` ready to execute (PJRT compiles and caches the
+    /// artifact so the first training step is not a compile stall inside
+    /// the measured budget; native backends have nothing to do).
+    fn prepare(&self, model: &str, entry: &str, batch: usize) -> Result<()>;
+
+    /// Initialize a fresh model state per the model's parameter specs.
+    fn init_state(&self, model: &str, seed: u64) -> Result<ModelState>;
+
+    /// One weighted SGD+momentum step (Eq. 2). Updates `state` in place and
+    /// returns the weighted mean loss plus the per-sample loss and Eq.-20
+    /// score vectors the forward pass produced for free (Alg. 1 line 15).
+    fn train_step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput>;
+
+    /// One forward pass: (per-sample loss, Eq.-20 upper-bound scores).
+    fn fwd_scores(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Evaluation shard: (sum of losses, number of correct predictions).
+    fn eval_metrics(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<(f64, i64)>;
+
+    /// True per-sample gradient norms (the expensive Fig-1/2 oracle).
+    fn grad_norms(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<Vec<f32>>;
+
+    /// Mean minibatch gradient at arbitrary params (SVRG substrate):
+    /// (grads in param order, mean loss).
+    fn grad(
+        &self,
+        model: &str,
+        params: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<Literal>, f32)>;
+
+    /// Gradient of the re-weighted loss `(1/b) Σ wᵢ·lossᵢ` — the exact
+    /// estimator a weighted SGD step applies (Fig-1 analysis substrate).
+    fn weighted_grad(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+    ) -> Result<(Vec<Literal>, f32)>;
+
+    /// One SVRG inner step: `params <- params - lr (g(params) - g(snap) + mu)`;
+    /// returns the minibatch loss at the *current* params. The default is
+    /// composed host-side from two [`grad`](Self::grad) calls; backends with
+    /// a fused artifact (PJRT's `svrg_step` entry) override it.
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_step(
+        &self,
+        model: &str,
+        params: &mut Vec<Literal>,
+        snap: &[Literal],
+        mu: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let (g_cur, loss) = self.grad(model, params, x, y)?;
+        let (g_snap, _) = self.grad(model, snap, x, y)?;
+        let n = params.len();
+        if g_cur.len() != n || g_snap.len() != n || mu.len() != n {
+            bail!("svrg_step: parameter/gradient list lengths disagree");
+        }
+        let mut next = Vec::with_capacity(params.len());
+        for (((p, gc), gs), m) in params.iter().zip(&g_cur).zip(&g_snap).zip(mu) {
+            let pt = HostTensor::from_literal(p)?;
+            let gct = HostTensor::from_literal(gc)?;
+            let gst = HostTensor::from_literal(gs)?;
+            let mt = HostTensor::from_literal(m)?;
+            let data: Vec<f32> = pt
+                .data
+                .iter()
+                .zip(&gct.data)
+                .zip(&gst.data)
+                .zip(&mt.data)
+                .map(|(((&pv, &gcv), &gsv), &mv)| pv - lr * (gcv - gsv + mv))
+                .collect();
+            next.push(HostTensor::new(pt.shape, data).to_literal()?);
+        }
+        *params = next;
+        Ok(loss)
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model_info(&self, model: &str) -> Result<&ModelInfo> {
+        self.manifest.model(model)
+    }
+
+    fn supports(&self, model: &str, entry: &str, batch: usize) -> Result<bool> {
+        Ok(self.manifest.model(model)?.entry(entry, batch).is_ok())
+    }
+
+    fn prepare(&self, model: &str, entry: &str, batch: usize) -> Result<()> {
+        Engine::executable(self, model, entry, batch).map(|_| ())
+    }
+
+    fn init_state(&self, model: &str, seed: u64) -> Result<ModelState> {
+        Engine::init_state(self, model, seed)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        Engine::train_step(self, state, x, y, w, lr)
+    }
+
+    fn fwd_scores(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Engine::fwd_scores(self, state, x, y)
+    }
+
+    fn eval_metrics(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<(f64, i64)> {
+        Engine::eval_metrics(self, state, x, y)
+    }
+
+    fn grad_norms(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<Vec<f32>> {
+        Engine::grad_norms(self, state, x, y)
+    }
+
+    fn grad(
+        &self,
+        model: &str,
+        params: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        Engine::grad(self, model, params, x, y)
+    }
+
+    fn weighted_grad(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        Engine::weighted_grad(self, state, x, y, w)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_step(
+        &self,
+        model: &str,
+        params: &mut Vec<Literal>,
+        snap: &[Literal],
+        mu: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        Engine::svrg_step(self, model, params, snap, mu, x, y, lr)
+    }
+}
+
+/// Build the backend selected by a `--backend` flag value.
+/// `"native"` needs no artifacts; `"pjrt"` loads `artifacts_dir`.
+pub fn load(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        "native" => Ok(Box::new(NativeEngine::with_default_models())),
+        "pjrt" => Ok(Box::new(Engine::load(artifacts_dir)?)),
+        other => bail!("unknown backend {other:?} (expected `native` or `pjrt`)"),
+    }
+}
+
+/// Prefer the PJRT engine when an artifact manifest is present; otherwise
+/// fall back to the artifact-free native CPU backend (how the examples run
+/// out of the box).
+pub fn autodetect(artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    if Path::new(artifacts_dir).join("manifest.json").exists() {
+        load("pjrt", artifacts_dir)
+    } else {
+        load("native", artifacts_dir)
+    }
+}

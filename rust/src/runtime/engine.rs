@@ -170,15 +170,7 @@ impl Engine {
 
     /// Initialize a fresh model state per the manifest init specs.
     pub fn init_state(&self, model: &str, seed: u64) -> Result<ModelState> {
-        let info = self.manifest.model(model)?;
-        let mut params = Vec::with_capacity(info.params.len());
-        let mut mom = Vec::with_capacity(info.params.len());
-        for (i, p) in info.params.iter().enumerate() {
-            let data = init::init_tensor(seed, i as u64, &p.shape, p.init);
-            params.push(HostTensor::new(p.shape.clone(), data).to_literal()?);
-            mom.push(HostTensor::zeros(p.shape.clone()).to_literal()?);
-        }
-        Ok(ModelState { model: model.to_string(), params, mom, step: 0 })
+        init::init_state(self.manifest.model(model)?, seed)
     }
 
     fn check_batch_inputs(

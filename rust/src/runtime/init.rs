@@ -2,7 +2,11 @@
 //! `init_tensor`. Bit-compatible draws (SplitMix64 + identical f64 math)
 //! so the manifest selfcheck can pin exact expected values.
 
-use crate::runtime::manifest::{InitKind, ParamSpec};
+use anyhow::Result;
+
+use crate::runtime::engine::ModelState;
+use crate::runtime::manifest::{InitKind, ModelInfo, ParamSpec};
+use crate::runtime::tensor::HostTensor;
 use crate::util::rng::SplitMix64;
 
 /// fan_in/fan_out, matching python: 2-D is (rows, cols); 4-D is HWIO conv
@@ -66,6 +70,20 @@ pub fn init_params(seed: u64, specs: &[ParamSpec]) -> Vec<Vec<f32>> {
         .enumerate()
         .map(|(i, p)| init_tensor(seed, i as u64, &p.shape, p.init))
         .collect()
+}
+
+/// Build a fresh [`ModelState`] (params + zeroed momentum) per a model's
+/// parameter specs — the one init recipe shared by every backend, so
+/// cross-backend checkpoints can never drift apart.
+pub fn init_state(info: &ModelInfo, seed: u64) -> Result<ModelState> {
+    let mut params = Vec::with_capacity(info.params.len());
+    let mut mom = Vec::with_capacity(info.params.len());
+    for (i, p) in info.params.iter().enumerate() {
+        let data = init_tensor(seed, i as u64, &p.shape, p.init);
+        params.push(HostTensor::new(p.shape.clone(), data).to_literal()?);
+        mom.push(HostTensor::zeros(p.shape.clone()).to_literal()?);
+    }
+    Ok(ModelState { model: info.name.clone(), params, mom, step: 0 })
 }
 
 #[cfg(test)]

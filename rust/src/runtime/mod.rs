@@ -9,19 +9,28 @@
 //! [`score`] adds the sharded presample-scoring subsystem: a
 //! [`ScoreBackend`] that fans `fwd_scores` / `grad_norms` chunks out to
 //! scoped worker threads and merges them in deterministic presample order.
+//!
+//! [`backend`] abstracts the execution substrate behind the [`Backend`]
+//! trait so the whole coordinator stack runs over either the PJRT engine
+//! or [`native::NativeEngine`] — the artifact-free pure-rust CPU backend
+//! that trains the two-layer MLP family end to end.
 
+pub mod backend;
 pub mod checkpoint;
 pub mod engine;
 pub mod init;
 pub mod manifest;
+pub mod native;
 pub mod score;
 pub mod selfcheck;
 pub mod tensor;
 
+pub use backend::Backend;
 pub use engine::{clone_literals, Engine, ModelState};
 pub use manifest::{InitKind, Manifest, ModelInfo};
+pub use native::{NativeEngine, NativeModelSpec};
 pub use score::{
-    default_score_workers, EngineScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
+    default_score_workers, BackendScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
     ScoreKind,
 };
 pub use tensor::HostTensor;

@@ -8,10 +8,14 @@
 //!
 //! * [`SampleScorer`] — anything that can score a chunk of presample rows
 //!   (per-sample loss, Eq.-20 upper bound, or true gradient norm).
-//! * [`EngineScorer`] — scores through the PJRT engine's baked entry
-//!   points. The engine is `Send + Sync`, so one engine serves all workers.
+//! * [`BackendScorer`] — scores through any [`Backend`]'s entry points
+//!   (PJRT baked artifacts or the native CPU engine). Backends are `Sync`,
+//!   so one backend serves all workers.
 //! * [`NativeScorer`] — a deterministic pure-rust two-layer MLP scorer used
-//!   by the scoring benches and tests (no AOT artifacts required).
+//!   by the scoring benches and tests (no AOT artifacts required). Its row
+//!   forward pass ([`mlp_row_forward`]) is shared with
+//!   [`NativeEngine`](super::native::NativeEngine), so native training and
+//!   native scoring are bit-identical on the same parameters.
 //! * [`ScoreBackend`] — the serial path, plus a threaded backend that
 //!   splits the batch into contiguous per-worker chunks, scores them on
 //!   scoped worker threads (the same std-only idiom as
@@ -25,7 +29,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::engine::{Engine, ModelState};
+use super::backend::Backend;
+use super::engine::ModelState;
 use super::tensor::HostTensor;
 use crate::util::rng::SplitMix64;
 
@@ -118,26 +123,23 @@ pub trait SampleScorer: Sync {
     fn supports_rows(&self, rows: usize, kind: ScoreKind) -> bool;
 }
 
-/// Scores through the PJRT engine's baked entry points.
-pub struct EngineScorer<'a> {
-    pub engine: &'a Engine,
+/// Scores through a [`Backend`]'s entry points (PJRT or native).
+pub struct BackendScorer<'a> {
+    pub backend: &'a dyn Backend,
     pub state: &'a ModelState,
 }
 
-impl SampleScorer for EngineScorer<'_> {
+impl SampleScorer for BackendScorer<'_> {
     fn score_chunk(&self, x: &HostTensor, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
         match kind {
-            ScoreKind::UpperBound => self.engine.fwd_scores(self.state, x, y).map(|o| o.1),
-            ScoreKind::Loss => self.engine.fwd_scores(self.state, x, y).map(|o| o.0),
-            ScoreKind::GradNorm => self.engine.grad_norms(self.state, x, y),
+            ScoreKind::UpperBound => self.backend.fwd_scores(self.state, x, y).map(|o| o.1),
+            ScoreKind::Loss => self.backend.fwd_scores(self.state, x, y).map(|o| o.0),
+            ScoreKind::GradNorm => self.backend.grad_norms(self.state, x, y),
         }
     }
 
     fn supports_rows(&self, rows: usize, kind: ScoreKind) -> bool {
-        match self.engine.model_info(&self.state.model) {
-            Ok(info) => info.entry(kind.entry(), rows).is_ok(),
-            Err(_) => false,
-        }
+        self.backend.supports(&self.state.model, kind.entry(), rows).unwrap_or(false)
     }
 }
 
@@ -153,6 +155,64 @@ pub struct NativeScorer {
     b1: Vec<f32>,
     w2: Vec<f32>,
     b2: Vec<f32>,
+}
+
+/// Forward one row through the two-layer MLP: `hidden = relu(x·W1 + b1)`,
+/// `probs = softmax(hidden·W2 + b2)`. One implementation shared by
+/// [`NativeScorer`] and [`NativeEngine`](super::native::NativeEngine) so
+/// native scoring and native training numerics are bit-identical.
+pub(crate) fn mlp_row_forward(
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    x: &[f32],
+    h: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut hidden = vec![0.0f32; h];
+    for (j, hj) in hidden.iter_mut().enumerate() {
+        let mut acc = b1[j];
+        for (i, &xi) in x.iter().enumerate() {
+            acc += xi * w1[i * h + j];
+        }
+        *hj = acc.max(0.0);
+    }
+    let mut probs = vec![0.0f32; c];
+    for (k, pk) in probs.iter_mut().enumerate() {
+        let mut acc = b2[k];
+        for (j, &hj) in hidden.iter().enumerate() {
+            acc += hj * w2[j * c + k];
+        }
+        *pk = acc;
+    }
+    let max = probs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f32;
+    for p in probs.iter_mut() {
+        *p = (*p - max).exp();
+        denom += *p;
+    }
+    for p in probs.iter_mut() {
+        *p /= denom;
+    }
+    (hidden, probs)
+}
+
+/// Softmax cross-entropy loss of one row from its softmax probs — the one
+/// formula every native entry (scoring, training, evaluation) uses, so
+/// their numerics can never drift apart.
+pub(crate) fn row_loss(probs: &[f32], y: usize) -> f32 {
+    -(probs[y] + 1e-12).ln()
+}
+
+/// The Eq.-20 upper bound ‖probs − onehot(y)‖₂ of one row.
+pub(crate) fn row_score(probs: &[f32], y: usize) -> f32 {
+    let mut norm2 = 0.0f32;
+    for (k, &p) in probs.iter().enumerate() {
+        let g = if k == y { p - 1.0 } else { p };
+        norm2 += g * g;
+    }
+    norm2.sqrt()
 }
 
 impl NativeScorer {
@@ -174,6 +234,27 @@ impl NativeScorer {
         }
     }
 
+    /// A scorer over explicit parameters — how the native training backend
+    /// hands its live model state to the scoring subsystem.
+    pub fn from_params(
+        feature_dim: usize,
+        hidden: usize,
+        num_classes: usize,
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        w2: Vec<f32>,
+        b2: Vec<f32>,
+    ) -> Result<Self> {
+        if w1.len() != feature_dim * hidden
+            || b1.len() != hidden
+            || w2.len() != hidden * num_classes
+            || b2.len() != num_classes
+        {
+            bail!("native scorer params do not match {feature_dim}x{hidden}x{num_classes}");
+        }
+        Ok(Self { feature_dim, hidden, num_classes, w1, b1, w2, b2 })
+    }
+
     pub fn feature_dim(&self) -> usize {
         self.feature_dim
     }
@@ -187,40 +268,11 @@ impl NativeScorer {
     /// gradient (which is also the stand-in for the full gradient norm).
     fn score_row(&self, x: &[f32], y: i32, kind: ScoreKind) -> f32 {
         let (h, c) = (self.hidden, self.num_classes);
-        let mut hidden = vec![0.0f32; h];
-        for (j, hj) in hidden.iter_mut().enumerate() {
-            let mut acc = self.b1[j];
-            for (i, &xi) in x.iter().enumerate() {
-                acc += xi * self.w1[i * h + j];
-            }
-            *hj = acc.max(0.0);
-        }
-        let mut logits = vec![0.0f32; c];
-        for (k, lk) in logits.iter_mut().enumerate() {
-            let mut acc = self.b2[k];
-            for (j, &hj) in hidden.iter().enumerate() {
-                acc += hj * self.w2[j * c + k];
-            }
-            *lk = acc;
-        }
-        let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut denom = 0.0f32;
-        for l in logits.iter_mut() {
-            *l = (*l - max).exp();
-            denom += *l;
-        }
+        let (_, probs) = mlp_row_forward(&self.w1, &self.b1, &self.w2, &self.b2, x, h, c);
         let y = (y as usize).min(c - 1);
         match kind {
-            ScoreKind::Loss => -(logits[y] / denom + 1e-12).ln(),
-            ScoreKind::UpperBound | ScoreKind::GradNorm => {
-                let mut norm2 = 0.0f32;
-                for (k, &e) in logits.iter().enumerate() {
-                    let p = e / denom;
-                    let g = if k == y { p - 1.0 } else { p };
-                    norm2 += g * g;
-                }
-                norm2.sqrt()
-            }
+            ScoreKind::Loss => row_loss(&probs, y),
+            ScoreKind::UpperBound | ScoreKind::GradNorm => row_score(&probs, y),
         }
     }
 }
@@ -386,6 +438,9 @@ fn score_chunks_threaded(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::Backend;
+    use crate::runtime::engine::Engine;
+    use crate::runtime::native::NativeEngine;
 
     fn toy_batch(rows: usize, d: usize, classes: usize) -> (HostTensor, Vec<i32>) {
         let mut x = HostTensor::zeros(vec![rows, d]);
@@ -433,6 +488,26 @@ mod tests {
             for workers in [2, 3, 4, 9, 200] {
                 let backend = ScoreBackend::from_workers(workers);
                 let par = backend.score(&scorer, &x, &y, kind).unwrap();
+                assert_eq!(par, serial, "workers={workers} kind={}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn backend_scorer_parallel_matches_serial_on_native_backend() {
+        // The scorer the trainer actually uses when running natively:
+        // chunked scoring through the backend must be bit-identical to the
+        // serial full-batch pass for every score kind.
+        let ne = NativeEngine::with_default_models();
+        let state = ne.init_state("mlp10", 11).unwrap();
+        let scorer = BackendScorer { backend: &ne, state: &state };
+        let (x, y) = toy_batch(97, 64, 10);
+        for kind in [ScoreKind::UpperBound, ScoreKind::Loss, ScoreKind::GradNorm] {
+            let serial = ScoreBackend::Serial.score(&scorer, &x, &y, kind).unwrap();
+            assert!(serial.iter().all(|s| s.is_finite()));
+            for workers in [2, 5, 16] {
+                let sb = ScoreBackend::from_workers(workers);
+                let par = sb.score(&scorer, &x, &y, kind).unwrap();
                 assert_eq!(par, serial, "workers={workers} kind={}", kind.name());
             }
         }

@@ -1,26 +1,30 @@
 //! Integration tests for the SVRG baselines and the Fig-1/Fig-2 analyses.
-//! Like `integration.rs`, every test self-skips when no AOT artifacts are
-//! present (the vendored xla stub cannot execute entry points).
+//! Like `integration.rs`, these run on the PJRT engine when AOT artifacts
+//! are present and on the native CPU backend otherwise — `cargo test`
+//! exercises them for real in every build.
 
 use isample::analysis::correlation::correlation_at_state;
 use isample::analysis::variance::{measure_at_state, VarianceConfig};
 use isample::baselines::svrg::{run_svrg, SvrgConfig};
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
-use isample::runtime::Engine;
+use isample::runtime::{Backend, Engine, NativeEngine};
 
 const ARTIFACTS_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
 
-fn with_engine(f: impl FnOnce(&Engine)) {
-    if !std::path::Path::new(ARTIFACTS_DIR).join("manifest.json").exists() {
-        eprintln!("skipping: no AOT artifacts under {ARTIFACTS_DIR} (run `make artifacts`)");
-        return;
-    }
+fn with_backend(f: impl FnOnce(&dyn Backend)) {
     thread_local! {
-        static ENGINE: Engine = Engine::load(ARTIFACTS_DIR)
-            .expect("run `make artifacts` before `cargo test`");
+        static BACKEND: Box<dyn Backend> =
+            if std::path::Path::new(ARTIFACTS_DIR).join("manifest.json").exists() {
+                Box::new(
+                    Engine::load(ARTIFACTS_DIR)
+                        .expect("artifacts present but engine failed to load"),
+                )
+            } else {
+                Box::new(NativeEngine::with_default_models())
+            };
     }
-    ENGINE.with(|e| f(e));
+    BACKEND.with(|b| f(b.as_ref()));
 }
 
 fn mlp_split() -> isample::data::Split<SyntheticImages> {
@@ -29,12 +33,12 @@ fn mlp_split() -> isample::data::Split<SyntheticImages> {
 
 #[test]
 fn svrg_takes_steps_and_stays_finite() {
-    with_engine(|engine| {
+    with_backend(|backend| {
         let split = mlp_split();
         let mut cfg = SvrgConfig::svrg("mlp10");
         cfg.inner_steps = 10;
         cfg.max_outer = Some(2);
-        let report = run_svrg(engine, &cfg, &split.train, Some(&split.test)).unwrap();
+        let report = run_svrg(backend, &cfg, &split.train, Some(&split.test)).unwrap();
         assert_eq!(report.steps, 20);
         assert!(report.final_train_loss.is_finite());
         assert!(report.final_test_err.is_finite());
@@ -43,11 +47,11 @@ fn svrg_takes_steps_and_stays_finite() {
 
 #[test]
 fn scsg_grows_its_large_batch_and_runs() {
-    with_engine(|engine| {
+    with_backend(|backend| {
         let split = mlp_split();
         let mut cfg = SvrgConfig::scsg("mlp10", 256);
         cfg.max_outer = Some(3);
-        let report = run_svrg(engine, &cfg, &split.train, None).unwrap();
+        let report = run_svrg(backend, &cfg, &split.train, None).unwrap();
         // inner steps: 256/128=2, then 384/128=3, then 576/128=4
         assert_eq!(report.steps, 2 + 3 + 4);
     });
@@ -55,13 +59,13 @@ fn scsg_grows_its_large_batch_and_runs() {
 
 #[test]
 fn katyusha_coupling_runs_and_learns() {
-    with_engine(|engine| {
+    with_backend(|backend| {
         let split = mlp_split();
         let mut cfg = SvrgConfig::katyusha("mlp10");
         cfg.inner_steps = 15;
         cfg.max_outer = Some(2);
         cfg.lr = 0.02;
-        let report = run_svrg(engine, &cfg, &split.train, None).unwrap();
+        let report = run_svrg(backend, &cfg, &split.train, None).unwrap();
         assert_eq!(report.steps, 30);
         assert!(report.final_train_loss.is_finite());
         let first = report.log.rows.first().unwrap().train_loss;
@@ -75,15 +79,15 @@ fn katyusha_coupling_runs_and_learns() {
 
 #[test]
 fn variance_analysis_shows_upper_bound_beats_loss_late_in_training() {
-    with_engine(|engine| {
+    with_backend(|backend| {
         let split = mlp_split();
         // train a while so scores disperse (paper: late-stage behaviour)
         let cfg = TrainerConfig::uniform("mlp10").with_steps(400);
-        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let mut tr = Trainer::new(backend, cfg).unwrap();
         let _ = tr.run(&split.train, None).unwrap();
 
         let vcfg = VarianceConfig { presample: 1024, batch: 128, repeats: 5, seed: 3 };
-        let p = measure_at_state(engine, &tr.state, &split.train, &vcfg, 400).unwrap();
+        let p = measure_at_state(backend, &tr.state, &split.train, &vcfg, 400).unwrap();
         assert_eq!(p.uniform, 1.0);
         // the paper's core claims, in miniature:
         assert!(
@@ -103,13 +107,13 @@ fn variance_analysis_shows_upper_bound_beats_loss_late_in_training() {
 
 #[test]
 fn correlation_analysis_upper_bound_dominates_loss() {
-    with_engine(|engine| {
+    with_backend(|backend| {
         let split = mlp_split();
         let cfg = TrainerConfig::uniform("mlp10").with_steps(400);
-        let mut tr = Trainer::new(engine, cfg).unwrap();
+        let mut tr = Trainer::new(backend, cfg).unwrap();
         let _ = tr.run(&split.train, None).unwrap();
 
-        let rep = correlation_at_state(engine, &tr.state, &split.train, 2048, 1024, 7).unwrap();
+        let rep = correlation_at_state(backend, &tr.state, &split.train, 2048, 1024, 7).unwrap();
         assert_eq!(rep.points.len(), 2048);
         // §4.1: the upper bound's probabilities track the gradient-norm
         // probabilities far better than the loss's do.
