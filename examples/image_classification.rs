@@ -6,25 +6,28 @@
 //! backend runs its MLP stand-ins (mlp10 / mlp100).
 //!
 //! ```bash
-//! cargo run --release --example image_classification -- [budget_secs] [model]
+//! cargo run --release --example image_classification -- [budget_secs] [model] [train_workers]
 //! ```
 
 use isample::figures::runner::{fig3_image, FigOptions};
-use isample::runtime::backend;
+use isample::runtime::{backend, default_train_workers};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let budget: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(45.0);
     let model = args.get(2).cloned();
+    let train_workers: usize =
+        args.get(3).map(|s| s.parse()).transpose()?.unwrap_or_else(default_train_workers);
 
     let backend = backend::autodetect("artifacts")?;
-    println!("backend: {}", backend.name());
+    println!("backend: {} | train workers: {train_workers}", backend.name());
     let opts = FigOptions {
         budget_secs: budget,
         out_dir: "results".into(),
         seeds: vec![42],
         quick: budget < 30.0,
         model,
+        train_workers,
         ..FigOptions::default()
     };
     fig3_image(backend.as_ref(), &opts)?;

@@ -3,29 +3,37 @@
 //! step budget.
 //!
 //! Runs out of the box — with AOT artifacts it uses the PJRT engine,
-//! without them it falls back to the pure-rust native backend:
+//! without them it falls back to the pure-rust native backend. An
+//! optional argument sets the data-parallel batch-compute worker count
+//! (default: one per core; results are bit-identical for any count):
 //!
 //! ```bash
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- [train_workers]
 //! ```
 
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
-use isample::runtime::backend;
+use isample::runtime::{backend, default_train_workers};
 
 fn main() -> anyhow::Result<()> {
+    let train_workers: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(default_train_workers);
     let backend = backend::autodetect("artifacts")?;
-    println!("backend: {}", backend.name());
+    println!("backend: {} | train workers: {train_workers}", backend.name());
 
     // synthetic "image" classification set matching mlp10 (64 features, 10 classes)
     let split = SyntheticImages::builder(64, 10).samples(8_192).test_samples(2_048).seed(1).split();
 
     for cfg in [
-        TrainerConfig::uniform("mlp10").with_steps(600),
+        TrainerConfig::uniform("mlp10").with_steps(600).with_train_workers(train_workers),
         TrainerConfig::upper_bound("mlp10")
             .with_steps(600)
             .with_presample(384)
-            .with_tau_th(1.2),
+            .with_tau_th(1.2)
+            .with_train_workers(train_workers),
     ] {
         let name = cfg.strategy.name();
         let mut trainer = Trainer::new(backend.as_ref(), cfg)?;

@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         quick: !args.flag_bool("full"),
         model: args.flag("model").map(|s| s.to_string()),
         score_workers: args.flag_score_workers()?,
+        train_workers: args.flag_train_workers()?,
     };
     let sw = Stopwatch::new();
     run_figure(backend.as_ref(), "fig7", &opts)?;

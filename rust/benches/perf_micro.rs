@@ -13,9 +13,15 @@
 //! (`--out-json PATH` to relocate) — the per-PR perf trajectory artifact.
 //!
 //! The `train/` section runs real end-to-end Algorithm-1 training on the
-//! native CPU backend (uniform and upper-bound at equal step counts) and
-//! writes steps/sec to `BENCH_train.json` (`--out-json-train PATH`,
-//! `--train-steps N`) — the training-throughput trajectory artifact.
+//! native CPU backend (uniform and upper-bound at equal step counts)
+//! across a `--train-workers` scaling sweep (1/2/4/cores by default;
+//! `--train-workers N` narrows it to {1, N} — CI's worker matrix),
+//! asserts every parallel run is bit-identical to serial (trajectory
+//! digest + final-state checksum), and writes per-worker-count steps/sec
+//! to `BENCH_train.json` (`--out-json-train PATH`, `--train-steps N`;
+//! `ISAMPLE_BENCH_TARGET_MS` also scales the default step count so the
+//! CI smoke matrix stays inside the old single-job budget) — the
+//! training-throughput trajectory artifact, now a scaling curve.
 //!
 //! PJRT engine benches run only when AOT artifacts are present.
 
@@ -29,9 +35,11 @@ use isample::coordinator::tau::TauEstimator;
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
+use isample::runtime::checkpoint::state_checksum;
 use isample::runtime::score::{default_score_workers, NativeScorer, ScoreBackend, ScoreKind};
-use isample::runtime::{Engine, NativeEngine};
+use isample::runtime::{default_train_workers, Engine, NativeEngine};
 use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
+use isample::util::digest::digest_f64;
 use isample::util::rng::SplitMix64;
 use isample::util::stats::normalize_probs;
 
@@ -161,34 +169,92 @@ fn main() -> anyhow::Result<()> {
     // ---------------- native end-to-end training throughput ------------
     // Real Algorithm-1 runs on the pure-rust backend: uniform vs
     // upper-bound (warmup -> tau switch -> presample/score/resample) at an
-    // equal step count. Steps/sec is the BENCH_train.json acceptance
-    // number; the final losses ride along as a sanity signal.
+    // equal step count, swept over --train-workers. Per-worker steps/sec
+    // is the BENCH_train.json acceptance number (the scaling curve);
+    // every parallel run must be bit-identical to the 1-worker run.
     if run("train/") {
         let mut suite = BenchSuite::new();
         let native = NativeEngine::with_default_models();
-        let steps = args.flag_u64("train-steps", 300)?;
+        // ISAMPLE_BENCH_TARGET_MS (or --target-ms) caps per-bench time;
+        // scale the fixed-step training runs proportionally so CI's
+        // quick mode shrinks this section too.
+        let default_steps = ((300 * target.as_millis() as u64) / 1500).clamp(60, 300);
+        let steps = args.flag_u64("train-steps", default_steps)?;
+        let sweep: Vec<usize> = match args.flag("train-workers") {
+            // explicit count: compare exactly serial vs that count
+            Some(_) => {
+                let n = args.flag_train_workers()?;
+                if n == 1 {
+                    vec![1]
+                } else {
+                    vec![1, n]
+                }
+            }
+            None => {
+                let mut v = vec![1, 2, 4, default_train_workers()];
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        };
         let split =
             SyntheticImages::builder(64, 10).samples(8_192).test_samples(1_024).seed(3).split();
-        for (tag, cfg) in [
+        for (tag, base) in [
             ("uniform", TrainerConfig::uniform("mlp10")),
             (
                 "upper_bound",
                 TrainerConfig::upper_bound("mlp10").with_presample(384).with_tau_th(1.2),
             ),
         ] {
-            let cfg =
-                cfg.with_steps(steps).with_seed(17).with_score_workers(args.flag_score_workers()?);
-            let mut trainer = Trainer::new(&native, cfg)?;
-            let report = trainer.run(&split.train, None)?;
-            let sps = report.steps as f64 / report.wall_secs.max(1e-9);
-            println!(
-                "train/native_mlp10_{tag}: {} steps -> {sps:.1} steps/s (final loss {:.4}, IS@{:?})",
-                report.steps, report.final_train_loss, report.is_switch_step
-            );
-            suite.metric(&format!("{tag}_steps_per_sec"), sps);
-            suite.metric(&format!("{tag}_final_train_loss"), report.final_train_loss);
+            // (trajectory digest, state checksum) of the serial run — the
+            // reference every parallel worker count must reproduce
+            let mut reference: Option<(u64, u64)> = None;
+            let mut serial_sps = f64::NAN;
+            for &workers in &sweep {
+                let cfg = base
+                    .clone()
+                    .with_steps(steps)
+                    .with_seed(17)
+                    .with_score_workers(args.flag_score_workers()?)
+                    .with_train_workers(workers);
+                let mut trainer = Trainer::new(&native, cfg)?;
+                let report = trainer.run(&split.train, None)?;
+                let traj = digest_f64(report.log.rows.iter().map(|r| r.train_loss));
+                let state = state_checksum(&trainer.state)?;
+                if let Some(r) = reference {
+                    assert_eq!(
+                        (traj, state),
+                        r,
+                        "train/{tag}: {workers}-worker run diverged from serial"
+                    );
+                } else {
+                    reference = Some((traj, state));
+                }
+                let sps = report.steps as f64 / report.wall_secs.max(1e-9);
+                if workers == 1 {
+                    serial_sps = sps;
+                    suite.metric(&format!("{tag}_final_train_loss"), report.final_train_loss);
+                }
+                println!(
+                    "train/native_mlp10_{tag}_w{workers}: {} steps -> {sps:.1} steps/s \
+                     ({:.2}x vs serial, final loss {:.4}, IS@{:?})",
+                    report.steps,
+                    sps / serial_sps.max(1e-9),
+                    report.final_train_loss,
+                    report.is_switch_step
+                );
+                suite.metric(&format!("{tag}_w{workers}_steps_per_sec"), sps);
+                if workers > 1 {
+                    suite.metric(
+                        &format!("{tag}_speedup_w{workers}_vs_serial"),
+                        sps / serial_sps.max(1e-9),
+                    );
+                }
+            }
         }
         suite.metric("train_steps", steps as f64);
+        suite.metric("train_worker_counts", sweep.len() as f64);
+        suite.metric("available_parallelism", default_train_workers() as f64);
         let out = args.flag("out-json-train").unwrap_or("BENCH_train.json");
         suite.write_json(out)?;
         println!("training bench results -> {out}");

@@ -18,6 +18,7 @@ use xla::Literal;
 use crate::coordinator::metrics::{MetricsLog, Row};
 use crate::data::Dataset;
 use crate::runtime::engine::clone_literals;
+use crate::runtime::pool::default_train_workers;
 use crate::runtime::{Backend, HostTensor};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::Stopwatch;
@@ -123,6 +124,10 @@ pub struct SvrgConfig {
     pub max_outer: Option<usize>,
     pub seed: u64,
     pub log_every: u64,
+    /// Batch-compute workers for every `grad`/`svrg_step`/`eval_metrics`
+    /// call (see `TrainerConfig::train_workers`); the snapshot passes are
+    /// exactly the large-batch work data parallelism pays off on.
+    pub train_workers: usize,
 }
 
 impl SvrgConfig {
@@ -136,6 +141,7 @@ impl SvrgConfig {
             max_outer: Some(3),
             seed: 42,
             log_every: 10,
+            train_workers: default_train_workers(),
         }
     }
 
@@ -150,6 +156,12 @@ impl SvrgConfig {
     pub fn with_budget(mut self, secs: f64) -> Self {
         self.budget_secs = Some(secs);
         self.max_outer = None;
+        self
+    }
+
+    /// Set the batch-compute worker count (see `train_workers`).
+    pub fn with_train_workers(mut self, workers: usize) -> Self {
+        self.train_workers = workers.max(1);
         self
     }
 }
@@ -170,6 +182,7 @@ pub fn run_svrg<D: Dataset>(
     train: &D,
     test: Option<&D>,
 ) -> Result<SvrgReport> {
+    backend.set_train_workers(cfg.train_workers.max(1));
     let info = backend.model_info(&cfg.model)?;
     let b = info.batch;
     let mut rng = SplitMix64::tensor_stream(cfg.seed ^ 0x5A46, 3);

@@ -87,6 +87,20 @@ impl Args {
         Ok(n)
     }
 
+    /// `--train-workers N` — data-parallel batch-compute threads for the
+    /// training-side entries of backends that shard batches (native).
+    /// Defaults to one per core
+    /// (`runtime::pool::default_train_workers`). Any value is
+    /// bit-identical to serial (fixed chunk plan + ordered merge);
+    /// 1 forces the inline path; 0 is rejected.
+    pub fn flag_train_workers(&self) -> Result<usize> {
+        let n = self.flag_usize("train-workers", crate::runtime::pool::default_train_workers())?;
+        if n == 0 {
+            bail!("--train-workers must be >= 1 (got 0)");
+        }
+        Ok(n)
+    }
+
     /// `--backend native|pjrt` — which execution substrate to run on.
     /// `native` is the artifact-free pure-rust engine; `pjrt` (the default)
     /// executes AOT artifacts.
@@ -175,5 +189,14 @@ mod tests {
         assert!(args("train").flag_score_workers().unwrap() >= 1);
         assert!(args("train --score-workers 0").flag_score_workers().is_err());
         assert!(args("train --score-workers lots").flag_score_workers().is_err());
+    }
+
+    #[test]
+    fn train_workers_flag() {
+        assert_eq!(args("train --train-workers 4").flag_train_workers().unwrap(), 4);
+        assert_eq!(args("train --train-workers=1").flag_train_workers().unwrap(), 1);
+        assert!(args("train").flag_train_workers().unwrap() >= 1);
+        assert!(args("train --train-workers 0").flag_train_workers().is_err());
+        assert!(args("train --train-workers many").flag_train_workers().is_err());
     }
 }

@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
+use crate::runtime::pool::default_train_workers;
 use crate::runtime::score::{default_score_workers, BackendScorer, ScoreBackend};
 use crate::runtime::{Backend, ModelState};
 use crate::util::rng::SplitMix64;
@@ -47,6 +48,23 @@ use super::metrics::{MetricsLog, Row};
 use super::pipeline::{gather_rows, PipelineStats, PrefetchedBatch, Prefetcher};
 use super::sampler::{resample_from_scores, ScoreKind, StrategyKind};
 use super::tau::TauEstimator;
+
+/// The score backend for one presample pass. Forward-pass kinds (loss,
+/// upper bound) chunk across `score_workers` scoped threads as before.
+/// `GradNorm` is special-cased: once the backend data-parallelizes
+/// `grad_norms` internally (`train_workers > 1`, native), its shared pool
+/// is the *only* real parallel layer — outer score threads would merely
+/// funnel their chunks into that same pool and block, adding dispatch
+/// overhead without adding parallelism — so the outer layer goes serial
+/// and the pool shards the full presample itself. Either layering
+/// produces bit-identical scores; this is purely a scheduling choice.
+fn score_backend(backend: &dyn Backend, score_workers: usize, kind: ScoreKind) -> ScoreBackend {
+    if kind == ScoreKind::GradNorm && backend.train_workers() > 1 {
+        ScoreBackend::Serial
+    } else {
+        ScoreBackend::from_workers(score_workers)
+    }
+}
 
 /// Where training batches come from: a background prefetch pipeline
 /// (multi-core) or inline synchronous assembly (`prefetch_threads = 0`,
@@ -123,6 +141,15 @@ pub struct TrainerConfig {
     /// engages when `B / score_workers` chunk sizes have baked artifacts;
     /// otherwise it transparently falls back to the serial full-B pass.
     pub score_workers: usize,
+    /// Batch-compute worker threads for the training-side entries
+    /// (`train_step`, `grad`, `weighted_grad`, `grad_norms`,
+    /// `eval_metrics`) of backends that shard batches (native; PJRT runs
+    /// whole-batch artifacts and ignores it). Like `score_workers` — and
+    /// unlike `prefetch_threads` — any value is bit-identical to serial:
+    /// the chunk plan and merge order are fixed by the batch size alone
+    /// (`runtime::native::train_chunk_plan`). Applied to the backend at
+    /// [`Trainer::new`].
+    pub train_workers: usize,
     /// record a metrics row every `log_every` steps.
     pub log_every: u64,
     /// The paper's §5 future-work extension: when importance sampling is
@@ -184,6 +211,7 @@ impl TrainerConfig {
             prefetch_depth: 2,
             prefetch_threads: 0,
             score_workers: default_score_workers(),
+            train_workers: default_train_workers(),
             log_every: 10,
             adaptive_lr_cap: 0.0,
         }
@@ -236,6 +264,12 @@ impl TrainerConfig {
         self.score_workers = workers.max(1);
         self
     }
+
+    /// Set the batch-compute worker count (see `train_workers`).
+    pub fn with_train_workers(mut self, workers: usize) -> Self {
+        self.train_workers = workers.max(1);
+        self
+    }
 }
 
 /// Result of one run.
@@ -266,6 +300,9 @@ pub struct Trainer<'e> {
 
 impl<'e> Trainer<'e> {
     pub fn new(backend: &'e dyn Backend, mut cfg: TrainerConfig) -> Result<Self> {
+        // tune the backend's data-parallel batch compute for this run
+        // (bit-identical for any count, so safe on every strategy)
+        backend.set_train_workers(cfg.train_workers.max(1));
         let info = backend.model_info(&cfg.model)?;
         let batch = info.batch;
         let eval_batch = info.eval_batch;
@@ -304,7 +341,7 @@ impl<'e> Trainer<'e> {
         // (when B / score_workers is supported); otherwise it transparently
         // falls back to the serial full-B pass warmed above.
         if let StrategyKind::Presample { score } = &cfg.strategy {
-            let sb = ScoreBackend::from_workers(cfg.score_workers);
+            let sb = score_backend(backend, cfg.score_workers, *score);
             let scorer = BackendScorer { backend, state: &state };
             if let Some(chunks) = sb.plan(&scorer, cfg.presample, *score) {
                 for (_, len) in chunks {
@@ -525,13 +562,15 @@ impl<'e> Trainer<'e> {
                             large_src.as_deref_mut().expect("presample source").next()
                         );
                         // Sharded scoring: chunks fan out to score_workers
-                        // scoped threads and merge in presample order, so
-                        // the scores (and therefore the resampled indices)
+                        // scoped threads (or, for grad norms on a backend
+                        // that shards internally, to the train worker
+                        // pool) and merge in presample order, so the
+                        // scores (and therefore the resampled indices)
                         // are bit-identical to the serial path.
                         let scores = timed!(self.timers, "score", {
                             let scorer =
                                 BackendScorer { backend: self.backend, state: &self.state };
-                            ScoreBackend::from_workers(self.cfg.score_workers)
+                            score_backend(self.backend, self.cfg.score_workers, *score)
                                 .score(&scorer, &pb.x, &pb.y, *score)
                         })?;
                         let plan = timed!(
@@ -699,6 +738,25 @@ mod tests {
     use super::*;
     use crate::coordinator::pipeline::{PipelineStats, Prefetcher};
     use crate::data::synthetic::SyntheticImages;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn gradnorm_scoring_avoids_double_sharding() {
+        // Once grad_norms is internally data-parallel on the native
+        // backend its pool is the only real parallel layer, so the outer
+        // score layer goes serial instead of funneling chunks into the
+        // same pool; with a serial inner layer — or for forward-pass
+        // scoring (serial per chunk) — the threaded outer layer stays.
+        let ne = NativeEngine::with_default_models().with_train_workers(8);
+        let threaded = ScoreBackend::Threaded { workers: 8 };
+        assert_eq!(score_backend(&ne, 8, ScoreKind::GradNorm), ScoreBackend::Serial);
+        assert_eq!(score_backend(&ne, 8, ScoreKind::UpperBound), threaded);
+        assert_eq!(score_backend(&ne, 8, ScoreKind::Loss), threaded);
+        ne.set_train_workers(2); // inner pool still governs: stay serial
+        assert_eq!(score_backend(&ne, 8, ScoreKind::GradNorm), ScoreBackend::Serial);
+        ne.set_train_workers(1); // inner layer inline: outer threads win
+        assert_eq!(score_backend(&ne, 8, ScoreKind::GradNorm), threaded);
+    }
 
     #[test]
     fn sync_sources_share_one_draw_counter() {

@@ -25,6 +25,7 @@ use crate::data::finetune::FinetuneFeatures;
 use crate::data::sequence::PermutedSequences;
 use crate::data::synthetic::SyntheticImages;
 use crate::data::{Dataset, Split};
+use crate::runtime::pool::default_train_workers;
 use crate::runtime::score::default_score_workers;
 use crate::runtime::Backend;
 
@@ -42,6 +43,9 @@ pub struct FigOptions {
     pub model: Option<String>,
     /// presample scoring workers for every training run (1 = serial)
     pub score_workers: usize,
+    /// batch-compute workers for every training run (bit-identical for
+    /// any count — see `TrainerConfig::train_workers`)
+    pub train_workers: usize,
 }
 
 impl Default for FigOptions {
@@ -53,6 +57,7 @@ impl Default for FigOptions {
             quick: false,
             model: None,
             score_workers: default_score_workers(),
+            train_workers: default_train_workers(),
         }
     }
 }
@@ -220,7 +225,9 @@ pub fn fig1_variance(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     )?;
     // train with uniform SGD (the paper measures along a normal training
     // trajectory) and measure at checkpoints
-    let cfg = TrainerConfig::uniform(&model).with_steps(steps_between as u64);
+    let cfg = TrainerConfig::uniform(&model)
+        .with_steps(steps_between as u64)
+        .with_train_workers(opts.train_workers);
     let mut trainer = Trainer::new(backend, cfg)?;
     for ck in 0..=checkpoints {
         if ck > 0 {
@@ -252,7 +259,9 @@ pub fn fig2_correlation(backend: &dyn Backend, opts: &FigOptions) -> Result<()> 
 
     // train to a reasonable state first (paper uses a trained wideresnet)
     let steps = if opts.quick { 200 } else { 2_000 };
-    let mut trainer = Trainer::new(backend, TrainerConfig::uniform(&model).with_steps(steps))?;
+    let cfg =
+        TrainerConfig::uniform(&model).with_steps(steps).with_train_workers(opts.train_workers);
+    let mut trainer = Trainer::new(backend, cfg)?;
     let _ = trainer.run(&split.train, None)?;
 
     let total = if opts.quick { 2_048 } else { 16_384 };
@@ -304,7 +313,11 @@ fn run_strategies(
         let mut switch = f64::NAN;
         for &seed in &opts.seeds {
             let split = dataset_for(backend, model, seed, opts.quick)?;
-            let mut c = cfg.clone().with_seed(seed).with_score_workers(opts.score_workers);
+            let mut c = cfg
+                .clone()
+                .with_seed(seed)
+                .with_score_workers(opts.score_workers)
+                .with_train_workers(opts.train_workers);
             c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
             let mut trainer = Trainer::new(backend, c)?;
             let report = trainer.run(&split.train, Some(&split.test))?;
@@ -426,7 +439,10 @@ pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         "method,steps,final_train_loss,final_test_err",
     )?;
     for (tag, cfg) in sgd_cfgs {
-        let cfg = cfg.with_seed(seed).with_score_workers(opts.score_workers);
+        let cfg = cfg
+            .with_seed(seed)
+            .with_score_workers(opts.score_workers)
+            .with_train_workers(opts.train_workers);
         let mut trainer = Trainer::new(backend, cfg)?;
         let report = trainer.run(&split.train, Some(&split.test))?;
         report.log.to_csv(dir.join(format!("{tag}.csv")))?;
@@ -437,11 +453,11 @@ pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         );
     }
 
-    // SVRG family
+    // SVRG family (snapshot + inner gradients shard over the same pool)
     for cfg in [
-        SvrgConfig::svrg(&model).with_budget(budget),
-        SvrgConfig::katyusha(&model).with_budget(budget),
-        SvrgConfig::scsg(&model, 1024).with_budget(budget),
+        SvrgConfig::svrg(&model).with_budget(budget).with_train_workers(opts.train_workers),
+        SvrgConfig::katyusha(&model).with_budget(budget).with_train_workers(opts.train_workers),
+        SvrgConfig::scsg(&model, 1024).with_budget(budget).with_train_workers(opts.train_workers),
     ] {
         let report = run_svrg(backend, &cfg, &split.train, Some(&split.test))?;
         report.log.to_csv(dir.join(format!("{}.csv", report.name)))?;

@@ -48,6 +48,8 @@ MODELS    pjrt: mlp10 cnn10 cnn100 finetune lstm | native: mlp10 mlp100
 STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
 FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
           --score-workers N (presample scoring threads; default = cores)
+          --train-workers N (batch-compute threads, native backend;
+                             default = cores; bit-identical for any N)
           --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
 "#;
 
@@ -64,6 +66,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.base_lr = args.flag_f64("lr", cfg.base_lr as f64)? as f32;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
     cfg.score_workers = args.flag_score_workers()?;
+    cfg.train_workers = args.flag_train_workers()?;
     cfg.eval_every_secs = args.flag_f64("eval-every", 10.0)?;
     if let Some(b) = args.flag("budget") {
         cfg = cfg.with_budget(b.parse().context("--budget")?);
@@ -112,6 +115,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         quick: args.flag_bool("quick"),
         model: args.flag("model").map(|s| s.to_string()),
         score_workers: args.flag_score_workers()?,
+        train_workers: args.flag_train_workers()?,
     };
     run_figure(backend.as_ref(), fig, &opts)
 }

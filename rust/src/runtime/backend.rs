@@ -54,6 +54,20 @@ pub trait Backend: Sync {
     /// Initialize a fresh model state per the model's parameter specs.
     fn init_state(&self, model: &str, seed: u64) -> Result<ModelState>;
 
+    /// Set the data-parallel worker count for batch-level compute
+    /// (`train_step`, `grad`, `weighted_grad`, `grad_norms`,
+    /// `eval_metrics` — `--train-workers`). Interior-mutable so a shared
+    /// backend can be retuned per run. Backends that cannot shard a batch
+    /// (PJRT executes the whole batch as one artifact call) ignore it.
+    /// Implementations must keep any worker count bit-identical to serial
+    /// — parallelism may never change a trajectory.
+    fn set_train_workers(&self, _workers: usize) {}
+
+    /// The current batch-compute worker count (1 = serial).
+    fn train_workers(&self) -> usize {
+        1
+    }
+
     /// One weighted SGD+momentum step (Eq. 2). Updates `state` in place and
     /// returns the weighted mean loss plus the per-sample loss and Eq.-20
     /// score vectors the forward pass produced for free (Alg. 1 line 15).

@@ -10,8 +10,28 @@ use anyhow::{bail, Context, Result};
 
 use super::engine::ModelState;
 use super::tensor::HostTensor;
+use crate::util::digest::{fnv1a64, fnv1a64_from};
 
 const MAGIC: &[u8; 8] = b"ISAMPLE\x01";
+
+/// Order-sensitive checksum over everything [`save`] serializes (model
+/// name, step counter, parameter and momentum tensors by bit pattern).
+/// The "final state" fingerprint the golden determinism tests and the
+/// train bench pin: two states with equal checksums trained identically,
+/// bit for bit. Hashes in streaming form — no whole-state word buffer.
+pub fn state_checksum(state: &ModelState) -> Result<u64> {
+    let mut h = fnv1a64(state.model.as_bytes().iter().map(|&b| b as u64));
+    h = fnv1a64_from(h, [state.step]);
+    for group in [&state.params, &state.mom] {
+        h = fnv1a64_from(h, [group.len() as u64]);
+        for lit in group {
+            let t = HostTensor::from_literal(lit)?;
+            h = fnv1a64_from(h, t.shape.iter().map(|&d| d as u64));
+            h = fnv1a64_from(h, t.data.iter().map(|v| v.to_bits() as u64));
+        }
+    }
+    Ok(h)
+}
 
 /// Serialize params + momentum + step counter.
 pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
@@ -139,6 +159,31 @@ mod tests {
         for (a, b) in state.mom.iter().zip(&back.mom) {
             assert_eq!(HostTensor::from_literal(a).unwrap(), HostTensor::from_literal(b).unwrap());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn state_checksum_tracks_content_and_survives_roundtrip() {
+        let state = tiny_state();
+        let base = state_checksum(&state).unwrap();
+        assert_eq!(base, state_checksum(&tiny_state()).unwrap(), "checksum must be deterministic");
+
+        let mut stepped = tiny_state();
+        stepped.step += 1;
+        assert_ne!(base, state_checksum(&stepped).unwrap());
+
+        let mut perturbed = tiny_state();
+        let mut t = HostTensor::from_literal(&perturbed.params[0]).unwrap();
+        t.data[0] += 1e-7;
+        perturbed.params[0] = t.to_literal().unwrap();
+        assert_ne!(base, state_checksum(&perturbed).unwrap());
+
+        let dir = std::env::temp_dir().join(format!("isample_ckpt_c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        save(&state, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(base, state_checksum(&back).unwrap(), "save/load must preserve the checksum");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -10,6 +10,11 @@
 //! [`ScoreBackend`] that fans `fwd_scores` / `grad_norms` chunks out to
 //! scoped worker threads and merges them in deterministic presample order.
 //!
+//! [`pool`] adds the persistent [`WorkerPool`] behind `--train-workers`:
+//! the native backend shards every batch-level entry over it using a
+//! worker-count-independent chunk plan ([`train_chunk_plan`]) with a
+//! fixed-order merge, so parallel training is bit-identical to serial.
+//!
 //! [`backend`] abstracts the execution substrate behind the [`Backend`]
 //! trait so the whole coordinator stack runs over either the PJRT engine
 //! or [`native::NativeEngine`] — the artifact-free pure-rust CPU backend
@@ -21,6 +26,7 @@ pub mod engine;
 pub mod init;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 pub mod score;
 pub mod selfcheck;
 pub mod tensor;
@@ -28,7 +34,8 @@ pub mod tensor;
 pub use backend::Backend;
 pub use engine::{clone_literals, Engine, ModelState};
 pub use manifest::{InitKind, Manifest, ModelInfo};
-pub use native::{NativeEngine, NativeModelSpec};
+pub use native::{train_chunk_plan, NativeEngine, NativeModelSpec};
+pub use pool::{default_train_workers, WorkerPool};
 pub use score::{
     default_score_workers, BackendScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
     ScoreKind,

@@ -21,11 +21,24 @@
 //! * Every entry accepts any batch size ≥ 1 — [`Backend::supports`] is
 //!   unconditional — which is why the trainer can evaluate exact partial
 //!   test shards and the resampler can use any presample B natively.
-//! * Determinism: row accumulation order is fixed (serial over rows, row
-//!   index ascending), so a fixed seed reproduces a training trajectory bit
-//!   for bit regardless of `--score-workers`.
+//! * **Data parallelism** (`--train-workers N`, default one per core):
+//!   every batch-level entry (`train_step`, `grad`, `weighted_grad`,
+//!   `grad_norms`, `eval_metrics` — and through `grad`, the host-composed
+//!   `svrg_step`) shards its batch over the engine's shared
+//!   [`WorkerPool`], spawned once per engine rather than per step.
+//! * **Determinism**: the shards come from [`train_chunk_plan`] (or
+//!   [`grad_chunk_plan`], its chunk-count-capped variant for the
+//!   gradient passes) — balanced contiguous chunks whose boundaries
+//!   depend only on the batch size, never on the worker count — each
+//!   chunk accumulates its rows serially
+//!   in index order, and partials merge in chunk order. Every
+//!   `--train-workers` value therefore produces bit-identical results
+//!   (the train-side twin of the `--score-workers` scoring guarantee),
+//!   and a fixed seed reproduces a trajectory bit for bit.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
@@ -34,8 +47,41 @@ use super::backend::Backend;
 use super::engine::{ModelState, StepOutput};
 use super::init;
 use super::manifest::{InitKind, ModelInfo, ParamSpec, Selfcheck};
-use super::score::{mlp_row_forward, row_loss, row_score, NativeScorer};
+use super::pool::{default_train_workers, Task, WorkerPool};
+use super::score::{mlp_row_forward, row_loss, row_score, split_rows, NativeScorer};
 use super::tensor::{literal_to_f32_vec, HostTensor};
+
+/// Row granularity of the deterministic train-side chunk plan. Chunks are
+/// fixed by batch size alone — never by worker count — so the partial-sum
+/// merge order is identical for every `--train-workers` value. 8 rows
+/// keeps ≥ 4-way parallelism at the paper's smallest training batch
+/// (b = 32) while per-chunk work still dwarfs pool dispatch overhead.
+pub const TRAIN_CHUNK_ROWS: usize = 8;
+
+/// The worker-count-independent chunk plan for an `n`-row batch: balanced
+/// contiguous chunks of ~[`TRAIN_CHUNK_ROWS`] rows, planned by the same
+/// [`split_rows`] planner the sharded scoring backend uses. Used by the
+/// entries whose per-chunk state is small (per-row outputs, scalar
+/// metrics).
+pub fn train_chunk_plan(n: usize) -> Vec<(usize, usize)> {
+    split_rows(n, n.div_ceil(TRAIN_CHUNK_ROWS))
+}
+
+/// Chunk-count ceiling for gradient passes, whose per-chunk partial is a
+/// full parameter-sized buffer: capping the count bounds the zero-fill +
+/// dense-merge overhead at `MAX_GRAD_CHUNKS × params` regardless of the
+/// batch size (a B = 640 `grad` call on mlp100 would otherwise churn 80
+/// full gradient buffers), while leaving headroom above any realistic
+/// core count.
+pub const MAX_GRAD_CHUNKS: usize = 16;
+
+/// The gradient-pass chunk plan: [`train_chunk_plan`] geometry, but with
+/// the chunk count capped at [`MAX_GRAD_CHUNKS`]. Still a function of the
+/// batch size alone — never of the worker count — so the fixed-order
+/// partial merge stays bit-identical for every `--train-workers` value.
+pub fn grad_chunk_plan(n: usize) -> Vec<(usize, usize)> {
+    split_rows(n, n.div_ceil(TRAIN_CHUNK_ROWS).min(MAX_GRAD_CHUNKS))
+}
 
 /// Entries the native backend implements (any batch size).
 const NATIVE_ENTRIES: &[&str] =
@@ -125,6 +171,12 @@ pub struct NativeEngine {
     pub momentum: f32,
     /// L2 weight decay applied inside `train_step` (not in `grad`).
     pub weight_decay: f32,
+    /// Batch-compute worker threads (`--train-workers`); any value is
+    /// bit-identical (see module docs).
+    train_workers: AtomicUsize,
+    /// The shared pool, built lazily on first parallel use and rebuilt
+    /// only when the worker count changes — never per step.
+    pool: Mutex<Option<Arc<WorkerPool>>>,
 }
 
 impl Default for NativeEngine {
@@ -136,7 +188,68 @@ impl Default for NativeEngine {
 impl NativeEngine {
     /// An empty registry (register specs with [`register`](Self::register)).
     pub fn new() -> Self {
-        Self { models: BTreeMap::new(), momentum: 0.9, weight_decay: 5e-4 }
+        Self {
+            models: BTreeMap::new(),
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            train_workers: AtomicUsize::new(default_train_workers()),
+            pool: Mutex::new(None),
+        }
+    }
+
+    /// Builder form of [`set_train_workers`](Self::set_train_workers).
+    pub fn with_train_workers(self, workers: usize) -> Self {
+        self.set_train_workers(workers);
+        self
+    }
+
+    /// Set the batch-compute worker count (clamped to ≥ 1). Interior
+    /// mutability so a shared backend can be retuned between runs; the
+    /// pool is rebuilt at the new size on next use.
+    pub fn set_train_workers(&self, workers: usize) {
+        let workers = workers.max(1);
+        if self.train_workers.swap(workers, Ordering::SeqCst) != workers {
+            *self.pool.lock().unwrap() = None;
+        }
+    }
+
+    pub fn train_workers(&self) -> usize {
+        self.train_workers.load(Ordering::SeqCst)
+    }
+
+    /// The shared pool at the current worker count (lazily spawned).
+    fn pool(&self) -> Arc<WorkerPool> {
+        let workers = self.train_workers();
+        let mut guard = self.pool.lock().unwrap();
+        if let Some(p) = guard.as_ref() {
+            if p.workers() == workers {
+                return Arc::clone(p);
+            }
+        }
+        let p = Arc::new(WorkerPool::new(workers));
+        *guard = Some(Arc::clone(&p));
+        p
+    }
+
+    /// Run `f(start, len)` for every chunk of the plan and return the
+    /// outputs **in chunk order**. One worker — or one chunk — runs
+    /// inline on the caller's thread; otherwise chunks fan out to the
+    /// shared pool. The output order (and therefore every downstream
+    /// reduction) never depends on the worker count.
+    fn run_chunks<T, F>(&self, chunks: &[(usize, usize)], f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        if self.train_workers() <= 1 || chunks.len() <= 1 {
+            return chunks.iter().map(|&(start, len)| f(start, len)).collect();
+        }
+        let fref = &f;
+        let tasks: Vec<Task<'_, T>> = chunks
+            .iter()
+            .map(|&(start, len)| Box::new(move || fref(start, len)) as Task<'_, T>)
+            .collect();
+        self.pool().run(tasks)
     }
 
     /// The stock registry: `mlp10` mirrors the PJRT mlp10 geometry
@@ -197,6 +310,43 @@ impl NativeEngine {
         }
         Ok(n)
     }
+
+    /// Forward + backward over the whole batch, data-parallel over the
+    /// fixed chunk plan. Each chunk accumulates its rows serially into a
+    /// private partial ([`backward_pass_range`]); partials then merge
+    /// element-wise **in chunk order** — the fixed-order reduction that
+    /// makes every worker count bit-identical.
+    fn batch_pass(
+        &self,
+        spec: &NativeModelSpec,
+        p: &[Vec<f32>; 4],
+        x: &HostTensor,
+        y: &[i32],
+        coeff: &[f32],
+    ) -> BatchPass {
+        let n = x.shape[0];
+        let chunks = grad_chunk_plan(n);
+        let outs = self.run_chunks(&chunks, |start, len| {
+            backward_pass_range(spec, p, x, y, coeff, start, len)
+        });
+        // Seed the reduction with chunk 0's partial and fold the rest in
+        // chunk order — no zero-filled accumulator, one fewer full add.
+        let mut outs = outs.into_iter();
+        let mut merged = outs.next().expect("chunk plan is never empty for n >= 1");
+        merged.loss_vec.reserve(n - merged.loss_vec.len());
+        merged.scores.reserve(n - merged.scores.len());
+        for o in outs {
+            for (gt, ot) in merged.grads.iter_mut().zip(&o.grads) {
+                for (gv, &ov) in gt.iter_mut().zip(ot) {
+                    *gv += ov;
+                }
+            }
+            merged.loss_vec.extend_from_slice(&o.loss_vec);
+            merged.scores.extend_from_slice(&o.scores);
+            merged.weighted_loss += o.weighted_loss;
+        }
+        merged
+    }
 }
 
 /// Pull the four MLP tensors (w1, b1, w2, b2) of a literal list to host.
@@ -221,7 +371,8 @@ fn lits4(info: &ModelInfo, tensors: [Vec<f32>; 4]) -> Result<Vec<Literal>> {
         .collect()
 }
 
-/// Everything one weighted forward+backward pass over a batch produces.
+/// Everything one weighted forward+backward pass over a batch (or one
+/// chunk of it) produces.
 struct BatchPass {
     /// gradients in param order (w1, b1, w2, b2)
     grads: [Vec<f32>; 4],
@@ -231,27 +382,29 @@ struct BatchPass {
     weighted_loss: f64,
 }
 
-/// Forward + backward over every row. `coeff[i]` scales row `i`'s
-/// contribution to the accumulated gradients (`1/n` for a mean gradient,
-/// `wᵢ/n` for the weighted estimators of Eq. 2). Rows accumulate serially
-/// in index order — the determinism contract of the module docs.
-fn backward_pass(
+/// Forward + backward over rows `start..start + len`. `coeff[i]` scales
+/// row `i`'s contribution to the accumulated gradients (`1/n` for a mean
+/// gradient, `wᵢ/n` for the weighted estimators of Eq. 2). Rows accumulate
+/// serially in index order into full-sized gradient buffers — one chunk of
+/// the fixed-order reduction of the module docs.
+fn backward_pass_range(
     spec: &NativeModelSpec,
     p: &[Vec<f32>; 4],
     x: &HostTensor,
     y: &[i32],
     coeff: &[f32],
+    start: usize,
+    len: usize,
 ) -> BatchPass {
     let (d, h, c) = (spec.feature_dim, spec.hidden, spec.num_classes);
-    let n = x.shape[0];
     let [w1, b1, w2, b2] = p;
     let zeros = |len: usize| vec![0.0f32; len];
     let mut grads = [zeros(d * h), zeros(h), zeros(h * c), zeros(c)];
-    let mut loss_vec = Vec::with_capacity(n);
-    let mut scores = Vec::with_capacity(n);
+    let mut loss_vec = Vec::with_capacity(len);
+    let mut scores = Vec::with_capacity(len);
     let mut weighted_loss = 0.0f64;
     let mut dh = vec![0.0f32; h];
-    for r in 0..n {
+    for r in start..start + len {
         let xr = x.row(r);
         let (hid, probs) = mlp_row_forward(w1, b1, w2, b2, xr, h, c);
         let yy = (y[r] as usize).min(c - 1);
@@ -311,6 +464,14 @@ impl Backend for NativeEngine {
         "native"
     }
 
+    fn set_train_workers(&self, workers: usize) {
+        NativeEngine::set_train_workers(self, workers);
+    }
+
+    fn train_workers(&self) -> usize {
+        NativeEngine::train_workers(self)
+    }
+
     fn model_info(&self, model: &str) -> Result<&ModelInfo> {
         Ok(&self.model(model)?.info)
     }
@@ -348,7 +509,7 @@ impl Backend for NativeEngine {
         let mut mom = host4(&state.mom, "momentum")?;
         let inv_n = 1.0 / n as f32;
         let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = backward_pass(&m.spec, &params, x, y, &coeff);
+        let pass = self.batch_pass(&m.spec, &params, x, y, &coeff);
         // Eq. 2 with the manifest's optimizer: g' = g + wd·θ;
         // v <- μ·v + g'; θ <- θ - lr·v.
         let mut params = params;
@@ -395,21 +556,32 @@ impl Backend for NativeEngine {
         let n = self.check_batch(m, x, y)?;
         let [w1, b1, w2, b2] = host4(&state.params, "parameter")?;
         let (h, c) = (m.spec.hidden, m.spec.num_classes);
+        let chunks = train_chunk_plan(n);
+        let outs = self.run_chunks(&chunks, |start, len| {
+            let mut sum_loss = 0.0f64;
+            let mut correct = 0i64;
+            for r in start..start + len {
+                let (_, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, x.row(r), h, c);
+                let yy = (y[r] as usize).min(c - 1);
+                sum_loss += row_loss(&probs, yy) as f64;
+                let argmax = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(k, _)| k)
+                    .unwrap_or(0);
+                if argmax == yy {
+                    correct += 1;
+                }
+            }
+            (sum_loss, correct)
+        });
+        // fixed-order (chunk index) merge: bit-identical for any workers
         let mut sum_loss = 0.0f64;
         let mut correct = 0i64;
-        for r in 0..n {
-            let (_, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, x.row(r), h, c);
-            let yy = (y[r] as usize).min(c - 1);
-            sum_loss += row_loss(&probs, yy) as f64;
-            let argmax = probs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(k, _)| k)
-                .unwrap_or(0);
-            if argmax == yy {
-                correct += 1;
-            }
+        for (l, k) in outs {
+            sum_loss += l;
+            correct += k;
         }
         Ok((sum_loss, correct))
     }
@@ -422,25 +594,35 @@ impl Backend for NativeEngine {
         // Per-sample gradient norm of the 2-layer MLP, exactly:
         //   ‖∇θ lossᵢ‖² = ‖gz‖²(1 + ‖h‖²) + ‖dh‖²(1 + ‖x‖²)
         // using ‖a ⊗ b‖_F = ‖a‖·‖b‖ for the outer-product weight grads.
-        let mut out = Vec::with_capacity(n);
-        for r in 0..n {
-            let xr = x.row(r);
-            let (hid, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, xr, h, c);
-            let yy = (y[r] as usize).min(c - 1);
-            let mut gz = probs;
-            gz[yy] -= 1.0;
-            let gz2: f32 = gz.iter().map(|g| g * g).sum();
-            let h2: f32 = hid.iter().map(|v| v * v).sum();
-            let x2: f32 = xr.iter().map(|v| v * v).sum();
-            let mut dh2 = 0.0f32;
-            for (j, &hj) in hid.iter().enumerate() {
-                if hj > 0.0 {
-                    let row = &w2[j * c..(j + 1) * c];
-                    let dv: f32 = row.iter().zip(&gz).map(|(&wv, &g)| wv * g).sum();
-                    dh2 += dv * dv;
+        // Per-row outputs, so chunked compute + in-order concat is
+        // trivially bit-identical for any worker count.
+        let chunks = train_chunk_plan(n);
+        let outs = self.run_chunks(&chunks, |start, len| {
+            let mut out = Vec::with_capacity(len);
+            for r in start..start + len {
+                let xr = x.row(r);
+                let (hid, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, xr, h, c);
+                let yy = (y[r] as usize).min(c - 1);
+                let mut gz = probs;
+                gz[yy] -= 1.0;
+                let gz2: f32 = gz.iter().map(|g| g * g).sum();
+                let h2: f32 = hid.iter().map(|v| v * v).sum();
+                let x2: f32 = xr.iter().map(|v| v * v).sum();
+                let mut dh2 = 0.0f32;
+                for (j, &hj) in hid.iter().enumerate() {
+                    if hj > 0.0 {
+                        let row = &w2[j * c..(j + 1) * c];
+                        let dv: f32 = row.iter().zip(&gz).map(|(&wv, &g)| wv * g).sum();
+                        dh2 += dv * dv;
+                    }
                 }
+                out.push((gz2 * (1.0 + h2) + dh2 * (1.0 + x2)).sqrt());
             }
-            out.push((gz2 * (1.0 + h2) + dh2 * (1.0 + x2)).sqrt());
+            out
+        });
+        let mut out = Vec::with_capacity(n);
+        for chunk in outs {
+            out.extend(chunk);
         }
         Ok(out)
     }
@@ -456,7 +638,7 @@ impl Backend for NativeEngine {
         let n = self.check_batch(m, x, y)?;
         let p = host4(params, "parameter")?;
         let coeff = vec![1.0 / n as f32; n];
-        let pass = backward_pass(&m.spec, &p, x, y, &coeff);
+        let pass = self.batch_pass(&m.spec, &p, x, y, &coeff);
         Ok((lits4(&m.info, pass.grads)?, pass.weighted_loss as f32))
     }
 
@@ -475,7 +657,7 @@ impl Backend for NativeEngine {
         let p = host4(&state.params, "parameter")?;
         let inv_n = 1.0 / n as f32;
         let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = backward_pass(&m.spec, &p, x, y, &coeff);
+        let pass = self.batch_pass(&m.spec, &p, x, y, &coeff);
         Ok((lits4(&m.info, pass.grads)?, pass.weighted_loss as f32))
     }
 }
@@ -620,6 +802,78 @@ mod tests {
         assert_eq!(info.num_classes, 10);
         assert_eq!(info.batch, 128);
         assert_eq!(info.presample.iter().max(), Some(&1024));
+    }
+
+    #[test]
+    fn train_chunk_plan_is_fixed_by_batch_size_alone() {
+        for n in [1, 7, 8, 9, 32, 100, 640] {
+            let plan = train_chunk_plan(n);
+            let total: usize = plan.iter().map(|&(_, len)| len).sum();
+            assert_eq!(total, n, "plan must cover all {n} rows");
+            let mut next = 0;
+            for &(start, len) in &plan {
+                assert_eq!(start, next, "chunks must be contiguous and ordered");
+                assert!((1..=TRAIN_CHUNK_ROWS).contains(&len), "chunk len {len}");
+                next = start + len;
+            }
+        }
+        assert_eq!(train_chunk_plan(1).len(), 1);
+        assert_eq!(train_chunk_plan(32).len(), 4);
+    }
+
+    #[test]
+    fn grad_chunk_plan_is_capped_and_covering() {
+        for n in [1, 8, 32, 128, 129, 640, 5000] {
+            let plan = grad_chunk_plan(n);
+            assert_eq!(plan.iter().map(|&(_, len)| len).sum::<usize>(), n);
+            assert!(plan.len() <= MAX_GRAD_CHUNKS, "{n} rows -> {} chunks", plan.len());
+            let mut next = 0;
+            for &(start, len) in &plan {
+                assert_eq!(start, next);
+                next = start + len;
+            }
+        }
+        // below the cap the geometry matches the row-wise plan exactly
+        assert_eq!(grad_chunk_plan(128), train_chunk_plan(128));
+        assert_eq!(grad_chunk_plan(640).len(), MAX_GRAD_CHUNKS);
+    }
+
+    #[test]
+    fn train_workers_setter_clamps_and_rebuilds() {
+        let ne = tiny_engine();
+        assert!(ne.train_workers() >= 1);
+        ne.set_train_workers(3);
+        assert_eq!(ne.train_workers(), 3);
+        ne.set_train_workers(0);
+        assert_eq!(ne.train_workers(), 1);
+        let ne2 = tiny_engine().with_train_workers(5);
+        assert_eq!(ne2.train_workers(), 5);
+        assert_eq!(Backend::train_workers(&ne2), 5);
+    }
+
+    #[test]
+    fn parallel_entries_are_bit_identical_to_serial() {
+        // Every batch-level entry, serial vs pooled, on a batch large
+        // enough for several chunks (37 rows -> 5 chunks) — the quick
+        // in-module version of the rust/tests/props.rs properties.
+        let run = |workers: usize| {
+            let mut ne = NativeEngine::new().with_train_workers(workers);
+            ne.register(NativeModelSpec::mlp("tiny", 6, 5, 3, 4, 8, vec![16]));
+            let mut state = ne.init_state("tiny", 12).unwrap();
+            let (x, y) = tiny_batch(37, 6, 3);
+            let w: Vec<f32> = (0..37).map(|i| 0.25 + (i % 5) as f32 * 0.5).collect();
+            let (grads, wloss) = ne.weighted_grad(&state, &x, &y, &w).unwrap();
+            let gh: Vec<Vec<f32>> = grads.iter().map(|g| literal_to_f32_vec(g).unwrap()).collect();
+            let gn = ne.grad_norms(&state, &x, &y).unwrap();
+            let (el, ec) = ne.eval_metrics(&state, &x, &y).unwrap();
+            let out = ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
+            let params = state.params_to_host().unwrap();
+            (gh, wloss.to_bits(), gn, el.to_bits(), ec, out.loss.to_bits(), params)
+        };
+        let serial = run(1);
+        for workers in [2, 3, 8] {
+            assert_eq!(run(workers), serial, "{workers} workers diverged from serial");
+        }
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! A shared, persistent worker pool for batch-level data parallelism.
+//!
+//! The sharded scoring backend (`runtime::score`) spawns scoped threads per
+//! call — fine at presample scale, where one scoring pass dwarfs thread
+//! spawn. The training hot path is different: `train_step` runs thousands
+//! of times per budget on batches an order of magnitude smaller than `B`,
+//! so per-call spawns would eat the parallel win. [`WorkerPool`] spawns its
+//! threads **once** (per [`NativeEngine`](super::native::NativeEngine),
+//! lazily) and feeds them jobs over a channel for the life of the engine.
+//!
+//! [`WorkerPool::run`] executes a batch of tasks that may borrow from the
+//! caller's stack and returns their outputs **in task order**. It provides
+//! the scoped-thread guarantee on persistent threads: `run` does not return
+//! until every submitted task has completed (it collects exactly one
+//! completion per task, and panics are caught inside the job wrapper and
+//! re-raised on the caller after the barrier), so no borrow handed to a
+//! task can outlive the call. That guarantee is what makes the contained
+//! lifetime erasure in `run` sound.
+//!
+//! Determinism note: which worker executes which task is scheduling-
+//! dependent, but outputs are keyed by task index and reassembled in task
+//! order, so callers that reduce outputs in that fixed order are
+//! bit-identical for every worker count — the contract `runtime::native`
+//! builds on.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Training-side workers to use when the user does not say: one per core
+/// — delegating to
+/// [`default_score_workers`](super::score::default_score_workers) so the
+/// two defaults can never drift apart.
+pub fn default_train_workers() -> usize {
+    super::score::default_score_workers()
+}
+
+/// A unit of work submitted to [`WorkerPool::run`]; may borrow from the
+/// caller's stack for the duration of that call.
+pub type Task<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// A type-erased job as the worker threads see it.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker threads fed over a shared channel. See module docs.
+pub struct WorkerPool {
+    workers: usize,
+    /// `Mutex` (not a bare `Sender`) so the pool is `Sync` on every
+    /// toolchain; `run` clones the sender once per call.
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` threads that idle on the job channel.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&rx))
+            })
+            .collect();
+        Self { workers, tx: Mutex::new(Some(tx)), handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task to completion on the pool and return the outputs in
+    /// task order. Blocks until all tasks are done; a panicking task is
+    /// re-raised here (after the barrier, so borrows stay sound and the
+    /// pool stays usable).
+    pub fn run<'env, T: Send + 'env>(&self, tasks: Vec<Task<'env, T>>) -> Vec<T> {
+        let n = tasks.len();
+        let tx = self.tx.lock().unwrap().clone().expect("worker pool already shut down");
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(task));
+                // the receiver outlives the send (run() is still in its
+                // collection loop); a failed send can only mean the caller
+                // already panicked, so drop the result on the floor
+                let _ = rtx.send((i, out));
+            });
+            // SAFETY: `run` neither returns nor unwinds before the loop
+            // below has received one completion per submitted task, and
+            // workers drop a job as soon as it finishes — so nothing
+            // borrowed by `job` outlives this call. This is the
+            // std::thread::scope guarantee, provided by the completion
+            // barrier instead of a join; invariant violations inside the
+            // window abort instead of unwinding (see [`die`]).
+            let job = unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job) };
+            if tx.send(job).is_err() {
+                die("job channel closed mid-submission");
+            }
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<std::thread::Result<T>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = match rrx.recv() {
+                Ok(v) => v,
+                Err(_) => die("completion channel closed mid-barrier"),
+            };
+            slots[i] = Some(out);
+        }
+        // barrier passed: every borrow is released; now surface any panic
+        let mut outs = Vec::with_capacity(n);
+        let mut panicked: Option<Box<dyn std::any::Any + Send>> = None;
+        for slot in slots {
+            match slot.expect("completion barrier left an empty slot") {
+                Ok(v) => outs.push(v),
+                Err(p) => panicked = Some(p),
+            }
+        }
+        if let Some(p) = panicked {
+            resume_unwind(p);
+        }
+        outs
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel makes every idle worker's recv() fail -> exit
+        self.tx.lock().unwrap().take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Invariant-violation guard for the windows where tasks queued on the
+/// pool still borrow the caller's stack: unwinding out of [`WorkerPool::run`]
+/// there would free frames live jobs reference (use-after-free), so a
+/// broken channel — unreachable today, but cheap to guard — is fatal.
+fn die(msg: &str) -> ! {
+    eprintln!("WorkerPool invariant violated: {msg}; aborting");
+    std::process::abort();
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // hold the lock only for the dequeue, never while running the job
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // pool dropped
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_come_back_in_task_order() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        let tasks: Vec<Task<usize>> =
+            (0..17).map(|i| Box::new(move || i * i) as Task<usize>).collect();
+        let out = pool.run(tasks);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_may_borrow_from_the_caller() {
+        let pool = WorkerPool::new(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let chunks: Vec<&[u64]> = data.chunks(137).collect();
+        let tasks: Vec<Task<u64>> =
+            chunks.iter().map(|c| Box::new(move || c.iter().sum()) as Task<u64>).collect();
+        let total: u64 = pool.run(tasks).iter().sum();
+        assert_eq!(total, data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn empty_task_list_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        let out: Vec<u32> = pool.run(vec![]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_pool_still_completes_many_tasks() {
+        let pool = WorkerPool::new(1);
+        let tasks: Vec<Task<usize>> = (0..8).map(|i| Box::new(move || i) as Task<usize>).collect();
+        assert_eq!(pool.run(tasks), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panics_propagate_and_the_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Task<u32>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("task exploded")),
+            Box::new(|| 3),
+        ];
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+        assert!(caught.is_err(), "panic must cross the barrier");
+        // the pool must keep working afterwards
+        let ok: Vec<Task<u32>> = vec![Box::new(|| 7), Box::new(|| 9)];
+        assert_eq!(pool.run(ok), vec![7, 9]);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let tasks: Vec<Task<u8>> = vec![Box::new(|| 5)];
+        assert_eq!(pool.run(tasks), vec![5]);
+    }
+
+    #[test]
+    fn default_train_workers_is_positive() {
+        assert!(default_train_workers() >= 1);
+    }
+}

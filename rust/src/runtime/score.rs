@@ -379,8 +379,16 @@ impl ScoreBackend {
 }
 
 /// Split `rows` into `workers` contiguous chunks, balanced to within one
-/// row, in presample order.
-fn split_rows(rows: usize, workers: usize) -> Vec<(usize, usize)> {
+/// row, in row order; zero rows (or zero workers) yield an empty plan.
+/// This is the shared chunk planner: the threaded scoring backend plans
+/// one chunk per worker with it, and the native training backend's
+/// worker-count-independent plan
+/// ([`train_chunk_plan`](super::native::train_chunk_plan)) reuses it so
+/// train-side sharding follows the exact same geometry.
+pub fn split_rows(rows: usize, workers: usize) -> Vec<(usize, usize)> {
+    if rows == 0 || workers == 0 {
+        return vec![];
+    }
     let base = rows / workers;
     let rem = rows % workers;
     let mut out = Vec::with_capacity(workers);
@@ -457,10 +465,13 @@ mod tests {
         check::<Engine>();
         check::<ModelState>();
         check::<NativeScorer>();
+        check::<NativeEngine>(); // owns a WorkerPool behind Mutex/Atomic
     }
 
     #[test]
     fn split_rows_is_balanced_and_ordered() {
+        assert!(split_rows(0, 4).is_empty());
+        assert!(split_rows(16, 0).is_empty());
         for (rows, workers) in [(640, 4), (641, 4), (7, 3), (5, 8), (1, 2)] {
             let chunks = split_rows(rows, workers);
             let total: usize = chunks.iter().map(|&(_, len)| len).sum();

@@ -1,0 +1,77 @@
+//! Tiny order-sensitive digests (FNV-1a over 64-bit words) for pinning
+//! bit-exact trajectories and states — the golden artifacts of the
+//! determinism contract (`--score-workers` / `--train-workers` must never
+//! change a result). No hashing crates exist offline, so the repo carries
+//! the 15-line classic. Not cryptographic; collision resistance is
+//! irrelevant here — a digest only ever compares two runs of the same
+//! shape, where any divergence flips bits long before it finds an FNV
+//! collision.
+
+/// FNV-1a offset basis (the digest of an empty stream).
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// FNV-1a over a stream of 64-bit words (little-endian byte order).
+pub fn fnv1a64(words: impl IntoIterator<Item = u64>) -> u64 {
+    fnv1a64_from(FNV_OFFSET, words)
+}
+
+/// Continue an FNV-1a digest from a prior state — streaming form, so
+/// composite structures can be hashed part by part without materializing
+/// one big word buffer: `fnv1a64_from(fnv1a64(a), b) == fnv1a64(a ++ b)`.
+pub fn fnv1a64_from(state: u64, words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = state;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Digest of an f32 slice by bit pattern, order-sensitive — equal digests
+/// ⇔ bitwise-equal vectors (up to FNV collisions).
+pub fn digest_f32(vals: &[f32]) -> u64 {
+    fnv1a64(vals.iter().map(|v| v.to_bits() as u64))
+}
+
+/// Digest of an f64 stream by bit pattern, order-sensitive (loss
+/// trajectories are logged as f64).
+pub fn digest_f64(vals: impl IntoIterator<Item = f64>) -> u64 {
+    fnv1a64(vals.into_iter().map(f64::to_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stream_is_the_offset_basis() {
+        assert_eq!(fnv1a64([]), FNV_OFFSET);
+        assert_eq!(digest_f32(&[]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn digests_are_order_and_value_sensitive() {
+        let a = digest_f32(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, digest_f32(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, digest_f32(&[1.0, 3.0, 2.0]));
+        assert_ne!(a, digest_f32(&[1.0, 2.0]));
+        assert_ne!(a, digest_f32(&[1.0, 2.0, 3.0000002]));
+    }
+
+    #[test]
+    fn streaming_form_composes() {
+        let all = fnv1a64([1, 2, 3, 4]);
+        assert_eq!(fnv1a64_from(fnv1a64([1, 2]), [3, 4]), all);
+        assert_eq!(fnv1a64_from(fnv1a64_from(fnv1a64([1]), [2, 3]), [4]), all);
+    }
+
+    #[test]
+    fn f32_digest_distinguishes_signed_zero_and_f64_matches_bits() {
+        // bitwise, not value, comparison: -0.0 != 0.0 here by design
+        assert_ne!(digest_f32(&[0.0]), digest_f32(&[-0.0]));
+        assert_eq!(digest_f64([1.5]), fnv1a64([1.5f64.to_bits()]));
+    }
+}

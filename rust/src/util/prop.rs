@@ -15,6 +15,23 @@
 //!     assert_eq!(v, w);
 //! });
 //! ```
+//!
+//! # Replaying a failing case
+//!
+//! A failure panics with `... failed on case N (seed 0x…)`. Two ways to
+//! re-run exactly that case:
+//!
+//! 1. **In code** — call [`replay`] with the reported seed and the same
+//!    property body: `replay(0x5eed_0000_1234_abcd, |g| { ... })`. Replay
+//!    is exact: [`Gen`] is a pure function of the seed.
+//! 2. **From the shell** — set `ISAMPLE_PROP_SEED` to the reported seed
+//!    (hex `0x…` or decimal) and re-run the test. Every [`check`] in the
+//!    process then runs *only* that seed (once) instead of its sweep, so
+//!    scope the variable to a single `cargo test <test_name>` invocation:
+//!
+//!    ```text
+//!    ISAMPLE_PROP_SEED=0x5eed000012345678 cargo test -q prop_name
+//!    ```
 
 use super::rng::SplitMix64;
 use std::ops::Range;
@@ -70,26 +87,67 @@ impl Gen {
         }
         v
     }
+
+    /// Non-negative importance-weight vector normalized to mean 1 (the
+    /// scale Eq.-2 weights arrive at), with the same degenerate-regime
+    /// injection as [`scores`](Self::scores) — heavy outliers and runs of
+    /// exact zeros — plus, ~1/16 of the time, an *all-zero* vector (a
+    /// fully masked batch), in which case no normalization applies.
+    pub fn weights(&mut self, len: Range<usize>) -> Vec<f32> {
+        let mut v = self.scores(len);
+        if !v.is_empty() && self.rng.below(16) == 0 {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let sum: f32 = v.iter().sum();
+        if sum > 0.0 {
+            let scale = v.len() as f32 / sum;
+            for x in v.iter_mut() {
+                *x *= scale;
+            }
+        }
+        v
+    }
 }
 
 /// Run `prop` for `cases` generated cases. Panics (with the reproducing
-/// seed) if any case panics.
+/// seed) if any case panics. With `ISAMPLE_PROP_SEED` set, runs the
+/// property once on exactly that seed instead of the sweep (see the
+/// module docs on replaying failures).
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    if let Some(seed) = replay_seed_from_env() {
+        eprintln!("property {name:?}: replaying seed {seed:#x} (ISAMPLE_PROP_SEED)");
+        run_case(name, "replay", seed, &prop);
+        return;
+    }
     for case in 0..cases {
-        // Decorrelate case seeds; fixed base keeps CI deterministic.
-        let seed = 0x5EED_0000_0000_0000u64.wrapping_add(case.wrapping_mul(0x9E37_79B9));
-        let result = std::panic::catch_unwind(|| {
-            let mut g = Gen::new(seed);
-            prop(&mut g);
-        });
-        if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
-        }
+        run_case(name, &format!("case {case}"), case_seed(case), &prop);
+    }
+}
+
+/// The sweep's seed schedule: decorrelated per-case seeds off a fixed
+/// base, so CI stays deterministic.
+fn case_seed(case: u64) -> u64 {
+    0x5EED_0000_0000_0000u64.wrapping_add(case.wrapping_mul(0x9E37_79B9))
+}
+
+/// One property case under the panic wrapper that reports the reproducing
+/// seed — shared by the sweep and the env-var replay path, so both fail
+/// with the same `property ... (seed ...)` context.
+fn run_case<F>(name: &str, what: &str, seed: u64, prop: &F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+    });
+    if let Err(payload) = result {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        panic!("property {name:?} failed on {what} (seed {seed:#x}): {msg}");
     }
 }
 
@@ -97,6 +155,28 @@ pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUn
 pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
     let mut g = Gen::new(seed);
     prop(&mut g);
+}
+
+/// Parse a replay seed: hex with an `0x`/`0X` prefix or decimal, with
+/// optional `_` separators.
+fn parse_replay_seed(v: &str) -> Option<u64> {
+    let v = v.trim().replace('_', "");
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
+}
+
+fn replay_seed_from_env() -> Option<u64> {
+    let v = std::env::var("ISAMPLE_PROP_SEED").ok()?;
+    match parse_replay_seed(&v) {
+        Some(seed) => Some(seed),
+        // an explicitly-set but unparseable seed must fail loudly — a
+        // silent fall-through to the normal sweep would let a typo look
+        // like a successful replay of the failing case
+        None => panic!("ISAMPLE_PROP_SEED set but unparseable: {v:?} (hex 0x… or decimal)"),
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +202,41 @@ mod tests {
             let s = g.scores(1..64);
             assert!(s.iter().all(|&x| x >= 0.0));
         });
+    }
+
+    #[test]
+    fn weights_are_nonnegative_and_mean_one_unless_all_zero() {
+        let mut saw_zero_vector = false;
+        check("weights generator", 400, |g| {
+            let w = g.weights(1..64);
+            assert!(!w.is_empty());
+            assert!(w.iter().all(|&x| x >= 0.0 && x.is_finite()));
+            let sum: f32 = w.iter().sum();
+            if sum > 0.0 {
+                let mean = sum / w.len() as f32;
+                assert!((mean - 1.0).abs() < 1e-3, "weights mean {mean} != 1");
+            }
+        });
+        // the all-zero degenerate regime must actually occur in a sweep
+        // (same seed schedule check() itself walks)
+        for case in 0..400u64 {
+            let mut g = Gen::new(case_seed(case));
+            if g.weights(1..64).iter().all(|&x| x == 0.0) {
+                saw_zero_vector = true;
+                break;
+            }
+        }
+        assert!(saw_zero_vector, "zero-weight injection never fired in 400 cases");
+    }
+
+    #[test]
+    fn replay_seed_parsing() {
+        assert_eq!(parse_replay_seed("0x5eed"), Some(0x5EED));
+        assert_eq!(parse_replay_seed("0X5EED_0000"), Some(0x5EED_0000));
+        assert_eq!(parse_replay_seed(" 1234 "), Some(1234));
+        assert_eq!(parse_replay_seed("12_34"), Some(1234));
+        assert_eq!(parse_replay_seed("not a seed"), None);
+        assert_eq!(parse_replay_seed(""), None);
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! Property-based tests over coordinator invariants (no artifacts needed —
 //! these cover the pure-rust layers under randomized inputs, with failing
-//! seeds reported for replay).
+//! seeds reported for replay — see `util::prop`'s module docs).
+//!
+//! The `prop_native_*` block pins the `--train-workers` determinism
+//! contract: every data-parallel batch entry of the native backend must be
+//! bit-identical to its serial run over randomized shapes, weights and
+//! worker counts (1..=8), including the degenerate regimes — batch 1,
+//! batch smaller than the worker count, and all-zero weight vectors.
 
 use isample::coordinator::resample::{importance_weights, AliasSampler, CumulativeSampler};
 use isample::coordinator::sampler::resample_from_scores;
@@ -8,10 +14,115 @@ use isample::coordinator::tau::{cost_model, TauEstimator};
 use isample::data::sequence::PermutedSequences;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
+use isample::runtime::checkpoint::state_checksum;
+use isample::runtime::tensor::HostTensor;
+use isample::runtime::{Backend, NativeEngine, NativeModelSpec};
+use isample::util::digest::digest_f32;
 use isample::util::json::Json;
 use isample::util::prop::{check, Gen};
 use isample::util::rng::SplitMix64;
 use isample::util::stats::normalize_probs;
+
+/// A fresh engine with one random-geometry MLP and `workers` batch-compute
+/// threads (the model's default batch sizes are irrelevant: the native
+/// entries take any batch).
+fn native_engine(d: usize, h: usize, c: usize, workers: usize) -> NativeEngine {
+    let mut ne = NativeEngine::new().with_train_workers(workers);
+    ne.register(NativeModelSpec::mlp("p", d, h, c, 8, 8, vec![]));
+    ne
+}
+
+/// Random batch: features in [-1, 1), labels in 0..c.
+fn native_batch(g: &mut Gen, n: usize, d: usize, c: usize) -> (HostTensor, Vec<i32>) {
+    let data: Vec<f32> = (0..n * d).map(|_| g.f32_in(-1.0..1.0)).collect();
+    let y: Vec<i32> = (0..n).map(|_| g.usize_in(0..c) as i32).collect();
+    (HostTensor::new(vec![n, d], data), y)
+}
+
+/// Random dims + batch + worker count for the parallel-vs-serial props.
+/// `n` spans 1..40, deliberately crossing batch == 1, batch < workers and
+/// batch < chunk size; `workers` spans 2..=8 (1 is the reference side).
+fn parallel_case(g: &mut Gen) -> (usize, usize, usize, usize, usize, u64) {
+    let d = g.usize_in(2..24);
+    let h = g.usize_in(2..16);
+    let c = g.usize_in(2..8);
+    let n = g.usize_in(1..40);
+    let workers = g.usize_in(2..9);
+    let seed = g.rng.next_u64();
+    (d, h, c, n, workers, seed)
+}
+
+fn literal_digests(lits: &[xla::Literal]) -> Vec<u64> {
+    lits.iter().map(|l| digest_f32(&HostTensor::from_literal(l).unwrap().data)).collect()
+}
+
+#[test]
+fn prop_native_train_step_parallel_is_bit_identical() {
+    check("train_step parallel==serial", 15, |g: &mut Gen| {
+        let (d, h, c, n, workers, seed) = parallel_case(g);
+        let (x, y) = native_batch(g, n, d, c);
+        let mut w = g.weights(n..n + 1);
+        if g.rng.below(6) == 0 {
+            w = vec![0.0; n]; // fully masked batch: update is decay-only
+        }
+        let lr = g.f32_in(0.01..0.3);
+        let run = |workers: usize| {
+            let ne = native_engine(d, h, c, workers);
+            let mut state = ne.init_state("p", seed).unwrap();
+            let out1 = ne.train_step(&mut state, &x, &y, &w, lr).unwrap();
+            // a second step so momentum feeds back through the merge too
+            let out2 = ne.train_step(&mut state, &x, &y, &w, lr).unwrap();
+            (
+                state_checksum(&state).unwrap(),
+                out1.loss.to_bits(),
+                digest_f32(&out1.loss_vec),
+                digest_f32(&out1.scores),
+                out2.loss.to_bits(),
+            )
+        };
+        assert_eq!(run(1), run(workers), "n={n} workers={workers}");
+    });
+}
+
+#[test]
+fn prop_native_weighted_grad_and_svrg_parallel_is_bit_identical() {
+    check("weighted_grad/svrg parallel==serial", 15, |g: &mut Gen| {
+        let (d, h, c, n, workers, seed) = parallel_case(g);
+        let (x, y) = native_batch(g, n, d, c);
+        let mut w = g.weights(n..n + 1);
+        if g.rng.below(6) == 0 {
+            w = vec![0.0; n];
+        }
+        let run = |workers: usize| {
+            let ne = native_engine(d, h, c, workers);
+            let state = ne.init_state("p", seed).unwrap();
+            let (grads, wloss) = ne.weighted_grad(&state, &x, &y, &w).unwrap();
+            // the host-composed svrg_step runs two parallel `grad` calls;
+            // reuse the weighted grads as the control-variate term mu
+            let mut params = state.clone_params().unwrap();
+            let snap = state.clone_params().unwrap();
+            let sloss = ne.svrg_step("p", &mut params, &snap, &grads, &x, &y, 0.05).unwrap();
+            (literal_digests(&grads), wloss.to_bits(), literal_digests(&params), sloss.to_bits())
+        };
+        assert_eq!(run(1), run(workers), "n={n} workers={workers}");
+    });
+}
+
+#[test]
+fn prop_native_grad_norms_and_eval_parallel_is_bit_identical() {
+    check("grad_norms/eval parallel==serial", 15, |g: &mut Gen| {
+        let (d, h, c, n, workers, seed) = parallel_case(g);
+        let (x, y) = native_batch(g, n, d, c);
+        let run = |workers: usize| {
+            let ne = native_engine(d, h, c, workers);
+            let state = ne.init_state("p", seed).unwrap();
+            let gn = ne.grad_norms(&state, &x, &y).unwrap();
+            let (sum_loss, correct) = ne.eval_metrics(&state, &x, &y).unwrap();
+            (digest_f32(&gn), sum_loss.to_bits(), correct)
+        };
+        assert_eq!(run(1), run(workers), "n={n} workers={workers}");
+    });
+}
 
 #[test]
 fn prop_alias_and_cdf_agree_in_distribution() {
