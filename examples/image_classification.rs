@@ -3,7 +3,7 @@
 //! prints the equal-time comparison the paper's Fig. 3 plots.
 //!
 //! With AOT artifacts the PJRT convnets run; without them the native
-//! backend runs its MLP stand-ins (mlp10 / mlp100).
+//! backend runs its layer-IR stand-ins (mlp10 and the conv10 convnet).
 //!
 //! ```bash
 //! cargo run --release --example image_classification -- [budget_secs] [model] [train_workers]

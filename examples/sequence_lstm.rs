@@ -1,10 +1,12 @@
-//! Sequence classification with an LSTM (§4.4, permuted pixel-by-pixel
-//! stand-in): the generality check — the same Algorithm 1 pipeline, no
-//! architecture-specific changes, on a recurrent model. Prints the Fig.-5
+//! Sequence classification (§4.4, permuted pixel-by-pixel stand-in): the
+//! generality check — the same Algorithm 1 pipeline, no
+//! architecture-specific changes, on a sequence model. Prints the Fig.-5
 //! comparison (where the paper shows loss-based sampling actively *hurts*).
 //!
-//! The `lstm` model is PJRT-only (needs AOT artifacts); the autodetect
-//! fallback reports a clear error listing native models otherwise.
+//! With AOT artifacts the paper's `lstm` runs on PJRT; without them the
+//! native backend runs `seq64`, its EmbeddingBag layer-IR sequence net,
+//! over the same permuted-raster dataset — so this example works out of
+//! the box.
 //!
 //! ```bash
 //! cargo run --release --example sequence_lstm -- [budget_secs]

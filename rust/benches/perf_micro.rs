@@ -13,7 +13,8 @@
 //! (`--out-json PATH` to relocate) — the per-PR perf trajectory artifact.
 //!
 //! The `train/` section runs real end-to-end Algorithm-1 training on the
-//! native CPU backend (uniform and upper-bound at equal step counts)
+//! native CPU backend (uniform and upper-bound at equal step counts, on
+//! both the mlp10 MLP and the conv10 layer-IR convnet)
 //! across a `--train-workers` scaling sweep (1/2/4/cores by default;
 //! `--train-workers N` narrows it to {1, N} — CI's worker matrix),
 //! asserts every parallel run is bit-identical to serial (trajectory
@@ -199,56 +200,63 @@ fn main() -> anyhow::Result<()> {
         };
         let split =
             SyntheticImages::builder(64, 10).samples(8_192).test_samples(1_024).seed(3).split();
-        for (tag, base) in [
-            ("uniform", TrainerConfig::uniform("mlp10")),
-            (
-                "upper_bound",
-                TrainerConfig::upper_bound("mlp10").with_presample(384).with_tau_th(1.2),
-            ),
-        ] {
-            // (trajectory digest, state checksum) of the serial run — the
-            // reference every parallel worker count must reproduce
-            let mut reference: Option<(u64, u64)> = None;
-            let mut serial_sps = f64::NAN;
-            for &workers in &sweep {
-                let cfg = base
-                    .clone()
-                    .with_steps(steps)
-                    .with_seed(17)
-                    .with_score_workers(args.flag_score_workers()?)
-                    .with_train_workers(workers);
-                let mut trainer = Trainer::new(&native, cfg)?;
-                let report = trainer.run(&split.train, None)?;
-                let traj = digest_f64(report.log.rows.iter().map(|r| r.train_loss));
-                let state = state_checksum(&trainer.state)?;
-                if let Some(r) = reference {
-                    assert_eq!(
-                        (traj, state),
-                        r,
-                        "train/{tag}: {workers}-worker run diverged from serial"
-                    );
-                } else {
-                    reference = Some((traj, state));
-                }
-                let sps = report.steps as f64 / report.wall_secs.max(1e-9);
-                if workers == 1 {
-                    serial_sps = sps;
-                    suite.metric(&format!("{tag}_final_train_loss"), report.final_train_loss);
-                }
-                println!(
-                    "train/native_mlp10_{tag}_w{workers}: {} steps -> {sps:.1} steps/s \
-                     ({:.2}x vs serial, final loss {:.4}, IS@{:?})",
-                    report.steps,
-                    sps / serial_sps.max(1e-9),
-                    report.final_train_loss,
-                    report.is_switch_step
-                );
-                suite.metric(&format!("{tag}_w{workers}_steps_per_sec"), sps);
-                if workers > 1 {
-                    suite.metric(
-                        &format!("{tag}_speedup_w{workers}_vs_serial"),
+        // Two architectures through the same harness: the mlp10 stand-in
+        // (metric names unchanged for cross-PR comparability) and the
+        // conv10 layer-IR convnet (metrics prefixed `conv10_`), so the
+        // BENCH_train.json trajectory stops being MLP-only.
+        for (prefix, model) in [("", "mlp10"), ("conv10_", "conv10")] {
+            for (tag, base) in [
+                ("uniform", TrainerConfig::uniform(model)),
+                (
+                    "upper_bound",
+                    TrainerConfig::upper_bound(model).with_presample(384).with_tau_th(1.2),
+                ),
+            ] {
+                // (trajectory digest, state checksum) of the serial run —
+                // the reference every parallel worker count must reproduce
+                let mut reference: Option<(u64, u64)> = None;
+                let mut serial_sps = f64::NAN;
+                for &workers in &sweep {
+                    let cfg = base
+                        .clone()
+                        .with_steps(steps)
+                        .with_seed(17)
+                        .with_score_workers(args.flag_score_workers()?)
+                        .with_train_workers(workers);
+                    let mut trainer = Trainer::new(&native, cfg)?;
+                    let report = trainer.run(&split.train, None)?;
+                    let traj = digest_f64(report.log.rows.iter().map(|r| r.train_loss));
+                    let state = state_checksum(&trainer.state)?;
+                    if let Some(r) = reference {
+                        assert_eq!(
+                            (traj, state),
+                            r,
+                            "train/{model}/{tag}: {workers}-worker run diverged from serial"
+                        );
+                    } else {
+                        reference = Some((traj, state));
+                    }
+                    let sps = report.steps as f64 / report.wall_secs.max(1e-9);
+                    if workers == 1 {
+                        serial_sps = sps;
+                        let name = format!("{prefix}{tag}_final_train_loss");
+                        suite.metric(&name, report.final_train_loss);
+                    }
+                    println!(
+                        "train/native_{model}_{tag}_w{workers}: {} steps -> {sps:.1} steps/s \
+                         ({:.2}x vs serial, final loss {:.4}, IS@{:?})",
+                        report.steps,
                         sps / serial_sps.max(1e-9),
+                        report.final_train_loss,
+                        report.is_switch_step
                     );
+                    suite.metric(&format!("{prefix}{tag}_w{workers}_steps_per_sec"), sps);
+                    if workers > 1 {
+                        suite.metric(
+                            &format!("{prefix}{tag}_speedup_w{workers}_vs_serial"),
+                            sps / serial_sps.max(1e-9),
+                        );
+                    }
                 }
             }
         }

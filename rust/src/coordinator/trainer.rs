@@ -28,7 +28,7 @@ use anyhow::{bail, Result};
 use crate::data::Dataset;
 use crate::runtime::pool::default_train_workers;
 use crate::runtime::score::{default_score_workers, BackendScorer, ScoreBackend};
-use crate::runtime::{Backend, ModelState};
+use crate::runtime::{Backend, ModelInfo, ModelState};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::{PhaseTimers, Stopwatch};
 
@@ -270,6 +270,23 @@ impl TrainerConfig {
         self.train_workers = workers.max(1);
         self
     }
+
+    /// The scoring entry (and batch size) this strategy needs beyond
+    /// `train_step`, with `presample == 0` resolved to the model's largest
+    /// advertised B — the exact resolution [`Trainer::new`] applies. One
+    /// policy shared by the trainer's fail-fast check and the figure
+    /// harnesses' `SKIP` gates, so the two can never drift.
+    pub fn scoring_requirement(&self, info: &ModelInfo) -> Option<(&'static str, usize)> {
+        let default_b = info.presample.iter().copied().max().unwrap_or(info.batch);
+        match &self.strategy {
+            StrategyKind::Presample { score } => {
+                let b = if self.presample == 0 { default_b } else { self.presample };
+                Some((score.entry(), b))
+            }
+            StrategyKind::LoshchilovHutter { .. } => Some(("fwd_scores", info.batch)),
+            _ => None,
+        }
+    }
 }
 
 /// Result of one run.
@@ -309,15 +326,13 @@ impl<'e> Trainer<'e> {
         if cfg.presample == 0 {
             cfg.presample = info.presample.iter().copied().max().unwrap_or(batch);
         }
-        if let StrategyKind::Presample { score } = &cfg.strategy {
-            // fail fast if the backend cannot score at the requested B
-            // (PJRT: no baked artifact; native: always fine)
-            if !backend.supports(&cfg.model, score.entry(), cfg.presample)? {
+        if let Some((entry, b)) = cfg.scoring_requirement(info) {
+            // fail fast if the backend cannot run the strategy's scoring
+            // entry (PJRT: no baked artifact; native: always fine)
+            if !backend.supports(&cfg.model, entry, b)? {
                 bail!(
-                    "{} backend cannot run {} at presample {} for model {:?}",
+                    "{} backend cannot run {entry} at batch {b} for model {:?}",
                     backend.name(),
-                    score.entry(),
-                    cfg.presample,
                     cfg.model
                 );
             }

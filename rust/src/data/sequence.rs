@@ -39,6 +39,17 @@ impl PermutedSequencesBuilder {
         self
     }
 
+    /// Fractions of easy/boundary samples (the remainder is outliers) —
+    /// the same difficulty-tier control `SyntheticImages` exposes, so
+    /// sequence tasks can be tuned into the paper's
+    /// informative-minority regime.
+    pub fn tiers(mut self, easy: f64, boundary: f64) -> Self {
+        assert!(easy >= 0.0 && boundary >= 0.0 && easy + boundary <= 1.0);
+        self.easy_frac = easy;
+        self.boundary_frac = boundary;
+        self
+    }
+
     pub fn build(self) -> PermutedSequences {
         PermutedSequences::new(self, 0)
     }

@@ -21,6 +21,7 @@ use crate::analysis::variance::{measure_at_state, VarianceConfig};
 use crate::baselines::svrg::{run_svrg, SvrgConfig};
 use crate::coordinator::metrics::CsvSink;
 use crate::coordinator::trainer::{Trainer, TrainerConfig};
+use crate::coordinator::StrategyKind;
 use crate::data::finetune::FinetuneFeatures;
 use crate::data::sequence::PermutedSequences;
 use crate::data::synthetic::SyntheticImages;
@@ -123,7 +124,7 @@ pub fn dataset_for(
     let (d, c) = (info.feature_dim, info.num_classes);
     let scale = if quick { 4 } else { 1 };
     Ok(match model {
-        "mlp10" | "mlp100" | "cnn10" | "cnn100" => {
+        "mlp10" | "mlp100" | "cnn10" | "cnn100" | "conv10" => {
             // The cnn/mlp100 workloads are tuned into the paper's regime:
             // training stays gradient-noise-limited for the whole budget
             // (CIFAR with a wideresnet never reaches ~zero train loss in
@@ -150,7 +151,7 @@ pub fn dataset_for(
                 .split();
             Split { train: AnyDataset::Finetune(s.train), test: AnyDataset::Finetune(s.test) }
         }
-        "lstm" => {
+        "lstm" | "seq64" => {
             let s = PermutedSequences::builder(d, c)
                 .samples(8_192 / scale)
                 .test_samples(1_024)
@@ -169,13 +170,44 @@ fn fig_dir(opts: &FigOptions, fig: &str) -> Result<PathBuf> {
 }
 
 /// The model a figure defaults to when the caller does not pick one: the
-/// paper's CIFAR-100 convnet on PJRT, its native MLP stand-in otherwise.
+/// paper's architecture on PJRT, its native stand-in otherwise.
 fn default_model(backend: &dyn Backend, pjrt: &str, native: &str) -> String {
     if backend.name() == "native" {
         native.into()
     } else {
         pjrt.into()
     }
+}
+
+/// One-line notice for a figure (or one strategy of it) gated off by
+/// [`Backend::supports`] — announced instead of silently writing nothing.
+fn skip_notice(backend: &dyn Backend, fig: &str, model: &str, entry: &str, batch: usize) {
+    println!("SKIP {fig} {model}: {entry}@{batch} unsupported on backend {}", backend.name());
+}
+
+/// Like [`skip_notice`] for models absent from the backend's registry.
+fn skip_unknown_model(backend: &dyn Backend, fig: &str, model: &str, entry: &str) {
+    println!(
+        "SKIP {fig} {model}: {entry} unsupported on backend {} (model not registered)",
+        backend.name()
+    );
+}
+
+/// True when `entry@batch` can run; prints the SKIP notice and returns
+/// false otherwise. Unknown models count as unsupported, not as errors, so
+/// `figure all` completes on any backend.
+fn supported_or_skip(
+    backend: &dyn Backend,
+    fig: &str,
+    model: &str,
+    entry: &str,
+    batch: usize,
+) -> bool {
+    if backend.supports(model, entry, batch).unwrap_or(false) {
+        return true;
+    }
+    skip_notice(backend, fig, model, entry, batch);
+    false
 }
 
 /// Dispatch by figure name.
@@ -203,10 +235,13 @@ pub fn run_figure(backend: &dyn Backend, name: &str, opts: &FigOptions) -> Resul
 /// run, for loss / upper-bound / gradient-norm sampling.
 pub fn fig1_variance(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
-    let info = backend.model_info(&model)?;
+    let Ok(info) = backend.model_info(&model) else {
+        skip_unknown_model(backend, "fig1", &model, "grad_norms");
+        return Ok(());
+    };
     let presample = *info.presample.iter().max().unwrap();
-    if !backend.supports(&model, "grad_norms", presample)? {
-        bail!("fig1 needs grad_norms support; use model cnn100 or mlp10");
+    if !supported_or_skip(backend, "fig1", &model, "grad_norms", presample) {
+        return Ok(());
     }
     let dir = fig_dir(opts, "fig1")?;
     let split = dataset_for(backend, &model, 1, opts.quick)?;
@@ -249,10 +284,13 @@ pub fn fig1_variance(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
 /// trained network + the SSE numbers quoted in §4.1.
 pub fn fig2_correlation(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
-    let info = backend.model_info(&model)?;
+    let Ok(info) = backend.model_info(&model) else {
+        skip_unknown_model(backend, "fig2", &model, "grad_norms");
+        return Ok(());
+    };
     let chunk = *info.presample.iter().max().unwrap();
-    if !backend.supports(&model, "grad_norms", chunk)? {
-        bail!("fig2 needs grad_norms support; use model cnn100 or mlp10");
+    if !supported_or_skip(backend, "fig2", &model, "grad_norms", chunk) {
+        return Ok(());
     }
     let dir = fig_dir(opts, "fig2")?;
     let split = dataset_for(backend, &model, 1, opts.quick)?;
@@ -294,19 +332,33 @@ pub fn fig2_correlation(backend: &dyn Backend, opts: &FigOptions) -> Result<()> 
 }
 
 /// Run one strategy config for every seed; write per-run CSVs; return the
-/// across-seed mean (final train loss, final test err).
+/// across-seed mean (final train loss, final test err). Strategies whose
+/// scoring entry the backend cannot run (e.g. no baked artifact at the
+/// requested presample B) announce a one-line `SKIP` and drop out instead
+/// of leaving an unexplained hole in `summary.csv`.
 fn run_strategies(
     backend: &dyn Backend,
     dir: &Path,
+    fig: &str,
     model: &str,
     configs: Vec<(String, TrainerConfig)>,
     opts: &FigOptions,
 ) -> Result<()> {
+    let info = backend.model_info(model)?;
+    if !supported_or_skip(backend, fig, model, "train_step", info.batch) {
+        return Ok(());
+    }
     let mut summary = CsvSink::create(
         dir.join("summary.csv"),
         "strategy,seeds,final_train_loss,final_test_err,steps_per_sec,switch_step",
     )?;
     for (tag, cfg) in configs {
+        // one scoring-requirement policy with Trainer::new (never drifts)
+        if let Some((entry, b)) = cfg.scoring_requirement(info) {
+            if !supported_or_skip(backend, fig, model, entry, b) {
+                continue;
+            }
+        }
         let mut losses = vec![];
         let mut errs = vec![];
         let mut sps = vec![];
@@ -344,14 +396,20 @@ fn run_strategies(
 }
 
 /// Fig 3: image classification (CIFAR-10/100 stand-ins) — uniform vs loss
-/// vs upper-bound vs Loshchilov-Hutter vs Schaul, equal wall-clock.
+/// vs upper-bound vs Loshchilov-Hutter vs Schaul, equal wall-clock. On the
+/// native backend the default pair covers two architectures: the mlp10
+/// stand-in and the conv10 small convnet (layer-IR Conv1d scenario).
 pub fn fig3_image(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let models: Vec<String> = match &opts.model {
         Some(m) => vec![m.clone()],
-        None if backend.name() == "native" => vec!["mlp10".into(), "mlp100".into()],
+        None if backend.name() == "native" => vec!["mlp10".into(), "conv10".into()],
         None => vec!["cnn10".into(), "cnn100".into()],
     };
     for model in models {
+        if backend.model_info(&model).is_err() {
+            skip_unknown_model(backend, "fig3", &model, "train_step");
+            continue;
+        }
         println!("fig3 [{model}] budget {}s x{} seeds", opts.budget_secs, opts.seeds.len());
         let dir = fig_dir(opts, &format!("fig3_{model}"))?;
         let budget = opts.budget_secs;
@@ -369,7 +427,7 @@ pub fn fig3_image(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
             ("loshchilov-hutter".into(), mk(TrainerConfig::loshchilov_hutter(&model))),
             ("schaul".into(), mk(TrainerConfig::schaul(&model))),
         ];
-        run_strategies(backend, &dir, &model, configs, opts)?;
+        run_strategies(backend, &dir, "fig3", &model, configs, opts)?;
     }
     Ok(())
 }
@@ -377,6 +435,10 @@ pub fn fig3_image(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
 /// Fig 4: fine-tuning (MIT67 stand-in) — uniform vs loss vs upper-bound.
 pub fn fig4_finetune(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = "finetune";
+    if backend.model_info(model).is_err() {
+        skip_unknown_model(backend, "fig4", model, "train_step");
+        return Ok(());
+    }
     println!("fig4 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig4")?;
     // §4.3: b=16, B=48, lr 1e-3, tau_th = 2 (designated by Eq. 26)
@@ -392,12 +454,18 @@ pub fn fig4_finetune(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         ("loss".into(), mk(TrainerConfig::loss(model))),
         ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
     ];
-    run_strategies(backend, &dir, model, configs, opts)
+    run_strategies(backend, &dir, "fig4", model, configs, opts)
 }
 
-/// Fig 5: pixel-by-pixel sequence classification with an LSTM.
+/// Fig 5: pixel-by-pixel sequence classification — the paper's LSTM on
+/// PJRT, the seq64 EmbeddingBag sequence net (layer-IR scenario) on the
+/// native backend, both over the same permuted-raster dataset.
 pub fn fig5_lstm(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
-    let model = "lstm";
+    let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "lstm", "seq64"));
+    if backend.model_info(&model).is_err() {
+        skip_unknown_model(backend, "fig5", &model, "train_step");
+        return Ok(());
+    }
     println!("fig5 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig5")?;
     // §4.4: b=32, B=128, tau_th=1.8, Adam in the paper — we keep SGD+mom
@@ -410,16 +478,23 @@ pub fn fig5_lstm(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         c.with_budget(opts.budget_secs)
     };
     let configs = vec![
-        ("uniform".into(), mk(TrainerConfig::uniform(model))),
-        ("loss".into(), mk(TrainerConfig::loss(model))),
-        ("upper-bound".into(), mk(TrainerConfig::upper_bound(model))),
+        ("uniform".into(), mk(TrainerConfig::uniform(&model))),
+        ("loss".into(), mk(TrainerConfig::loss(&model))),
+        ("upper-bound".into(), mk(TrainerConfig::upper_bound(&model))),
     ];
-    run_strategies(backend, &dir, model, configs, opts)
+    run_strategies(backend, &dir, "fig5", &model, configs, opts)
 }
 
 /// Fig 6 (App. C): SVRG / Katyusha / SCSG vs SGD-uniform vs upper-bound.
 pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn10", "mlp10"));
+    let Ok(info) = backend.model_info(&model) else {
+        skip_unknown_model(backend, "fig6", &model, "train_step");
+        return Ok(());
+    };
+    if !supported_or_skip(backend, "fig6", &model, "train_step", info.batch) {
+        return Ok(());
+    }
     println!("fig6 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig6")?;
     let budget = opts.budget_secs;
@@ -439,6 +514,11 @@ pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         "method,steps,final_train_loss,final_test_err",
     )?;
     for (tag, cfg) in sgd_cfgs {
+        if let Some((entry, b)) = cfg.scoring_requirement(info) {
+            if !supported_or_skip(backend, "fig6", &model, entry, b) {
+                continue;
+            }
+        }
         let cfg = cfg
             .with_seed(seed)
             .with_score_workers(opts.score_workers)
@@ -453,7 +533,12 @@ pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
         );
     }
 
-    // SVRG family (snapshot + inner gradients shard over the same pool)
+    // SVRG family (snapshot + inner gradients shard over the same pool);
+    // it runs on the `grad` entry — announce and stop instead of erroring
+    // mid-figure when the backend cannot execute it
+    if !supported_or_skip(backend, "fig6", &model, "grad", info.batch) {
+        return Ok(());
+    }
     for cfg in [
         SvrgConfig::svrg(&model).with_budget(budget).with_train_workers(opts.train_workers),
         SvrgConfig::katyusha(&model).with_budget(budget).with_train_workers(opts.train_workers),
@@ -478,6 +563,10 @@ pub fn fig6_svrg(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
 /// uniform. Writes results/ablation/summary.csv.
 pub fn ablation_extensions(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn100", "mlp100"));
+    if backend.model_info(&model).is_err() {
+        skip_unknown_model(backend, "ablation", &model, "train_step");
+        return Ok(());
+    }
     println!("ablation [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "ablation")?;
     let mk = |c: TrainerConfig| {
@@ -491,13 +580,16 @@ pub fn ablation_extensions(backend: &dyn Backend, opts: &FigOptions) -> Result<(
             mk(TrainerConfig::upper_bound(&model)).with_adaptive_lr(2.0),
         ),
     ];
-    run_strategies(backend, &dir, &model, configs, opts)
+    run_strategies(backend, &dir, "ablation", &model, configs, opts)
 }
 
 /// Fig 7 (App. D): ablation on the presample size B.
 pub fn fig7_presample(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
     let model = opts.model.clone().unwrap_or_else(|| default_model(backend, "cnn10", "mlp10"));
-    let info = backend.model_info(&model)?;
+    let Ok(info) = backend.model_info(&model) else {
+        skip_unknown_model(backend, "fig7", &model, "train_step");
+        return Ok(());
+    };
     println!("fig7 [{model}] budget {}s", opts.budget_secs);
     let dir = fig_dir(opts, "fig7")?;
     let mut configs = vec![(
@@ -513,5 +605,5 @@ pub fn fig7_presample(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
                 .with_budget(opts.budget_secs),
         ));
     }
-    run_strategies(backend, &dir, &model, configs, opts)
+    run_strategies(backend, &dir, "fig7", &model, configs, opts)
 }

@@ -43,8 +43,9 @@ USAGE:
   isample info
 
 BACKENDS  --backend pjrt (default; executes AOT artifacts from --artifacts DIR)
-          --backend native (pure-rust two-layer MLP engine; no artifacts needed)
-MODELS    pjrt: mlp10 cnn10 cnn100 finetune lstm | native: mlp10 mlp100
+          --backend native (pure-rust layer-IR engine; no artifacts needed)
+MODELS    pjrt: mlp10 cnn10 cnn100 finetune lstm
+          native: mlp10 mlp100 conv10 seq64 (MLP / conv / sequence stacks)
 STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
 FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
           --score-workers N (presample scoring threads; default = cores)

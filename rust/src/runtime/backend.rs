@@ -6,7 +6,8 @@
 //! * [`Engine`] (PJRT) — executes AOT-lowered HLO artifacts; entry points
 //!   exist only at the batch sizes that were baked by `make artifacts`.
 //! * [`NativeEngine`](super::native::NativeEngine) — a pure-rust
-//!   forward/backward/SGD implementation of the two-layer MLP family; every
+//!   forward/backward/SGD implementation over `runtime::layers` model
+//!   stacks (MLPs, small convnets, embedding-bag sequence models); every
 //!   entry works at any batch size and needs no artifacts at all, which is
 //!   what lets `cargo test` run real Algorithm-1 training end to end.
 //!
@@ -18,7 +19,10 @@
 //! [`supports`](Backend::supports) (PJRT: is there a baked artifact at this
 //! batch size? native: is the entry implemented?) and
 //! [`prepare`](Backend::prepare) (PJRT: compile now, outside the measured
-//! budget; native: no-op).
+//! budget; native: no-op). For the native backend, `supports` reflects its
+//! layer-model registry — `mlp10`/`mlp100`/`conv10`/`seq64` by default —
+//! so the figure harnesses can gate (and announce) per-architecture
+//! scenarios uniformly across backends.
 
 use std::path::Path;
 

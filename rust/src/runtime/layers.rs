@@ -1,0 +1,963 @@
+//! The layered model IR of the native backend — what makes the paper's
+//! upper-bound score architecture-agnostic in this codebase.
+//!
+//! The paper's central quantity (Eq. 1–2 / Eq. 20) is the gradient of the
+//! loss with respect to the **last layer's pre-activations**: for softmax
+//! cross-entropy that is `probs − onehot(y)`, whatever network produced the
+//! logits. Its norm upper-bounds the per-sample gradient norm up to an
+//! architecture-dependent constant, which is why one score drives
+//! importance sampling for image CNNs, fine-tuning and sequence models
+//! alike. This module encodes that: a [`LayerModel`] is an ordered stack of
+//! [`Layer`]s with a softmax cross-entropy head, and the loss, the
+//! upper-bound score ([`row_score`]), the exact per-sample gradient norm
+//! ([`LayerModel::grad_norm_row`]) and a provable per-row dominance factor
+//! ([`LayerModel::grad_norm_bound_factor`]) are all computed generically
+//! over the stack — one implementation, any architecture.
+//!
+//! Layer variants:
+//!
+//! | variant           | params (shape, init)                | backward cost        |
+//! |-------------------|-------------------------------------|----------------------|
+//! | [`Layer::Dense`]  | `W [in,out]` glorot, `b [out]` zeros| `O(in·out)`          |
+//! | [`Layer::Relu`]   | —                                   | `O(n)` mask          |
+//! | [`Layer::Conv1d`] | `W [k,1,ic,oc]` glorot, `b [oc]`    | `O(t_out·k·ic·oc)`   |
+//! | [`Layer::GlobalAvgPool`] | —                            | `O(n)`               |
+//! | [`Layer::EmbeddingBag`]  | `E [rows,dim]` glorot        | `O(T·dim)`           |
+//!
+//! **Determinism contract.** Every forward/backward walk visits rows,
+//! layers and tensor elements in a fixed order, so per-row outputs are pure
+//! functions of `(params, row)` — the property the sharded scoring and
+//! data-parallel training reductions build their bit-identity guarantee on.
+//!
+//! **MLP bit-compatibility.** A `[Dense, Relu, Dense]` stack reproduces the
+//! pre-refactor fused two-layer MLP arithmetic operation for operation
+//! (same accumulation order in the matmuls, same softmax, same masked
+//! backward), so the PR 3 golden trajectories for `mlp10`/`mlp100` are
+//! preserved bit for bit.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{InitKind, ParamSpec};
+
+/// One layer of a [`LayerModel`] stack. Activations are flat row-major
+/// `f32` buffers; layers that interpret them as `[time, channels]` signals
+/// (`Conv1d`, `GlobalAvgPool`) document their layout inline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Layer {
+    /// Fully connected: `out = in · W + b` (`W [in, out]` row-major).
+    Dense { out_dim: usize },
+    /// Elementwise `max(0, x)`.
+    Relu,
+    /// Valid 1-D convolution over a `[time, in_ch]` row-major signal:
+    /// `out[t, o] = b[o] + Σ_{k, c} in[t·stride + k, c] · W[k, c, o]`,
+    /// producing `[(time − kernel)/stride + 1, out_ch]`.
+    Conv1d { in_ch: usize, out_ch: usize, kernel: usize, stride: usize },
+    /// Mean over time of a `[time, channels]` signal → `[channels]`.
+    GlobalAvgPool { channels: usize },
+    /// Token-sequence bag: each of the `T` input scalars is quantized into
+    /// one of `vocab` bins over `[lo, hi)` (jointly with its position when
+    /// `positional`, giving `T · vocab` embedding rows), the selected
+    /// embedding rows are averaged, and the mean is scaled by `gain`
+    /// (`gain = T` recovers sum pooling; a plain mean attenuates the
+    /// activations by `1/T`, which buries the signal under deep-glorot
+    /// init). Not differentiable w.r.t. its *input* (quantization), so it
+    /// must be the first layer of a stack whose inputs need no gradient.
+    EmbeddingBag { vocab: usize, dim: usize, lo: f32, hi: f32, positional: bool, gain: f32 },
+}
+
+/// Quantize one input scalar into a `vocab`-bin token over `[lo, hi)`.
+fn bag_token(v: f32, vocab: usize, lo: f32, hi: f32) -> usize {
+    let f = (v - lo) / (hi - lo) * vocab as f32;
+    if !f.is_finite() || f <= 0.0 {
+        return 0;
+    }
+    (f as usize).min(vocab - 1)
+}
+
+/// Embedding row selected by position `p` holding value `v`.
+fn bag_row(p: usize, v: f32, vocab: usize, lo: f32, hi: f32, positional: bool) -> usize {
+    let tok = bag_token(v, vocab, lo, hi);
+    if positional {
+        p * vocab + tok
+    } else {
+        tok
+    }
+}
+
+/// `gin[i] = Σ_o W[i, o] · gout[o]` — the dense input gradient, shared by
+/// the accumulate and norm walks so their numerics cannot drift.
+fn dense_input_grad(w: &[f32], gout: &[f32], gin: &mut [f32], out_dim: usize) {
+    for (i, gi) in gin.iter_mut().enumerate() {
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        *gi = row.iter().zip(gout).map(|(&wv, &g)| wv * g).sum();
+    }
+}
+
+/// Geometry of one [`Layer::Conv1d`]; hosts the backward kernels shared by
+/// the accumulate and norm walks.
+struct Conv1dGeom {
+    in_ch: usize,
+    out_ch: usize,
+    kernel: usize,
+    stride: usize,
+}
+
+impl Conv1dGeom {
+    /// Accumulate `gW += x ⊗ g` (window-summed) and `gb += g` for one row.
+    fn param_grads(&self, input: &[f32], gout: &[f32], gw: &mut [f32], gb: &mut [f32]) {
+        let t_out = gout.len() / self.out_ch;
+        for t in 0..t_out {
+            let g = &gout[t * self.out_ch..(t + 1) * self.out_ch];
+            for (gbv, &gv) in gb.iter_mut().zip(g) {
+                *gbv += gv;
+            }
+            for k in 0..self.kernel {
+                let x0 = (t * self.stride + k) * self.in_ch;
+                for c in 0..self.in_ch {
+                    let xv = input[x0 + c];
+                    if xv != 0.0 {
+                        let w0 = (k * self.in_ch + c) * self.out_ch;
+                        for (g2, &gv) in gw[w0..w0 + self.out_ch].iter_mut().zip(g) {
+                            *g2 += xv * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `gin += Wᵀ · g`, scattered back through the conv windows.
+    fn input_grad(&self, w: &[f32], gout: &[f32], gin: &mut [f32]) {
+        let t_out = gout.len() / self.out_ch;
+        for t in 0..t_out {
+            let g = &gout[t * self.out_ch..(t + 1) * self.out_ch];
+            for k in 0..self.kernel {
+                let x0 = (t * self.stride + k) * self.in_ch;
+                for c in 0..self.in_ch {
+                    let w0 = (k * self.in_ch + c) * self.out_ch;
+                    let row = &w[w0..w0 + self.out_ch];
+                    let dv: f32 = row.iter().zip(g).map(|(&wv, &gv)| wv * gv).sum();
+                    gin[x0 + c] += dv;
+                }
+            }
+        }
+    }
+}
+
+/// `gin[t, c] = gout[c] / t_in` — the mean-pool input gradient.
+fn pool_input_grad(gout: &[f32], gin: &mut [f32], channels: usize) {
+    let t_in = gin.len() / channels;
+    let inv = 1.0 / t_in as f32;
+    for t in 0..t_in {
+        let x0 = t * channels;
+        for (gi, &gv) in gin[x0..x0 + channels].iter_mut().zip(gout) {
+            *gi = gv * inv;
+        }
+    }
+}
+
+/// Relu mask: pass `gout` through where the forward output was positive.
+fn relu_input_grad(output: &[f32], gout: &[f32], gin: &mut [f32]) {
+    for ((gi, &ov), &gv) in gin.iter_mut().zip(output).zip(gout) {
+        *gi = if ov > 0.0 { gv } else { 0.0 };
+    }
+}
+
+impl Layer {
+    /// Output dimension for an `in_dim`-dimensional input; errors when the
+    /// layer cannot consume such an input.
+    fn out_dim(&self, in_dim: usize) -> Result<usize> {
+        match *self {
+            Layer::Dense { out_dim } => {
+                if out_dim == 0 {
+                    bail!("dense layer needs out_dim >= 1");
+                }
+                Ok(out_dim)
+            }
+            Layer::Relu => Ok(in_dim),
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                if in_ch == 0 || out_ch == 0 || kernel == 0 || stride == 0 {
+                    bail!("conv1d needs in_ch, out_ch, kernel, stride >= 1");
+                }
+                if in_dim % in_ch != 0 {
+                    bail!("conv1d input dim {in_dim} is not divisible by in_ch {in_ch}");
+                }
+                let t_in = in_dim / in_ch;
+                if t_in < kernel {
+                    bail!("conv1d signal length {t_in} is shorter than kernel {kernel}");
+                }
+                Ok(((t_in - kernel) / stride + 1) * out_ch)
+            }
+            Layer::GlobalAvgPool { channels } => {
+                if channels == 0 || in_dim % channels != 0 {
+                    bail!("global-avg-pool input dim {in_dim} is not divisible by {channels}");
+                }
+                Ok(channels)
+            }
+            Layer::EmbeddingBag { vocab, dim, lo, hi, gain, .. } => {
+                if vocab == 0 || dim == 0 {
+                    bail!("embedding bag needs vocab, dim >= 1");
+                }
+                if !(hi > lo) || !gain.is_finite() || gain <= 0.0 {
+                    bail!("embedding bag needs hi > lo and a positive finite gain");
+                }
+                Ok(dim)
+            }
+        }
+    }
+
+    /// This layer's parameter tensors (name/shape/init), in the order the
+    /// flat parameter list stores them.
+    fn param_specs(&self, in_dim: usize, idx: usize) -> Vec<ParamSpec> {
+        let w = format!("l{idx}.w");
+        let b = format!("l{idx}.b");
+        match *self {
+            Layer::Dense { out_dim } => vec![
+                ParamSpec { name: w, shape: vec![in_dim, out_dim], init: InitKind::GlorotUniform },
+                ParamSpec { name: b, shape: vec![out_dim], init: InitKind::Zeros },
+            ],
+            // HWIO with a singleton W axis, so `init::fans` applies the
+            // conv receptive-field scaling to the glorot bound.
+            Layer::Conv1d { in_ch, out_ch, kernel, .. } => vec![
+                ParamSpec {
+                    name: w,
+                    shape: vec![kernel, 1, in_ch, out_ch],
+                    init: InitKind::GlorotUniform,
+                },
+                ParamSpec { name: b, shape: vec![out_ch], init: InitKind::Zeros },
+            ],
+            Layer::EmbeddingBag { vocab, dim, positional, .. } => {
+                let rows = if positional { in_dim * vocab } else { vocab };
+                vec![ParamSpec {
+                    name: format!("l{idx}.emb"),
+                    shape: vec![rows, dim],
+                    init: InitKind::GlorotUniform,
+                }]
+            }
+            Layer::Relu | Layer::GlobalAvgPool { .. } => vec![],
+        }
+    }
+
+    fn num_param_tensors(&self) -> usize {
+        match self {
+            Layer::Dense { .. } | Layer::Conv1d { .. } => 2,
+            Layer::EmbeddingBag { .. } => 1,
+            Layer::Relu | Layer::GlobalAvgPool { .. } => 0,
+        }
+    }
+
+    /// Forward one row. `out` is pre-sized to this layer's output dim.
+    fn forward(&self, params: &[Vec<f32>], input: &[f32], out: &mut [f32]) {
+        match *self {
+            Layer::Dense { out_dim } => {
+                let (w, b) = (&params[0], &params[1]);
+                out.copy_from_slice(b);
+                for (i, &xi) in input.iter().enumerate() {
+                    let row = &w[i * out_dim..(i + 1) * out_dim];
+                    for (o, &wv) in out.iter_mut().zip(row) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            Layer::Relu => {
+                for (o, &v) in out.iter_mut().zip(input) {
+                    *o = v.max(0.0);
+                }
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                let (w, b) = (&params[0], &params[1]);
+                let t_out = out.len() / out_ch;
+                for t in 0..t_out {
+                    let os = &mut out[t * out_ch..(t + 1) * out_ch];
+                    os.copy_from_slice(b);
+                    for k in 0..kernel {
+                        let x0 = (t * stride + k) * in_ch;
+                        for c in 0..in_ch {
+                            let xv = input[x0 + c];
+                            let w0 = (k * in_ch + c) * out_ch;
+                            for (o, &wv) in os.iter_mut().zip(&w[w0..w0 + out_ch]) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+            Layer::GlobalAvgPool { channels } => {
+                let t_in = input.len() / channels;
+                out.fill(0.0);
+                for t in 0..t_in {
+                    let x0 = t * channels;
+                    for (o, &v) in out.iter_mut().zip(&input[x0..x0 + channels]) {
+                        *o += v;
+                    }
+                }
+                let inv = 1.0 / t_in as f32;
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            }
+            Layer::EmbeddingBag { vocab, dim, lo, hi, positional, gain } => {
+                let e = &params[0];
+                out.fill(0.0);
+                for (p, &v) in input.iter().enumerate() {
+                    let row = bag_row(p, v, vocab, lo, hi, positional);
+                    for (o, &ev) in out.iter_mut().zip(&e[row * dim..(row + 1) * dim]) {
+                        *o += ev;
+                    }
+                }
+                let scale = gain / input.len() as f32;
+                for o in out.iter_mut() {
+                    *o *= scale;
+                }
+            }
+        }
+    }
+
+    /// Backward one row: accumulate this layer's parameter gradients into
+    /// `grads` (the per-coefficient scaling is already folded into `gout`)
+    /// and, when `gin` is given (pre-zeroed, input-sized), the gradient
+    /// w.r.t. the layer's input. `output` is this layer's forward output
+    /// (only `Relu` reads it). Accumulation order is fixed — see the
+    /// module-level determinism contract.
+    fn backward(
+        &self,
+        params: &[Vec<f32>],
+        input: &[f32],
+        output: &[f32],
+        gout: &[f32],
+        grads: &mut [Vec<f32>],
+        gin: Option<&mut Vec<f32>>,
+    ) {
+        match *self {
+            Layer::Dense { out_dim } => {
+                let (gw, gb) = grads.split_at_mut(1);
+                for (i, &xi) in input.iter().enumerate() {
+                    if xi != 0.0 {
+                        let row = &mut gw[0][i * out_dim..(i + 1) * out_dim];
+                        for (g, &gv) in row.iter_mut().zip(gout) {
+                            *g += xi * gv;
+                        }
+                    }
+                }
+                for (g, &gv) in gb[0].iter_mut().zip(gout) {
+                    *g += gv;
+                }
+                if let Some(gin) = gin {
+                    dense_input_grad(&params[0], gout, gin, out_dim);
+                }
+            }
+            Layer::Relu => {
+                if let Some(gin) = gin {
+                    relu_input_grad(output, gout, gin);
+                }
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                let geom = Conv1dGeom { in_ch, out_ch, kernel, stride };
+                {
+                    let (gw, gb) = grads.split_at_mut(1);
+                    geom.param_grads(input, gout, &mut gw[0], &mut gb[0]);
+                }
+                if let Some(gin) = gin {
+                    geom.input_grad(&params[0], gout, gin);
+                }
+            }
+            Layer::GlobalAvgPool { channels } => {
+                if let Some(gin) = gin {
+                    pool_input_grad(gout, gin, channels);
+                }
+            }
+            Layer::EmbeddingBag { vocab, dim, lo, hi, positional, gain } => {
+                let scale = gain / input.len() as f32;
+                for (p, &v) in input.iter().enumerate() {
+                    let row = bag_row(p, v, vocab, lo, hi, positional);
+                    for (ge, &gv) in grads[0][row * dim..(row + 1) * dim].iter_mut().zip(gout) {
+                        *ge += scale * gv;
+                    }
+                }
+                // quantization: zero gradient w.r.t. the input almost
+                // everywhere (the layer is gated to the front of a stack)
+                if let Some(gin) = gin {
+                    gin.fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// Squared norm of this layer's per-row parameter gradient, plus `gin`
+    /// when requested (same contract as [`backward`](Self::backward)).
+    /// Dense and embedding norms are exact closed forms; conv materializes
+    /// its (small) weight-gradient into `wscratch` because overlapping
+    /// windows make the norm non-separable.
+    fn grad_sq_norm(
+        &self,
+        params: &[Vec<f32>],
+        input: &[f32],
+        output: &[f32],
+        gout: &[f32],
+        gin: Option<&mut Vec<f32>>,
+        wscratch: &mut Vec<f32>,
+    ) -> f32 {
+        match *self {
+            Layer::Dense { out_dim } => {
+                // ‖x ⊗ g‖²_F = ‖x‖²‖g‖² and ‖gb‖² = ‖g‖², so the layer
+                // contributes ‖g‖²·(1 + ‖x‖²) — the Eq.-20 decomposition.
+                let g2: f32 = gout.iter().map(|g| g * g).sum();
+                let x2: f32 = input.iter().map(|v| v * v).sum();
+                if let Some(gin) = gin {
+                    dense_input_grad(&params[0], gout, gin, out_dim);
+                }
+                g2 * (1.0 + x2)
+            }
+            Layer::Relu => {
+                if let Some(gin) = gin {
+                    relu_input_grad(output, gout, gin);
+                }
+                0.0
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                // overlapping windows make the conv weight-grad norm
+                // non-separable: materialize gW and gb into the reusable
+                // scratch (no per-row allocation) and square-sum it
+                let geom = Conv1dGeom { in_ch, out_ch, kernel, stride };
+                let wlen = params[0].len();
+                wscratch.clear();
+                wscratch.resize(wlen + out_ch, 0.0);
+                {
+                    let (gw, gb) = wscratch.split_at_mut(wlen);
+                    geom.param_grads(input, gout, gw, gb);
+                }
+                let n2: f32 = wscratch.iter().map(|g| g * g).sum();
+                if let Some(gin) = gin {
+                    geom.input_grad(&params[0], gout, gin);
+                }
+                n2
+            }
+            Layer::GlobalAvgPool { channels } => {
+                if let Some(gin) = gin {
+                    pool_input_grad(gout, gin, channels);
+                }
+                0.0
+            }
+            Layer::EmbeddingBag { vocab, dim: _, lo, hi, positional, gain } => {
+                // gE[row] = (gain/T)·count_row·gout, so the norm is exactly
+                // (gain/T)²·Σ count²·‖gout‖². A positional bag hits one
+                // distinct row per position (Σ count² = T); a plain bag
+                // histograms its vocab occupancy into the reusable scratch
+                // — either way no per-row allocation on the oracle path.
+                let t = input.len();
+                let scale = gain / t as f32;
+                let g2: f32 = gout.iter().map(|g| g * g).sum();
+                let sum_c2: f32 = if positional {
+                    t as f32
+                } else {
+                    wscratch.clear();
+                    wscratch.resize(vocab, 0.0);
+                    for &v in input {
+                        wscratch[bag_token(v, vocab, lo, hi)] += 1.0;
+                    }
+                    wscratch.iter().map(|c| c * c).sum()
+                };
+                if let Some(gin) = gin {
+                    gin.fill(0.0);
+                }
+                scale * scale * sum_c2 * g2
+            }
+        }
+    }
+}
+
+/// Softmax cross-entropy loss of one row from its softmax probs — the one
+/// formula every native entry (scoring, training, evaluation) uses, so
+/// their numerics can never drift apart.
+pub(crate) fn row_loss(probs: &[f32], y: usize) -> f32 {
+    -(probs[y] + 1e-12).ln()
+}
+
+/// The paper's Eq.-20 upper-bound score `‖probs − onehot(y)‖₂` of one row:
+/// the norm of the loss gradient at the last layer's pre-activations —
+/// computed here, once, for **any** layer stack.
+pub(crate) fn row_score(probs: &[f32], y: usize) -> f32 {
+    let mut norm2 = 0.0f32;
+    for (k, &p) in probs.iter().enumerate() {
+        let g = if k == y { p - 1.0 } else { p };
+        norm2 += g * g;
+    }
+    norm2.sqrt()
+}
+
+/// In-place softmax — bit-identical to the pre-refactor fused MLP head.
+fn softmax_in_place(z: &mut [f32]) {
+    let max = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f32;
+    for p in z.iter_mut() {
+        *p = (*p - max).exp();
+        denom += *p;
+    }
+    for p in z.iter_mut() {
+        *p /= denom;
+    }
+}
+
+/// Reusable per-thread buffers for one row's forward/backward walk. One
+/// `Scratch` per chunk keeps the hot path allocation-free; the buffers are
+/// meaningful only between a `forward_row` and the calls that consume it.
+pub struct Scratch {
+    /// `acts[i]` = output of `layers[i]`; the last entry holds the logits,
+    /// then (after the softmax head) the probabilities, then — once the
+    /// caller seeds the backward pass — the scaled softmax gradient.
+    acts: Vec<Vec<f32>>,
+    /// Ping-pong buffers for the inter-layer gradient.
+    ga: Vec<f32>,
+    gb: Vec<f32>,
+}
+
+impl Scratch {
+    /// The softmax probabilities of the last `forward_row`.
+    pub fn probs(&self) -> &[f32] {
+        self.acts.last().expect("layer stacks are non-empty")
+    }
+
+    /// Mutable view of the probabilities — how the training path turns
+    /// them into the (coefficient-scaled) softmax gradient in place before
+    /// [`LayerModel::backward_row`].
+    pub fn probs_mut(&mut self) -> &mut [f32] {
+        self.acts.last_mut().expect("layer stacks are non-empty")
+    }
+}
+
+/// An ordered layer stack with a softmax cross-entropy head — the model IR
+/// every native entry point (`train_step`, `fwd_scores`, `grad_norms`,
+/// `eval_metrics`, …) walks. See the module docs.
+#[derive(Debug, Clone)]
+pub struct LayerModel {
+    layers: Vec<Layer>,
+    /// `dims[0]` = input dim; `dims[i + 1]` = output dim of `layers[i]`.
+    dims: Vec<usize>,
+    /// Index of each layer's first tensor in the flat parameter list.
+    param_start: Vec<usize>,
+    /// Element count of every parameter tensor, in flat list order.
+    param_elems: Vec<usize>,
+    /// First layer owning parameters: the backward walk computes no input
+    /// gradient below it.
+    first_param_layer: usize,
+}
+
+impl LayerModel {
+    pub fn new(in_dim: usize, layers: Vec<Layer>) -> Result<Self> {
+        if in_dim == 0 {
+            bail!("layer model needs in_dim >= 1");
+        }
+        if layers.is_empty() {
+            bail!("layer model needs at least one layer");
+        }
+        if !matches!(layers.last(), Some(Layer::Dense { .. })) {
+            bail!("layer stacks must end in a Dense layer (the softmax head)");
+        }
+        if layers.iter().skip(1).any(|l| matches!(l, Layer::EmbeddingBag { .. })) {
+            bail!("EmbeddingBag is input quantization and must be the first layer");
+        }
+        let mut dims = Vec::with_capacity(layers.len() + 1);
+        dims.push(in_dim);
+        for (i, layer) in layers.iter().enumerate() {
+            let d = layer.out_dim(dims[i]).with_context(|| format!("layer {i} ({layer:?})"))?;
+            dims.push(d);
+        }
+        if *dims.last().unwrap() < 2 {
+            bail!("softmax head needs >= 2 classes, got {}", dims.last().unwrap());
+        }
+        let mut param_start = Vec::with_capacity(layers.len());
+        let mut param_elems = Vec::new();
+        let mut first_param_layer = usize::MAX;
+        let mut n = 0;
+        for (i, layer) in layers.iter().enumerate() {
+            param_start.push(n);
+            let specs = layer.param_specs(dims[i], i);
+            if !specs.is_empty() && first_param_layer == usize::MAX {
+                first_param_layer = i;
+            }
+            n += specs.len();
+            param_elems.extend(specs.iter().map(|s| s.elements()));
+        }
+        Ok(Self { layers, dims, param_start, param_elems, first_param_layer })
+    }
+
+    /// The two-layer MLP stack — the pre-refactor native architecture.
+    pub fn mlp(feature_dim: usize, hidden: usize, num_classes: usize) -> Result<Self> {
+        Self::new(
+            feature_dim,
+            vec![
+                Layer::Dense { out_dim: hidden },
+                Layer::Relu,
+                Layer::Dense { out_dim: num_classes },
+            ],
+        )
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Activation dimensions: `dims()[0]` is the input, `dims()[i + 1]`
+    /// the output of layer `i`.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn num_param_tensors(&self) -> usize {
+        self.param_elems.len()
+    }
+
+    pub fn total_param_elements(&self) -> usize {
+        self.param_elems.iter().sum()
+    }
+
+    /// Every parameter tensor (name/shape/init) in flat list order — the
+    /// manifest-shaped description init, checkpointing and the SGD update
+    /// iterate over.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        self.layers
+            .iter()
+            .enumerate()
+            .flat_map(|(i, layer)| layer.param_specs(self.dims[i], i))
+            .collect()
+    }
+
+    /// Check a flat host-parameter list against this model's specs.
+    pub fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        if params.len() != self.param_elems.len() {
+            bail!(
+                "layer model expects {} parameter tensors, got {}",
+                self.param_elems.len(),
+                params.len()
+            );
+        }
+        for (i, (p, &want)) in params.iter().zip(&self.param_elems).enumerate() {
+            if p.len() != want {
+                bail!("parameter tensor {i} has {} elements, expected {want}", p.len());
+            }
+        }
+        Ok(())
+    }
+
+    /// Fresh zero-filled gradient buffers, one per parameter tensor.
+    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
+        self.param_elems.iter().map(|&n| vec![0.0; n]).collect()
+    }
+
+    /// Fresh per-thread walk buffers (see [`Scratch`]).
+    pub fn scratch(&self) -> Scratch {
+        Scratch {
+            acts: self.dims[1..].iter().map(|&d| vec![0.0; d]).collect(),
+            ga: Vec::new(),
+            gb: Vec::new(),
+        }
+    }
+
+    /// Labels outside `0..num_classes` clamp to the last class (the same
+    /// tolerance the pre-refactor engine applied).
+    pub fn clamp_label(&self, y: i32) -> usize {
+        (y as usize).min(self.num_classes() - 1)
+    }
+
+    fn layer_params<'p>(&self, params: &'p [Vec<f32>], i: usize) -> &'p [Vec<f32>] {
+        let start = self.param_start[i];
+        &params[start..start + self.layers[i].num_param_tensors()]
+    }
+
+    /// Forward one row: fills `scratch.acts` layer by layer and applies the
+    /// softmax head in place, leaving the probabilities in
+    /// [`Scratch::probs`]. Callers must pass `in_dim` features and
+    /// spec-shaped params (checked by the engine entry points).
+    pub fn forward_row(&self, params: &[Vec<f32>], x: &[f32], scratch: &mut Scratch) {
+        debug_assert_eq!(x.len(), self.dims[0]);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (prev, rest) = scratch.acts.split_at_mut(i);
+            let input: &[f32] = if i == 0 { x } else { &prev[i - 1] };
+            layer.forward(self.layer_params(params, i), input, &mut rest[0]);
+        }
+        softmax_in_place(scratch.probs_mut());
+    }
+
+    /// Loss and Eq.-20 upper-bound score of one row — the scoring entry
+    /// shared by `fwd_scores`, the native scorer and the warmup path.
+    pub fn row_scores(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: i32,
+        scratch: &mut Scratch,
+    ) -> (f32, f32) {
+        self.forward_row(params, x, scratch);
+        let yy = self.clamp_label(y);
+        let probs = scratch.probs();
+        (row_loss(probs, yy), row_score(probs, yy))
+    }
+
+    /// Backward one row, accumulating into `grads` (flat tensor list, same
+    /// order as [`param_specs`](Self::param_specs)). The caller must have
+    /// run [`forward_row`](Self::forward_row) on the same row and turned
+    /// the probabilities in [`Scratch::probs_mut`] into the scaled softmax
+    /// gradient (`probs[y] -= 1`, then `*= coeff`).
+    pub fn backward_row(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        scratch: &mut Scratch,
+        grads: &mut [Vec<f32>],
+    ) {
+        let last = self.layers.len() - 1;
+        scratch.ga.clear();
+        scratch.ga.extend_from_slice(&scratch.acts[last]);
+        let mut cur: &mut Vec<f32> = &mut scratch.ga;
+        let mut next: &mut Vec<f32> = &mut scratch.gb;
+        for i in (0..self.layers.len()).rev() {
+            let layer = &self.layers[i];
+            let input: &[f32] = if i == 0 { x } else { &scratch.acts[i - 1] };
+            let output: &[f32] = &scratch.acts[i];
+            let start = self.param_start[i];
+            let g = &mut grads[start..start + layer.num_param_tensors()];
+            let p = self.layer_params(params, i);
+            if i > self.first_param_layer {
+                next.clear();
+                next.resize(self.dims[i], 0.0);
+                layer.backward(p, input, output, cur, g, Some(&mut *next));
+                std::mem::swap(&mut cur, &mut next);
+            } else {
+                layer.backward(p, input, output, cur, g, None);
+            }
+        }
+    }
+
+    /// Exact per-sample gradient norm of one row — the expensive
+    /// "gradient-norm" oracle, generic over the stack. `wscratch` is the
+    /// conv weight-gradient buffer reused across rows.
+    pub fn grad_norm_row(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: i32,
+        scratch: &mut Scratch,
+        wscratch: &mut Vec<f32>,
+    ) -> f32 {
+        self.forward_row(params, x, scratch);
+        let yy = self.clamp_label(y);
+        scratch.probs_mut()[yy] -= 1.0;
+        let last = self.layers.len() - 1;
+        scratch.ga.clear();
+        scratch.ga.extend_from_slice(&scratch.acts[last]);
+        let mut cur: &mut Vec<f32> = &mut scratch.ga;
+        let mut next: &mut Vec<f32> = &mut scratch.gb;
+        let mut total = 0.0f32;
+        for i in (0..self.layers.len()).rev() {
+            let layer = &self.layers[i];
+            let input: &[f32] = if i == 0 { x } else { &scratch.acts[i - 1] };
+            let output: &[f32] = &scratch.acts[i];
+            let p = self.layer_params(params, i);
+            if i > self.first_param_layer {
+                next.clear();
+                next.resize(self.dims[i], 0.0);
+                total += layer.grad_sq_norm(p, input, output, cur, Some(&mut *next), wscratch);
+                std::mem::swap(&mut cur, &mut next);
+            } else {
+                total += layer.grad_sq_norm(p, input, output, cur, None, wscratch);
+            }
+        }
+        total.sqrt()
+    }
+
+    /// A provable per-row dominance factor `ρ` with
+    /// `‖∇θ loss‖ ≤ ρ · ‖probs − onehot(y)‖`: the paper's Eq.-1/2 claim
+    /// that the last-layer score upper-bounds the gradient norm up to an
+    /// architecture-dependent constant, made checkable. Derived from
+    /// per-layer operator-norm bounds (Frobenius norms over Cauchy-Schwarz;
+    /// conv additionally pays a `⌈kernel/stride⌉` window-overlap factor),
+    /// evaluated at this row's activations in f64.
+    pub fn grad_norm_bound_factor(&self, params: &[Vec<f32>], x: &[f32]) -> Result<f64> {
+        self.check_params(params)?;
+        if x.len() != self.dims[0] {
+            bail!("row has {} features, model expects {}", x.len(), self.dims[0]);
+        }
+        let mut scratch = self.scratch();
+        self.forward_row(params, x, &mut scratch);
+        let frob2 = |t: &[f32]| t.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
+        // amp² bounds ‖g_layer‖² / ‖gz‖² going down the stack
+        let mut amp2 = 1.0f64;
+        let mut total = 0.0f64;
+        for (i, layer) in self.layers.iter().enumerate().rev() {
+            let input: &[f32] = if i == 0 { x } else { &scratch.acts[i - 1] };
+            let in2 = frob2(input);
+            let p = self.layer_params(params, i);
+            match *layer {
+                Layer::Dense { .. } => {
+                    total += amp2 * (1.0 + in2);
+                    amp2 *= frob2(&p[0]);
+                }
+                Layer::Relu | Layer::GlobalAvgPool { .. } => {} // contractions
+                Layer::Conv1d { out_ch, kernel, stride, .. } => {
+                    let t_out = (self.dims[i + 1] / out_ch) as f64;
+                    let overlap = kernel.div_ceil(stride) as f64;
+                    total += amp2 * (t_out + overlap * in2);
+                    amp2 *= overlap * frob2(&p[0]);
+                }
+                Layer::EmbeddingBag { gain, .. } => {
+                    total += amp2 * gain as f64 * gain as f64;
+                }
+            }
+        }
+        Ok(total.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::init::init_params;
+
+    fn conv_stack() -> LayerModel {
+        let layers = vec![
+            Layer::Conv1d { in_ch: 2, out_ch: 3, kernel: 3, stride: 2 },
+            Layer::Relu,
+            Layer::GlobalAvgPool { channels: 3 },
+            Layer::Dense { out_dim: 4 },
+        ];
+        LayerModel::new(24, layers).unwrap()
+    }
+
+    fn seq_stack() -> LayerModel {
+        let bag = Layer::EmbeddingBag {
+            vocab: 4,
+            dim: 5,
+            lo: -1.0,
+            hi: 1.0,
+            positional: true,
+            gain: 8.0,
+        };
+        LayerModel::new(8, vec![bag, Layer::Dense { out_dim: 3 }]).unwrap()
+    }
+
+    #[test]
+    fn dims_and_param_specs_chain_through_the_stack() {
+        let m = LayerModel::mlp(6, 5, 3).unwrap();
+        assert_eq!(m.dims(), &[6, 5, 5, 3]);
+        assert_eq!(m.num_classes(), 3);
+        let specs = m.param_specs();
+        let shapes: Vec<Vec<usize>> = specs.iter().map(|s| s.shape.clone()).collect();
+        assert_eq!(shapes, vec![vec![6, 5], vec![5], vec![5, 3], vec![3]]);
+
+        let c = conv_stack();
+        // 24 = [12 time, 2 ch] -> conv k3 s2 -> [5, 3] -> pool -> 3 -> 4
+        assert_eq!(c.dims(), &[24, 15, 15, 3, 4]);
+        assert_eq!(c.param_specs()[0].shape, vec![3, 1, 2, 3]);
+
+        let s = seq_stack();
+        assert_eq!(s.dims(), &[8, 5, 3]);
+        assert_eq!(s.param_specs()[0].shape, vec![8 * 4, 5]); // positional rows
+    }
+
+    #[test]
+    fn invalid_stacks_are_rejected() {
+        let head = Layer::Dense { out_dim: 3 };
+        assert!(LayerModel::new(8, vec![]).is_err());
+        assert!(LayerModel::new(8, vec![Layer::Relu]).is_err()); // no dense head
+        assert!(LayerModel::new(8, vec![Layer::Dense { out_dim: 1 }]).is_err()); // 1 class
+        // signal shorter than kernel
+        let short = vec![Layer::Conv1d { in_ch: 1, out_ch: 2, kernel: 5, stride: 1 }, head];
+        assert!(LayerModel::new(4, short).is_err());
+        // in_dim not divisible by channels
+        let ragged = vec![Layer::GlobalAvgPool { channels: 2 }, head];
+        assert!(LayerModel::new(7, ragged).is_err());
+        // embedding mid-stack
+        let bag = Layer::EmbeddingBag {
+            vocab: 4,
+            dim: 3,
+            lo: 0.0,
+            hi: 1.0,
+            positional: false,
+            gain: 1.0,
+        };
+        assert!(LayerModel::new(6, vec![Layer::Relu, bag, head]).is_err());
+    }
+
+    #[test]
+    fn bag_token_quantizes_and_clamps() {
+        assert_eq!(bag_token(-5.0, 4, -1.0, 1.0), 0);
+        assert_eq!(bag_token(-1.0, 4, -1.0, 1.0), 0);
+        assert_eq!(bag_token(-0.4, 4, -1.0, 1.0), 1);
+        assert_eq!(bag_token(0.1, 4, -1.0, 1.0), 2);
+        assert_eq!(bag_token(0.99, 4, -1.0, 1.0), 3);
+        assert_eq!(bag_token(7.0, 4, -1.0, 1.0), 3);
+        assert_eq!(bag_token(f32::NAN, 4, -1.0, 1.0), 0);
+    }
+
+    #[test]
+    fn forward_produces_probabilities_for_every_stack() {
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(7, &m.param_specs());
+            let mut s = m.scratch();
+            let x: Vec<f32> = (0..m.in_dim()).map(|i| (i as f32 * 0.37).sin()).collect();
+            m.forward_row(&params, &x, &mut s);
+            let probs = s.probs();
+            assert_eq!(probs.len(), m.num_classes());
+            let sum: f32 = probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "probs sum {sum}");
+            assert!(probs.iter().all(|p| p.is_finite() && *p >= 0.0));
+            let (loss, score) = m.row_scores(&params, &x, 1, &mut s);
+            assert!(loss.is_finite() && loss > 0.0);
+            assert!(score.is_finite() && score >= 0.0);
+        }
+    }
+
+    #[test]
+    fn grad_norm_is_bounded_by_score_times_dominance_factor() {
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(3, &m.param_specs());
+            let mut s = m.scratch();
+            let mut ws = Vec::new();
+            for r in 0..8 {
+                let x: Vec<f32> =
+                    (0..m.in_dim()).map(|i| ((i + r * 13) as f32 * 0.61).cos()).collect();
+                let y = (r % m.num_classes()) as i32;
+                let (_, ub) = m.row_scores(&params, &x, y, &mut s);
+                let gn = m.grad_norm_row(&params, &x, y, &mut s, &mut ws);
+                let rho = m.grad_norm_bound_factor(&params, &x).unwrap();
+                // the head's bias gradient alone is the score, so gn >= ub
+                assert!(gn >= ub - 1e-5, "gn {gn} < ub {ub}");
+                assert!(
+                    (gn as f64) <= rho * ub as f64 * 1.001 + 1e-6,
+                    "gn {gn} exceeds rho {rho} * ub {ub}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_accumulates_into_the_right_tensors() {
+        // one row, coeff 1: gradient of the head bias must be exactly gz
+        let m = conv_stack();
+        let params = init_params(5, &m.param_specs());
+        let mut s = m.scratch();
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 0.29).sin()).collect();
+        m.forward_row(&params, &x, &mut s);
+        let yy = m.clamp_label(2);
+        let gz: Vec<f32> = {
+            let p = s.probs_mut();
+            p[yy] -= 1.0;
+            p.to_vec()
+        };
+        let mut grads = m.zero_grads();
+        m.backward_row(&params, &x, &mut s, &mut grads);
+        assert_eq!(grads.len(), m.num_param_tensors());
+        let head_bias = grads.last().unwrap();
+        assert_eq!(head_bias.as_slice(), gz.as_slice());
+        // conv weight grads received something
+        assert!(grads[0].iter().any(|&g| g != 0.0));
+    }
+}

@@ -17,13 +17,20 @@
 //!
 //! [`backend`] abstracts the execution substrate behind the [`Backend`]
 //! trait so the whole coordinator stack runs over either the PJRT engine
-//! or [`native::NativeEngine`] — the artifact-free pure-rust CPU backend
-//! that trains the two-layer MLP family end to end.
+//! or [`native::NativeEngine`] — the artifact-free pure-rust CPU backend.
+//!
+//! [`layers`] is the native backend's model IR: a [`LayerModel`] stack
+//! (Dense / Relu / Conv1d / GlobalAvgPool / EmbeddingBag) with a softmax
+//! head, over which training, scoring (the paper's architecture-agnostic
+//! last-layer upper bound), evaluation and the gradient-norm oracle are all
+//! computed generically — MLPs, small convnets and token-sequence models
+//! run through one code path.
 
 pub mod backend;
 pub mod checkpoint;
 pub mod engine;
 pub mod init;
+pub mod layers;
 pub mod manifest;
 pub mod native;
 pub mod pool;
@@ -33,6 +40,7 @@ pub mod tensor;
 
 pub use backend::Backend;
 pub use engine::{clone_literals, Engine, ModelState};
+pub use layers::{Layer, LayerModel};
 pub use manifest::{InitKind, Manifest, ModelInfo};
 pub use native::{train_chunk_plan, NativeEngine, NativeModelSpec};
 pub use pool::{default_train_workers, WorkerPool};

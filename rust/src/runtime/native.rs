@@ -2,30 +2,39 @@
 //!
 //! Implements every entry point the coordinator uses (`train_step`,
 //! `fwd_scores`, `eval_metrics`, `grad_norms`, `grad`, `weighted_grad`) for
-//! the two-layer MLP family, with SGD + momentum + weight decay matching
-//! the Eq.-2 update the AOT artifacts bake. No artifacts, no PJRT runtime:
-//! this is what lets the full Algorithm-1 pipeline — warmup, τ switch,
-//! presample/score/resample, weighted update — run and be tested end to
-//! end in any build of this repo.
+//! **any [`LayerModel`] stack** (see [`super::layers`]): two-layer MLPs,
+//! small 1-D convnets and token-sequence embedding-bag models all run
+//! through the same generic forward/backward walk, with SGD + momentum +
+//! weight decay matching the Eq.-2 update the AOT artifacts bake. No
+//! artifacts, no PJRT runtime: this is what lets the full Algorithm-1
+//! pipeline — warmup, τ switch, presample/score/resample, weighted update —
+//! run and be tested end to end, on every figure architecture, in any build
+//! of this repo.
 //!
 //! Design points:
 //!
 //! * Parameters live in the same [`ModelState`] (`xla::Literal` tensors) as
 //!   the PJRT engine's, so checkpointing, SVRG snapshots and the analysis
-//!   vecmath work identically across backends.
+//!   vecmath work identically across backends and across architectures (the
+//!   SGD update and the chunk merges iterate parameter tensors generically).
 //! * The per-row forward pass is *shared* with
-//!   [`NativeScorer`](super::score::NativeScorer)
-//!   ([`mlp_row_forward`](super::score::mlp_row_forward)), so native
-//!   training, native scoring and the sharded scoring benches are
-//!   bit-identical on the same parameters.
+//!   [`NativeScorer`](super::score::NativeScorer) (both walk the same
+//!   [`LayerModel`]), so native training, native scoring and the sharded
+//!   scoring benches are bit-identical on the same parameters. The
+//!   upper-bound score itself is the **architecture-agnostic** last-layer
+//!   softmax-gradient norm of [`super::layers::row_score`] — the paper's
+//!   Eq.-20, computed in one place for every stack.
 //! * Every entry accepts any batch size ≥ 1 — [`Backend::supports`] is
-//!   unconditional — which is why the trainer can evaluate exact partial
-//!   test shards and the resampler can use any presample B natively.
+//!   unconditional over the registry — which is why the trainer can
+//!   evaluate exact partial test shards and the resampler can use any
+//!   presample B natively.
 //! * **Data parallelism** (`--train-workers N`, default one per core):
 //!   every batch-level entry (`train_step`, `grad`, `weighted_grad`,
 //!   `grad_norms`, `eval_metrics` — and through `grad`, the host-composed
 //!   `svrg_step`) shards its batch over the engine's shared
-//!   [`WorkerPool`], spawned once per engine rather than per step.
+//!   [`WorkerPool`], spawned once per engine rather than per step. The
+//!   chunk plans and pool are architecture-independent, so conv and
+//!   sequence models shard exactly like MLPs.
 //! * **Determinism**: the shards come from [`train_chunk_plan`] (or
 //!   [`grad_chunk_plan`], its chunk-count-capped variant for the
 //!   gradient passes) — balanced contiguous chunks whose boundaries
@@ -46,9 +55,10 @@ use xla::Literal;
 use super::backend::Backend;
 use super::engine::{ModelState, StepOutput};
 use super::init;
-use super::manifest::{InitKind, ModelInfo, ParamSpec, Selfcheck};
+use super::layers::{row_loss, row_score, Layer, LayerModel};
+use super::manifest::{ModelInfo, Selfcheck};
 use super::pool::{default_train_workers, Task, WorkerPool};
-use super::score::{mlp_row_forward, row_loss, row_score, split_rows, NativeScorer};
+use super::score::{split_rows, NativeScorer};
 use super::tensor::{literal_to_f32_vec, HostTensor};
 
 /// Row granularity of the deterministic train-side chunk plan. Chunks are
@@ -87,13 +97,13 @@ pub fn grad_chunk_plan(n: usize) -> Vec<(usize, usize)> {
 const NATIVE_ENTRIES: &[&str] =
     &["train_step", "fwd_scores", "eval_metrics", "grad_norms", "grad", "weighted_grad"];
 
-/// Architecture + default batch geometry of one native MLP model.
+/// A registered native model: a [`LayerModel`] stack plus the default batch
+/// geometry the figure harnesses and the trainer read.
 #[derive(Debug, Clone)]
 pub struct NativeModelSpec {
     pub name: String,
-    pub feature_dim: usize,
-    pub hidden: usize,
-    pub num_classes: usize,
+    /// The architecture — any layer stack; see [`super::layers`].
+    pub model: LayerModel,
     /// default training batch b
     pub batch: usize,
     /// default evaluation shard size
@@ -104,6 +114,35 @@ pub struct NativeModelSpec {
 }
 
 impl NativeModelSpec {
+    /// Wrap an explicit [`LayerModel`] with batch geometry.
+    pub fn new(
+        name: &str,
+        model: LayerModel,
+        batch: usize,
+        eval_batch: usize,
+        presample: Vec<usize>,
+    ) -> Self {
+        assert!(batch > 0 && eval_batch > 0, "batch geometry must be positive");
+        Self { name: name.to_string(), model, batch, eval_batch, presample }
+    }
+
+    /// Build a spec from a layer stack (panics on an invalid stack — specs
+    /// are programmer-provided registry entries).
+    pub fn with_layers(
+        name: &str,
+        in_dim: usize,
+        layers: Vec<Layer>,
+        batch: usize,
+        eval_batch: usize,
+        presample: Vec<usize>,
+    ) -> Self {
+        let model = LayerModel::new(in_dim, layers).expect("invalid layer stack");
+        Self::new(name, model, batch, eval_batch, presample)
+    }
+
+    /// The classic two-layer MLP spec (the pre-layer-IR native registry) —
+    /// `[Dense(hidden), Relu, Dense(num_classes)]`, numerically identical
+    /// to the old fused implementation.
     pub fn mlp(
         name: &str,
         feature_dim: usize,
@@ -113,16 +152,8 @@ impl NativeModelSpec {
         eval_batch: usize,
         presample: Vec<usize>,
     ) -> Self {
-        assert!(feature_dim > 0 && hidden > 0 && num_classes > 1 && batch > 0 && eval_batch > 0);
-        Self {
-            name: name.to_string(),
-            feature_dim,
-            hidden,
-            num_classes,
-            batch,
-            eval_batch,
-            presample,
-        }
+        let model = LayerModel::mlp(feature_dim, hidden, num_classes).expect("invalid mlp");
+        Self::new(name, model, batch, eval_batch, presample)
     }
 
     /// The manifest-shaped description of this model. Entries are empty —
@@ -130,20 +161,14 @@ impl NativeModelSpec {
     /// artifact inventory — and the selfcheck block is inert (selfchecks
     /// pin the *cross-language* contract, which only PJRT exercises).
     fn to_model_info(&self) -> ModelInfo {
-        let (d, h, c) = (self.feature_dim, self.hidden, self.num_classes);
         ModelInfo {
             name: self.name.clone(),
-            feature_dim: d,
-            num_classes: c,
+            feature_dim: self.model.in_dim(),
+            num_classes: self.model.num_classes(),
             batch: self.batch,
             eval_batch: self.eval_batch,
             presample: self.presample.clone(),
-            params: vec![
-                ParamSpec { name: "w1".into(), shape: vec![d, h], init: InitKind::GlorotUniform },
-                ParamSpec { name: "b1".into(), shape: vec![h], init: InitKind::Zeros },
-                ParamSpec { name: "w2".into(), shape: vec![h, c], init: InitKind::GlorotUniform },
-                ParamSpec { name: "b2".into(), shape: vec![c], init: InitKind::Zeros },
-            ],
+            params: self.model.param_specs(),
             entries: vec![],
             selfcheck: Selfcheck {
                 seed: 0,
@@ -252,14 +277,58 @@ impl NativeEngine {
         self.pool().run(tasks)
     }
 
-    /// The stock registry: `mlp10` mirrors the PJRT mlp10 geometry
-    /// (64 features / 10 classes — the CIFAR-10 stand-in head) and
-    /// `mlp100` the CIFAR-100-ish §4.2 configuration (768 features /
-    /// 100 classes, b = 128, B up to 1024).
+    /// The stock registry, one native model per figure scenario:
+    ///
+    /// * `mlp10` / `mlp100` — the two-layer MLP stand-ins for the PJRT
+    ///   mlp10 geometry and the CIFAR-100-ish §4.2 configuration
+    ///   (bit-identical to the pre-layer-IR registry).
+    /// * `conv10` — a small Conv1d image net (fig 3's native conv
+    ///   scenario): two strided conv+relu stages, global average pooling
+    ///   and a dense head over the 64-dim synthetic images.
+    /// * `seq64` — an EmbeddingBag sequence net (fig 5's native scenario):
+    ///   positional 16-bin quantization of the 64-step permuted rasters,
+    ///   sum-pooled embeddings (`gain = T`) and a dense head.
     pub fn with_default_models() -> Self {
         let mut ne = Self::new();
         ne.register(NativeModelSpec::mlp("mlp10", 64, 128, 10, 128, 256, vec![384, 640, 1024]));
         ne.register(NativeModelSpec::mlp("mlp100", 768, 256, 100, 128, 512, vec![640, 1024]));
+        ne.register(NativeModelSpec::with_layers(
+            "conv10",
+            64,
+            vec![
+                Layer::Conv1d { in_ch: 1, out_ch: 8, kernel: 5, stride: 2 },
+                Layer::Relu,
+                Layer::Conv1d { in_ch: 8, out_ch: 16, kernel: 3, stride: 2 },
+                Layer::Relu,
+                Layer::GlobalAvgPool { channels: 16 },
+                Layer::Dense { out_dim: 32 },
+                Layer::Relu,
+                Layer::Dense { out_dim: 10 },
+            ],
+            128,
+            256,
+            vec![384, 640],
+        ));
+        ne.register(NativeModelSpec::with_layers(
+            "seq64",
+            64,
+            vec![
+                Layer::EmbeddingBag {
+                    vocab: 16,
+                    dim: 32,
+                    lo: -3.0,
+                    hi: 3.0,
+                    positional: true,
+                    gain: 64.0,
+                },
+                Layer::Dense { out_dim: 32 },
+                Layer::Relu,
+                Layer::Dense { out_dim: 10 },
+            ],
+            32,
+            256,
+            vec![128, 256],
+        ));
         ne
     }
 
@@ -283,22 +352,25 @@ impl NativeEngine {
         })
     }
 
+    /// The registered [`LayerModel`] stack of a model.
+    pub fn layer_model(&self, name: &str) -> Result<&LayerModel> {
+        Ok(&self.model(name)?.spec.model)
+    }
+
     /// A [`NativeScorer`] over the state's current parameters — scores are
-    /// bit-identical to this backend's `fwd_scores` (shared row forward).
+    /// bit-identical to this backend's `fwd_scores` (same layer walk).
     pub fn scorer(&self, state: &ModelState) -> Result<NativeScorer> {
         let m = self.model(&state.model)?;
-        let (d, h, c) = (m.spec.feature_dim, m.spec.hidden, m.spec.num_classes);
-        let [w1, b1, w2, b2] = host4(&state.params, "parameter")?;
-        NativeScorer::from_params(d, h, c, w1, b1, w2, b2)
+        NativeScorer::from_model(m.spec.model.clone(), state.params_to_host()?)
     }
 
     fn check_batch(&self, m: &NativeModel, x: &HostTensor, y: &[i32]) -> Result<usize> {
-        if x.shape.len() != 2 || x.shape[1] != m.spec.feature_dim {
+        let d = m.spec.model.in_dim();
+        if x.shape.len() != 2 || x.shape[1] != d {
             bail!(
-                "x shape {:?} does not match native model {:?} expectation [n, {}]",
+                "x shape {:?} does not match native model {:?} expectation [n, {d}]",
                 x.shape,
-                m.spec.name,
-                m.spec.feature_dim
+                m.spec.name
             );
         }
         let n = x.shape[0];
@@ -318,8 +390,8 @@ impl NativeEngine {
     /// makes every worker count bit-identical.
     fn batch_pass(
         &self,
-        spec: &NativeModelSpec,
-        p: &[Vec<f32>; 4],
+        model: &LayerModel,
+        p: &[Vec<f32>],
         x: &HostTensor,
         y: &[i32],
         coeff: &[f32],
@@ -327,7 +399,7 @@ impl NativeEngine {
         let n = x.shape[0];
         let chunks = grad_chunk_plan(n);
         let outs = self.run_chunks(&chunks, |start, len| {
-            backward_pass_range(spec, p, x, y, coeff, start, len)
+            backward_pass_range(model, p, x, y, coeff, start, len)
         });
         // Seed the reduction with chunk 0's partial and fold the rest in
         // chunk order — no zero-filled accumulator, one fewer full add.
@@ -349,21 +421,16 @@ impl NativeEngine {
     }
 }
 
-/// Pull the four MLP tensors (w1, b1, w2, b2) of a literal list to host.
-fn host4(lits: &[Literal], what: &str) -> Result<[Vec<f32>; 4]> {
-    if lits.len() != 4 {
-        bail!("native MLP expects 4 {what} tensors, got {}", lits.len());
+/// Pull a literal list to host tensors, checking the expected count.
+fn host_tensors(lits: &[Literal], expect: usize, what: &str) -> Result<Vec<Vec<f32>>> {
+    if lits.len() != expect {
+        bail!("native model expects {expect} {what} tensors, got {}", lits.len());
     }
-    Ok([
-        literal_to_f32_vec(&lits[0])?,
-        literal_to_f32_vec(&lits[1])?,
-        literal_to_f32_vec(&lits[2])?,
-        literal_to_f32_vec(&lits[3])?,
-    ])
+    lits.iter().map(literal_to_f32_vec).collect()
 }
 
 /// Rebuild the literal list from host tensors, in manifest param order.
-fn lits4(info: &ModelInfo, tensors: [Vec<f32>; 4]) -> Result<Vec<Literal>> {
+fn lits_from(info: &ModelInfo, tensors: Vec<Vec<f32>>) -> Result<Vec<Literal>> {
     info.params
         .iter()
         .zip(tensors)
@@ -374,8 +441,8 @@ fn lits4(info: &ModelInfo, tensors: [Vec<f32>; 4]) -> Result<Vec<Literal>> {
 /// Everything one weighted forward+backward pass over a batch (or one
 /// chunk of it) produces.
 struct BatchPass {
-    /// gradients in param order (w1, b1, w2, b2)
-    grads: [Vec<f32>; 4],
+    /// gradients, one buffer per parameter tensor in spec order
+    grads: Vec<Vec<f32>>,
     loss_vec: Vec<f32>,
     scores: Vec<f32>,
     /// `Σ coeffᵢ·lossᵢ` — the weighted mean loss when `coeff = w/n`.
@@ -386,32 +453,31 @@ struct BatchPass {
 /// row `i`'s contribution to the accumulated gradients (`1/n` for a mean
 /// gradient, `wᵢ/n` for the weighted estimators of Eq. 2). Rows accumulate
 /// serially in index order into full-sized gradient buffers — one chunk of
-/// the fixed-order reduction of the module docs.
+/// the fixed-order reduction of the module docs. The walk is the generic
+/// [`LayerModel`] one: the same code trains MLPs, convnets and sequence
+/// models.
 fn backward_pass_range(
-    spec: &NativeModelSpec,
-    p: &[Vec<f32>; 4],
+    model: &LayerModel,
+    p: &[Vec<f32>],
     x: &HostTensor,
     y: &[i32],
     coeff: &[f32],
     start: usize,
     len: usize,
 ) -> BatchPass {
-    let (d, h, c) = (spec.feature_dim, spec.hidden, spec.num_classes);
-    let [w1, b1, w2, b2] = p;
-    let zeros = |len: usize| vec![0.0f32; len];
-    let mut grads = [zeros(d * h), zeros(h), zeros(h * c), zeros(c)];
+    let mut grads = model.zero_grads();
+    let mut scratch = model.scratch();
     let mut loss_vec = Vec::with_capacity(len);
     let mut scores = Vec::with_capacity(len);
     let mut weighted_loss = 0.0f64;
-    let mut dh = vec![0.0f32; h];
     for r in start..start + len {
         let xr = x.row(r);
-        let (hid, probs) = mlp_row_forward(w1, b1, w2, b2, xr, h, c);
-        let yy = (y[r] as usize).min(c - 1);
-        let loss = row_loss(&probs, yy);
-        let score = row_score(&probs, yy);
-        let mut gz = probs;
-        gz[yy] -= 1.0;
+        model.forward_row(p, xr, &mut scratch);
+        let yy = model.clamp_label(y[r]);
+        let (loss, score) = {
+            let probs = scratch.probs();
+            (row_loss(probs, yy), row_score(probs, yy))
+        };
         loss_vec.push(loss);
         scores.push(score);
         let cf = coeff[r];
@@ -419,42 +485,16 @@ fn backward_pass_range(
         if cf == 0.0 {
             continue;
         }
-        for g in gz.iter_mut() {
-            *g *= cf;
-        }
-        // layer 2: gW2 += h ⊗ gz, gb2 += gz
-        for (j, &hj) in hid.iter().enumerate() {
-            if hj != 0.0 {
-                let row = &mut grads[2][j * c..(j + 1) * c];
-                for (gw, &g) in row.iter_mut().zip(&gz) {
-                    *gw += hj * g;
-                }
+        {
+            // the softmax gradient, scaled by the row coefficient, seeds
+            // the backward walk in place of the probabilities
+            let gz = scratch.probs_mut();
+            gz[yy] -= 1.0;
+            for g in gz.iter_mut() {
+                *g *= cf;
             }
         }
-        for (gb, &g) in grads[3].iter_mut().zip(&gz) {
-            *gb += g;
-        }
-        // back through relu: dh = (gz · W2ᵀ) ∘ [h > 0]
-        for (j, dhj) in dh.iter_mut().enumerate() {
-            *dhj = if hid[j] > 0.0 {
-                let row = &w2[j * c..(j + 1) * c];
-                row.iter().zip(&gz).map(|(&wv, &g)| wv * g).sum()
-            } else {
-                0.0
-            };
-        }
-        // layer 1: gW1 += x ⊗ dh, gb1 += dh
-        for (i, &xi) in xr.iter().enumerate() {
-            if xi != 0.0 {
-                let row = &mut grads[0][i * h..(i + 1) * h];
-                for (gw, &dv) in row.iter_mut().zip(&dh) {
-                    *gw += xi * dv;
-                }
-            }
-        }
-        for (gb, &dv) in grads[1].iter_mut().zip(&dh) {
-            *gb += dv;
-        }
+        model.backward_row(p, xr, &mut scratch, &mut grads);
     }
     BatchPass { grads, loss_vec, scores, weighted_loss }
 }
@@ -505,11 +545,12 @@ impl Backend for NativeEngine {
         if w.len() != n {
             bail!("w length {} != batch {n}", w.len());
         }
-        let params = host4(&state.params, "parameter")?;
-        let mut mom = host4(&state.mom, "momentum")?;
+        let nt = m.info.params.len();
+        let params = host_tensors(&state.params, nt, "parameter")?;
+        let mut mom = host_tensors(&state.mom, nt, "momentum")?;
         let inv_n = 1.0 / n as f32;
         let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = self.batch_pass(&m.spec, &params, x, y, &coeff);
+        let pass = self.batch_pass(&m.spec.model, &params, x, y, &coeff);
         // Eq. 2 with the manifest's optimizer: g' = g + wd·θ;
         // v <- μ·v + g'; θ <- θ - lr·v.
         let mut params = params;
@@ -520,8 +561,8 @@ impl Backend for NativeEngine {
                 *pv -= lr * *vv;
             }
         }
-        state.params = lits4(&m.info, params)?;
-        state.mom = lits4(&m.info, mom)?;
+        state.params = lits_from(&m.info, params)?;
+        state.mom = lits_from(&m.info, mom)?;
         state.step += 1;
         Ok(StepOutput {
             loss: pass.weighted_loss as f32,
@@ -538,15 +579,15 @@ impl Backend for NativeEngine {
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let m = self.model(&state.model)?;
         let n = self.check_batch(m, x, y)?;
-        let [w1, b1, w2, b2] = host4(&state.params, "parameter")?;
-        let (h, c) = (m.spec.hidden, m.spec.num_classes);
+        let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
+        let model = &m.spec.model;
+        let mut scratch = model.scratch();
         let mut loss_vec = Vec::with_capacity(n);
         let mut scores = Vec::with_capacity(n);
         for r in 0..n {
-            let (_, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, x.row(r), h, c);
-            let yy = (y[r] as usize).min(c - 1);
-            loss_vec.push(row_loss(&probs, yy));
-            scores.push(row_score(&probs, yy));
+            let (loss, score) = model.row_scores(&p, x.row(r), y[r], &mut scratch);
+            loss_vec.push(loss);
+            scores.push(score);
         }
         Ok((loss_vec, scores))
     }
@@ -554,16 +595,18 @@ impl Backend for NativeEngine {
     fn eval_metrics(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<(f64, i64)> {
         let m = self.model(&state.model)?;
         let n = self.check_batch(m, x, y)?;
-        let [w1, b1, w2, b2] = host4(&state.params, "parameter")?;
-        let (h, c) = (m.spec.hidden, m.spec.num_classes);
+        let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
+        let model = &m.spec.model;
         let chunks = train_chunk_plan(n);
         let outs = self.run_chunks(&chunks, |start, len| {
+            let mut scratch = model.scratch();
             let mut sum_loss = 0.0f64;
             let mut correct = 0i64;
             for r in start..start + len {
-                let (_, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, x.row(r), h, c);
-                let yy = (y[r] as usize).min(c - 1);
-                sum_loss += row_loss(&probs, yy) as f64;
+                model.forward_row(&p, x.row(r), &mut scratch);
+                let yy = model.clamp_label(y[r]);
+                let probs = scratch.probs();
+                sum_loss += row_loss(probs, yy) as f64;
                 let argmax = probs
                     .iter()
                     .enumerate()
@@ -589,34 +632,20 @@ impl Backend for NativeEngine {
     fn grad_norms(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<Vec<f32>> {
         let m = self.model(&state.model)?;
         let n = self.check_batch(m, x, y)?;
-        let [w1, b1, w2, b2] = host4(&state.params, "parameter")?;
-        let (h, c) = (m.spec.hidden, m.spec.num_classes);
-        // Per-sample gradient norm of the 2-layer MLP, exactly:
-        //   ‖∇θ lossᵢ‖² = ‖gz‖²(1 + ‖h‖²) + ‖dh‖²(1 + ‖x‖²)
-        // using ‖a ⊗ b‖_F = ‖a‖·‖b‖ for the outer-product weight grads.
-        // Per-row outputs, so chunked compute + in-order concat is
-        // trivially bit-identical for any worker count.
+        let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
+        let model = &m.spec.model;
+        // Exact per-sample gradient norm via the generic layer walk
+        // (closed forms per layer where separable; see
+        // `layers::Layer::grad_sq_norm`). Per-row outputs, so chunked
+        // compute + in-order concat is trivially bit-identical for any
+        // worker count.
         let chunks = train_chunk_plan(n);
         let outs = self.run_chunks(&chunks, |start, len| {
+            let mut scratch = model.scratch();
+            let mut wscratch = Vec::new();
             let mut out = Vec::with_capacity(len);
             for r in start..start + len {
-                let xr = x.row(r);
-                let (hid, probs) = mlp_row_forward(&w1, &b1, &w2, &b2, xr, h, c);
-                let yy = (y[r] as usize).min(c - 1);
-                let mut gz = probs;
-                gz[yy] -= 1.0;
-                let gz2: f32 = gz.iter().map(|g| g * g).sum();
-                let h2: f32 = hid.iter().map(|v| v * v).sum();
-                let x2: f32 = xr.iter().map(|v| v * v).sum();
-                let mut dh2 = 0.0f32;
-                for (j, &hj) in hid.iter().enumerate() {
-                    if hj > 0.0 {
-                        let row = &w2[j * c..(j + 1) * c];
-                        let dv: f32 = row.iter().zip(&gz).map(|(&wv, &g)| wv * g).sum();
-                        dh2 += dv * dv;
-                    }
-                }
-                out.push((gz2 * (1.0 + h2) + dh2 * (1.0 + x2)).sqrt());
+                out.push(model.grad_norm_row(&p, x.row(r), y[r], &mut scratch, &mut wscratch));
             }
             out
         });
@@ -636,10 +665,10 @@ impl Backend for NativeEngine {
     ) -> Result<(Vec<Literal>, f32)> {
         let m = self.model(model)?;
         let n = self.check_batch(m, x, y)?;
-        let p = host4(params, "parameter")?;
+        let p = host_tensors(params, m.info.params.len(), "parameter")?;
         let coeff = vec![1.0 / n as f32; n];
-        let pass = self.batch_pass(&m.spec, &p, x, y, &coeff);
-        Ok((lits4(&m.info, pass.grads)?, pass.weighted_loss as f32))
+        let pass = self.batch_pass(&m.spec.model, &p, x, y, &coeff);
+        Ok((lits_from(&m.info, pass.grads)?, pass.weighted_loss as f32))
     }
 
     fn weighted_grad(
@@ -654,11 +683,11 @@ impl Backend for NativeEngine {
         if w.len() != n {
             bail!("w length {} != batch {n}", w.len());
         }
-        let p = host4(&state.params, "parameter")?;
+        let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
         let inv_n = 1.0 / n as f32;
         let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = self.batch_pass(&m.spec, &p, x, y, &coeff);
-        Ok((lits4(&m.info, pass.grads)?, pass.weighted_loss as f32))
+        let pass = self.batch_pass(&m.spec.model, &p, x, y, &coeff);
+        Ok((lits_from(&m.info, pass.grads)?, pass.weighted_loss as f32))
     }
 }
 
@@ -670,6 +699,26 @@ mod tests {
     fn tiny_engine() -> NativeEngine {
         let mut ne = NativeEngine::new();
         ne.register(NativeModelSpec::mlp("tiny", 6, 5, 3, 4, 8, vec![16]));
+        ne
+    }
+
+    /// A conv+pool stack over [8 time, 2 ch] inputs — the quick in-module
+    /// coverage that non-MLP stacks drive every entry point.
+    fn conv_engine() -> NativeEngine {
+        let mut ne = NativeEngine::new();
+        ne.register(NativeModelSpec::with_layers(
+            "cv",
+            16,
+            vec![
+                Layer::Conv1d { in_ch: 2, out_ch: 4, kernel: 3, stride: 1 },
+                Layer::Relu,
+                Layer::GlobalAvgPool { channels: 4 },
+                Layer::Dense { out_dim: 3 },
+            ],
+            4,
+            8,
+            vec![16],
+        ));
         ne
     }
 
@@ -690,9 +739,9 @@ mod tests {
         let c = ne.init_state("tiny", 8).unwrap();
         assert_eq!(a.params.len(), 4);
         assert_eq!(a.mom.len(), 4);
-        let ah = host4(&a.params, "p").unwrap();
-        let bh = host4(&b.params, "p").unwrap();
-        let ch = host4(&c.params, "p").unwrap();
+        let ah = host_tensors(&a.params, 4, "p").unwrap();
+        let bh = host_tensors(&b.params, 4, "p").unwrap();
+        let ch = host_tensors(&c.params, 4, "p").unwrap();
         assert_eq!(ah, bh);
         assert_ne!(ah[0], ch[0]);
         assert_eq!(ah[0].len(), 6 * 5);
@@ -729,6 +778,21 @@ mod tests {
         }
         assert!(last < first.loss * 0.5, "loss did not drop: {} -> {last}", first.loss);
         assert_eq!(state.step, 61);
+    }
+
+    #[test]
+    fn conv_train_step_reduces_loss_on_a_fixed_batch() {
+        let ne = conv_engine();
+        let mut state = ne.init_state("cv", 1).unwrap();
+        assert_eq!(state.params.len(), 4); // conv w/b + dense w/b
+        let (x, y) = tiny_batch(6, 16, 3);
+        let w = [1.0f32; 6];
+        let first = ne.train_step(&mut state, &x, &y, &w, 0.3).unwrap();
+        let mut last = first.loss;
+        for _ in 0..120 {
+            last = ne.train_step(&mut state, &x, &y, &w, 0.3).unwrap().loss;
+        }
+        assert!(last < first.loss * 0.7, "conv loss did not drop: {} -> {last}", first.loss);
     }
 
     #[test]
@@ -771,13 +835,16 @@ mod tests {
 
     #[test]
     fn scorer_matches_backend_scores_bitwise() {
-        let ne = tiny_engine();
-        let state = ne.init_state("tiny", 5).unwrap();
-        let scorer = ne.scorer(&state).unwrap();
-        let (x, y) = tiny_batch(16, 6, 3);
-        let (loss, ub) = ne.fwd_scores(&state, &x, &y).unwrap();
-        assert_eq!(scorer.score_chunk(&x, &y, ScoreKind::Loss).unwrap(), loss);
-        assert_eq!(scorer.score_chunk(&x, &y, ScoreKind::UpperBound).unwrap(), ub);
+        for ne in [tiny_engine(), conv_engine()] {
+            let name = ne.model_names().remove(0);
+            let state = ne.init_state(&name, 5).unwrap();
+            let scorer = ne.scorer(&state).unwrap();
+            let d = ne.layer_model(&name).unwrap().in_dim();
+            let (x, y) = tiny_batch(16, d, 3);
+            let (loss, ub) = ne.fwd_scores(&state, &x, &y).unwrap();
+            assert_eq!(scorer.score_chunk(&x, &y, ScoreKind::Loss).unwrap(), loss);
+            assert_eq!(scorer.score_chunk(&x, &y, ScoreKind::UpperBound).unwrap(), ub);
+        }
     }
 
     #[test]
@@ -796,12 +863,20 @@ mod tests {
     #[test]
     fn default_models_are_registered() {
         let ne = NativeEngine::with_default_models();
-        assert_eq!(ne.model_names(), vec!["mlp10".to_string(), "mlp100".to_string()]);
+        let names: Vec<String> =
+            ["conv10", "mlp10", "mlp100", "seq64"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(ne.model_names(), names);
         let info = ne.model_info("mlp10").unwrap();
         assert_eq!(info.feature_dim, 64);
         assert_eq!(info.num_classes, 10);
         assert_eq!(info.batch, 128);
         assert_eq!(info.presample.iter().max(), Some(&1024));
+        // the conv and sequence scenarios match the fig3/fig5 datasets
+        let conv = ne.model_info("conv10").unwrap();
+        assert_eq!((conv.feature_dim, conv.num_classes), (64, 10));
+        let seq = ne.model_info("seq64").unwrap();
+        assert_eq!((seq.feature_dim, seq.num_classes), (64, 10));
+        assert!(seq.presample.contains(&128)); // fig5's B
     }
 
     #[test]
@@ -855,40 +930,49 @@ mod tests {
     fn parallel_entries_are_bit_identical_to_serial() {
         // Every batch-level entry, serial vs pooled, on a batch large
         // enough for several chunks (37 rows -> 5 chunks) — the quick
-        // in-module version of the rust/tests/props.rs properties.
-        let run = |workers: usize| {
-            let mut ne = NativeEngine::new().with_train_workers(workers);
-            ne.register(NativeModelSpec::mlp("tiny", 6, 5, 3, 4, 8, vec![16]));
-            let mut state = ne.init_state("tiny", 12).unwrap();
-            let (x, y) = tiny_batch(37, 6, 3);
-            let w: Vec<f32> = (0..37).map(|i| 0.25 + (i % 5) as f32 * 0.5).collect();
-            let (grads, wloss) = ne.weighted_grad(&state, &x, &y, &w).unwrap();
-            let gh: Vec<Vec<f32>> = grads.iter().map(|g| literal_to_f32_vec(g).unwrap()).collect();
-            let gn = ne.grad_norms(&state, &x, &y).unwrap();
-            let (el, ec) = ne.eval_metrics(&state, &x, &y).unwrap();
-            let out = ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
-            let params = state.params_to_host().unwrap();
-            (gh, wloss.to_bits(), gn, el.to_bits(), ec, out.loss.to_bits(), params)
-        };
-        let serial = run(1);
-        for workers in [2, 3, 8] {
-            assert_eq!(run(workers), serial, "{workers} workers diverged from serial");
+        // in-module version of the rust/tests/props.rs properties, run on
+        // an MLP and on a conv stack (the chunk plans and merges are
+        // architecture-independent).
+        let specs: [fn() -> NativeEngine; 2] = [tiny_engine, conv_engine];
+        for (mk, d) in specs.iter().zip([6usize, 16]) {
+            let run = |workers: usize| {
+                let ne = mk().with_train_workers(workers);
+                let name = ne.model_names().remove(0);
+                let mut state = ne.init_state(&name, 12).unwrap();
+                let (x, y) = tiny_batch(37, d, 3);
+                let w: Vec<f32> = (0..37).map(|i| 0.25 + (i % 5) as f32 * 0.5).collect();
+                let (grads, wloss) = ne.weighted_grad(&state, &x, &y, &w).unwrap();
+                let gh: Vec<Vec<f32>> =
+                    grads.iter().map(|g| literal_to_f32_vec(g).unwrap()).collect();
+                let gn = ne.grad_norms(&state, &x, &y).unwrap();
+                let (el, ec) = ne.eval_metrics(&state, &x, &y).unwrap();
+                let out = ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
+                let params = state.params_to_host().unwrap();
+                (gh, wloss.to_bits(), gn, el.to_bits(), ec, out.loss.to_bits(), params)
+            };
+            let serial = run(1);
+            for workers in [2, 3, 8] {
+                assert_eq!(run(workers), serial, "{workers} workers diverged from serial");
+            }
         }
     }
 
     #[test]
     fn grad_norms_are_finite_and_track_scores() {
-        let ne = tiny_engine();
-        let state = ne.init_state("tiny", 9).unwrap();
-        let (x, y) = tiny_batch(32, 6, 3);
-        let gn = ne.grad_norms(&state, &x, &y).unwrap();
-        let (_, ub) = ne.fwd_scores(&state, &x, &y).unwrap();
-        assert_eq!(gn.len(), 32);
-        assert!(gn.iter().all(|v| v.is_finite() && *v >= 0.0));
-        // the Eq.-20 bound is the last-layer factor of the true norm:
-        // grad norm >= ||gz|| always (it multiplies sqrt(1 + ||h||²) >= 1)
-        for (g, u) in gn.iter().zip(&ub) {
-            assert!(*g >= *u - 1e-5, "grad norm {g} < upper-bound factor {u}");
+        for ne in [tiny_engine(), conv_engine()] {
+            let name = ne.model_names().remove(0);
+            let d = ne.layer_model(&name).unwrap().in_dim();
+            let state = ne.init_state(&name, 9).unwrap();
+            let (x, y) = tiny_batch(32, d, 3);
+            let gn = ne.grad_norms(&state, &x, &y).unwrap();
+            let (_, ub) = ne.fwd_scores(&state, &x, &y).unwrap();
+            assert_eq!(gn.len(), 32);
+            assert!(gn.iter().all(|v| v.is_finite() && *v >= 0.0));
+            // the head's bias gradient alone is the Eq.-20 score, so the
+            // true norm dominates the upper-bound factor for every stack
+            for (g, u) in gn.iter().zip(&ub) {
+                assert!(*g >= *u - 1e-5, "grad norm {g} < upper-bound factor {u}");
+            }
         }
     }
 }

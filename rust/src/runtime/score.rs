@@ -11,11 +11,13 @@
 //! * [`BackendScorer`] — scores through any [`Backend`]'s entry points
 //!   (PJRT baked artifacts or the native CPU engine). Backends are `Sync`,
 //!   so one backend serves all workers.
-//! * [`NativeScorer`] — a deterministic pure-rust two-layer MLP scorer used
-//!   by the scoring benches and tests (no AOT artifacts required). Its row
-//!   forward pass ([`mlp_row_forward`]) is shared with
-//!   [`NativeEngine`](super::native::NativeEngine), so native training and
-//!   native scoring are bit-identical on the same parameters.
+//! * [`NativeScorer`] — a deterministic pure-rust scorer over any
+//!   [`LayerModel`] stack (no AOT artifacts required): MLPs, convnets and
+//!   sequence models all score through the same generic layer walk shared
+//!   with [`NativeEngine`](super::native::NativeEngine), so native training
+//!   and native scoring are bit-identical on the same parameters, and the
+//!   upper-bound score is the architecture-agnostic last-layer bound of
+//!   `runtime::layers`.
 //! * [`ScoreBackend`] — the serial path, plus a threaded backend that
 //!   splits the batch into contiguous per-worker chunks, scores them on
 //!   scoped worker threads (the same std-only idiom as
@@ -31,8 +33,9 @@ use anyhow::{anyhow, bail, Result};
 
 use super::backend::Backend;
 use super::engine::ModelState;
+use super::init;
+use super::layers::LayerModel;
 use super::tensor::HostTensor;
-use crate::util::rng::SplitMix64;
 
 /// Which per-sample statistic drives the presample distribution.
 /// (Owned by the scoring subsystem; `coordinator::sampler` re-exports it.)
@@ -143,137 +146,40 @@ impl SampleScorer for BackendScorer<'_> {
     }
 }
 
-/// A self-contained pure-rust scorer: a deterministic two-layer MLP whose
-/// per-sample loss and Eq.-20 upper bound are computed natively. Lets the
-/// scoring benches and the determinism tests exercise the parallel path —
-/// and measure its speedup — without AOT artifacts or a PJRT runtime.
+/// A self-contained pure-rust scorer over any [`LayerModel`] stack: the
+/// per-sample loss, the architecture-agnostic Eq.-20 upper bound and the
+/// exact gradient-norm oracle are computed natively through the same layer
+/// walk the training backend uses. Lets the scoring benches and the
+/// determinism tests exercise the parallel path — and measure its speedup —
+/// without AOT artifacts or a PJRT runtime.
 pub struct NativeScorer {
-    feature_dim: usize,
-    hidden: usize,
-    num_classes: usize,
-    w1: Vec<f32>,
-    b1: Vec<f32>,
-    w2: Vec<f32>,
-    b2: Vec<f32>,
-}
-
-/// Forward one row through the two-layer MLP: `hidden = relu(x·W1 + b1)`,
-/// `probs = softmax(hidden·W2 + b2)`. One implementation shared by
-/// [`NativeScorer`] and [`NativeEngine`](super::native::NativeEngine) so
-/// native scoring and native training numerics are bit-identical.
-pub(crate) fn mlp_row_forward(
-    w1: &[f32],
-    b1: &[f32],
-    w2: &[f32],
-    b2: &[f32],
-    x: &[f32],
-    h: usize,
-    c: usize,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut hidden = vec![0.0f32; h];
-    for (j, hj) in hidden.iter_mut().enumerate() {
-        let mut acc = b1[j];
-        for (i, &xi) in x.iter().enumerate() {
-            acc += xi * w1[i * h + j];
-        }
-        *hj = acc.max(0.0);
-    }
-    let mut probs = vec![0.0f32; c];
-    for (k, pk) in probs.iter_mut().enumerate() {
-        let mut acc = b2[k];
-        for (j, &hj) in hidden.iter().enumerate() {
-            acc += hj * w2[j * c + k];
-        }
-        *pk = acc;
-    }
-    let max = probs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    let mut denom = 0.0f32;
-    for p in probs.iter_mut() {
-        *p = (*p - max).exp();
-        denom += *p;
-    }
-    for p in probs.iter_mut() {
-        *p /= denom;
-    }
-    (hidden, probs)
-}
-
-/// Softmax cross-entropy loss of one row from its softmax probs — the one
-/// formula every native entry (scoring, training, evaluation) uses, so
-/// their numerics can never drift apart.
-pub(crate) fn row_loss(probs: &[f32], y: usize) -> f32 {
-    -(probs[y] + 1e-12).ln()
-}
-
-/// The Eq.-20 upper bound ‖probs − onehot(y)‖₂ of one row.
-pub(crate) fn row_score(probs: &[f32], y: usize) -> f32 {
-    let mut norm2 = 0.0f32;
-    for (k, &p) in probs.iter().enumerate() {
-        let g = if k == y { p - 1.0 } else { p };
-        norm2 += g * g;
-    }
-    norm2.sqrt()
+    model: LayerModel,
+    params: Vec<Vec<f32>>,
 }
 
 impl NativeScorer {
+    /// A freshly initialized two-layer MLP scorer (the bench/test default;
+    /// parameters come from the shared `runtime::init` recipe).
     pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, seed: u64) -> Self {
-        let glorot = |rng: &mut SplitMix64, fan_in: usize, fan_out: usize, n: usize| {
-            let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
-            (0..n).map(|_| rng.uniform_range(-a, a) as f32).collect::<Vec<f32>>()
-        };
-        let mut r1 = SplitMix64::tensor_stream(seed, 0);
-        let mut r2 = SplitMix64::tensor_stream(seed, 1);
-        Self {
-            feature_dim,
-            hidden,
-            num_classes,
-            w1: glorot(&mut r1, feature_dim, hidden, feature_dim * hidden),
-            b1: vec![0.0; hidden],
-            w2: glorot(&mut r2, hidden, num_classes, hidden * num_classes),
-            b2: vec![0.0; num_classes],
-        }
+        let model = LayerModel::mlp(feature_dim, hidden, num_classes).expect("invalid mlp");
+        let params = init::init_params(seed, &model.param_specs());
+        Self { model, params }
     }
 
-    /// A scorer over explicit parameters — how the native training backend
-    /// hands its live model state to the scoring subsystem.
-    pub fn from_params(
-        feature_dim: usize,
-        hidden: usize,
-        num_classes: usize,
-        w1: Vec<f32>,
-        b1: Vec<f32>,
-        w2: Vec<f32>,
-        b2: Vec<f32>,
-    ) -> Result<Self> {
-        if w1.len() != feature_dim * hidden
-            || b1.len() != hidden
-            || w2.len() != hidden * num_classes
-            || b2.len() != num_classes
-        {
-            bail!("native scorer params do not match {feature_dim}x{hidden}x{num_classes}");
-        }
-        Ok(Self { feature_dim, hidden, num_classes, w1, b1, w2, b2 })
+    /// A scorer over an explicit layer stack + host parameters — how the
+    /// native training backend hands its live model state (of **any**
+    /// architecture) to the scoring subsystem.
+    pub fn from_model(model: LayerModel, params: Vec<Vec<f32>>) -> Result<Self> {
+        model.check_params(&params)?;
+        Ok(Self { model, params })
     }
 
     pub fn feature_dim(&self) -> usize {
-        self.feature_dim
+        self.model.in_dim()
     }
 
     pub fn num_classes(&self) -> usize {
-        self.num_classes
-    }
-
-    /// Score one row: forward pass, softmax cross-entropy loss, and the
-    /// Eq.-20 bound ‖softmax(z) − onehot(y)‖₂ on the last-layer pre-act
-    /// gradient (which is also the stand-in for the full gradient norm).
-    fn score_row(&self, x: &[f32], y: i32, kind: ScoreKind) -> f32 {
-        let (h, c) = (self.hidden, self.num_classes);
-        let (_, probs) = mlp_row_forward(&self.w1, &self.b1, &self.w2, &self.b2, x, h, c);
-        let y = (y as usize).min(c - 1);
-        match kind {
-            ScoreKind::Loss => row_loss(&probs, y),
-            ScoreKind::UpperBound | ScoreKind::GradNorm => row_score(&probs, y),
-        }
+        self.model.num_classes()
     }
 }
 
@@ -286,13 +192,32 @@ impl SampleScorer for NativeScorer {
     }
 
     fn score_rows(&self, x: RowChunk<'_>, y: &[i32], kind: ScoreKind) -> Result<Vec<f32>> {
-        if x.dim != self.feature_dim {
-            bail!("native scorer expects {}-dim features, got {}", self.feature_dim, x.dim);
+        if x.dim != self.feature_dim() {
+            bail!("native scorer expects {}-dim features, got {}", self.feature_dim(), x.dim);
         }
         if y.len() != x.rows {
             bail!("labels ({}) do not match rows ({})", y.len(), x.rows);
         }
-        Ok((0..x.rows).map(|r| self.score_row(x.row(r), y[r], kind)).collect())
+        let (m, p) = (&self.model, &self.params);
+        let mut scratch = m.scratch();
+        let mut out = Vec::with_capacity(x.rows);
+        match kind {
+            ScoreKind::Loss | ScoreKind::UpperBound => {
+                for r in 0..x.rows {
+                    let (loss, ub) = m.row_scores(p, x.row(r), y[r], &mut scratch);
+                    out.push(if kind == ScoreKind::Loss { loss } else { ub });
+                }
+            }
+            ScoreKind::GradNorm => {
+                // the exact per-sample norm via the generic layer walk (the
+                // pre-layer-IR scorer substituted the upper bound here)
+                let mut ws = Vec::new();
+                for r in 0..x.rows {
+                    out.push(m.grad_norm_row(p, x.row(r), y[r], &mut scratch, &mut ws));
+                }
+            }
+        }
+        Ok(out)
     }
 
     fn supports_rows(&self, _rows: usize, _kind: ScoreKind) -> bool {

@@ -14,13 +14,36 @@ use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
 use isample::runtime::checkpoint::{self, state_checksum};
-use isample::runtime::{Backend, ModelState, NativeEngine, NativeModelSpec};
+use isample::runtime::{Backend, Layer, ModelState, NativeEngine, NativeModelSpec};
 use isample::util::digest::digest_f64;
 use isample::util::rng::SplitMix64;
 
 fn gold_engine() -> NativeEngine {
     let mut ne = NativeEngine::new();
     ne.register(NativeModelSpec::mlp("gold", 32, 24, 4, 32, 64, vec![128]));
+    ne
+}
+
+/// A conv+pool stack on the same data — the layer-IR twin of `gold`: the
+/// `--train-workers` determinism guarantee is architecture-independent, so
+/// the golden harness pins it for a non-MLP stack too (ISSUE 4).
+fn conv_gold_engine() -> NativeEngine {
+    let mut ne = NativeEngine::new();
+    ne.register(NativeModelSpec::with_layers(
+        "cgold",
+        32,
+        vec![
+            Layer::Conv1d { in_ch: 2, out_ch: 6, kernel: 3, stride: 2 },
+            Layer::Relu,
+            Layer::GlobalAvgPool { channels: 6 },
+            Layer::Dense { out_dim: 16 },
+            Layer::Relu,
+            Layer::Dense { out_dim: 4 },
+        ],
+        32,
+        64,
+        vec![128],
+    ));
     ne
 }
 
@@ -64,6 +87,36 @@ fn golden_trajectory_is_bit_identical_across_worker_counts() {
              (trajectory {:#x} vs {:#x}, state {:#x} vs {:#x})",
             got.0, serial.0, got.1, serial.1
         );
+    }
+}
+
+/// The conv variant of [`golden_run`]: a shorter fixed-seed upper-bound
+/// run on the layer-IR conv stack; (trajectory digest, state checksum).
+fn conv_golden_run(train_workers: usize) -> (u64, u64) {
+    let ne = conv_gold_engine();
+    let split = gold_split();
+    let cfg = TrainerConfig::upper_bound("cgold")
+        .with_steps(120)
+        .with_presample(128)
+        .with_tau_th(0.95)
+        .with_seed(5)
+        .with_score_workers(2)
+        .with_train_workers(train_workers);
+    let mut tr = Trainer::new(&ne, cfg).unwrap();
+    let report = tr.run(&split.train, None).unwrap();
+    assert_eq!(report.steps, 120);
+    assert_eq!(report.is_switch_step, Some(2), "IS must engage right after warmup");
+    let traj = digest_f64(report.log.rows.iter().map(|r| r.train_loss));
+    (traj, state_checksum(&tr.state).unwrap())
+}
+
+#[test]
+fn conv_golden_trajectory_is_bit_identical_across_worker_counts() {
+    let serial = conv_golden_run(1);
+    assert_eq!(conv_golden_run(1), serial, "serial conv golden run must be reproducible");
+    for workers in [2, 4] {
+        let got = conv_golden_run(workers);
+        assert_eq!(got, serial, "{workers}-worker conv golden run diverged from serial");
     }
 }
 

@@ -1,27 +1,81 @@
-//! End-to-end coverage for the native CPU training backend — the tests the
-//! acceptance criteria of ISSUE 2 name:
+//! End-to-end coverage for the native CPU training backend — the ISSUE 2
+//! acceptance tests, extended by ISSUE 4 (layer IR) to every architecture
+//! the native backend now trains:
 //!
-//! * analytic gradients vs central finite differences,
+//! * analytic gradients vs central finite differences, swept over every
+//!   `Layer` variant (Dense / Relu / Conv1d / GlobalAvgPool /
+//!   EmbeddingBag) on tiny specs,
 //! * native scoring parity through the sharded scoring subsystem,
-//! * a real Algorithm-1 run with zero AOT artifacts: uniform warmup,
+//! * real Algorithm-1 runs with zero AOT artifacts: uniform warmup,
 //!   τ crossing τ_th, importance sampling switching on, and the
 //!   upper-bound strategy beating uniform train loss at an equal step
-//!   count on a separable synthetic task (fixed seed),
-//! * the trainer-level bugfixes of the same issue (exact switch step,
-//!   test-set tail evaluation) exercised through the native backend.
+//!   count on fixed-seed separable tasks — for the MLP, a Conv1d image
+//!   net (fig 3's native scenario) and an EmbeddingBag sequence net
+//!   (fig 5's native scenario),
+//! * the trainer-level bugfixes of ISSUE 2 (exact switch step, test-set
+//!   tail evaluation) exercised through the native backend.
 
 use anyhow::Result;
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
+use isample::data::sequence::PermutedSequences;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
 use isample::runtime::score::{BackendScorer, ScoreBackend, ScoreKind};
-use isample::runtime::{Backend, HostTensor, ModelState, NativeEngine, NativeModelSpec};
+use isample::runtime::{Backend, HostTensor, Layer, ModelState, NativeEngine, NativeModelSpec};
 use xla::Literal;
 
 /// Small, fast model used across these tests (any-batch native entries).
 fn sep_engine() -> NativeEngine {
     let mut ne = NativeEngine::new();
     ne.register(NativeModelSpec::mlp("sep", 32, 32, 4, 32, 64, vec![128, 256]));
+    ne
+}
+
+/// A small Conv1d image net over the same 32-dim separable images (dense
+/// head after the conv keeps the boundary tier learnable at this scale).
+fn conv_sep_engine() -> NativeEngine {
+    let mut ne = NativeEngine::new();
+    ne.register(NativeModelSpec::with_layers(
+        "csep",
+        32,
+        vec![
+            Layer::Conv1d { in_ch: 1, out_ch: 6, kernel: 5, stride: 2 },
+            Layer::Relu,
+            Layer::Dense { out_dim: 32 },
+            Layer::Relu,
+            Layer::Dense { out_dim: 4 },
+        ],
+        32,
+        64,
+        vec![128, 256],
+    ));
+    ne
+}
+
+/// An EmbeddingBag sequence net over 32-step permuted rasters: positional
+/// 12-bin quantization, sum-pooled embeddings (`gain = T`), dense head.
+fn seq_sep_engine() -> NativeEngine {
+    let mut ne = NativeEngine::new();
+    ne.register(NativeModelSpec::with_layers(
+        "ssep",
+        32,
+        vec![
+            Layer::EmbeddingBag {
+                vocab: 12,
+                dim: 24,
+                lo: -3.0,
+                hi: 3.0,
+                positional: true,
+                gain: 32.0,
+            },
+            Layer::Dense { out_dim: 24 },
+            Layer::Relu,
+            Layer::Dense { out_dim: 4 },
+        ],
+        32,
+        64,
+        vec![128, 256],
+    ));
     ne
 }
 
@@ -39,27 +93,45 @@ fn sep_split() -> isample::data::Split<SyntheticImages> {
         .split()
 }
 
-fn full_train_loss(ne: &NativeEngine, state: &ModelState, ds: &SyntheticImages) -> f64 {
+/// The sequence twin of [`sep_split`]: mostly-easy permuted rasters with
+/// a 12% boundary tier (no outliers), on fig 5's dataset family.
+fn seq_sep_split() -> isample::data::Split<PermutedSequences> {
+    PermutedSequences::builder(32, 4)
+        .samples(2_048)
+        .test_samples(256)
+        .seed(11)
+        .tiers(0.88, 0.12)
+        .split()
+}
+
+fn full_train_loss<D: Dataset>(ne: &NativeEngine, state: &ModelState, ds: &D) -> f64 {
     let idx: Vec<usize> = (0..ds.len()).collect();
     let (x, y) = ds.batch(&idx, 0);
     let (loss, _) = ne.fwd_scores(state, &x, &y).unwrap();
     loss.iter().map(|&l| l as f64).sum::<f64>() / loss.len() as f64
 }
 
-#[test]
-fn upper_bound_beats_uniform_at_equal_step_count() {
-    let ne = sep_engine();
-    let split = sep_split();
-    let steps = 400;
+/// Shared body of the equal-steps acceptance runs: train uniform and
+/// upper-bound with identical budgets on `split`, assert Algorithm 1 ran
+/// for real (warmup then τ switch), and assert the paper's core claim —
+/// importance sampling reaches a lower full-train loss at equal steps.
+fn assert_upper_bound_beats_uniform<D: Dataset + Sync>(
+    ne: &NativeEngine,
+    model: &str,
+    split: &isample::data::Split<D>,
+    steps: u64,
+    lr: f32,
+) {
     let run = |cfg: TrainerConfig| {
-        let mut tr = Trainer::new(&ne, cfg.with_steps(steps).with_seed(13)).unwrap();
+        let cfg = cfg.with_steps(steps).with_seed(13).with_lr(lr);
+        let mut tr = Trainer::new(ne, cfg).unwrap();
         let report = tr.run(&split.train, None).unwrap();
         assert_eq!(report.steps, steps);
-        (full_train_loss(&ne, &tr.state, &split.train), report)
+        (full_train_loss(ne, &tr.state, &split.train), report)
     };
-    let (uni_loss, _) = run(TrainerConfig::uniform("sep"));
+    let (uni_loss, _) = run(TrainerConfig::uniform(model));
     let (ub_loss, ub_report) =
-        run(TrainerConfig::upper_bound("sep").with_presample(256).with_tau_th(1.1));
+        run(TrainerConfig::upper_bound(model).with_presample(256).with_tau_th(1.1));
 
     // Algorithm 1 ran for real: uniform warmup first, then τ > τ_th.
     let switch = ub_report.is_switch_step.expect("importance sampling never switched on");
@@ -67,14 +139,32 @@ fn upper_bound_beats_uniform_at_equal_step_count() {
     assert!(!ub_report.log.rows.first().unwrap().is_active, "first logged row must be warmup");
     assert!(ub_report.log.rows.iter().any(|r| r.is_active), "no active rows logged");
 
-    // The paper's core claim at equal steps: importance sampling reaches a
-    // lower training loss than uniform SGD.
-    println!("full-train loss: uniform {uni_loss:.5} vs upper-bound {ub_loss:.5} (IS@{switch})");
+    println!(
+        "[{model}] full-train loss: uniform {uni_loss:.5} vs upper-bound {ub_loss:.5} \
+         (IS@{switch})"
+    );
     assert!(
         ub_loss < uni_loss,
-        "upper-bound ({ub_loss}) did not beat uniform ({uni_loss}) at {steps} steps"
+        "[{model}] upper-bound ({ub_loss}) did not beat uniform ({uni_loss}) at {steps} steps"
     );
     assert!(ub_loss.is_finite() && uni_loss.is_finite());
+}
+
+#[test]
+fn upper_bound_beats_uniform_at_equal_step_count() {
+    assert_upper_bound_beats_uniform(&sep_engine(), "sep", &sep_split(), 400, 0.1);
+}
+
+#[test]
+fn conv_upper_bound_beats_uniform_at_equal_step_count() {
+    // fig 3's native conv scenario on its fixed-seed separable image task
+    assert_upper_bound_beats_uniform(&conv_sep_engine(), "csep", &sep_split(), 600, 0.15);
+}
+
+#[test]
+fn seq_upper_bound_beats_uniform_at_equal_step_count() {
+    // fig 5's native sequence scenario on its fixed-seed permuted rasters
+    assert_upper_bound_beats_uniform(&seq_sep_engine(), "ssep", &seq_sep_split(), 600, 0.1);
 }
 
 #[test]
@@ -94,13 +184,17 @@ fn switch_step_is_recorded_exactly_not_log_quantized() {
     assert_eq!(report.log.is_switch_on_step(), Some(10), "rows are log_every-quantized");
 }
 
-#[test]
-fn gradient_check_against_finite_differences() {
+/// Central-difference check of `weighted_grad` for one spec: three entries
+/// of every parameter tensor against the numeric gradient of the weighted
+/// mean loss.
+fn check_gradients(spec: NativeModelSpec) {
+    let name = spec.name.clone();
+    let d = spec.model.in_dim();
     let mut ne = NativeEngine::new();
-    ne.register(NativeModelSpec::mlp("tiny", 6, 5, 3, 8, 16, vec![16]));
-    let state = ne.init_state("tiny", 3).unwrap();
+    ne.register(spec);
+    let state = ne.init_state(&name, 3).unwrap();
     let n = 8;
-    let mut x = HostTensor::zeros(vec![n, 6]);
+    let mut x = HostTensor::zeros(vec![n, d]);
     for (i, v) in x.data.iter_mut().enumerate() {
         *v = ((i * 37 + 11) % 83) as f32 / 83.0 - 0.5;
     }
@@ -111,12 +205,7 @@ fn gradient_check_against_finite_differences() {
     assert!(loss0.is_finite());
 
     let weighted_loss = |params: &[Literal]| -> f64 {
-        let s = ModelState {
-            model: "tiny".to_string(),
-            params: params.to_vec(),
-            mom: vec![],
-            step: 0,
-        };
+        let s = ModelState { model: name.clone(), params: params.to_vec(), mom: vec![], step: 0 };
         let (loss, _) = ne.fwd_scores(&s, &x, &y).unwrap();
         loss.iter().zip(&w).map(|(&l, &wi)| l as f64 * wi as f64).sum::<f64>() / n as f64
     };
@@ -147,12 +236,48 @@ fn gradient_check_against_finite_differences() {
             let analytic = gh.data[idx] as f64;
             assert!(
                 (numeric - analytic).abs() < 2e-3 + 2e-2 * analytic.abs(),
-                "tensor {t} idx {idx}: analytic {analytic} vs numeric {numeric}"
+                "{name} tensor {t} idx {idx}: analytic {analytic} vs numeric {numeric}"
             );
             checked += 1;
         }
     }
-    assert_eq!(checked, 12, "three entries per tensor across all four tensors");
+    assert_eq!(checked, 3 * grads.len(), "{name}: three entries per tensor");
+}
+
+#[test]
+fn gradient_check_against_finite_differences_per_layer_variant() {
+    // every `Layer` variant appears in at least one swept spec: Dense and
+    // Relu in all three, Conv1d + GlobalAvgPool in the conv stack, and
+    // EmbeddingBag (positional quantization) in the sequence stack
+    let dense = NativeModelSpec::mlp("tiny", 6, 5, 3, 8, 16, vec![16]);
+    let conv = NativeModelSpec::with_layers(
+        "tconv",
+        12,
+        vec![
+            Layer::Conv1d { in_ch: 1, out_ch: 3, kernel: 3, stride: 2 },
+            Layer::Relu,
+            Layer::GlobalAvgPool { channels: 3 },
+            Layer::Dense { out_dim: 5 },
+            Layer::Relu,
+            Layer::Dense { out_dim: 3 },
+        ],
+        8,
+        16,
+        vec![16],
+    );
+    let bag =
+        Layer::EmbeddingBag { vocab: 5, dim: 4, lo: -0.6, hi: 0.6, positional: true, gain: 6.0 };
+    let seq = NativeModelSpec::with_layers(
+        "tseq",
+        6,
+        vec![bag, Layer::Dense { out_dim: 4 }, Layer::Relu, Layer::Dense { out_dim: 3 }],
+        8,
+        16,
+        vec![16],
+    );
+    for spec in [dense, conv, seq] {
+        check_gradients(spec);
+    }
 }
 
 #[test]
