@@ -4,6 +4,13 @@
 //! small wall-clock budget and reports total harness time; pass
 //! `-- --budget SECS [--full] [--seeds 1,2,3]` for the paper-scale run and
 //! `-- --backend native` to run artifact-free on the native CPU engine.
+//!
+//! The number this ablation lives on is presample-scoring cost as a
+//! fraction of step time (Eq. 6): on the native backend every Eq.-20 /
+//! loss scoring pass here takes the **score-only block forward**
+//! (`LayerModel::scores_block` via `fwd_scores` — no gradient scratch
+//! touched, pooled arenas, no per-call allocation), so measured B-scaling
+//! reflects forward cost alone, not scratch churn.
 
 use isample::config::Args;
 use isample::figures::runner::{run_figure, FigOptions};

@@ -50,8 +50,12 @@ use super::sampler::{resample_from_scores, ScoreKind, StrategyKind};
 use super::tau::TauEstimator;
 
 /// The score backend for one presample pass. Forward-pass kinds (loss,
-/// upper bound) chunk across `score_workers` scoped threads as before.
-/// `GradNorm` is special-cased: once the backend data-parallelizes
+/// upper bound) chunk across `score_workers` scoped threads as before;
+/// on the native backend each chunk's `fwd_scores` call is the
+/// **score-only block forward** (`LayerModel::scores_block`: no gradient
+/// scratch, pooled arenas), so the Eq.-6 selection overhead is pure
+/// forward cost. `GradNorm` is special-cased: once the backend
+/// data-parallelizes
 /// `grad_norms` internally (`train_workers > 1`, native), its shared pool
 /// is the *only* real parallel layer — outer score threads would merely
 /// funnel their chunks into that same pool and block, adding dispatch

@@ -1,0 +1,525 @@
+//! Cache-blocked, fixed-lane-accumulator compute microkernels — the hot
+//! arithmetic of the native backend's block-batched forward/backward
+//! passes.
+//!
+//! The scalar layer walk of [`super::layers`] re-streams every weight
+//! matrix from memory once **per sample** and re-loads/stores its output
+//! accumulators once per input feature. These kernels operate on a whole
+//! block of rows at once so
+//!
+//! * weight traffic is amortized across the block (each weight row is
+//!   loaded once and applied to every row lane), and
+//! * accumulator tiles live in registers across the whole reduction (the
+//!   fixed `MR × NR` lane grid), with unit-stride inner loops the
+//!   autovectorizer can turn into SIMD.
+//!
+//! # Determinism contract (bit-identity with the scalar walk)
+//!
+//! Every kernel here preserves, **per output element**, the exact sequence
+//! of f32 operations the scalar reference walk performs:
+//!
+//! * lanes are only ever spread across *independent* output elements
+//!   (row × output-unit pairs), never across a reduction dimension;
+//! * every reduction (over input features, over block rows, over
+//!   convolution taps) runs strictly sequentially, in the same index order
+//!   as the scalar walk, with one rounding per multiply and per add —
+//!   no lane-split partial sums, no FMA contraction, no reassociation;
+//! * tiles that accumulate into memory (`gemm_at_b_acc`, [`bias_acc`])
+//!   load the current value, extend the very same accumulation chain in
+//!   registers, and store it back — an exact f32 round trip — so splitting
+//!   a batch into blocks of *any* size leaves every element's chain
+//!   unchanged.
+//!
+//! The one intentional deviation: the scalar backward walks skip
+//! multiply-accumulates whose input activation is exactly zero
+//! (`if xv != 0.0`). The kernels include those terms. For finite data this
+//! is bitwise invisible: the product is `±0.0`, and adding `±0.0` to an
+//! accumulator that is not `-0.0` returns the accumulator unchanged —
+//! and gradient accumulators can never become `-0.0` (they start at `+0.0`
+//! and under round-to-nearest a sum only yields `-0.0` when both addends
+//! are `-0.0`). `rust/tests/props.rs` pins the resulting block == scalar
+//! bit-identity across random shapes, block splits and architectures.
+//!
+//! Consequently the block-batched passes are bit-identical to the
+//! per-row scalar walk — numerics are a pure function of the model dims
+//! and the row values, never of the internal block size, the chunk plan
+//! or the worker count. The PR 3/4 parallel==serial guarantees and the
+//! golden trajectories carry over unchanged.
+
+/// Row lanes per microkernel tile (how many batch rows one register tile
+/// covers). 4 row lanes × [`NR`] output lanes = 32 f32 accumulators — a
+/// full register tile on SSE2, still comfortable on AVX.
+pub const MR: usize = 4;
+
+/// Output-unit lanes per microkernel tile (unit-stride, SIMD-friendly).
+pub const NR: usize = 8;
+
+/// Row count per internal sub-block of a batch-level pass. Bounds the
+/// activation-arena footprint; has **no** effect on numerics (see the
+/// module-level determinism contract).
+pub const MAX_BLOCK_ROWS: usize = 32;
+
+/// `c[r, o] += Σ_i a[r, i] · w[i, o]` for a `rows × k` row-major `a`, a
+/// `k × n` row-major `w` and a `rows × n` row-major `c` (which the caller
+/// pre-initializes — bias rows for a forward pass, zeros for a fresh
+/// accumulation). Per element the reduction is `i`-ascending, extending
+/// whatever value `c` already holds — exactly the scalar forward walk.
+pub fn gemm_acc(a: &[f32], rows: usize, k: usize, w: &[f32], n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), rows * k, "gemm_acc: a shape");
+    assert_eq!(w.len(), k * n, "gemm_acc: w shape");
+    assert_eq!(c.len(), rows * n, "gemm_acc: c shape");
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = (rows - r0).min(MR);
+        let mut o0 = 0;
+        while o0 < n {
+            let nr = (n - o0).min(NR);
+            if mr == MR && nr == NR {
+                gemm_tile(a, r0, k, w, o0, n, c);
+            } else {
+                gemm_edge(a, r0, mr, k, w, o0, nr, n, c);
+            }
+            o0 += nr;
+        }
+        r0 += mr;
+    }
+}
+
+/// The full `MR × NR` register tile of [`gemm_acc`].
+#[inline]
+fn gemm_tile(a: &[f32], r0: usize, k: usize, w: &[f32], o0: usize, n: usize, c: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&c[(r0 + r) * n + o0..][..NR]);
+    }
+    let a0 = &a[r0 * k..][..k];
+    let a1 = &a[(r0 + 1) * k..][..k];
+    let a2 = &a[(r0 + 2) * k..][..k];
+    let a3 = &a[(r0 + 3) * k..][..k];
+    for (i, wrow) in w.chunks_exact(n).enumerate() {
+        let wt = &wrow[o0..o0 + NR];
+        let xs = [a0[i], a1[i], a2[i], a3[i]];
+        for (accr, &xv) in acc.iter_mut().zip(&xs) {
+            for (av, &wv) in accr.iter_mut().zip(wt) {
+                *av += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[(r0 + r) * n + o0..][..NR].copy_from_slice(accr);
+    }
+}
+
+/// Partial-tile edge of [`gemm_acc`]: one row lane at a time with up to
+/// [`NR`] output lanes in registers. The reduction stays `i`-outermost
+/// with unit-stride `w` row reads — the rows = 1 case IS the gradient-norm
+/// oracle's whole forward, so the edge path must stream `w` exactly like
+/// the full tile (never walk its columns), and per element the chain is
+/// still `i`-ascending.
+#[allow(clippy::too_many_arguments)]
+fn gemm_edge(
+    a: &[f32],
+    r0: usize,
+    mr: usize,
+    k: usize,
+    w: &[f32],
+    o0: usize,
+    nr: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    let mut acc = [0.0f32; NR];
+    for r in r0..r0 + mr {
+        let arow = &a[r * k..][..k];
+        let accs = &mut acc[..nr];
+        accs.copy_from_slice(&c[r * n + o0..][..nr]);
+        for (i, &xv) in arow.iter().enumerate() {
+            let wrow = &w[i * n + o0..][..nr];
+            for (av, &wv) in accs.iter_mut().zip(wrow) {
+                *av += xv * wv;
+            }
+        }
+        c[r * n + o0..][..nr].copy_from_slice(accs);
+    }
+}
+
+/// `gw[i, o] += Σ_r x[r, i] · g[r, o]` — the weight-gradient outer-product
+/// accumulation over a block of rows (`x` is `rows × k`, `g` is `rows × n`,
+/// `gw` is `k × n`). Per element the reduction is `r`-ascending and extends
+/// the value already in `gw`, so accumulating block after block reproduces
+/// the scalar row-by-row backward walk bit for bit.
+pub fn gemm_at_b_acc(x: &[f32], g: &[f32], rows: usize, k: usize, n: usize, gw: &mut [f32]) {
+    assert_eq!(x.len(), rows * k, "gemm_at_b_acc: x shape");
+    assert_eq!(g.len(), rows * n, "gemm_at_b_acc: g shape");
+    assert_eq!(gw.len(), k * n, "gemm_at_b_acc: gw shape");
+    let mut i0 = 0;
+    while i0 < k {
+        let mi = (k - i0).min(MR);
+        let mut o0 = 0;
+        while o0 < n {
+            let no = (n - o0).min(NR);
+            if mi == MR && no == NR {
+                at_b_tile(x, g, rows, k, n, i0, o0, gw);
+            } else {
+                at_b_edge(x, g, rows, k, n, i0, mi, o0, no, gw);
+            }
+            o0 += no;
+        }
+        i0 += mi;
+    }
+}
+
+/// The full `MR × NR` register tile of [`gemm_at_b_acc`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn at_b_tile(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    o0: usize,
+    gw: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (ii, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&gw[(i0 + ii) * n + o0..][..NR]);
+    }
+    for r in 0..rows {
+        let xt = &x[r * k + i0..][..MR];
+        let gt = &g[r * n + o0..][..NR];
+        for (accr, &xv) in acc.iter_mut().zip(xt) {
+            for (av, &gv) in accr.iter_mut().zip(gt) {
+                *av += xv * gv;
+            }
+        }
+    }
+    for (ii, accr) in acc.iter().enumerate() {
+        gw[(i0 + ii) * n + o0..][..NR].copy_from_slice(accr);
+    }
+}
+
+/// Partial-tile edge of [`gemm_at_b_acc`], per element, `r`-ascending.
+#[allow(clippy::too_many_arguments)]
+fn at_b_edge(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    mi: usize,
+    o0: usize,
+    no: usize,
+    gw: &mut [f32],
+) {
+    for ii in i0..i0 + mi {
+        let grow = &mut gw[ii * n + o0..][..no];
+        for (j, gv) in grow.iter_mut().enumerate() {
+            let mut acc = *gv;
+            for r in 0..rows {
+                acc += x[r * k + ii] * g[r * n + o0 + j];
+            }
+            *gv = acc;
+        }
+    }
+}
+
+/// `gin[r, i] = Σ_o w[i, o] · g[r, o]` — the dense input gradient
+/// (`g · Wᵀ`) for a block of rows, **assigned** (not accumulated). Per
+/// element the reduction is `o`-ascending from `0.0` — exactly the scalar
+/// `dense_input_grad` dot product — with the `w` row streamed once per
+/// [`MR`] row lanes instead of once per row.
+pub fn gemm_b_wt(g: &[f32], w: &[f32], rows: usize, k: usize, n: usize, gin: &mut [f32]) {
+    assert_eq!(g.len(), rows * n, "gemm_b_wt: g shape");
+    assert_eq!(w.len(), k * n, "gemm_b_wt: w shape");
+    assert_eq!(gin.len(), rows * k, "gemm_b_wt: gin shape");
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = (rows - r0).min(MR);
+        if mr == MR {
+            let g0 = &g[r0 * n..][..n];
+            let g1 = &g[(r0 + 1) * n..][..n];
+            let g2 = &g[(r0 + 2) * n..][..n];
+            let g3 = &g[(r0 + 3) * n..][..n];
+            for (i, wrow) in w.chunks_exact(n).enumerate() {
+                let mut acc = [0.0f32; MR];
+                for (o, &wv) in wrow.iter().enumerate() {
+                    acc[0] += wv * g0[o];
+                    acc[1] += wv * g1[o];
+                    acc[2] += wv * g2[o];
+                    acc[3] += wv * g3[o];
+                }
+                for (r, &av) in acc.iter().enumerate() {
+                    gin[(r0 + r) * k + i] = av;
+                }
+            }
+        } else {
+            for r in r0..r0 + mr {
+                let grow = &g[r * n..][..n];
+                let ginr = &mut gin[r * k..][..k];
+                for (i, gi) in ginr.iter_mut().enumerate() {
+                    let wrow = &w[i * n..][..n];
+                    *gi = wrow.iter().zip(grow).map(|(&wv, &gv)| wv * gv).sum();
+                }
+            }
+        }
+        r0 += mr;
+    }
+}
+
+/// Copy the bias vector into every row of a `rows × b.len()` block — the
+/// pre-initialization [`gemm_acc`] extends.
+pub fn bias_init(b: &[f32], rows: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), rows * b.len(), "bias_init: out shape");
+    for orow in out.chunks_exact_mut(b.len()) {
+        orow.copy_from_slice(b);
+    }
+}
+
+/// `gb[o] += Σ_r g[r, o]` — the bias gradient over a block of rows,
+/// `r`-ascending per element, extending the value already in `gb`.
+pub fn bias_acc(g: &[f32], rows: usize, n: usize, gb: &mut [f32]) {
+    assert_eq!(g.len(), rows * n, "bias_acc: g shape");
+    assert_eq!(gb.len(), n, "bias_acc: gb shape");
+    for grow in g.chunks_exact(n) {
+        for (b, &gv) in gb.iter_mut().zip(grow) {
+            *b += gv;
+        }
+    }
+}
+
+/// Valid-1D-convolution patch extraction: for every row and output time
+/// step, copy the `kernel × in_ch` input window into
+/// `patch[(r·t_out + t), (k·in_ch + c)]`. Because the input layout is
+/// `[time, ch]`, each window is **contiguous** — im2col is a strided
+/// memcpy — and the patch matrix turns the convolution into the dense
+/// [`gemm_acc`] / [`gemm_at_b_acc`] kernels with `k·in_ch` inputs, in the
+/// exact `(k, c)`-ascending tap order of the scalar conv walk.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    input: &[f32],
+    rows: usize,
+    in_dim: usize,
+    in_ch: usize,
+    kernel: usize,
+    stride: usize,
+    t_out: usize,
+    patch: &mut Vec<f32>,
+) {
+    assert_eq!(input.len(), rows * in_dim, "im2col: input shape");
+    let kc = kernel * in_ch;
+    // every element is overwritten below, so only fix the length (no
+    // zero-fill pass over the hot path's largest scratch matrix)
+    let want = rows * t_out * kc;
+    if patch.len() != want {
+        patch.clear();
+        patch.resize(want, 0.0);
+    }
+    for (r, xrow) in input.chunks_exact(in_dim).enumerate() {
+        for t in 0..t_out {
+            let dst = &mut patch[(r * t_out + t) * kc..][..kc];
+            dst.copy_from_slice(&xrow[t * stride * in_ch..][..kc]);
+        }
+    }
+}
+
+/// Scatter patch-space gradients back to input space:
+/// `gin[r, (t·stride + k)·in_ch + c] += gpatch[(r·t_out + t), k·in_ch + c]`.
+/// `gin` must be pre-zeroed. Per input element contributions arrive in
+/// `t`-ascending window order — the scalar conv `input_grad` order.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_acc(
+    gpatch: &[f32],
+    rows: usize,
+    in_dim: usize,
+    in_ch: usize,
+    kernel: usize,
+    stride: usize,
+    t_out: usize,
+    gin: &mut [f32],
+) {
+    assert_eq!(gin.len(), rows * in_dim, "col2im_acc: gin shape");
+    let kc = kernel * in_ch;
+    assert_eq!(gpatch.len(), rows * t_out * kc, "col2im_acc: gpatch shape");
+    for (r, grow) in gin.chunks_exact_mut(in_dim).enumerate() {
+        for t in 0..t_out {
+            let src = &gpatch[(r * t_out + t) * kc..][..kc];
+            let dst = &mut grow[t * stride * in_ch..][..kc];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill (no external RNG needed here).
+    fn fill(v: &mut [f32], salt: usize) {
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = (((i * 31 + salt * 17 + 7) % 113) as f32 / 113.0 - 0.5) * 1.7;
+        }
+    }
+
+    /// Shapes crossing every tile edge: exact tiles, sub-tile remainders,
+    /// single rows/cols.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 64, 10),
+        (3, 5, 7),
+        (4, 8, 8),
+        (5, 9, 17),
+        (8, 64, 128),
+        (13, 24, 10),
+    ];
+
+    #[test]
+    fn gemm_acc_matches_scalar_reference_bitwise() {
+        for &(rows, k, n) in SHAPES {
+            let mut a = vec![0.0f32; rows * k];
+            let mut w = vec![0.0f32; k * n];
+            let mut c0 = vec![0.0f32; rows * n];
+            fill(&mut a, 1);
+            fill(&mut w, 2);
+            fill(&mut c0, 3); // arbitrary pre-init (bias-like)
+            let mut c = c0.clone();
+            gemm_acc(&a, rows, k, &w, n, &mut c);
+            // scalar reference: the layers.rs dense forward walk
+            let mut r0 = c0.clone();
+            for r in 0..rows {
+                for (i, &xv) in a[r * k..][..k].iter().enumerate() {
+                    for o in 0..n {
+                        r0[r * n + o] += xv * w[i * n + o];
+                    }
+                }
+            }
+            assert_eq!(c, r0, "gemm_acc {rows}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_acc_matches_scalar_reference_bitwise_and_chains_across_blocks() {
+        for &(rows, k, n) in SHAPES {
+            let mut x = vec![0.0f32; rows * k];
+            let mut g = vec![0.0f32; rows * n];
+            let mut gw0 = vec![0.0f32; k * n];
+            fill(&mut x, 4);
+            fill(&mut g, 5);
+            fill(&mut gw0, 6); // pre-existing partial gradient
+            let mut gw = gw0.clone();
+            gemm_at_b_acc(&x, &g, rows, k, n, &mut gw);
+            // scalar reference: row-by-row outer products, r-ascending
+            let mut r0 = gw0.clone();
+            for r in 0..rows {
+                for i in 0..k {
+                    let xv = x[r * k + i];
+                    if xv != 0.0 {
+                        for o in 0..n {
+                            r0[i * n + o] += xv * g[r * n + o];
+                        }
+                    }
+                }
+            }
+            assert_eq!(gw, r0, "gemm_at_b_acc {rows}x{k}x{n}");
+            // splitting the rows into two blocks must not change a bit
+            if rows > 1 {
+                let half = rows / 2;
+                let mut gw2 = gw0.clone();
+                gemm_at_b_acc(&x[..half * k], &g[..half * n], half, k, n, &mut gw2);
+                gemm_at_b_acc(&x[half * k..], &g[half * n..], rows - half, k, n, &mut gw2);
+                assert_eq!(gw2, gw, "block split changed bits {rows}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_b_wt_matches_scalar_dot_bitwise() {
+        for &(rows, k, n) in SHAPES {
+            let mut g = vec![0.0f32; rows * n];
+            let mut w = vec![0.0f32; k * n];
+            fill(&mut g, 7);
+            fill(&mut w, 8);
+            let mut gin = vec![f32::NAN; rows * k]; // assignment must cover all
+            gemm_b_wt(&g, &w, rows, k, n, &mut gin);
+            for r in 0..rows {
+                for i in 0..k {
+                    let want: f32 = w[i * n..][..n]
+                        .iter()
+                        .zip(&g[r * n..][..n])
+                        .map(|(&wv, &gv)| wv * gv)
+                        .sum();
+                    assert_eq!(gin[r * k + i], want, "gemm_b_wt {rows}x{k}x{n} r{r} i{i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_kernels_match_reference() {
+        let b = [0.5f32, -1.25, 2.0];
+        let mut out = vec![0.0f32; 12];
+        bias_init(&b, 4, &mut out);
+        assert!(out.chunks_exact(3).all(|r| r == b.as_slice()));
+
+        let mut g = vec![0.0f32; 12];
+        fill(&mut g, 9);
+        let mut gb = vec![0.25f32; 3];
+        let mut want = gb.clone();
+        for r in 0..4 {
+            for o in 0..3 {
+                want[o] += g[r * 3 + o];
+            }
+        }
+        bias_acc(&g, 4, 3, &mut gb);
+        assert_eq!(gb, want);
+    }
+
+    #[test]
+    fn im2col_and_col2im_round_trip_the_conv_geometry() {
+        // rows=2, t_in=7, ic=2, kernel=3, stride=2 -> t_out=3
+        let (rows, t_in, ic, kernel, stride) = (2usize, 7usize, 2usize, 3usize, 2usize);
+        let t_out = (t_in - kernel) / stride + 1;
+        let in_dim = t_in * ic;
+        let mut input = vec![0.0f32; rows * in_dim];
+        fill(&mut input, 10);
+        let mut patch = Vec::new();
+        im2col(&input, rows, in_dim, ic, kernel, stride, t_out, &mut patch);
+        assert_eq!(patch.len(), rows * t_out * kernel * ic);
+        for r in 0..rows {
+            for t in 0..t_out {
+                for k in 0..kernel {
+                    for c in 0..ic {
+                        let got = patch[(r * t_out + t) * kernel * ic + k * ic + c];
+                        let want = input[r * in_dim + (t * stride + k) * ic + c];
+                        assert_eq!(got, want, "r{r} t{t} k{k} c{c}");
+                    }
+                }
+            }
+        }
+        // col2im of an all-ones patch counts each input position's window
+        // multiplicity
+        let gpatch = vec![1.0f32; patch.len()];
+        let mut gin = vec![0.0f32; rows * in_dim];
+        col2im_acc(&gpatch, rows, in_dim, ic, kernel, stride, t_out, &mut gin);
+        for r in 0..rows {
+            for p in 0..t_in {
+                let count = (0..t_out)
+                    .filter(|&t| p >= t * stride && p < t * stride + kernel)
+                    .count() as f32;
+                for c in 0..ic {
+                    assert_eq!(gin[r * in_dim + p * ic + c], count, "r{r} pos{p} ch{c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_constants_are_sane() {
+        assert!(MR >= 1 && NR >= 1);
+        assert!(MAX_BLOCK_ROWS >= MR);
+    }
+}

@@ -29,14 +29,29 @@
 //! functions of `(params, row)` — the property the sharded scoring and
 //! data-parallel training reductions build their bit-identity guarantee on.
 //!
+//! **Block-batched hot path.** The per-row walk
+//! ([`LayerModel::forward_row`] / [`LayerModel::backward_row`]) is the
+//! readable *scalar reference*; the engines execute whole worker chunks at
+//! once through [`LayerModel::forward_block`] /
+//! [`LayerModel::scores_block`] / [`LayerModel::backward_block`], built on
+//! the cache-blocked microkernels of [`super::kernels`]. The kernels keep
+//! every output element's f32 accumulation chain identical to the scalar
+//! walk (lanes only across independent elements, reductions strictly
+//! sequential), so the block path is **bit-identical** to the reference —
+//! per-row results are a pure function of `(params, row)` regardless of
+//! block size, chunk plan or worker count. `rust/tests/props.rs` pins
+//! this.
+//!
 //! **MLP bit-compatibility.** A `[Dense, Relu, Dense]` stack reproduces the
 //! pre-refactor fused two-layer MLP arithmetic operation for operation
 //! (same accumulation order in the matmuls, same softmax, same masked
 //! backward), so the PR 3 golden trajectories for `mlp10`/`mlp100` are
-//! preserved bit for bit.
+//! preserved bit for bit — and because the kernels are bit-identical to
+//! that walk, they are preserved across the block-kernel refactor too.
 
 use anyhow::{bail, Context, Result};
 
+use super::kernels;
 use super::manifest::{InitKind, ParamSpec};
 
 /// One layer of a [`LayerModel`] stack. Activations are flat row-major
@@ -383,6 +398,136 @@ impl Layer {
         }
     }
 
+    /// Forward a whole `rows`-row block at once (row-major `input`/`out`)
+    /// through the cache-blocked kernels — bit-identical per row to
+    /// [`forward`](Self::forward); see `runtime::kernels`. `patch` is this
+    /// layer's persistent im2col buffer (`Conv1d` only; the backward pass
+    /// re-reads it).
+    fn forward_block(
+        &self,
+        params: &[Vec<f32>],
+        input: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        patch: &mut Vec<f32>,
+    ) {
+        match *self {
+            Layer::Dense { out_dim } => {
+                let in_dim = input.len() / rows;
+                let (w, b) = (&params[0], &params[1]);
+                kernels::bias_init(b, rows, out);
+                kernels::gemm_acc(input, rows, in_dim, w, out_dim, out);
+            }
+            Layer::Relu => {
+                for (o, &v) in out.iter_mut().zip(input) {
+                    *o = v.max(0.0);
+                }
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                let in_dim = input.len() / rows;
+                let t_out = out.len() / rows / out_ch;
+                let (w, b) = (&params[0], &params[1]);
+                kernels::im2col(input, rows, in_dim, in_ch, kernel, stride, t_out, patch);
+                let rt = rows * t_out;
+                kernels::bias_init(b, rt, out);
+                kernels::gemm_acc(patch, rt, kernel * in_ch, w, out_ch, out);
+            }
+            // gather/scatter layers: per-row walk (already unit-stride)
+            Layer::GlobalAvgPool { .. } | Layer::EmbeddingBag { .. } => {
+                let in_dim = input.len() / rows;
+                let out_dim = out.len() / rows;
+                for r in 0..rows {
+                    self.forward(
+                        params,
+                        &input[r * in_dim..][..in_dim],
+                        &mut out[r * out_dim..][..out_dim],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Backward a whole block: accumulate this layer's parameter gradients
+    /// into `grads` and, when `gin` is given (pre-zeroed, `rows × in_dim`),
+    /// the gradient w.r.t. the layer's input block. Bit-identical to
+    /// running [`backward`](Self::backward) row by row in index order (see
+    /// `runtime::kernels`, including the zero-activation-skip note).
+    /// `patch` must hold this layer's im2col patches from the matching
+    /// `forward_block`; `gpatch` is shared col2im staging.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_block(
+        &self,
+        params: &[Vec<f32>],
+        input: &[f32],
+        output: &[f32],
+        gout: &[f32],
+        rows: usize,
+        grads: &mut [Vec<f32>],
+        gin: Option<&mut [f32]>,
+        patch: &[f32],
+        gpatch: &mut Vec<f32>,
+    ) {
+        match *self {
+            Layer::Dense { out_dim } => {
+                let in_dim = input.len() / rows;
+                let (gw, gb) = grads.split_at_mut(1);
+                kernels::gemm_at_b_acc(input, gout, rows, in_dim, out_dim, &mut gw[0]);
+                kernels::bias_acc(gout, rows, out_dim, &mut gb[0]);
+                if let Some(gin) = gin {
+                    kernels::gemm_b_wt(gout, &params[0], rows, in_dim, out_dim, gin);
+                }
+            }
+            Layer::Relu => {
+                if let Some(gin) = gin {
+                    relu_input_grad(output, gout, gin);
+                }
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                let in_dim = input.len() / rows;
+                let t_out = gout.len() / rows / out_ch;
+                let rt = rows * t_out;
+                let kc = kernel * in_ch;
+                {
+                    let (gw, gb) = grads.split_at_mut(1);
+                    kernels::gemm_at_b_acc(patch, gout, rt, kc, out_ch, &mut gw[0]);
+                    kernels::bias_acc(gout, rt, out_ch, &mut gb[0]);
+                }
+                if let Some(gin) = gin {
+                    // gemm_b_wt assigns every element: fix the length only
+                    if gpatch.len() != rt * kc {
+                        gpatch.clear();
+                        gpatch.resize(rt * kc, 0.0);
+                    }
+                    kernels::gemm_b_wt(gout, &params[0], rt, kc, out_ch, gpatch);
+                    kernels::col2im_acc(gpatch, rows, in_dim, in_ch, kernel, stride, t_out, gin);
+                }
+            }
+            Layer::GlobalAvgPool { channels } => {
+                if let Some(gin) = gin {
+                    let in_dim = gin.len() / rows;
+                    for (r, ginr) in gin.chunks_exact_mut(in_dim).enumerate() {
+                        pool_input_grad(&gout[r * channels..][..channels], ginr, channels);
+                    }
+                }
+            }
+            Layer::EmbeddingBag { vocab, dim, lo, hi, positional, gain } => {
+                let in_dim = input.len() / rows;
+                let scale = gain / in_dim as f32;
+                for (r, inp) in input.chunks_exact(in_dim).enumerate() {
+                    let gr = &gout[r * dim..][..dim];
+                    for (p, &v) in inp.iter().enumerate() {
+                        let row = bag_row(p, v, vocab, lo, hi, positional);
+                        for (ge, &gv) in grads[0][row * dim..(row + 1) * dim].iter_mut().zip(gr) {
+                            *ge += scale * gv;
+                        }
+                    }
+                }
+                // gin (if any) keeps its pre-zeroed value: quantization has
+                // zero input gradient almost everywhere
+            }
+        }
+    }
+
     /// Squared norm of this layer's per-row parameter gradient, plus `gin`
     /// when requested (same contract as [`backward`](Self::backward)).
     /// Dense and embedding norms are exact closed forms; conv materializes
@@ -498,9 +643,11 @@ fn softmax_in_place(z: &mut [f32]) {
     }
 }
 
-/// Reusable per-thread buffers for one row's forward/backward walk. One
-/// `Scratch` per chunk keeps the hot path allocation-free; the buffers are
-/// meaningful only between a `forward_row` and the calls that consume it.
+/// Reusable buffers for one row's **scalar-reference** forward/backward
+/// walk ([`LayerModel::forward_row`] / [`LayerModel::backward_row`] — the
+/// readable spec the block kernels are asserted bit-identical against).
+/// The buffers are meaningful only between a `forward_row` and the calls
+/// that consume it. The engines' hot paths use [`BlockScratch`] instead.
 pub struct Scratch {
     /// `acts[i]` = output of `layers[i]`; the last entry holds the logits,
     /// then (after the softmax head) the probabilities, then — once the
@@ -520,6 +667,71 @@ impl Scratch {
     /// Mutable view of the probabilities — how the training path turns
     /// them into the (coefficient-scaled) softmax gradient in place before
     /// [`LayerModel::backward_row`].
+    pub fn probs_mut(&mut self) -> &mut [f32] {
+        self.acts.last_mut().expect("layer stacks are non-empty")
+    }
+}
+
+/// Reusable buffers for a **block-batched** forward/backward walk over a
+/// whole worker chunk of rows at once (callers bound their block size by
+/// [`kernels::MAX_BLOCK_ROWS`]; any row count is numerically equivalent —
+/// see the module docs). One `BlockScratch` per in-flight chunk keeps the
+/// hot path allocation-free; the engines and scorers keep warm arenas in a
+/// [`super::pool::ObjectPool`] so nothing is allocated per step. Buffers
+/// are meaningful only between a [`LayerModel::forward_block`] and the
+/// calls that consume it.
+#[derive(Debug, Default)]
+pub struct BlockScratch {
+    /// `acts[i]` = output block of `layers[i]` (`rows × dims[i+1]`,
+    /// row-major); the last entry holds the logits, then (after the
+    /// softmax head) the probabilities, then — once the caller seeds the
+    /// backward pass — the scaled softmax-gradient block.
+    acts: Vec<Vec<f32>>,
+    /// Per-layer im2col patch buffers (`Conv1d` layers only), filled by
+    /// the forward pass and re-read by the backward pass.
+    patch: Vec<Vec<f32>>,
+    /// Ping-pong buffers for the inter-layer gradient block.
+    ga: Vec<f32>,
+    gb: Vec<f32>,
+    /// col2im staging for the conv input gradient.
+    gpatch: Vec<f32>,
+    /// Conv weight-gradient / bag-histogram scratch of the gradient-norm
+    /// oracle, reused across rows.
+    wscratch: Vec<f32>,
+    /// Spare per-row output lane (the scorer's unwanted loss/score side).
+    pub(crate) tmp: Vec<f32>,
+}
+
+impl BlockScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lay the activation/patch lists out for `model` at `rows` rows.
+    /// Buffers only reallocate when they grow past capacity, so a warm
+    /// arena is allocation-free — including when reused across models.
+    fn ensure(&mut self, model: &LayerModel, rows: usize) {
+        let nl = model.layers.len();
+        self.acts.resize_with(nl, Vec::new);
+        self.patch.resize_with(nl, Vec::new);
+        for (a, &d) in self.acts.iter_mut().zip(&model.dims[1..]) {
+            let want = rows * d;
+            if a.len() != want {
+                a.clear();
+                a.resize(want, 0.0);
+            }
+        }
+    }
+
+    /// The softmax probability block of the last
+    /// [`LayerModel::forward_block`] (`rows × num_classes`, row-major).
+    pub fn probs(&self) -> &[f32] {
+        self.acts.last().expect("layer stacks are non-empty")
+    }
+
+    /// Mutable view of the probability block — how the training path seeds
+    /// the (coefficient-scaled) softmax gradient in place before
+    /// [`LayerModel::backward_block`].
     pub fn probs_mut(&mut self) -> &mut [f32] {
         self.acts.last_mut().expect("layer stacks are non-empty")
     }
@@ -652,13 +864,25 @@ impl LayerModel {
         self.param_elems.iter().map(|&n| vec![0.0; n]).collect()
     }
 
-    /// Fresh per-thread walk buffers (see [`Scratch`]).
+    /// Element counts of every parameter tensor, in flat list order —
+    /// what pooled partial-gradient buffers are resized against.
+    pub fn param_elems(&self) -> &[usize] {
+        &self.param_elems
+    }
+
+    /// Fresh scalar-reference walk buffers (see [`Scratch`]).
     pub fn scratch(&self) -> Scratch {
         Scratch {
             acts: self.dims[1..].iter().map(|&d| vec![0.0; d]).collect(),
             ga: Vec::new(),
             gb: Vec::new(),
         }
+    }
+
+    /// Fresh block-walk buffers (see [`BlockScratch`]); engines keep them
+    /// pooled per worker, sized lazily on first use.
+    pub fn block_scratch(&self) -> BlockScratch {
+        BlockScratch::new()
     }
 
     /// Labels outside `0..num_classes` clamp to the last class (the same
@@ -736,30 +960,120 @@ impl LayerModel {
         }
     }
 
+    /// Forward a whole block of `rows` rows (`x` is `rows × in_dim`,
+    /// row-major) through the cache-blocked kernels, leaving the softmax
+    /// probability block in [`BlockScratch::probs`]. Bit-identical per row
+    /// to [`forward_row`](Self::forward_row) — see `runtime::kernels` — so
+    /// per-row outputs never depend on how a batch is blocked.
+    pub fn forward_block(&self, params: &[Vec<f32>], x: &[f32], rows: usize, s: &mut BlockScratch) {
+        debug_assert_eq!(x.len(), rows * self.dims[0]);
+        s.ensure(self, rows);
+        let BlockScratch { acts, patch, .. } = s;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (prev, rest) = acts.split_at_mut(i);
+            let input: &[f32] = if i == 0 { x } else { &prev[i - 1] };
+            let p = self.layer_params(params, i);
+            layer.forward_block(p, input, rows, &mut rest[0], &mut patch[i]);
+        }
+        let c = self.num_classes();
+        for p in acts.last_mut().expect("layer stacks are non-empty").chunks_exact_mut(c) {
+            softmax_in_place(p);
+        }
+    }
+
+    /// Loss + Eq.-20 upper-bound score of every row of a block — the
+    /// **score-only fast path**: one block forward, no gradient scratch
+    /// touched at all. Writes `out_loss[r]` / `out_score[r]` for
+    /// `r < rows`; bit-identical per row to
+    /// [`row_scores`](Self::row_scores).
+    #[allow(clippy::too_many_arguments)]
+    pub fn scores_block(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        s: &mut BlockScratch,
+        out_loss: &mut [f32],
+        out_score: &mut [f32],
+    ) {
+        debug_assert!(y.len() >= rows && out_loss.len() >= rows && out_score.len() >= rows);
+        self.forward_block(params, x, rows, s);
+        let c = self.num_classes();
+        for (r, prow) in s.probs().chunks_exact(c).enumerate() {
+            let yy = self.clamp_label(y[r]);
+            out_loss[r] = row_loss(prow, yy);
+            out_score[r] = row_score(prow, yy);
+        }
+    }
+
+    /// Backward a whole block, accumulating into `grads` (flat tensor
+    /// list, same order as [`param_specs`](Self::param_specs)). The caller
+    /// must have run [`forward_block`](Self::forward_block) on the same
+    /// rows and turned the probability block in
+    /// [`BlockScratch::probs_mut`] into the scaled softmax gradient
+    /// (`probs[r][y_r] -= 1`, then `*= coeff_r`, per row). Bit-identical
+    /// to the row-by-row [`backward_row`](Self::backward_row) walk in row
+    /// order, for any block split of a batch.
+    pub fn backward_block(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        rows: usize,
+        s: &mut BlockScratch,
+        grads: &mut [Vec<f32>],
+    ) {
+        let last = self.layers.len() - 1;
+        let BlockScratch { acts, patch, ga, gb, gpatch, .. } = s;
+        ga.clear();
+        ga.extend_from_slice(&acts[last]);
+        let mut cur: &mut Vec<f32> = ga;
+        let mut next: &mut Vec<f32> = gb;
+        for i in (0..self.layers.len()).rev() {
+            let layer = &self.layers[i];
+            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            let output: &[f32] = &acts[i];
+            let start = self.param_start[i];
+            let g = &mut grads[start..start + layer.num_param_tensors()];
+            let p = self.layer_params(params, i);
+            if i > self.first_param_layer {
+                next.clear();
+                next.resize(rows * self.dims[i], 0.0);
+                let gin = Some(&mut next[..]);
+                layer.backward_block(p, input, output, cur, rows, g, gin, &patch[i], gpatch);
+                std::mem::swap(&mut cur, &mut next);
+            } else {
+                layer.backward_block(p, input, output, cur, rows, g, None, &patch[i], gpatch);
+            }
+        }
+    }
+
     /// Exact per-sample gradient norm of one row — the expensive
-    /// "gradient-norm" oracle, generic over the stack. `wscratch` is the
-    /// conv weight-gradient buffer reused across rows.
+    /// "gradient-norm" oracle, generic over the stack. Forwards through
+    /// the (bit-identical) block path at `rows = 1` and walks the
+    /// per-layer closed-form norms; `s` supplies every buffer, so pooled
+    /// arenas keep the oracle allocation-free too.
     pub fn grad_norm_row(
         &self,
         params: &[Vec<f32>],
         x: &[f32],
         y: i32,
-        scratch: &mut Scratch,
-        wscratch: &mut Vec<f32>,
+        s: &mut BlockScratch,
     ) -> f32 {
-        self.forward_row(params, x, scratch);
+        self.forward_block(params, x, 1, s);
         let yy = self.clamp_label(y);
-        scratch.probs_mut()[yy] -= 1.0;
+        s.probs_mut()[yy] -= 1.0;
         let last = self.layers.len() - 1;
-        scratch.ga.clear();
-        scratch.ga.extend_from_slice(&scratch.acts[last]);
-        let mut cur: &mut Vec<f32> = &mut scratch.ga;
-        let mut next: &mut Vec<f32> = &mut scratch.gb;
+        let BlockScratch { acts, ga, gb, wscratch, .. } = s;
+        ga.clear();
+        ga.extend_from_slice(&acts[last]);
+        let mut cur: &mut Vec<f32> = ga;
+        let mut next: &mut Vec<f32> = gb;
         let mut total = 0.0f32;
         for i in (0..self.layers.len()).rev() {
             let layer = &self.layers[i];
-            let input: &[f32] = if i == 0 { x } else { &scratch.acts[i - 1] };
-            let output: &[f32] = &scratch.acts[i];
+            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            let output: &[f32] = &acts[i];
             let p = self.layer_params(params, i);
             if i > self.first_param_layer {
                 next.clear();
@@ -920,13 +1234,13 @@ mod tests {
         for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
             let params = init_params(3, &m.param_specs());
             let mut s = m.scratch();
-            let mut ws = Vec::new();
+            let mut bs = m.block_scratch();
             for r in 0..8 {
                 let x: Vec<f32> =
                     (0..m.in_dim()).map(|i| ((i + r * 13) as f32 * 0.61).cos()).collect();
                 let y = (r % m.num_classes()) as i32;
                 let (_, ub) = m.row_scores(&params, &x, y, &mut s);
-                let gn = m.grad_norm_row(&params, &x, y, &mut s, &mut ws);
+                let gn = m.grad_norm_row(&params, &x, y, &mut bs);
                 let rho = m.grad_norm_bound_factor(&params, &x).unwrap();
                 // the head's bias gradient alone is the score, so gn >= ub
                 assert!(gn >= ub - 1e-5, "gn {gn} < ub {ub}");
@@ -934,6 +1248,77 @@ mod tests {
                     (gn as f64) <= rho * ub as f64 * 1.001 + 1e-6,
                     "gn {gn} exceeds rho {rho} * ub {ub}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn block_walk_is_bit_identical_to_the_scalar_reference() {
+        // The core kernel-refactor claim, on a fixed case per stack kind:
+        // forward probabilities, scores and accumulated gradients of the
+        // block path equal the per-row scalar reference walk bit for bit,
+        // for every split of the batch into blocks. (rust/tests/props.rs
+        // sweeps random shapes; this is the quick in-module pin.)
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(9, &m.param_specs());
+            let n = 7usize; // crosses the 4-row tile edge
+            let d = m.in_dim();
+            let c = m.num_classes();
+            let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 + 3) as f32 * 0.23).sin()).collect();
+            let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+            let coeff: Vec<f32> = (0..n).map(|r| 0.1 + 0.3 * (r % 3) as f32).collect();
+
+            // scalar reference: row-by-row walk
+            let mut s = m.scratch();
+            let mut probs_ref = Vec::new();
+            let mut grads_ref = m.zero_grads();
+            for r in 0..n {
+                let xr = &x[r * d..(r + 1) * d];
+                m.forward_row(&params, xr, &mut s);
+                probs_ref.extend_from_slice(s.probs());
+                let yy = m.clamp_label(y[r]);
+                let gz = s.probs_mut();
+                gz[yy] -= 1.0;
+                for g in gz.iter_mut() {
+                    *g *= coeff[r];
+                }
+                m.backward_row(&params, xr, &mut s, &mut grads_ref);
+            }
+
+            // block path, over several block splits of the same batch
+            for blocks in [vec![n], vec![4, n - 4], vec![1; n]] {
+                let mut bs = m.block_scratch();
+                let mut grads = m.zero_grads();
+                let mut probs = Vec::new();
+                let mut start = 0usize;
+                for rows in blocks {
+                    let xb = &x[start * d..(start + rows) * d];
+                    m.forward_block(&params, xb, rows, &mut bs);
+                    probs.extend_from_slice(bs.probs());
+                    let pm = bs.probs_mut();
+                    for r in 0..rows {
+                        let yy = m.clamp_label(y[start + r]);
+                        let gz = &mut pm[r * c..(r + 1) * c];
+                        gz[yy] -= 1.0;
+                        for g in gz.iter_mut() {
+                            *g *= coeff[start + r];
+                        }
+                    }
+                    m.backward_block(&params, xb, rows, &mut bs, &mut grads);
+                    start += rows;
+                }
+                assert_eq!(probs, probs_ref, "probs diverged");
+                assert_eq!(grads, grads_ref, "gradients diverged");
+            }
+
+            // the score-only fast path agrees with row_scores bit for bit
+            let mut bs = m.block_scratch();
+            let mut bl = vec![0.0f32; n];
+            let mut bu = vec![0.0f32; n];
+            m.scores_block(&params, &x, &y, n, &mut bs, &mut bl, &mut bu);
+            for r in 0..n {
+                let (l, u) = m.row_scores(&params, &x[r * d..(r + 1) * d], y[r], &mut s);
+                assert_eq!((bl[r], bu[r]), (l, u), "row {r} scores diverged");
             }
         }
     }

@@ -25,11 +25,19 @@
 //! last-layer upper bound), evaluation and the gradient-norm oracle are all
 //! computed generically — MLPs, small convnets and token-sequence models
 //! run through one code path.
+//!
+//! [`kernels`] holds the cache-blocked, fixed-lane-accumulator
+//! microkernels behind the layer IR's block-batched entry points
+//! (`forward_block` / `scores_block` / `backward_block`): whole worker
+//! chunks walk the stack at once, amortizing weight traffic across rows,
+//! while staying **bit-identical** to the per-row scalar reference walk —
+//! so every determinism guarantee above survives the fast path unchanged.
 
 pub mod backend;
 pub mod checkpoint;
 pub mod engine;
 pub mod init;
+pub mod kernels;
 pub mod layers;
 pub mod manifest;
 pub mod native;
@@ -40,10 +48,10 @@ pub mod tensor;
 
 pub use backend::Backend;
 pub use engine::{clone_literals, Engine, ModelState};
-pub use layers::{Layer, LayerModel};
+pub use layers::{BlockScratch, Layer, LayerModel};
 pub use manifest::{InitKind, Manifest, ModelInfo};
 pub use native::{train_chunk_plan, NativeEngine, NativeModelSpec};
-pub use pool::{default_train_workers, WorkerPool};
+pub use pool::{default_train_workers, ObjectPool, WorkerPool};
 pub use score::{
     default_score_workers, BackendScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
     ScoreKind,

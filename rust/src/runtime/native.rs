@@ -28,6 +28,16 @@
 //!   unconditional over the registry — which is why the trainer can
 //!   evaluate exact partial test shards and the resampler can use any
 //!   presample B natively.
+//! * **Block-batched kernels**: every entry walks its rows through the
+//!   cache-blocked microkernels of [`super::kernels`] in sub-blocks of up
+//!   to [`MAX_BLOCK_ROWS`] rows — weight matrices stream once per block
+//!   instead of once per sample, accumulators live in fixed register-lane
+//!   tiles, and a score-only forward ([`LayerModel`]'s `scores_block`)
+//!   never touches gradient scratch. The kernels are **bit-identical** to
+//!   the scalar reference walk, so this is purely a throughput change.
+//!   Chunk-sized arenas ([`super::pool::ObjectPool`]) persist across
+//!   steps: the hot loop allocates nothing but its output vectors, and
+//!   chunk plans are memoized per batch size.
 //! * **Data parallelism** (`--train-workers N`, default one per core):
 //!   every batch-level entry (`train_step`, `grad`, `weighted_grad`,
 //!   `grad_norms`, `eval_metrics` — and through `grad`, the host-composed
@@ -55,11 +65,12 @@ use xla::Literal;
 use super::backend::Backend;
 use super::engine::{ModelState, StepOutput};
 use super::init;
-use super::layers::{row_loss, row_score, Layer, LayerModel};
+use super::kernels::MAX_BLOCK_ROWS;
+use super::layers::{row_loss, row_score, BlockScratch, Layer, LayerModel};
 use super::manifest::{ModelInfo, Selfcheck};
-use super::pool::{default_train_workers, Task, WorkerPool};
+use super::pool::{default_train_workers, ObjectPool, Task, WorkerPool};
 use super::score::{split_rows, NativeScorer};
-use super::tensor::{literal_to_f32_vec, HostTensor};
+use super::tensor::{f32_literal, literal_to_f32_vec, HostTensor};
 
 /// Row granularity of the deterministic train-side chunk plan. Chunks are
 /// fixed by batch size alone — never by worker count — so the partial-sum
@@ -189,6 +200,61 @@ struct NativeModel {
     info: ModelInfo,
 }
 
+/// A memoized plan list: (batch size, shared chunk plan).
+type PlanList = Vec<(usize, Arc<Vec<(usize, usize)>>)>;
+
+/// Memoized chunk plans, keyed by batch size. One training run touches
+/// only a handful of batch sizes (b, B, eval shards, tails), so a tiny
+/// vec-map beats re-planning every step; entries are `Arc`ed so chunk
+/// dispatch borrows a plan without holding the lock.
+#[derive(Debug, Default)]
+struct PlanCache {
+    train: PlanList,
+    grad: PlanList,
+}
+
+impl PlanCache {
+    fn get(
+        list: &mut PlanList,
+        n: usize,
+        plan: impl FnOnce(usize) -> Vec<(usize, usize)>,
+    ) -> Arc<Vec<(usize, usize)>> {
+        if let Some((_, p)) = list.iter().find(|(k, _)| *k == n) {
+            return Arc::clone(p);
+        }
+        // a run only ever sees a few batch sizes; guard the degenerate
+        // many-sizes case so the cache cannot grow without bound
+        if list.len() >= 64 {
+            list.clear();
+        }
+        let p = Arc::new(plan(n));
+        list.push((n, Arc::clone(&p)));
+        p
+    }
+}
+
+/// Per-row gradient coefficient of a weighted pass, computed on the fly —
+/// no per-call coefficient vector on the step loop. `Scaled` performs the
+/// same single `w[r] * scale` multiply the old precomputed vector held,
+/// so the change is bit-invisible.
+#[derive(Clone, Copy)]
+enum RowCoeff<'a> {
+    /// Every row weighs the same (the mean gradient of `grad`: `1/n`).
+    Uniform(f32),
+    /// Row `r` weighs `w[r] * scale` (the Eq.-2 weighted estimators).
+    Scaled { w: &'a [f32], scale: f32 },
+}
+
+impl RowCoeff<'_> {
+    #[inline]
+    fn at(self, r: usize) -> f32 {
+        match self {
+            RowCoeff::Uniform(c) => c,
+            RowCoeff::Scaled { w, scale } => w[r] * scale,
+        }
+    }
+}
+
 /// The pure-rust training backend. See the module docs.
 pub struct NativeEngine {
     models: BTreeMap<String, NativeModel>,
@@ -202,6 +268,18 @@ pub struct NativeEngine {
     /// The shared pool, built lazily on first parallel use and rebuilt
     /// only when the worker count changes — never per step.
     pool: Mutex<Option<Arc<WorkerPool>>>,
+    /// Persistent chunk-sized block-walk arenas — checked out per chunk,
+    /// returned when the chunk completes, so the step loop allocates no
+    /// activation/scratch buffers in steady state.
+    arenas: ObjectPool<BlockScratch>,
+    /// Persistent partial-gradient buffers for the gradient passes (one
+    /// full parameter-sized buffer per in-flight chunk).
+    grad_bufs: ObjectPool<Vec<Vec<f32>>>,
+    /// Persistent per-row output buffers for entries whose loss/score
+    /// vectors are internal scratch (`grad`, `weighted_grad`).
+    row_bufs: ObjectPool<Vec<f32>>,
+    /// Memoized train/grad chunk plans (see [`PlanCache`]).
+    plans: Mutex<PlanCache>,
 }
 
 impl Default for NativeEngine {
@@ -219,7 +297,21 @@ impl NativeEngine {
             weight_decay: 5e-4,
             train_workers: AtomicUsize::new(default_train_workers()),
             pool: Mutex::new(None),
+            arenas: ObjectPool::new(),
+            grad_bufs: ObjectPool::new(),
+            row_bufs: ObjectPool::new(),
+            plans: Mutex::new(PlanCache::default()),
         }
+    }
+
+    /// The memoized [`train_chunk_plan`] for an `n`-row batch.
+    fn train_plan(&self, n: usize) -> Arc<Vec<(usize, usize)>> {
+        PlanCache::get(&mut self.plans.lock().unwrap().train, n, train_chunk_plan)
+    }
+
+    /// The memoized [`grad_chunk_plan`] for an `n`-row batch.
+    fn grad_plan(&self, n: usize) -> Arc<Vec<(usize, usize)>> {
+        PlanCache::get(&mut self.plans.lock().unwrap().grad, n, grad_chunk_plan)
     }
 
     /// Builder form of [`set_train_workers`](Self::set_train_workers).
@@ -274,6 +366,17 @@ impl NativeEngine {
             .iter()
             .map(|&(start, len)| Box::new(move || fref(start, len)) as Task<'_, T>)
             .collect();
+        self.pool().run(tasks)
+    }
+
+    /// Run pre-built per-chunk tasks and return their outputs in task
+    /// order (same dispatch policy as [`run_chunks`](Self::run_chunks)).
+    /// Used by the passes whose tasks carry disjoint `&mut` windows of a
+    /// caller-owned output buffer — no per-chunk output vectors at all.
+    fn run_tasks<'env, T: Send + 'env>(&self, tasks: Vec<Task<'env, T>>) -> Vec<T> {
+        if self.train_workers() <= 1 || tasks.len() <= 1 {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
         self.pool().run(tasks)
     }
 
@@ -384,40 +487,80 @@ impl NativeEngine {
     }
 
     /// Forward + backward over the whole batch, data-parallel over the
-    /// fixed chunk plan. Each chunk accumulates its rows serially into a
-    /// private partial ([`backward_pass_range`]); partials then merge
-    /// element-wise **in chunk order** — the fixed-order reduction that
-    /// makes every worker count bit-identical.
+    /// memoized chunk plan. Each chunk walks its rows through the block
+    /// kernels into a pooled partial-gradient buffer
+    /// ([`backward_pass_range`]); partials then merge element-wise **in
+    /// chunk order** — the fixed-order reduction that makes every worker
+    /// count bit-identical (seeded with chunk 0's partial: no zero-filled
+    /// accumulator, one fewer full add). Per-row losses and Eq.-20 scores
+    /// land directly in the caller's `loss_out`/`score_out` through
+    /// disjoint chunk windows — no per-chunk output vectors. Returns the
+    /// merged gradient buffer (return it with `self.grad_bufs.put` when
+    /// done) and the weighted loss `Σ coeffᵢ·lossᵢ`.
+    #[allow(clippy::too_many_arguments)]
     fn batch_pass(
         &self,
         model: &LayerModel,
         p: &[Vec<f32>],
         x: &HostTensor,
         y: &[i32],
-        coeff: &[f32],
-    ) -> BatchPass {
+        coeff: RowCoeff<'_>,
+        loss_out: &mut [f32],
+        score_out: &mut [f32],
+    ) -> (Vec<Vec<f32>>, f64) {
         let n = x.shape[0];
-        let chunks = grad_chunk_plan(n);
-        let outs = self.run_chunks(&chunks, |start, len| {
-            backward_pass_range(model, p, x, y, coeff, start, len)
-        });
-        // Seed the reduction with chunk 0's partial and fold the rest in
-        // chunk order — no zero-filled accumulator, one fewer full add.
-        let mut outs = outs.into_iter();
-        let mut merged = outs.next().expect("chunk plan is never empty for n >= 1");
-        merged.loss_vec.reserve(n - merged.loss_vec.len());
-        merged.scores.reserve(n - merged.scores.len());
-        for o in outs {
-            for (gt, ot) in merged.grads.iter_mut().zip(&o.grads) {
+        let chunks = self.grad_plan(n);
+        let loss_parts = split_chunk_slices(loss_out, &chunks);
+        let score_parts = split_chunk_slices(score_out, &chunks);
+        let mut tasks: Vec<Task<'_, (Vec<Vec<f32>>, f64)>> = Vec::with_capacity(chunks.len());
+        for ((&(start, len), lp), sp) in chunks.iter().zip(loss_parts).zip(score_parts) {
+            tasks.push(Box::new(move || {
+                let mut arena = self.arenas.checkout_or(BlockScratch::new);
+                let mut grads = self.grad_bufs.checkout_or(Vec::new);
+                zero_grads_into(model, &mut grads);
+                let wl = backward_pass_range(
+                    model, p, x, y, coeff, start, len, &mut arena, &mut grads, lp, sp,
+                );
+                self.arenas.put(arena);
+                (grads, wl)
+            }));
+        }
+        let mut outs = self.run_tasks(tasks).into_iter();
+        let (mut grads, mut weighted_loss) =
+            outs.next().expect("chunk plan is never empty for n >= 1");
+        for (g, wl) in outs {
+            for (gt, ot) in grads.iter_mut().zip(&g) {
                 for (gv, &ov) in gt.iter_mut().zip(ot) {
                     *gv += ov;
                 }
             }
-            merged.loss_vec.extend_from_slice(&o.loss_vec);
-            merged.scores.extend_from_slice(&o.scores);
-            merged.weighted_loss += o.weighted_loss;
+            self.grad_bufs.put(g);
+            weighted_loss += wl;
         }
-        merged
+        (grads, weighted_loss)
+    }
+}
+
+/// Split `buf` into per-chunk `&mut` windows matching a contiguous,
+/// in-order chunk plan (which always covers `buf` exactly).
+fn split_chunk_slices<'a>(mut buf: &'a mut [f32], chunks: &[(usize, usize)]) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(chunks.len());
+    for &(_, len) in chunks {
+        let (head, tail) = buf.split_at_mut(len);
+        out.push(head);
+        buf = tail;
+    }
+    out
+}
+
+/// Shape a pooled partial-gradient buffer for `model` and zero it (the
+/// zero-fill is the same memset a fresh buffer would need; pooling removes
+/// the per-chunk malloc/free on top of it).
+fn zero_grads_into(model: &LayerModel, grads: &mut Vec<Vec<f32>>) {
+    grads.resize_with(model.num_param_tensors(), Vec::new);
+    for (g, &n) in grads.iter_mut().zip(model.param_elems()) {
+        g.clear();
+        g.resize(n, 0.0);
     }
 }
 
@@ -430,73 +573,83 @@ fn host_tensors(lits: &[Literal], expect: usize, what: &str) -> Result<Vec<Vec<f
 }
 
 /// Rebuild the literal list from host tensors, in manifest param order.
-fn lits_from(info: &ModelInfo, tensors: Vec<Vec<f32>>) -> Result<Vec<Literal>> {
-    info.params
-        .iter()
-        .zip(tensors)
-        .map(|(spec, data)| HostTensor::new(spec.shape.clone(), data).to_literal())
-        .collect()
+/// Borrows the tensors (the literal copies the data), so pooled buffers
+/// can be recycled after conversion.
+fn lits_from(info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<Vec<Literal>> {
+    info.params.iter().zip(tensors).map(|(spec, data)| f32_literal(&spec.shape, data)).collect()
 }
 
-/// Everything one weighted forward+backward pass over a batch (or one
-/// chunk of it) produces.
-struct BatchPass {
-    /// gradients, one buffer per parameter tensor in spec order
-    grads: Vec<Vec<f32>>,
-    loss_vec: Vec<f32>,
-    scores: Vec<f32>,
-    /// `Σ coeffᵢ·lossᵢ` — the weighted mean loss when `coeff = w/n`.
-    weighted_loss: f64,
-}
-
-/// Forward + backward over rows `start..start + len`. `coeff[i]` scales
-/// row `i`'s contribution to the accumulated gradients (`1/n` for a mean
-/// gradient, `wᵢ/n` for the weighted estimators of Eq. 2). Rows accumulate
-/// serially in index order into full-sized gradient buffers — one chunk of
-/// the fixed-order reduction of the module docs. The walk is the generic
-/// [`LayerModel`] one: the same code trains MLPs, convnets and sequence
-/// models.
+/// Forward + backward over rows `start..start + len` of the batch, walked
+/// in sub-blocks of at most [`MAX_BLOCK_ROWS`] rows through the block
+/// kernels of `runtime::kernels`. `coeff.at(r)` scales row `r`'s gradient
+/// contribution (`1/n` for a mean gradient, `wᵢ/n` for the Eq.-2 weighted
+/// estimators). Rows accumulate in index order into the chunk's partial
+/// gradient — one chunk of the fixed-order reduction of the module docs —
+/// and the sub-block size is numerically invisible (every element's
+/// accumulation chain is identical to the scalar row walk; see
+/// `runtime::kernels`). Writes per-row losses/scores into the chunk-local
+/// `loss_out`/`score_out` windows and returns the chunk's
+/// `Σ coeffᵢ·lossᵢ`. The walk is the generic [`LayerModel`] one: the same
+/// kernels train MLPs, convnets and sequence models.
+#[allow(clippy::too_many_arguments)]
 fn backward_pass_range(
     model: &LayerModel,
     p: &[Vec<f32>],
     x: &HostTensor,
     y: &[i32],
-    coeff: &[f32],
+    coeff: RowCoeff<'_>,
     start: usize,
     len: usize,
-) -> BatchPass {
-    let mut grads = model.zero_grads();
-    let mut scratch = model.scratch();
-    let mut loss_vec = Vec::with_capacity(len);
-    let mut scores = Vec::with_capacity(len);
+    arena: &mut BlockScratch,
+    grads: &mut [Vec<f32>],
+    loss_out: &mut [f32],
+    score_out: &mut [f32],
+) -> f64 {
+    let d = x.shape[1];
+    let c = model.num_classes();
     let mut weighted_loss = 0.0f64;
-    for r in start..start + len {
-        let xr = x.row(r);
-        model.forward_row(p, xr, &mut scratch);
-        let yy = model.clamp_label(y[r]);
-        let (loss, score) = {
-            let probs = scratch.probs();
-            (row_loss(probs, yy), row_score(probs, yy))
-        };
-        loss_vec.push(loss);
-        scores.push(score);
-        let cf = coeff[r];
-        weighted_loss += cf as f64 * loss as f64;
-        if cf == 0.0 {
-            continue;
-        }
+    let mut done = 0usize;
+    while done < len {
+        let rows = (len - done).min(MAX_BLOCK_ROWS);
+        let r0 = start + done;
+        let xb = &x.data[r0 * d..(r0 + rows) * d];
+        model.forward_block(p, xb, rows, arena);
+        let mut any_nonzero = false;
         {
-            // the softmax gradient, scaled by the row coefficient, seeds
-            // the backward walk in place of the probabilities
-            let gz = scratch.probs_mut();
-            gz[yy] -= 1.0;
-            for g in gz.iter_mut() {
-                *g *= cf;
+            let probs = arena.probs();
+            for r in 0..rows {
+                let yy = model.clamp_label(y[r0 + r]);
+                let prow = &probs[r * c..(r + 1) * c];
+                let loss = row_loss(prow, yy);
+                loss_out[done + r] = loss;
+                score_out[done + r] = row_score(prow, yy);
+                let cf = coeff.at(r0 + r);
+                weighted_loss += cf as f64 * loss as f64;
+                any_nonzero |= cf != 0.0;
             }
         }
-        model.backward_row(p, xr, &mut scratch, &mut grads);
+        // A fully masked block (every coefficient zero) contributes an
+        // exactly-zero gradient: skip its backward walk, like the scalar
+        // reference's per-row `cf == 0` skip. Mixed blocks keep their
+        // zero-coefficient rows — their seeded gradient is exactly ±0.0,
+        // which is bitwise invisible to every accumulator (see
+        // `runtime::kernels`).
+        if any_nonzero {
+            let pm = arena.probs_mut();
+            for r in 0..rows {
+                let yy = model.clamp_label(y[r0 + r]);
+                let cf = coeff.at(r0 + r);
+                let gz = &mut pm[r * c..(r + 1) * c];
+                gz[yy] -= 1.0;
+                for g in gz.iter_mut() {
+                    *g *= cf;
+                }
+            }
+            model.backward_block(p, xb, rows, arena, grads);
+        }
+        done += rows;
     }
-    BatchPass { grads, loss_vec, scores, weighted_loss }
+    weighted_loss
 }
 
 impl Backend for NativeEngine {
@@ -546,29 +699,34 @@ impl Backend for NativeEngine {
             bail!("w length {} != batch {n}", w.len());
         }
         let nt = m.info.params.len();
-        let params = host_tensors(&state.params, nt, "parameter")?;
+        let mut params = host_tensors(&state.params, nt, "parameter")?;
         let mut mom = host_tensors(&state.mom, nt, "momentum")?;
         let inv_n = 1.0 / n as f32;
-        let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = self.batch_pass(&m.spec.model, &params, x, y, &coeff);
+        let mut loss_vec = vec![0.0f32; n];
+        let mut scores = vec![0.0f32; n];
+        let (grads, weighted_loss) = self.batch_pass(
+            &m.spec.model,
+            &params,
+            x,
+            y,
+            RowCoeff::Scaled { w, scale: inv_n },
+            &mut loss_vec,
+            &mut scores,
+        );
         // Eq. 2 with the manifest's optimizer: g' = g + wd·θ;
         // v <- μ·v + g'; θ <- θ - lr·v.
-        let mut params = params;
-        for ((pt, vt), gt) in params.iter_mut().zip(mom.iter_mut()).zip(&pass.grads) {
+        for ((pt, vt), gt) in params.iter_mut().zip(mom.iter_mut()).zip(&grads) {
             for ((pv, vv), &gv) in pt.iter_mut().zip(vt.iter_mut()).zip(gt) {
                 let g = gv + self.weight_decay * *pv;
                 *vv = self.momentum * *vv + g;
                 *pv -= lr * *vv;
             }
         }
-        state.params = lits_from(&m.info, params)?;
-        state.mom = lits_from(&m.info, mom)?;
+        self.grad_bufs.put(grads);
+        state.params = lits_from(&m.info, &params)?;
+        state.mom = lits_from(&m.info, &mom)?;
         state.step += 1;
-        Ok(StepOutput {
-            loss: pass.weighted_loss as f32,
-            loss_vec: pass.loss_vec,
-            scores: pass.scores,
-        })
+        Ok(StepOutput { loss: weighted_loss as f32, loss_vec, scores })
     }
 
     fn fwd_scores(
@@ -581,14 +739,30 @@ impl Backend for NativeEngine {
         let n = self.check_batch(m, x, y)?;
         let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
         let model = &m.spec.model;
-        let mut scratch = model.scratch();
-        let mut loss_vec = Vec::with_capacity(n);
-        let mut scores = Vec::with_capacity(n);
-        for r in 0..n {
-            let (loss, score) = model.row_scores(&p, x.row(r), y[r], &mut scratch);
-            loss_vec.push(loss);
-            scores.push(score);
+        // Score-only fast path: block forwards into a pooled arena — no
+        // gradient scratch, no per-call activation allocation. Serial on
+        // purpose: presample-scale parallelism is the scoring subsystem's
+        // job (`--score-workers` shards the batch *across* fwd_scores
+        // calls), so an inner pool layer would only add dispatch overhead.
+        let d = x.shape[1];
+        let mut loss_vec = vec![0.0f32; n];
+        let mut scores = vec![0.0f32; n];
+        let mut arena = self.arenas.checkout_or(BlockScratch::new);
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(MAX_BLOCK_ROWS);
+            model.scores_block(
+                &p,
+                &x.data[start * d..(start + rows) * d],
+                &y[start..start + rows],
+                rows,
+                &mut arena,
+                &mut loss_vec[start..start + rows],
+                &mut scores[start..start + rows],
+            );
+            start += rows;
         }
+        self.arenas.put(arena);
         Ok((loss_vec, scores))
     }
 
@@ -597,26 +771,34 @@ impl Backend for NativeEngine {
         let n = self.check_batch(m, x, y)?;
         let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
         let model = &m.spec.model;
-        let chunks = train_chunk_plan(n);
+        let chunks = self.train_plan(n);
+        let d = x.shape[1];
+        let c = model.num_classes();
         let outs = self.run_chunks(&chunks, |start, len| {
-            let mut scratch = model.scratch();
+            let mut arena = self.arenas.checkout_or(BlockScratch::new);
             let mut sum_loss = 0.0f64;
             let mut correct = 0i64;
-            for r in start..start + len {
-                model.forward_row(&p, x.row(r), &mut scratch);
-                let yy = model.clamp_label(y[r]);
-                let probs = scratch.probs();
-                sum_loss += row_loss(probs, yy) as f64;
-                let argmax = probs
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(k, _)| k)
-                    .unwrap_or(0);
-                if argmax == yy {
-                    correct += 1;
+            let mut done = 0usize;
+            while done < len {
+                let rows = (len - done).min(MAX_BLOCK_ROWS);
+                let r0 = start + done;
+                model.forward_block(&p, &x.data[r0 * d..(r0 + rows) * d], rows, &mut arena);
+                for (r, prow) in arena.probs().chunks_exact(c).enumerate() {
+                    let yy = model.clamp_label(y[r0 + r]);
+                    sum_loss += row_loss(prow, yy) as f64;
+                    let argmax = prow
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                        .map(|(k, _)| k)
+                        .unwrap_or(0);
+                    if argmax == yy {
+                        correct += 1;
+                    }
                 }
+                done += rows;
             }
+            self.arenas.put(arena);
             (sum_loss, correct)
         });
         // fixed-order (chunk index) merge: bit-identical for any workers
@@ -636,23 +818,27 @@ impl Backend for NativeEngine {
         let model = &m.spec.model;
         // Exact per-sample gradient norm via the generic layer walk
         // (closed forms per layer where separable; see
-        // `layers::Layer::grad_sq_norm`). Per-row outputs, so chunked
-        // compute + in-order concat is trivially bit-identical for any
-        // worker count.
-        let chunks = train_chunk_plan(n);
-        let outs = self.run_chunks(&chunks, |start, len| {
-            let mut scratch = model.scratch();
-            let mut wscratch = Vec::new();
-            let mut out = Vec::with_capacity(len);
-            for r in start..start + len {
-                out.push(model.grad_norm_row(&p, x.row(r), y[r], &mut scratch, &mut wscratch));
-            }
-            out
-        });
-        let mut out = Vec::with_capacity(n);
-        for chunk in outs {
-            out.extend(chunk);
+        // `layers::Layer::grad_sq_norm`), one pooled arena per chunk.
+        // Per-row outputs land in disjoint windows of one output buffer,
+        // so chunked compute is trivially bit-identical for any worker
+        // count.
+        let chunks = self.train_plan(n);
+        let d = x.shape[1];
+        let pref = &p; // shared by every chunk task (references are Copy)
+        let mut out = vec![0.0f32; n];
+        let out_parts = split_chunk_slices(&mut out, &chunks);
+        let mut tasks: Vec<Task<'_, ()>> = Vec::with_capacity(chunks.len());
+        for (&(start, _), op) in chunks.iter().zip(out_parts) {
+            tasks.push(Box::new(move || {
+                let mut arena = self.arenas.checkout_or(BlockScratch::new);
+                for (r, o) in op.iter_mut().enumerate() {
+                    let row = &x.data[(start + r) * d..(start + r + 1) * d];
+                    *o = model.grad_norm_row(pref, row, y[start + r], &mut arena);
+                }
+                self.arenas.put(arena);
+            }));
         }
+        self.run_tasks(tasks);
         Ok(out)
     }
 
@@ -666,9 +852,25 @@ impl Backend for NativeEngine {
         let m = self.model(model)?;
         let n = self.check_batch(m, x, y)?;
         let p = host_tensors(params, m.info.params.len(), "parameter")?;
-        let coeff = vec![1.0 / n as f32; n];
-        let pass = self.batch_pass(&m.spec.model, &p, x, y, &coeff);
-        Ok((lits_from(&m.info, pass.grads)?, pass.weighted_loss as f32))
+        // per-row losses/scores are internal scratch here: pooled buffers
+        let mut loss_tmp = self.row_bufs.checkout_or(Vec::new);
+        let mut score_tmp = self.row_bufs.checkout_or(Vec::new);
+        resize_rows(&mut loss_tmp, n);
+        resize_rows(&mut score_tmp, n);
+        let (grads, wl) = self.batch_pass(
+            &m.spec.model,
+            &p,
+            x,
+            y,
+            RowCoeff::Uniform(1.0 / n as f32),
+            &mut loss_tmp,
+            &mut score_tmp,
+        );
+        let lits = lits_from(&m.info, &grads)?;
+        self.grad_bufs.put(grads);
+        self.row_bufs.put(loss_tmp);
+        self.row_bufs.put(score_tmp);
+        Ok((lits, wl as f32))
     }
 
     fn weighted_grad(
@@ -685,10 +887,31 @@ impl Backend for NativeEngine {
         }
         let p = host_tensors(&state.params, m.info.params.len(), "parameter")?;
         let inv_n = 1.0 / n as f32;
-        let coeff: Vec<f32> = w.iter().map(|&wi| wi * inv_n).collect();
-        let pass = self.batch_pass(&m.spec.model, &p, x, y, &coeff);
-        Ok((lits_from(&m.info, pass.grads)?, pass.weighted_loss as f32))
+        let mut loss_tmp = self.row_bufs.checkout_or(Vec::new);
+        let mut score_tmp = self.row_bufs.checkout_or(Vec::new);
+        resize_rows(&mut loss_tmp, n);
+        resize_rows(&mut score_tmp, n);
+        let (grads, wl) = self.batch_pass(
+            &m.spec.model,
+            &p,
+            x,
+            y,
+            RowCoeff::Scaled { w, scale: inv_n },
+            &mut loss_tmp,
+            &mut score_tmp,
+        );
+        let lits = lits_from(&m.info, &grads)?;
+        self.grad_bufs.put(grads);
+        self.row_bufs.put(loss_tmp);
+        self.row_bufs.put(score_tmp);
+        Ok((lits, wl as f32))
     }
+}
+
+/// Re-shape a pooled per-row buffer to `n` rows (reusing its capacity).
+fn resize_rows(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
 }
 
 #[cfg(test)]
@@ -911,6 +1134,50 @@ mod tests {
         // below the cap the geometry matches the row-wise plan exactly
         assert_eq!(grad_chunk_plan(128), train_chunk_plan(128));
         assert_eq!(grad_chunk_plan(640).len(), MAX_GRAD_CHUNKS);
+    }
+
+    #[test]
+    fn chunk_plans_are_memoized_per_batch_size() {
+        let ne = tiny_engine();
+        let a = ne.train_plan(37);
+        let b = ne.train_plan(37);
+        assert!(Arc::ptr_eq(&a, &b), "repeated plans must come from the cache");
+        assert_eq!(*a, train_chunk_plan(37), "cached plan must equal the pure planner");
+        let g = ne.grad_plan(640);
+        assert_eq!(*g, grad_chunk_plan(640));
+        assert!(Arc::ptr_eq(&g, &ne.grad_plan(640)));
+        // distinct sizes get distinct plans
+        assert_eq!(*ne.train_plan(9), train_chunk_plan(9));
+    }
+
+    #[test]
+    fn hot_loop_arenas_are_recycled_across_steps() {
+        // Serial engine: pool sizes are deterministic. grad_chunk_plan(20)
+        // has 3 chunks, so the first step creates exactly 3 partial
+        // buffers and 1 arena; every later call must recycle instead of
+        // growing the pools.
+        let ne = tiny_engine().with_train_workers(1);
+        let mut state = ne.init_state("tiny", 1).unwrap();
+        let (x, y) = tiny_batch(20, 6, 3);
+        let w = [1.0f32; 20];
+        for _ in 0..3 {
+            ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
+            ne.fwd_scores(&state, &x, &y).unwrap();
+            ne.grad_norms(&state, &x, &y).unwrap();
+            ne.eval_metrics(&state, &x, &y).unwrap();
+            ne.weighted_grad(&state, &x, &y, &w).unwrap();
+        }
+        assert_eq!(ne.arenas.idle(), 1, "serial runs cycle one arena");
+        assert_eq!(ne.grad_bufs.idle(), 3, "one partial buffer per grad chunk");
+        assert_eq!(ne.row_bufs.idle(), 2, "weighted_grad's loss/score scratch");
+        let before = (ne.arenas.idle(), ne.grad_bufs.idle(), ne.row_bufs.idle());
+        ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
+        ne.fwd_scores(&state, &x, &y).unwrap();
+        assert_eq!(
+            (ne.arenas.idle(), ne.grad_bufs.idle(), ne.row_bufs.idle()),
+            before,
+            "steady state must not allocate new arenas"
+        );
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! order, so callers that reduce outputs in that fixed order are
 //! bit-identical for every worker count — the contract `runtime::native`
 //! builds on.
+//!
+//! [`ObjectPool`] is the companion piece for the *memory* side of the hot
+//! loop: a free-list of chunk-sized arenas (block scratch, partial
+//! gradients) that persists across steps, so the per-chunk closures the
+//! engine fans out allocate nothing in steady state.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -135,6 +140,46 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A lock-guarded free-list of reusable scratch objects — how the native
+/// engine and scorer keep their chunk-sized arenas (block scratch buffers,
+/// partial-gradient buffers) alive **across** steps instead of allocating
+/// them inside the step loop.
+///
+/// Checkout/put cost one short `Mutex` lock each — noise at chunk
+/// granularity — and the pool's size is bounded by the peak number of
+/// chunks in flight (each worker returns its object before taking the next
+/// task), so a warm engine reaches a fixed working set and stops
+/// allocating. Objects carry no model-specific invariants; users re-`ensure`
+/// shapes on checkout, so one pool safely serves every registered model.
+#[derive(Debug, Default)]
+pub struct ObjectPool<T> {
+    items: Mutex<Vec<T>>,
+}
+
+impl<T> ObjectPool<T> {
+    pub fn new() -> Self {
+        Self { items: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a pooled object, or build a fresh one with `mk` when the pool
+    /// is momentarily empty (first use, or more chunks in flight than ever
+    /// before).
+    pub fn checkout_or(&self, mk: impl FnOnce() -> T) -> T {
+        let pooled = self.items.lock().unwrap().pop();
+        pooled.unwrap_or_else(mk)
+    }
+
+    /// Return an object to the free-list for the next checkout.
+    pub fn put(&self, item: T) {
+        self.items.lock().unwrap().push(item);
+    }
+
+    /// Objects currently idle in the pool (diagnostics/tests).
+    pub fn idle(&self) -> usize {
+        self.items.lock().unwrap().len()
+    }
+}
+
 /// Invariant-violation guard for the windows where tasks queued on the
 /// pool still borrow the caller's stack: unwinding out of [`WorkerPool::run`]
 /// there would free frames live jobs reference (use-after-free), so a
@@ -223,5 +268,41 @@ mod tests {
     #[test]
     fn default_train_workers_is_positive() {
         assert!(default_train_workers() >= 1);
+    }
+
+    #[test]
+    fn object_pool_recycles_instead_of_rebuilding() {
+        let pool: ObjectPool<Vec<u8>> = ObjectPool::new();
+        assert_eq!(pool.idle(), 0);
+        let mut a = pool.checkout_or(|| Vec::with_capacity(64));
+        assert_eq!(a.capacity(), 64); // built fresh: pool was empty
+        a.push(7);
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.checkout_or(Vec::new);
+        // recycled, not rebuilt: the capacity (and stale content — callers
+        // re-ensure shapes) came back from the free-list
+        assert!(b.capacity() >= 64 && b[0] == 7);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn object_pool_is_shareable_across_threads() {
+        let pool: ObjectPool<Vec<u64>> = ObjectPool::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let p = &pool;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let mut v = p.checkout_or(Vec::new);
+                        v.push(t * 1000 + i);
+                        p.put(v);
+                    }
+                });
+            }
+        });
+        // every checkout was matched by a put; the pool's working set is
+        // bounded by the peak concurrency (4 threads)
+        assert!((1..=4).contains(&pool.idle()));
     }
 }

@@ -13,11 +13,14 @@
 //!   so one backend serves all workers.
 //! * [`NativeScorer`] — a deterministic pure-rust scorer over any
 //!   [`LayerModel`] stack (no AOT artifacts required): MLPs, convnets and
-//!   sequence models all score through the same generic layer walk shared
-//!   with [`NativeEngine`](super::native::NativeEngine), so native training
+//!   sequence models all score through the same block kernels shared with
+//!   [`NativeEngine`](super::native::NativeEngine), so native training
 //!   and native scoring are bit-identical on the same parameters, and the
 //!   upper-bound score is the architecture-agnostic last-layer bound of
-//!   `runtime::layers`.
+//!   `runtime::layers`. Loss/upper-bound scoring takes the **score-only
+//!   fast path** (`scores_block` + pooled arenas): one block forward per
+//!   sub-block, zero gradient scratch, zero per-call allocation beyond
+//!   the output vector.
 //! * [`ScoreBackend`] — the serial path, plus a threaded backend that
 //!   splits the batch into contiguous per-worker chunks, scores them on
 //!   scoped worker threads (the same std-only idiom as
@@ -34,7 +37,9 @@ use anyhow::{anyhow, bail, Result};
 use super::backend::Backend;
 use super::engine::ModelState;
 use super::init;
-use super::layers::LayerModel;
+use super::kernels::MAX_BLOCK_ROWS;
+use super::layers::{BlockScratch, LayerModel};
+use super::pool::ObjectPool;
 use super::tensor::HostTensor;
 
 /// Which per-sample statistic drives the presample distribution.
@@ -155,6 +160,11 @@ impl SampleScorer for BackendScorer<'_> {
 pub struct NativeScorer {
     model: LayerModel,
     params: Vec<Vec<f32>>,
+    /// Persistent block-walk arenas: worker threads check one out per
+    /// `score_rows` call, so repeated scoring passes allocate nothing but
+    /// their output vector (the score-only fast path never touches
+    /// gradient scratch at all).
+    arenas: ObjectPool<BlockScratch>,
 }
 
 impl NativeScorer {
@@ -163,7 +173,7 @@ impl NativeScorer {
     pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, seed: u64) -> Self {
         let model = LayerModel::mlp(feature_dim, hidden, num_classes).expect("invalid mlp");
         let params = init::init_params(seed, &model.param_specs());
-        Self { model, params }
+        Self { model, params, arenas: ObjectPool::new() }
     }
 
     /// A scorer over an explicit layer stack + host parameters — how the
@@ -171,7 +181,7 @@ impl NativeScorer {
     /// architecture) to the scoring subsystem.
     pub fn from_model(model: LayerModel, params: Vec<Vec<f32>>) -> Result<Self> {
         model.check_params(&params)?;
-        Ok(Self { model, params })
+        Ok(Self { model, params, arenas: ObjectPool::new() })
     }
 
     pub fn feature_dim(&self) -> usize {
@@ -199,24 +209,42 @@ impl SampleScorer for NativeScorer {
             bail!("labels ({}) do not match rows ({})", y.len(), x.rows);
         }
         let (m, p) = (&self.model, &self.params);
-        let mut scratch = m.scratch();
-        let mut out = Vec::with_capacity(x.rows);
+        let mut arena = self.arenas.checkout_or(BlockScratch::new);
+        let mut out = vec![0.0f32; x.rows];
         match kind {
             ScoreKind::Loss | ScoreKind::UpperBound => {
-                for r in 0..x.rows {
-                    let (loss, ub) = m.row_scores(p, x.row(r), y[r], &mut scratch);
-                    out.push(if kind == ScoreKind::Loss { loss } else { ub });
+                // Score-only fast path: block forwards, no gradient
+                // scratch. `scores_block` computes both per-row outputs;
+                // the unwanted lane lands in the arena's spare buffer
+                // instead of a per-call allocation.
+                let mut spare = std::mem::take(&mut arena.tmp);
+                spare.clear();
+                spare.resize(x.rows, 0.0);
+                let mut start = 0usize;
+                while start < x.rows {
+                    let rows = (x.rows - start).min(MAX_BLOCK_ROWS);
+                    let xb = &x.data[start * x.dim..(start + rows) * x.dim];
+                    let yb = &y[start..start + rows];
+                    let spare_w = &mut spare[start..start + rows];
+                    let out_w = &mut out[start..start + rows];
+                    if kind == ScoreKind::Loss {
+                        m.scores_block(p, xb, yb, rows, &mut arena, out_w, spare_w);
+                    } else {
+                        m.scores_block(p, xb, yb, rows, &mut arena, spare_w, out_w);
+                    }
+                    start += rows;
                 }
+                arena.tmp = spare;
             }
             ScoreKind::GradNorm => {
                 // the exact per-sample norm via the generic layer walk (the
                 // pre-layer-IR scorer substituted the upper bound here)
-                let mut ws = Vec::new();
-                for r in 0..x.rows {
-                    out.push(m.grad_norm_row(p, x.row(r), y[r], &mut scratch, &mut ws));
+                for (r, o) in out.iter_mut().enumerate() {
+                    *o = m.grad_norm_row(p, x.row(r), y[r], &mut arena);
                 }
             }
         }
+        self.arenas.put(arena);
         Ok(out)
     }
 

@@ -42,8 +42,7 @@ impl HostTensor {
     }
 
     pub fn to_literal(&self) -> Result<Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Literal::vec1(&self.data).reshape(&dims).context("reshaping f32 literal")
+        f32_literal(&self.shape, &self.data)
     }
 
     pub fn from_literal(lit: &Literal) -> Result<Self> {
@@ -52,6 +51,14 @@ impl HostTensor {
         let data = lit.to_vec::<f32>().context("literal is not f32")?;
         Ok(Self::new(dims, data))
     }
+}
+
+/// Build a shaped f32 literal from borrowed shape + data — the one
+/// literal constructor [`HostTensor::to_literal`] and the native engine's
+/// pooled-buffer conversions share, so the logic cannot drift.
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data).reshape(&dims).context("reshaping f32 literal")
 }
 
 /// Build a `f32[b]` literal (importance weights, per-sample vectors).

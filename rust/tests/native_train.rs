@@ -4,7 +4,10 @@
 //!
 //! * analytic gradients vs central finite differences, swept over every
 //!   `Layer` variant (Dense / Relu / Conv1d / GlobalAvgPool /
-//!   EmbeddingBag) on tiny specs,
+//!   EmbeddingBag) on tiny specs — since ISSUE 5 this sweep runs on the
+//!   block-kernel path (`weighted_grad` routes through
+//!   `runtime::kernels`), plus an explicit kernel-vs-scalar-reference
+//!   cross-check,
 //! * native scoring parity through the sharded scoring subsystem,
 //! * real Algorithm-1 runs with zero AOT artifacts: uniform warmup,
 //!   τ crossing τ_th, importance sampling switching on, and the
@@ -277,6 +280,68 @@ fn gradient_check_against_finite_differences_per_layer_variant() {
     );
     for spec in [dense, conv, seq] {
         check_gradients(spec);
+    }
+}
+
+#[test]
+fn kernel_path_matches_the_scalar_reference_walk() {
+    // ISSUE 5 cross-check at the engine level: the backend entries now run
+    // the block kernels, so (a) per-row outputs (`fwd_scores`) must equal
+    // the scalar reference walk bit for bit, and (b) `weighted_grad` must
+    // match a whole-batch scalar accumulation to tight tolerance (exact
+    // equality is not expected there: the engine's canonical reduction is
+    // the PR 3 *chunked* merge, while the reference below folds the whole
+    // batch in one chain).
+    for (mk, name) in [(sep_engine as fn() -> NativeEngine, "sep"), (conv_sep_engine, "csep")] {
+        let ne = mk();
+        let state = ne.init_state(name, 29).unwrap();
+        let m = ne.layer_model(name).unwrap().clone();
+        let p = state.params_to_host().unwrap();
+        let n = 37usize;
+        let d = m.in_dim();
+        let mut x = HostTensor::zeros(vec![n, d]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 53 + 19) % 97) as f32 / 97.0 - 0.5;
+        }
+        let y: Vec<i32> = (0..n).map(|i| (i % m.num_classes()) as i32).collect();
+        let w: Vec<f32> = (0..n).map(|i| 0.2 + (i % 4) as f32 * 0.6).collect();
+
+        // (a) per-row outputs: bitwise
+        let (loss, ub) = ne.fwd_scores(&state, &x, &y).unwrap();
+        let mut s = m.scratch();
+        for r in 0..n {
+            let (l, u) = m.row_scores(&p, x.row(r), y[r], &mut s);
+            assert_eq!((loss[r], ub[r]), (l, u), "{name} row {r}: fwd_scores diverged");
+        }
+
+        // (b) gradients: whole-batch scalar walk, tolerance-level
+        let (grads, wloss) = ne.weighted_grad(&state, &x, &y, &w).unwrap();
+        let mut grads_ref = m.zero_grads();
+        let mut wl_ref = 0.0f64;
+        let inv_n = 1.0 / n as f32;
+        for r in 0..n {
+            let xr = x.row(r);
+            let (l, _) = m.row_scores(&p, xr, y[r], &mut s);
+            let cf = w[r] * inv_n;
+            wl_ref += cf as f64 * l as f64;
+            let yy = m.clamp_label(y[r]);
+            let gz = s.probs_mut();
+            gz[yy] -= 1.0;
+            for gv in gz.iter_mut() {
+                *gv *= cf;
+            }
+            m.backward_row(&p, xr, &mut s, &mut grads_ref);
+        }
+        assert!((wloss as f64 - wl_ref).abs() < 1e-5, "{name}: {wloss} vs {wl_ref}");
+        for (t, (got, want)) in grads.iter().zip(&grads_ref).enumerate() {
+            let gh = HostTensor::from_literal(got).unwrap();
+            for (i, (&gv, &rv)) in gh.data.iter().zip(want).enumerate() {
+                assert!(
+                    (gv - rv).abs() <= 1e-5 + 1e-4 * rv.abs(),
+                    "{name} tensor {t} elem {i}: kernel {gv} vs scalar {rv}"
+                );
+            }
+        }
     }
 }
 

@@ -12,7 +12,11 @@
 //! merges are architecture-independent), and a dominance property pins the
 //! paper's Eq.-1/2 claim — the last-layer upper-bound score bounds the
 //! true per-sample gradient norm up to a provable per-row constant — per
-//! architecture.
+//! architecture. ISSUE 5 adds the block-kernel contract on top: the
+//! block-batched forward/score/backward passes must be **bit-identical**
+//! to the scalar reference walk across random shapes and block splits,
+//! which is what carries every worker-count guarantee over to the
+//! cache-blocked hot path.
 
 use isample::coordinator::resample::{importance_weights, AliasSampler, CumulativeSampler};
 use isample::coordinator::sampler::resample_from_scores;
@@ -21,6 +25,7 @@ use isample::data::sequence::PermutedSequences;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
 use isample::runtime::checkpoint::state_checksum;
+use isample::runtime::init::init_params;
 use isample::runtime::tensor::HostTensor;
 use isample::runtime::{Backend, Layer, NativeEngine, NativeModelSpec};
 use isample::util::digest::digest_f32;
@@ -201,6 +206,92 @@ fn prop_native_conv_and_seq_parallel_is_bit_identical() {
                 )
             };
             assert_eq!(run(1), run(workers), "arch {arch} n={n} workers={workers}");
+        }
+    });
+}
+
+#[test]
+fn prop_block_kernels_match_the_scalar_reference_bitwise() {
+    // The ISSUE 5 kernel-refactor contract: the block-batched passes
+    // (`forward_block`/`scores_block`/`backward_block`, built on
+    // `runtime::kernels`) must be **bit-identical** to the canonical
+    // scalar row walk for every architecture, batch size and internal
+    // block split — including rows whose gradient coefficient is exactly
+    // zero (the scalar walk skips them; the block walk includes their
+    // ±0.0 contributions, which must be bitwise invisible). This is what
+    // lets the PR 3/4 worker-count bit-identity guarantees carry over to
+    // the kernel path by construction.
+    check("block kernels == scalar walk", 10, |g: &mut Gen| {
+        let mlp = {
+            let d = g.usize_in(2..20);
+            let h = g.usize_in(2..12);
+            let c = g.usize_in(2..6);
+            NativeModelSpec::mlp("p", d, h, c, 8, 8, vec![])
+        };
+        for spec in [mlp, conv_spec(g), seq_spec(g)] {
+            let m = spec.model.clone();
+            let params = init_params(g.rng.next_u64(), &m.param_specs());
+            let (d, c) = (m.in_dim(), m.num_classes());
+            let n = g.usize_in(1..40);
+            let (x, y) = native_batch(g, n, d, c);
+            let coeff: Vec<f32> = (0..n)
+                .map(|_| if g.rng.below(5) == 0 { 0.0 } else { g.f32_in(0.0..2.0) })
+                .collect();
+
+            // canonical scalar reference: row-by-row walk with cf==0 skip
+            let mut s = m.scratch();
+            let mut grads_ref = m.zero_grads();
+            let mut loss_ref = Vec::with_capacity(n);
+            let mut score_ref = Vec::with_capacity(n);
+            for r in 0..n {
+                let xr = x.row(r);
+                let (l, u) = m.row_scores(&params, xr, y[r], &mut s);
+                loss_ref.push(l);
+                score_ref.push(u);
+                if coeff[r] != 0.0 {
+                    let yy = m.clamp_label(y[r]);
+                    let gz = s.probs_mut();
+                    gz[yy] -= 1.0;
+                    for gv in gz.iter_mut() {
+                        *gv *= coeff[r];
+                    }
+                    m.backward_row(&params, xr, &mut s, &mut grads_ref);
+                }
+            }
+
+            // block path, split into random-size blocks (1..=32 rows)
+            let mut bs = m.block_scratch();
+            let mut grads = m.zero_grads();
+            let mut loss = vec![0.0f32; n];
+            let mut score = vec![0.0f32; n];
+            let mut start = 0usize;
+            while start < n {
+                let rows = g.usize_in(1..(n - start + 1).min(33));
+                let xb = &x.data[start * d..(start + rows) * d];
+                m.scores_block(
+                    &params,
+                    xb,
+                    &y[start..start + rows],
+                    rows,
+                    &mut bs,
+                    &mut loss[start..start + rows],
+                    &mut score[start..start + rows],
+                );
+                let pm = bs.probs_mut();
+                for r in 0..rows {
+                    let yy = m.clamp_label(y[start + r]);
+                    let gz = &mut pm[r * c..(r + 1) * c];
+                    gz[yy] -= 1.0;
+                    for gv in gz.iter_mut() {
+                        *gv *= coeff[start + r];
+                    }
+                }
+                m.backward_block(&params, xb, rows, &mut bs, &mut grads);
+                start += rows;
+            }
+            assert_eq!(loss, loss_ref, "losses diverged (n={n})");
+            assert_eq!(score, score_ref, "scores diverged (n={n})");
+            assert_eq!(grads, grads_ref, "gradients diverged (n={n})");
         }
     });
 }
