@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         model: args.flag("model").map(|s| s.to_string()),
         score_workers: args.flag_score_workers()?,
         train_workers: args.flag_train_workers()?,
+        score_refresh_budget: args.flag_score_refresh_budget()?,
     };
     let sw = Stopwatch::new();
     run_figure(backend.as_ref(), "fig3", &opts)?;

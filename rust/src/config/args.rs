@@ -101,6 +101,25 @@ impl Args {
         Ok(n)
     }
 
+    /// `--score-refresh-budget K|inf` — staleness budget (in steps) for
+    /// the presample score cache (`coordinator::cache`). `inf` (or unset)
+    /// means an unlimited refresh budget: every presampled row is
+    /// re-scored every cycle, bit-identical to the uncached trainer. An
+    /// integer `K` serves cached scores for up to `K` steps of age and
+    /// re-scores only older rows (`0` is bitwise equivalent to `inf`).
+    pub fn flag_score_refresh_budget(&self) -> Result<Option<u64>> {
+        match self.flag("score-refresh-budget") {
+            None => Ok(None),
+            Some(v) if v.eq_ignore_ascii_case("inf") || v == "∞" => Ok(None),
+            Some(v) => {
+                let k = v.parse().with_context(|| {
+                    format!("--score-refresh-budget must be an integer or `inf`, got {v:?}")
+                })?;
+                Ok(Some(k))
+            }
+        }
+    }
+
     /// `--backend native|pjrt` — which execution substrate to run on.
     /// `native` is the artifact-free pure-rust engine; `pjrt` (the default)
     /// executes AOT artifacts.
@@ -189,6 +208,18 @@ mod tests {
         assert!(args("train").flag_score_workers().unwrap() >= 1);
         assert!(args("train --score-workers 0").flag_score_workers().is_err());
         assert!(args("train --score-workers lots").flag_score_workers().is_err());
+    }
+
+    #[test]
+    fn score_refresh_budget_flag() {
+        let budget = |cmd: &str| args(cmd).flag_score_refresh_budget();
+        assert_eq!(budget("train").unwrap(), None);
+        assert_eq!(budget("train --score-refresh-budget inf").unwrap(), None);
+        assert_eq!(budget("train --score-refresh-budget=INF").unwrap(), None);
+        assert_eq!(budget("train --score-refresh-budget ∞").unwrap(), None);
+        assert_eq!(budget("train --score-refresh-budget 64").unwrap(), Some(64));
+        assert_eq!(budget("train --score-refresh-budget=0").unwrap(), Some(0));
+        assert!(budget("train --score-refresh-budget soon").is_err());
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Staleness-aware per-sample score cache (ISSUE 6 tentpole).
+//!
+//! The presample pass re-scores every candidate from scratch each cycle,
+//! so its cost grows with the pool even though *Accelerating Deep Learning
+//! by Focusing on the Biggest Losers* (PAPERS.md) shows stale per-sample
+//! scores stay a usable selection signal for many steps, and *Biased
+//! Importance Sampling for Deep Neural Network Training* grounds sampling
+//! from an approximate score distribution. [`ScoreCache`] keeps one score
+//! and one step stamp per pool sample: each presample cycle only the rows
+//! whose cached score is **older than the refresh budget** (or that were
+//! never scored) go back through the model; everything else samples from
+//! the cached distribution.
+//!
+//! Budget semantics (`--score-refresh-budget`):
+//!
+//! * `inf` / unset → [`ScoreCache::new`] with `budget = None`: an
+//!   unlimited refresh budget, i.e. every row is re-scored every cycle.
+//!   This is bit-identical to the pre-cache trainer (the enforced golden
+//!   contract) because the partial re-score path degenerates to the full
+//!   one when every position is stale.
+//! * `Some(k)` → a cached score is served for up to `k` steps of age;
+//!   rows older than `k` are re-scored. `Some(0)` is therefore bitwise
+//!   equivalent to `None`: any score from an earlier step has age ≥ 1.
+//!
+//! Determinism contract (ROADMAP): [`ScoreCache::stale_positions`] is a
+//! pure function of the stamp table and the step counter, and stamps only
+//! ever change through [`ScoreCache::record`] — so the refresh schedule is
+//! a function of (step, seed) alone, never of score values, wall-clock
+//! time, or worker count.
+
+/// Stamp value for "never scored".
+const NEVER: u64 = u64::MAX;
+
+/// Per-sample cached scores with step-stamped ages over a fixed-size pool.
+#[derive(Debug, Clone)]
+pub struct ScoreCache {
+    budget: Option<u64>,
+    scores: Vec<f32>,
+    stamp: Vec<u64>,
+    scored: u64,
+    reused: u64,
+}
+
+impl ScoreCache {
+    /// Cache for a pool of `n` samples. `budget = None` means an unlimited
+    /// refresh budget (re-score everything each cycle); `Some(k)` serves
+    /// cached scores for up to `k` steps of age.
+    pub fn new(n: usize, budget: Option<u64>) -> Self {
+        Self { budget, scores: vec![0.0; n], stamp: vec![NEVER; n], scored: 0, reused: 0 }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Positions within `indices` (NOT pool indices) whose cached score is
+    /// missing or older than the budget at `step`, in position order.
+    pub fn stale_positions(&self, indices: &[usize], step: u64) -> Vec<usize> {
+        match self.budget {
+            None => (0..indices.len()).collect(),
+            Some(k) => indices
+                .iter()
+                .enumerate()
+                .filter(|&(_, &i)| {
+                    let s = self.stamp[i];
+                    s == NEVER || step.saturating_sub(s) > k
+                })
+                .map(|(p, _)| p)
+                .collect(),
+        }
+    }
+
+    /// Store freshly computed scores: `fresh[j]` is the score of sample
+    /// `indices[positions[j]]`, stamped at `step`. Duplicate pool indices
+    /// in one presample batch are harmless — their rows are identical, so
+    /// every write carries the same bits.
+    pub fn record(&mut self, indices: &[usize], positions: &[usize], fresh: &[f32], step: u64) {
+        assert_eq!(positions.len(), fresh.len(), "one fresh score per stale position");
+        for (&p, &v) in positions.iter().zip(fresh) {
+            let i = indices[p];
+            self.scores[i] = v;
+            self.stamp[i] = step;
+        }
+        self.scored += positions.len() as u64;
+        self.reused += (indices.len() - positions.len()) as u64;
+    }
+
+    /// Cached score for every index of a presample batch, in batch order.
+    /// Call after [`record`](Self::record) so no entry is missing.
+    pub fn lookup(&self, indices: &[usize]) -> Vec<f32> {
+        indices
+            .iter()
+            .map(|&i| {
+                debug_assert_ne!(self.stamp[i], NEVER, "lookup of a never-scored sample {i}");
+                self.scores[i]
+            })
+            .collect()
+    }
+
+    /// Lifetime counters: (rows re-scored, rows served from cache).
+    pub fn counters(&self) -> (u64, u64) {
+        (self.scored, self.reused)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_budget_marks_every_position_stale() {
+        let cache = ScoreCache::new(8, None);
+        assert_eq!(cache.stale_positions(&[3, 3, 7], 42), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn finite_budget_refreshes_only_aged_out_samples() {
+        let mut cache = ScoreCache::new(10, Some(3));
+        let batch = [1usize, 4, 7];
+        assert_eq!(cache.stale_positions(&batch, 10), vec![0, 1, 2], "cold cache");
+        cache.record(&batch, &[0, 1, 2], &[0.5, 1.5, 2.5], 10);
+        // within budget: age 3 == k is still fresh
+        assert!(cache.stale_positions(&batch, 13).is_empty());
+        assert_eq!(cache.lookup(&batch), vec![0.5, 1.5, 2.5]);
+        // age 4 > k: everything recorded at step 10 ages out together
+        assert_eq!(cache.stale_positions(&batch, 14), vec![0, 1, 2]);
+        // mixed batch: sample 2 was never scored
+        cache.record(&batch, &[0, 1, 2], &[0.5, 1.5, 2.5], 14);
+        assert_eq!(cache.stale_positions(&[1, 2, 4], 15), vec![1]);
+        assert_eq!(cache.counters(), (6, 0));
+    }
+
+    #[test]
+    fn zero_budget_behaves_like_unlimited() {
+        let mut zero = ScoreCache::new(6, Some(0));
+        let none = ScoreCache::new(6, None);
+        let batch = [0usize, 2, 2, 5];
+        assert_eq!(zero.stale_positions(&batch, 1), none.stale_positions(&batch, 1));
+        zero.record(&batch, &[0, 1, 2, 3], &[1.0, 2.0, 2.0, 3.0], 1);
+        // one step later every entry has age 1 > 0 again
+        assert_eq!(zero.stale_positions(&batch, 2), none.stale_positions(&batch, 2));
+    }
+
+    #[test]
+    fn duplicate_indices_resolve_to_one_consistent_score() {
+        let mut cache = ScoreCache::new(4, Some(5));
+        let batch = [2usize, 2, 1];
+        cache.record(&batch, &[0, 1, 2], &[7.0, 7.0, 3.0], 0);
+        assert_eq!(cache.lookup(&batch), vec![7.0, 7.0, 3.0]);
+    }
+}

@@ -5,12 +5,16 @@
 //! * [`sampler`] / [`resample`] — presample-B / resample-b machinery with
 //!   unbiased importance weights.
 //! * [`tau`] — the Eq.-26 variance-reduction estimator and cost model.
+//! * [`cache`] — staleness-aware per-sample score cache behind
+//!   `--score-refresh-budget`; refresh schedules depend only on
+//!   (step, seed).
 //! * [`history`] — loss-history stores for the published baselines.
 //! * [`pipeline`] — threaded batch prefetch with bounded-channel
 //!   backpressure; training steps stay on the coordinator thread while
 //!   presample scoring shards across workers (`runtime::score`).
 //! * [`metrics`] — wall-clock metric rows and CSV sinks.
 
+pub mod cache;
 pub mod history;
 pub mod metrics;
 pub mod pipeline;
@@ -19,6 +23,7 @@ pub mod sampler;
 pub mod tau;
 pub mod trainer;
 
+pub use cache::ScoreCache;
 pub use sampler::{ScoreKind, StrategyKind};
 pub use tau::TauEstimator;
 pub use trainer::{Report, Trainer, TrainerConfig};

@@ -43,6 +43,7 @@ macro_rules! timed {
     }};
 }
 
+use super::cache::ScoreCache;
 use super::history::{LoshchilovHutter, SchaulProportional};
 use super::metrics::{MetricsLog, Row};
 use super::pipeline::{gather_rows, PipelineStats, PrefetchedBatch, Prefetcher};
@@ -145,6 +146,14 @@ pub struct TrainerConfig {
     /// engages when `B / score_workers` chunk sizes have baked artifacts;
     /// otherwise it transparently falls back to the serial full-B pass.
     pub score_workers: usize,
+    /// Staleness budget (in steps) for the per-sample score cache
+    /// (`coordinator::cache`). `None` = unlimited refresh budget: every
+    /// presampled row is re-scored every cycle (the paper's Alg. 1 and the
+    /// golden-pinned behavior). `Some(k)` serves cached scores for up to
+    /// `k` steps of age and re-scores only older rows, trading score
+    /// freshness for presample throughput; `Some(0)` is bitwise equivalent
+    /// to `None`. Refresh schedules depend only on (step, seed).
+    pub score_refresh_budget: Option<u64>,
     /// Batch-compute worker threads for the training-side entries
     /// (`train_step`, `grad`, `weighted_grad`, `grad_norms`,
     /// `eval_metrics`) of backends that shard batches (native; PJRT runs
@@ -215,6 +224,7 @@ impl TrainerConfig {
             prefetch_depth: 2,
             prefetch_threads: 0,
             score_workers: default_score_workers(),
+            score_refresh_budget: None,
             train_workers: default_train_workers(),
             log_every: 10,
             adaptive_lr_cap: 0.0,
@@ -266,6 +276,12 @@ impl TrainerConfig {
     /// Set the presample scoring worker count (see `score_workers`).
     pub fn with_score_workers(mut self, workers: usize) -> Self {
         self.score_workers = workers.max(1);
+        self
+    }
+
+    /// Set the score-cache staleness budget (see `score_refresh_budget`).
+    pub fn with_score_refresh_budget(mut self, budget: Option<u64>) -> Self {
+        self.score_refresh_budget = budget;
         self
     }
 
@@ -337,6 +353,22 @@ impl<'e> Trainer<'e> {
                 bail!(
                     "{} backend cannot run {entry} at batch {b} for model {:?}",
                     backend.name(),
+                    cfg.model
+                );
+            }
+        }
+        if let (StrategyKind::Presample { score }, Some(_)) =
+            (&cfg.strategy, cfg.score_refresh_budget)
+        {
+            // a finite budget re-scores arbitrary-size stale subsets, so
+            // the backend must score any batch size (native does; PJRT
+            // only its baked artifact sizes)
+            if !backend.supports(&cfg.model, score.entry(), 1)? {
+                bail!(
+                    "--score-refresh-budget needs a backend that scores arbitrary batch \
+                     sizes; {} cannot run {} at batch 1 for model {:?}",
+                    backend.name(),
+                    score.entry(),
                     cfg.model
                 );
             }
@@ -528,6 +560,14 @@ impl<'e> Trainer<'e> {
             }
             _ => None,
         };
+        // staleness-aware score cache: with the default unlimited budget
+        // every row is stale every cycle and this is a pass-through
+        let mut cache: Option<ScoreCache> = match &strategy {
+            StrategyKind::Presample { .. } => {
+                Some(ScoreCache::new(train.len(), self.cfg.score_refresh_budget))
+            }
+            _ => None,
+        };
 
         loop {
             // -- termination ---------------------------------------------------
@@ -580,17 +620,27 @@ impl<'e> Trainer<'e> {
                             "data",
                             large_src.as_deref_mut().expect("presample source").next()
                         );
-                        // Sharded scoring: chunks fan out to score_workers
-                        // scoped threads (or, for grad norms on a backend
-                        // that shards internally, to the train worker
-                        // pool) and merge in presample order, so the
+                        // Sharded scoring behind the staleness cache: only
+                        // rows whose cached score aged past the refresh
+                        // budget are re-scored (all of them when the budget
+                        // is unlimited, which keeps this bit-identical to
+                        // the uncached full re-score). Chunks fan out to
+                        // score_workers scoped threads (or, for grad norms
+                        // on a backend that shards internally, to the train
+                        // worker pool) and merge in presample order, so the
                         // scores (and therefore the resampled indices)
                         // are bit-identical to the serial path.
                         let scores = timed!(self.timers, "score", {
                             let scorer =
                                 BackendScorer { backend: self.backend, state: &self.state };
+                            let cache = cache.as_mut().expect("presample score cache");
+                            let stale = cache.stale_positions(&pb.indices, step);
                             score_backend(self.backend, self.cfg.score_workers, *score)
-                                .score(&scorer, &pb.x, &pb.y, *score)
+                                .score_subset(&scorer, &pb.x, &pb.y, *score, &stale)
+                                .map(|fresh| {
+                                    cache.record(&pb.indices, &stale, &fresh, step);
+                                    cache.lookup(&pb.indices)
+                                })
                         })?;
                         let plan = timed!(
                             self.timers,

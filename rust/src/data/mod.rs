@@ -11,10 +11,14 @@
 //! All generators are deterministic functions of `(seed, index)` — datasets
 //! are *virtual* (nothing is materialized), which is also how the paper's
 //! method works "on infinite datasets in a true online fashion" (§4.2).
+//! The [`shard`] module is the out-of-core complement: it materializes any
+//! generator once into a directory of binary shards and streams it back
+//! through the same [`Dataset`] trait with a bounded resident set.
 
 pub mod augment;
 pub mod finetune;
 pub mod sequence;
+pub mod shard;
 pub mod synthetic;
 
 use crate::runtime::HostTensor;

@@ -47,6 +47,10 @@ pub struct FigOptions {
     /// batch-compute workers for every training run (bit-identical for
     /// any count — see `TrainerConfig::train_workers`)
     pub train_workers: usize,
+    /// staleness budget for the cached-score legs of figures that sweep
+    /// the score cache (fig7). `None` = the sweep's default budget; it
+    /// never changes the full re-score legs.
+    pub score_refresh_budget: Option<u64>,
 }
 
 impl Default for FigOptions {
@@ -59,6 +63,7 @@ impl Default for FigOptions {
             model: None,
             score_workers: default_score_workers(),
             train_workers: default_train_workers(),
+            score_refresh_budget: None,
         }
     }
 }
@@ -602,6 +607,20 @@ pub fn fig7_presample(backend: &dyn Backend, opts: &FigOptions) -> Result<()> {
             TrainerConfig::upper_bound(&model)
                 .with_presample(b)
                 .with_tau_th(1.5)
+                .with_budget(opts.budget_secs),
+        ));
+    }
+    // the cached half of the sweep: same B ladder, but presample scores
+    // are served from the staleness cache for up to k steps, so the
+    // presample-cost curve shows what `--score-refresh-budget` buys
+    let k = opts.score_refresh_budget.unwrap_or(50);
+    for &b in &info.presample {
+        configs.push((
+            format!("B{b}_cached{k}"),
+            TrainerConfig::upper_bound(&model)
+                .with_presample(b)
+                .with_tau_th(1.5)
+                .with_score_refresh_budget(Some(k))
                 .with_budget(opts.budget_secs),
         ));
     }

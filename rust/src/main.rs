@@ -51,6 +51,8 @@ FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
           --score-workers N (presample scoring threads; default = cores)
           --train-workers N (batch-compute threads, native backend;
                              default = cores; bit-identical for any N)
+          --score-refresh-budget K|inf (serve cached presample scores for up
+                             to K steps of age; inf = re-score every cycle)
           --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
 "#;
 
@@ -67,6 +69,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.base_lr = args.flag_f64("lr", cfg.base_lr as f64)? as f32;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
     cfg.score_workers = args.flag_score_workers()?;
+    cfg.score_refresh_budget = args.flag_score_refresh_budget()?;
     cfg.train_workers = args.flag_train_workers()?;
     cfg.eval_every_secs = args.flag_f64("eval-every", 10.0)?;
     if let Some(b) = args.flag("budget") {
@@ -117,6 +120,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         model: args.flag("model").map(|s| s.to_string()),
         score_workers: args.flag_score_workers()?,
         train_workers: args.flag_train_workers()?,
+        score_refresh_budget: args.flag_score_refresh_budget()?,
     };
     run_figure(backend.as_ref(), fig, &opts)
 }

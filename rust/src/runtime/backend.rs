@@ -5,7 +5,7 @@
 //!
 //! * [`Engine`] (PJRT) — executes AOT-lowered HLO artifacts; entry points
 //!   exist only at the batch sizes that were baked by `make artifacts`.
-//! * [`NativeEngine`](super::native::NativeEngine) — a pure-rust
+//! * [`NativeEngine`] — a pure-rust
 //!   forward/backward/SGD implementation over `runtime::layers` model
 //!   stacks (MLPs, small convnets, embedding-bag sequence models); every
 //!   entry works at any batch size and needs no artifacts at all, which is

@@ -621,7 +621,7 @@ pub(crate) fn row_loss(probs: &[f32], y: usize) -> f32 {
 /// The paper's Eq.-20 upper-bound score `‖probs − onehot(y)‖₂` of one row:
 /// the norm of the loss gradient at the last layer's pre-activations —
 /// computed here, once, for **any** layer stack.
-pub(crate) fn row_score(probs: &[f32], y: usize) -> f32 {
+pub fn row_score(probs: &[f32], y: usize) -> f32 {
     let mut norm2 = 0.0f32;
     for (k, &p) in probs.iter().enumerate() {
         let g = if k == y { p - 1.0 } else { p };

@@ -18,7 +18,7 @@
 //!   vecmath work identically across backends and across architectures (the
 //!   SGD update and the chunk merges iterate parameter tensors generically).
 //! * The per-row forward pass is *shared* with
-//!   [`NativeScorer`](super::score::NativeScorer) (both walk the same
+//!   [`NativeScorer`] (both walk the same
 //!   [`LayerModel`]), so native training, native scoring and the sharded
 //!   scoring benches are bit-identical on the same parameters. The
 //!   upper-bound score itself is the **architecture-agnostic** last-layer

@@ -76,6 +76,23 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Fire-and-forget: queue a self-contained (`'static`) job on the pool
+    /// and return immediately. The streaming shard store uses this for
+    /// readahead — overlapping the next shard's disk IO with scoring and
+    /// training on the current one. A panic inside the job is swallowed
+    /// (the job is advisory; whoever needs its result will redo the work
+    /// synchronously and surface the real error), and a pool that is
+    /// already shutting down silently drops the job for the same reason.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let Some(tx) = self.tx.lock().unwrap().clone() else {
+            return;
+        };
+        let job: Job = Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        });
+        let _ = tx.send(job);
+    }
+
     /// Run every task to completion on the pool and return the outputs in
     /// task order. Blocks until all tasks are done; a panicking task is
     /// re-raised here (after the barrier, so borrows stay sound and the

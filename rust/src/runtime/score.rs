@@ -329,6 +329,47 @@ impl ScoreBackend {
             Some(chunks) => score_chunks_threaded(scorer, x, y, kind, &chunks),
         }
     }
+
+    /// Score only the rows at `positions` of a presample batch — the
+    /// partial re-score path behind the staleness-aware score cache
+    /// (`--score-refresh-budget`): returns one score per position, in
+    /// position order. When `positions` is exactly `0..rows` the call
+    /// degenerates to [`score`](Self::score) on the original tensor with
+    /// no gather, which is what makes the infinite-budget configuration
+    /// bit-identical to the uncached re-score-everything path.
+    pub fn score_subset(
+        &self,
+        scorer: &dyn SampleScorer,
+        x: &HostTensor,
+        y: &[i32],
+        kind: ScoreKind,
+        positions: &[usize],
+    ) -> Result<Vec<f32>> {
+        if x.shape.len() != 2 {
+            bail!("presample batch must be 2-D, got shape {:?}", x.shape);
+        }
+        let rows = x.shape[0];
+        if y.len() != rows {
+            bail!("labels ({}) do not match presample rows ({rows})", y.len());
+        }
+        if positions.is_empty() {
+            return Ok(vec![]);
+        }
+        if positions.len() == rows && positions.iter().enumerate().all(|(i, &p)| i == p) {
+            return self.score(scorer, x, y, kind);
+        }
+        let d = x.shape[1];
+        let mut gx = HostTensor::zeros(vec![positions.len(), d]);
+        let mut gy = Vec::with_capacity(positions.len());
+        for (r, &p) in positions.iter().enumerate() {
+            if p >= rows {
+                bail!("subset position {p} out of range ({rows} presample rows)");
+            }
+            gx.data[r * d..(r + 1) * d].copy_from_slice(x.row(p));
+            gy.push(y[p]);
+        }
+        self.score(scorer, &gx, &gy, kind)
+    }
 }
 
 /// Split `rows` into `workers` contiguous chunks, balanced to within one

@@ -12,7 +12,7 @@ use super::engine::Engine;
 use super::tensor::HostTensor;
 
 /// Deterministic integer-math inputs, the twin of python
-/// `aot.synth_inputs`: x[i,j] = ((i*D+j) % 97)/97 - 0.5 ; y[i] = i % C.
+/// `aot.synth_inputs`: `x[i,j] = ((i*D+j) % 97)/97 - 0.5`; `y[i] = i % C`.
 pub fn synth_inputs(
     feature_dim: usize,
     num_classes: usize,

@@ -16,8 +16,11 @@
 //! block-batched forward/score/backward passes must be **bit-identical**
 //! to the scalar reference walk across random shapes and block splits,
 //! which is what carries every worker-count guarantee over to the
-//! cache-blocked hot path.
+//! cache-blocked hot path. ISSUE 6 adds the score-cache determinism
+//! property: the staleness refresh schedule must be a pure function of
+//! (step, seed), never of the score values themselves.
 
+use isample::coordinator::cache::ScoreCache;
 use isample::coordinator::resample::{importance_weights, AliasSampler, CumulativeSampler};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::coordinator::tau::{cost_model, TauEstimator};
@@ -504,5 +507,46 @@ fn prop_normalize_probs_is_distribution() {
         let total: f64 = p.iter().map(|&x| x as f64).sum();
         assert!((total - 1.0).abs() < 1e-4, "sum {total}");
         assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    });
+}
+
+#[test]
+fn prop_refresh_schedule_depends_only_on_step_and_seed() {
+    // ISSUE 6 determinism contract: the score cache's refresh schedule is
+    // a pure function of the (seeded) index stream and the step counter —
+    // replaying one stream with completely different recorded score VALUES
+    // must produce identical stale sets on every cycle.
+    check("refresh schedule score-independent", 50, |g: &mut Gen| {
+        let n = g.usize_in(4..200);
+        let budget = if g.bool() { Some(g.usize_in(0..12) as u64) } else { None };
+        let seed = g.rng.next_u64();
+        let cycles = g.usize_in(2..10);
+        let batch = g.usize_in(1..24);
+        let mut rng = SplitMix64::new(seed);
+        let steps: Vec<u64> = (0..cycles).map(|c| 1 + 3 * c as u64).collect();
+        let batches: Vec<Vec<usize>> =
+            (0..cycles).map(|_| (0..batch).map(|_| rng.below(n)).collect()).collect();
+
+        let schedule = |salt: f32| -> Vec<Vec<usize>> {
+            let mut cache = ScoreCache::new(n, budget);
+            batches
+                .iter()
+                .zip(&steps)
+                .map(|(idx, &step)| {
+                    let stale = cache.stale_positions(idx, step);
+                    let fresh: Vec<f32> = stale.iter().map(|&p| salt + idx[p] as f32).collect();
+                    cache.record(idx, &stale, &fresh, step);
+                    stale
+                })
+                .collect()
+        };
+        let a = schedule(0.25);
+        assert_eq!(a, schedule(1.0e6), "refresh schedule depended on score values");
+        if budget.is_none() {
+            // unlimited budget: every cycle re-scores every position
+            for (stale, idx) in a.iter().zip(&batches) {
+                assert_eq!(stale, &(0..idx.len()).collect::<Vec<_>>());
+            }
+        }
     });
 }

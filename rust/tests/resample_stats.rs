@@ -7,7 +7,13 @@
 //! * Parallel (`ScoreBackend::Threaded`) and serial scoring must produce
 //!   bit-identical score vectors, and therefore bit-identical sampled
 //!   indices for a fixed seed.
+//! * The staleness-aware `ScoreCache` (ISSUE 6) serves the recorded bits
+//!   verbatim inside the refresh budget, rebuilds the exact same
+//!   distribution at refresh boundaries (deterministic scorer, unchanged
+//!   rows), and sampling from the cached distribution stays on the same
+//!   distribution the fresh scores define (chi-square).
 
+use isample::coordinator::cache::ScoreCache;
 use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::data::synthetic::SyntheticImages;
@@ -95,6 +101,76 @@ fn chi_square_rejects_a_wrong_distribution() {
     let uniform = normalize_probs(&[1.0; 8]);
     let counts = empirical_counts(&uniform, 50_000, true, 7);
     assert!(chi_square_vs_expected(&counts, &skewed, 50_000) > 1_000.0);
+}
+
+#[test]
+fn cached_distribution_matches_fresh_rebuild_at_refresh_boundaries() {
+    let ds = SyntheticImages::builder(64, 10).samples(4_096).seed(5).build();
+    let scorer = NativeScorer::new(64, 32, 10, 9);
+    let backend = ScoreBackend::from_workers(3);
+    let mut rng = SplitMix64::new(0xBEEF);
+    let mut cache = ScoreCache::new(ds.len(), Some(3));
+
+    // warm the cache at step 10 on one presample batch
+    let indices: Vec<usize> = (0..256).map(|_| rng.below(ds.len())).collect();
+    let (x, y) = ds.batch(&indices, 0);
+    let stale = cache.stale_positions(&indices, 10);
+    assert_eq!(stale.len(), indices.len(), "cold cache re-scores everything");
+    let fresh = backend.score_subset(&scorer, &x, &y, ScoreKind::UpperBound, &stale).unwrap();
+    cache.record(&indices, &stale, &fresh, 10);
+
+    // inside the budget (age 2 <= 3) the recorded bits are served verbatim
+    assert!(cache.stale_positions(&indices, 12).is_empty(), "age 2 must be fresh");
+    let served = cache.lookup(&indices);
+    assert_eq!(served, fresh, "cached scores must be the recorded bits");
+
+    // at the refresh boundary (age 4 > 3) everything ages out together and
+    // the full re-score rebuilds the exact same distribution: the scorer
+    // is deterministic and the rows did not change
+    let stale2 = cache.stale_positions(&indices, 14);
+    assert_eq!(stale2.len(), indices.len(), "everything recorded together ages out together");
+    let rebuilt = backend.score_subset(&scorer, &x, &y, ScoreKind::UpperBound, &stale2).unwrap();
+    assert_eq!(rebuilt, served, "boundary refresh must reproduce the cached bits");
+    cache.record(&indices, &stale2, &rebuilt, 14);
+
+    // identical scores + identically-seeded rngs => identical resample
+    // plans, so a cached presample cycle selects exactly the rows a full
+    // re-scoring cycle would have selected
+    let mut rng_c = SplitMix64::new(123);
+    let mut rng_f = SplitMix64::new(123);
+    let plan_c = resample_from_scores(&cache.lookup(&indices), 64, &mut rng_c, true);
+    let plan_f = resample_from_scores(&rebuilt, 64, &mut rng_f, true);
+    assert_eq!(plan_c.positions, plan_f.positions);
+    assert_eq!(plan_c.weights, plan_f.weights);
+    assert_eq!(plan_c.probs, plan_f.probs);
+}
+
+#[test]
+fn cached_distribution_sampling_stays_on_distribution_chi_square() {
+    // a presample batch served fully from the cache: draws from the cached
+    // distribution must match the distribution the fresh scores define
+    let ds = SyntheticImages::builder(32, 5).samples(1_024).seed(8).build();
+    let scorer = NativeScorer::new(32, 16, 5, 3);
+    let mut rng = SplitMix64::new(0xCAFE);
+    let indices: Vec<usize> = (0..64).map(|_| rng.below(ds.len())).collect();
+    let (x, y) = ds.batch(&indices, 0);
+    let fresh = ScoreBackend::Serial.score(&scorer, &x, &y, ScoreKind::UpperBound).unwrap();
+
+    let mut cache = ScoreCache::new(ds.len(), Some(5));
+    let all: Vec<usize> = (0..indices.len()).collect();
+    cache.record(&indices, &all, &fresh, 1);
+    let probs = normalize_probs(&cache.lookup(&indices));
+    let draws = 200_000u64;
+    let counts = empirical_counts(&probs, draws, true, 0xD1CE);
+    // df = 63: the 99.9% quantile is ~104. Fixed seed — exceeding the
+    // padded bound means the cached path corrupted the distribution.
+    let chi2 = chi_square_vs_expected(&counts, &probs, draws);
+    assert!(chi2 < 120.0, "cached-distribution draws off-distribution: chi2 {chi2}");
+
+    // homogeneity against a draw stream from the freshly-computed probs
+    let counts_fresh = empirical_counts(&normalize_probs(&fresh), draws, true, 0xF00D);
+    let chi_pair = chi_square_two_sample(&counts, &counts_fresh);
+    assert!(chi_pair < 120.0, "cached vs fresh draw streams disagree: chi2 {chi_pair}");
 }
 
 #[test]

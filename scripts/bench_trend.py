@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Compare BENCH_*.json throughput metrics between two CI runs.
+
+Usage: bench_trend.py CURRENT_DIR PREVIOUS_DIR
+
+Both directories hold per-artifact subdirectories of BENCH_*.json files
+(the layout `actions/download-artifact` and `gh run download` produce).
+Every metric whose name ends in `steps_per_sec` or `rows_per_sec` is
+compared by (artifact-relative path, metric name); a drop larger than
+BENCH_TREND_MAX_REGRESSION (fraction, default 0.25) fails the job.
+
+A markdown table goes to $GITHUB_STEP_SUMMARY (when set) and stdout.
+Missing previous data — first run on a branch, renamed artifacts, new
+metrics — is reported and skipped, never failed: the gate only fires on
+a genuine current-vs-previous regression.
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+THROUGHPUT_SUFFIXES = ("steps_per_sec", "rows_per_sec")
+
+
+def collect(root):
+    """{(relative file path, metric name): value} for all BENCH_*.json."""
+    metrics = {}
+    root = Path(root)
+    if not root.is_dir():
+        return metrics
+    for path in sorted(root.rglob("BENCH_*.json")):
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {path}: {e}")
+            continue
+        rel = path.relative_to(root).as_posix()
+        for name, value in doc.get("metrics", {}).items():
+            if name.endswith(THROUGHPUT_SUFFIXES) and isinstance(value, (int, float)):
+                metrics[(rel, name)] = float(value)
+    return metrics
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} CURRENT_DIR PREVIOUS_DIR")
+    current = collect(sys.argv[1])
+    previous = collect(sys.argv[2])
+    threshold = float(os.environ.get("BENCH_TREND_MAX_REGRESSION", "0.25"))
+
+    lines = ["# Bench trend", ""]
+    if not current:
+        lines.append("No `BENCH_*.json` artifacts in the current run — nothing to compare.")
+        emit(lines)
+        return
+    if not previous:
+        lines.append(
+            f"No previous successful run to compare against — "
+            f"recorded {len(current)} throughput metric(s) as the new baseline."
+        )
+        emit(lines)
+        return
+
+    lines += [
+        f"Regression threshold: **{threshold:.0%}** "
+        f"(`BENCH_TREND_MAX_REGRESSION`)",
+        "",
+        "| artifact | metric | previous | current | change | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    regressions = []
+    for key in sorted(current):
+        rel, name = key
+        cur = current[key]
+        prev = previous.get(key)
+        if prev is None:
+            lines.append(f"| {rel} | {name} | — | {cur:,.1f} | — | new |")
+            continue
+        if prev <= 0.0:
+            lines.append(f"| {rel} | {name} | {prev:,.1f} | {cur:,.1f} | — | skipped |")
+            continue
+        change = (cur - prev) / prev
+        if change < -threshold:
+            status = "REGRESSION"
+            regressions.append(f"{rel}:{name} {prev:,.1f} -> {cur:,.1f} ({change:+.1%})")
+        else:
+            status = "ok"
+        lines.append(
+            f"| {rel} | {name} | {prev:,.1f} | {cur:,.1f} | {change:+.1%} | {status} |"
+        )
+    gone = sorted(set(previous) - set(current))
+    for rel, name in gone:
+        lines.append(f"| {rel} | {name} | {previous[(rel, name)]:,.1f} | — | — | removed |")
+
+    lines.append("")
+    if regressions:
+        lines.append(f"**{len(regressions)} metric(s) regressed more than {threshold:.0%}:**")
+        lines += [f"- `{r}`" for r in regressions]
+    else:
+        lines.append(f"All {len(current)} throughput metric(s) within the threshold.")
+    emit(lines)
+    if regressions:
+        sys.exit(1)
+
+
+def emit(lines):
+    text = "\n".join(lines) + "\n"
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()
