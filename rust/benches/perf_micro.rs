@@ -41,7 +41,7 @@
 //!
 //! PJRT engine benches run only when AOT artifacts are present.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use isample::config::Args;
 use isample::coordinator::cache::ScoreCache;
@@ -62,6 +62,7 @@ use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
 use isample::util::digest::digest_f64;
 use isample::util::rng::SplitMix64;
 use isample::util::stats::normalize_probs;
+use isample::util::timer::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
@@ -455,9 +456,9 @@ fn main() -> anyhow::Result<()> {
         let dir = std::env::temp_dir().join(format!("isample_stream_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
 
-        let t0 = Instant::now();
+        let sw = Stopwatch::new();
         shard::write_dataset(&dir, &pool, 4_096)?;
-        let write_secs = t0.elapsed().as_secs_f64();
+        let write_secs = sw.elapsed_secs();
         println!("streaming: wrote {n} samples in {write_secs:.2}s");
         suite.metric("pool_samples", n as f64);
         suite.metric("shard_write_rows_per_sec", n as f64 / write_secs.max(1e-9));

@@ -228,6 +228,7 @@ mod tests {
         let ratio = p[0] as f64 / p[99] as f64;
         // p_0/p_{N-1} = exp(log(s) * (N-1)/N) ~ s
         assert!((ratio - 10.0f64.powf(0.99)).abs() < 0.05, "ratio {ratio}");
+        // detlint: allow(unordered-float-reduction) — test tolerance 1e-5 absorbs order
         let total: f32 = p.iter().sum();
         assert!((total - 1.0).abs() < 1e-5);
     }

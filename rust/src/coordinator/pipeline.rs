@@ -190,12 +190,12 @@ mod tests {
 
     #[test]
     fn shutdown_terminates_workers_quickly() {
-        let t0 = std::time::Instant::now();
+        let sw = crate::util::timer::Stopwatch::new();
         with_prefetcher(4, 2, |p, _| {
             let _ = p.next();
         });
         // scope join must not hang on blocked producers
-        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        assert!(sw.elapsed() < std::time::Duration::from_secs(5));
     }
 
     #[test]

@@ -33,12 +33,15 @@ use crate::util::rng::SplitMix64;
 use crate::util::timer::{PhaseTimers, Stopwatch};
 
 /// Time an expression into `$timers` under `$phase` without closing over
-/// `self` (the expression may itself borrow `self` mutably).
+/// `self` (the expression may itself borrow `self` mutably). Wall-clock
+/// reads go through [`crate::util::timer::Stopwatch`] — the one audited
+/// clock module (detlint `wallclock-in-logic`) — and only ever feed the
+/// perf profile, never a schedule.
 macro_rules! timed {
     ($timers:expr, $phase:expr, $e:expr) => {{
-        let __t0 = std::time::Instant::now();
+        let __sw = crate::util::timer::Stopwatch::new();
         let __out = $e;
-        $timers.record($phase, __t0.elapsed());
+        $timers.record($phase, __sw.elapsed());
         __out
     }};
 }

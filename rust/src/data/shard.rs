@@ -25,7 +25,7 @@
 //! labels are a pure function of the on-disk bytes and the sample index —
 //! eviction and readahead reorder IO, never results.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -165,10 +165,14 @@ pub fn write_dataset<D: Dataset + ?Sized>(
 
 /// Shared lazy-loading state: the resident map plus an in-flight set so
 /// concurrent readers (trainer, prefetch workers, readahead jobs) never
-/// decode the same shard twice.
+/// decode the same shard twice. `BTreeMap`/`BTreeSet` by determinism
+/// contract (tools/detlint `nondeterministic-iteration`): eviction scans
+/// `resident`, and a seeded-hash iteration order would let the *victim
+/// choice* — and therefore IO timing — vary run to run; key order makes
+/// the tick tie-break deterministic by construction.
 struct CacheState {
-    resident: HashMap<usize, Resident>,
-    inflight: HashSet<usize>,
+    resident: BTreeMap<usize, Resident>,
+    inflight: BTreeSet<usize>,
     tick: u64,
 }
 
@@ -236,8 +240,8 @@ impl ShardedDataset {
             resident_budget: DEFAULT_RESIDENT_SHARDS,
             cache: Arc::new(ShardCache {
                 state: Mutex::new(CacheState {
-                    resident: HashMap::new(),
-                    inflight: HashSet::new(),
+                    resident: BTreeMap::new(),
+                    inflight: BTreeSet::new(),
                     tick: 0,
                 }),
                 ready: Condvar::new(),

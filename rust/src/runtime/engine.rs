@@ -15,7 +15,7 @@
 //!   `grad_norms` chunks concurrently from scoped worker threads while the
 //!   coordinator keeps exclusive ownership of the mutable [`ModelState`].
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -75,9 +75,12 @@ type ExeKey = (String, String, usize);
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
-    exes: Mutex<HashMap<ExeKey, Arc<PjRtLoadedExecutable>>>,
+    /// `BTreeMap`, not `HashMap`: the determinism contract (tools/detlint,
+    /// `nondeterministic-iteration`) bans seeded-hash iteration order in
+    /// `rust/src` so no schedule or merged result can depend on it.
+    exes: Mutex<BTreeMap<ExeKey, Arc<PjRtLoadedExecutable>>>,
     /// Executions performed, per entry name (perf accounting).
-    exec_counts: Mutex<HashMap<String, u64>>,
+    exec_counts: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Engine {
@@ -88,8 +91,8 @@ impl Engine {
         Ok(Self {
             client,
             manifest,
-            exes: Mutex::new(HashMap::new()),
-            exec_counts: Mutex::new(HashMap::new()),
+            exes: Mutex::new(BTreeMap::new()),
+            exec_counts: Mutex::new(BTreeMap::new()),
         })
     }
 

@@ -1040,6 +1040,7 @@ mod tests {
         // train_step's "free" vectors come from the same pre-update forward
         assert_eq!(out.loss_vec, loss);
         assert_eq!(out.scores, scores);
+        // detlint: allow(unordered-float-reduction) — test tolerance 1e-5 absorbs order
         let mean: f32 = loss.iter().sum::<f32>() / 8.0;
         assert!((out.loss - mean).abs() < 1e-5);
     }

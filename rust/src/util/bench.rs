@@ -5,6 +5,10 @@
 //! mean/min/p50/p95 per-iteration timings, and a one-line criterion-style
 //! report. Used both by the per-figure end-to-end benches and the §Perf
 //! micro benches.
+//!
+//! Sanctioned wall-clock module (see `util::timer`): raw `Instant::now()`
+//! reads are allowed here by detlint and `clippy.toml`.
+#![allow(clippy::disallowed_methods)]
 
 use std::path::Path;
 use std::time::{Duration, Instant};

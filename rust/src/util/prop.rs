@@ -98,6 +98,7 @@ impl Gen {
         if !v.is_empty() && self.rng.below(16) == 0 {
             v.iter_mut().for_each(|x| *x = 0.0);
         }
+        // detlint: allow(unordered-float-reduction) — sequential slice iter, order is fixed
         let sum: f32 = v.iter().sum();
         if sum > 0.0 {
             let scale = v.len() as f32 / sum;
@@ -211,6 +212,7 @@ mod tests {
             let w = g.weights(1..64);
             assert!(!w.is_empty());
             assert!(w.iter().all(|&x| x >= 0.0 && x.is_finite()));
+            // detlint: allow(unordered-float-reduction) — test tolerance 1e-3 absorbs order
             let sum: f32 = w.iter().sum();
             if sum > 0.0 {
                 let mean = sum / w.len() as f32;

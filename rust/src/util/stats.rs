@@ -150,6 +150,7 @@ mod tests {
         assert_eq!(p, vec![1.0 / 3.0; 3]);
         let q = normalize_probs(&[1.0, 3.0]);
         assert!((q[0] - 0.25).abs() < 1e-7 && (q[1] - 0.75).abs() < 1e-7);
+        // detlint: allow(unordered-float-reduction) — test tolerance 1e-6 absorbs order
         let s: f32 = normalize_probs(&[0.3, 0.1, 2.7, 0.0]).iter().sum();
         assert!((s - 1.0).abs() < 1e-6);
     }

@@ -2,6 +2,12 @@
 //! time-budget used by the paper's evaluation protocol (§4.2: "we use a
 //! learning-rate schedule based on wall-clock time and fix the total seconds
 //! available for training").
+//!
+//! This is one of the two sanctioned wall-clock modules (with
+//! `util::bench`): the detlint `wallclock-in-logic` rule and the
+//! `clippy.toml` disallowed-methods list both point here, so raw
+//! `Instant::now()` / `SystemTime::now()` reads are allowed.
+#![allow(clippy::disallowed_methods)]
 
 use std::time::{Duration, Instant};
 

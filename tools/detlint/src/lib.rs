@@ -1,0 +1,566 @@
+//! `detlint` — the determinism-contract static analysis pass.
+//!
+//! Every speedup this repository ships (sharded scoring, the `WorkerPool`,
+//! block kernels, the shard store + score cache) rests on one claim:
+//! parallel, blocked, and cached paths are **bit-identical** to the serial
+//! reference, and refresh/chunk schedules depend only on `(step, seed)`.
+//! This crate makes the source-level half of that contract machine-checked.
+//! It is a line/token-level scanner over `rust/src/**` — deliberately not a
+//! full parser (the dev container is offline and std-only), so each rule is
+//! a documented token heuristic plus a dynamic-analysis backstop (Miri /
+//! ThreadSanitizer CI jobs cover what tokens cannot prove).
+//!
+//! # Rules
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `nondeterministic-iteration` | no `HashMap`/`HashSet` in `rust/src`: their iteration order is seeded per-process, so anything that iterates one can leak nondeterminism into schedules or merged results. Use `BTreeMap`/`BTreeSet`. |
+//! | `wallclock-in-logic` | `Instant::now`/`SystemTime` reads live only in `util/timer.rs` and `util/bench.rs`, the two auditable wall-clock modules — nothing outside them may read a clock that could feed a schedule. |
+//! | `unsafe-needs-safety` | every `unsafe` token is immediately preceded by (or carries) a `// SAFETY:` comment explaining the invariant, as `runtime/pool.rs` models. |
+//! | `unordered-float-reduction` | no `.sum::<f32>()` / same-line `: f32` sums / `f32` folds outside `runtime/kernels.rs` and `runtime/layers.rs`, where reduction order **is** the documented contract. f32 addition is non-associative; an innocent "parallelize this fold" refactor elsewhere silently breaks bit-identity. |
+//! | `panic-in-library` | `.unwrap()`/`.expect(` in `rust/src` is governed by a committed per-file baseline (`detlint.baseline.json`) that may only ratchet down: existing hits are grandfathered, new ones fail. |
+//!
+//! Violations are suppressible only via an explicit, reasoned marker on the
+//! same line or the line directly above:
+//!
+//! ```text
+//! // detlint: allow(unordered-float-reduction) — sequential one-pass sum
+//! ```
+//!
+//! A marker without a reason is itself a violation (`allow-needs-reason`),
+//! and every marker is reported in a summary table so grandfathered escapes
+//! stay visible.
+//!
+//! Comments and string literals are stripped (with line structure
+//! preserved) before rule matching, so prose mentioning `HashMap` or
+//! `.unwrap()` does not count; the `SAFETY:`/allow-marker scans run on the
+//! raw text, since they *are* comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Rule names, as they appear in allow markers and reports.
+pub const NONDET_ITERATION: &str = "nondeterministic-iteration";
+pub const WALLCLOCK: &str = "wallclock-in-logic";
+pub const UNSAFE_SAFETY: &str = "unsafe-needs-safety";
+pub const FLOAT_REDUCTION: &str = "unordered-float-reduction";
+pub const PANIC_LIBRARY: &str = "panic-in-library";
+pub const ALLOW_REASON: &str = "allow-needs-reason";
+
+/// Every rule a marker may name.
+pub const ALL_RULES: [&str; 5] =
+    [NONDET_ITERATION, WALLCLOCK, UNSAFE_SAFETY, FLOAT_REDUCTION, PANIC_LIBRARY];
+
+/// Files (relative to the scan root) where wall-clock reads are the point.
+const WALLCLOCK_EXEMPT: [&str; 2] = ["util/timer.rs", "util/bench.rs"];
+
+/// Files whose reduction order is a documented, test-pinned contract.
+const FLOAT_EXEMPT: [&str; 2] = ["runtime/kernels.rs", "runtime/layers.rs"];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One `// detlint: allow(...)` marker, for the summary table.
+#[derive(Debug, Clone)]
+pub struct AllowMarker {
+    pub file: String,
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    /// Did the marker actually suppress a match? Stale markers are
+    /// reported so they get cleaned up rather than accumulating.
+    pub used: bool,
+}
+
+/// Scan output for a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowMarker>,
+    /// Unsuppressed `.unwrap()`/`.expect(` occurrences per file
+    /// (the `panic-in-library` counts the baseline governs).
+    pub panic_counts: BTreeMap<String, usize>,
+    pub files_scanned: usize,
+}
+
+/// Replace comments and string/char-literal contents with spaces,
+/// preserving the line structure, so token rules never fire on prose.
+/// Handles line comments, nested block comments, plain and raw strings
+/// (`r"…"`, `r#"…"#`, `b`-prefixed), escapes, char literals, and leaves
+/// lifetimes (`'env`) untouched.
+pub fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (and byte-raw) strings: r"…", r#"…"#, br"…"
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let ident_before = i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+            if !ident_before {
+                let mut j = i + if c == 'b' { 2 } else { 1 };
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    for &ch in &b[i..=j] {
+                        out.push(blank(ch));
+                    }
+                    i = j + 1;
+                    while i < n {
+                        if b[i] == '"' {
+                            let mut k = i + 1;
+                            let mut h = 0usize;
+                            while k < n && h < hashes && b[k] == '#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                for _ in i..k {
+                                    out.push(' ');
+                                }
+                                i = k;
+                                break;
+                            }
+                        }
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(b[i + 1]));
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(blank(b[i]));
+                i += 1;
+            }
+            continue;
+        }
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: scan to the closing quote
+                out.push_str("  ");
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            out.push('\''); // a lifetime, not a literal
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Word-boundary substring match (byte-wise; tokens are ASCII).
+pub fn has_token(line: &str, tok: &str) -> bool {
+    let l = line.as_bytes();
+    let t = tok.as_bytes();
+    if t.is_empty() || l.len() < t.len() {
+        return false;
+    }
+    let mut from = 0;
+    while let Some(p) = find_from(l, t, from) {
+        let before_ok = p == 0 || !is_ident_byte(l[p - 1]);
+        let after = p + t.len();
+        let after_ok = after >= l.len() || !is_ident_byte(l[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = p + 1;
+    }
+    false
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() || hay.len() - from < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+/// Count non-overlapping occurrences of `needle` in `hay`.
+pub fn count_occurrences(hay: &str, needle: &str) -> usize {
+    let mut count = 0;
+    let mut from = 0;
+    while let Some(p) = find_from(hay.as_bytes(), needle.as_bytes(), from) {
+        count += 1;
+        from = p + needle.len();
+    }
+    count
+}
+
+/// Parse a `detlint: allow(rule, …) — reason` marker out of a raw line.
+fn parse_marker(raw: &str) -> Option<(Vec<String>, String)> {
+    let tag = "detlint: allow(";
+    let start = raw.find(tag)?;
+    let rest = &raw[start + tag.len()..];
+    let close = rest.find(')')?;
+    let rules: Vec<String> =
+        rest[..close].split(',').map(|r| r.trim().to_string()).filter(|r| !r.is_empty()).collect();
+    let reason = rest[close + 1..]
+        .trim_start_matches(|c: char| c.is_whitespace() || c == '\u{2014}' || c == '-' || c == ':')
+        .trim()
+        .to_string();
+    Some((rules, reason))
+}
+
+/// The per-line allow state assembled in a first pass over the file.
+struct Markers {
+    /// marker index covering each line (same line or the one below it).
+    by_line: Vec<Option<usize>>,
+    list: Vec<AllowMarker>,
+}
+
+impl Markers {
+    fn allows(&mut self, line_idx: usize, rule: &str) -> bool {
+        let Some(m) = self.by_line.get(line_idx).copied().flatten() else {
+            return false;
+        };
+        if self.list[m].rules.iter().any(|r| r == rule) {
+            self.list[m].used = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// Scan one file's text. `rel` is the path reported in findings (use the
+/// path relative to the repository root, with forward slashes).
+pub fn scan_file(rel: &str, text: &str, report: &mut Report) {
+    let cleaned = strip_comments_and_strings(text);
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let clean_lines: Vec<&str> = cleaned.lines().collect();
+    let nlines = raw_lines.len();
+
+    // pass 1: markers
+    let mut markers = Markers { by_line: vec![None; nlines + 1], list: Vec::new() };
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let Some((rules, reason)) = parse_marker(raw) else {
+            continue;
+        };
+        let line = idx + 1;
+        if reason.is_empty() {
+            let msg = "allow marker without a reason — append `— <why>`".to_string();
+            let v = Violation { file: rel.to_string(), line, rule: ALLOW_REASON, msg };
+            report.violations.push(v);
+        }
+        for rule in &rules {
+            if !ALL_RULES.contains(&rule.as_str()) {
+                let msg = format!("allow marker names unknown rule {rule:?}");
+                let v = Violation { file: rel.to_string(), line, rule: ALLOW_REASON, msg };
+                report.violations.push(v);
+            }
+        }
+        let m = markers.list.len();
+        markers.list.push(AllowMarker { file: rel.to_string(), line, rules, reason, used: false });
+        markers.by_line[idx] = Some(m);
+        if idx + 1 < markers.by_line.len() {
+            markers.by_line[idx + 1] = Some(m);
+        }
+    }
+
+    // pass 2: token rules over the cleaned lines
+    let wallclock_exempt = WALLCLOCK_EXEMPT.iter().any(|f| rel.ends_with(f));
+    let float_exempt = FLOAT_EXEMPT.iter().any(|f| rel.ends_with(f));
+    let mut panics = 0usize;
+    for (idx, clean) in clean_lines.iter().enumerate() {
+        let line = idx + 1;
+        let mut push = |markers: &mut Markers, rule: &'static str, msg: &str| {
+            if !markers.allows(idx, rule) {
+                let msg = msg.to_string();
+                report.violations.push(Violation { file: rel.to_string(), line, rule, msg });
+            }
+        };
+
+        if has_token(clean, "HashMap") || has_token(clean, "HashSet") {
+            let msg = "nondeterministic iteration order; use BTreeMap/BTreeSet";
+            push(&mut markers, NONDET_ITERATION, msg);
+        }
+
+        if !wallclock_exempt && (clean.contains("Instant::now") || has_token(clean, "SystemTime")) {
+            let msg = "wall-clock read outside util/timer.rs|util/bench.rs; use util::timer";
+            push(&mut markers, WALLCLOCK, msg);
+        }
+
+        if has_token(clean, "unsafe") && !unsafe_is_documented(&raw_lines, idx) {
+            let msg = "`unsafe` without an immediately preceding `// SAFETY:` comment";
+            push(&mut markers, UNSAFE_SAFETY, msg);
+        }
+
+        if !float_exempt {
+            let hit = clean.contains(".sum::<f32>()")
+                || (clean.contains(".sum(") && clean.contains(": f32"))
+                || clean.contains(".fold(0.0f32")
+                || clean.contains(".fold(0.0_f32")
+                || clean.contains(".fold(0f32");
+            if hit {
+                let msg = "unordered f32 reduction outside kernels.rs/layers.rs";
+                push(&mut markers, FLOAT_REDUCTION, msg);
+            }
+        }
+
+        let hits = count_occurrences(clean, ".unwrap()") + count_occurrences(clean, ".expect(");
+        if hits > 0 && !markers.allows(idx, PANIC_LIBRARY) {
+            panics += hits;
+        }
+    }
+    if panics > 0 {
+        report.panic_counts.insert(rel.to_string(), panics);
+    }
+    report.allows.append(&mut markers.list);
+    report.files_scanned += 1;
+}
+
+/// Is the `unsafe` on raw line `idx` documented? True when the line itself
+/// carries `SAFETY:` or the contiguous `//` comment block directly above
+/// it contains `SAFETY:` (the `runtime/pool.rs` model).
+fn unsafe_is_documented(raw_lines: &[&str], idx: usize) -> bool {
+    if raw_lines[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = raw_lines[j].trim_start();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by relative path so
+/// reports and baselines are deterministic.
+fn collect_rs_files(dir: &Path, rel: &str, out: &mut Vec<(String, std::path::PathBuf)>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut names: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    names.sort();
+    for path in names {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or_default().to_string();
+        let child = if rel.is_empty() { name.clone() } else { format!("{rel}/{name}") };
+        if path.is_dir() {
+            collect_rs_files(&path, &child, out);
+        } else if name.ends_with(".rs") {
+            out.push((child, path));
+        }
+    }
+}
+
+/// Scan every `.rs` file under `dir`. Reported paths are
+/// `<prefix>/<path-relative-to-dir>`.
+pub fn scan_tree(dir: &Path, prefix: &str) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(dir, "", &mut files);
+    if files.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("no .rs files under {}", dir.display()),
+        ));
+    }
+    let mut report = Report::default();
+    for (rel, path) in files {
+        let text = std::fs::read_to_string(&path)?;
+        let full = if prefix.is_empty() { rel } else { format!("{prefix}/{rel}") };
+        scan_file(&full, &text, &mut report);
+    }
+    Ok(report)
+}
+
+/// Parse the flat `{"path": count, …}` baseline object. A missing file is
+/// an empty baseline (every panic counts as new).
+pub fn parse_baseline(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut out = BTreeMap::new();
+    let b: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    let n = b.len();
+    let skip_ws = |i: &mut usize| {
+        while *i < n && b[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    skip_ws(&mut i);
+    if i >= n || b[i] != '{' {
+        return Err("baseline: expected a JSON object".to_string());
+    }
+    i += 1;
+    loop {
+        skip_ws(&mut i);
+        if i < n && b[i] == '}' {
+            return Ok(out);
+        }
+        if i >= n || b[i] != '"' {
+            return Err(format!("baseline: expected a key string at char {i}"));
+        }
+        i += 1;
+        let mut key = String::new();
+        while i < n && b[i] != '"' {
+            if b[i] == '\\' && i + 1 < n {
+                i += 1;
+            }
+            key.push(b[i]);
+            i += 1;
+        }
+        i += 1; // closing quote
+        skip_ws(&mut i);
+        if i >= n || b[i] != ':' {
+            return Err(format!("baseline: expected ':' after key {key:?}"));
+        }
+        i += 1;
+        skip_ws(&mut i);
+        let start = i;
+        while i < n && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if start == i {
+            return Err(format!("baseline: expected a count for key {key:?}"));
+        }
+        let count: usize = b[start..i]
+            .iter()
+            .collect::<String>()
+            .parse()
+            .map_err(|e| format!("baseline: bad count for {key:?}: {e}"))?;
+        out.insert(key, count);
+        skip_ws(&mut i);
+        if i < n && b[i] == ',' {
+            i += 1;
+            continue;
+        }
+        if i < n && b[i] == '}' {
+            return Ok(out);
+        }
+        return Err(format!("baseline: expected ',' or '}}' at char {i}"));
+    }
+}
+
+/// Serialize a baseline deterministically (sorted keys, one per line).
+pub fn baseline_json(counts: &BTreeMap<String, usize>) -> String {
+    let mut s = String::from("{\n");
+    let mut first = true;
+    for (k, v) in counts {
+        if !first {
+            s.push_str(",\n");
+        }
+        first = false;
+        s.push_str(&format!("  \"{k}\": {v}"));
+    }
+    s.push_str("\n}\n");
+    s
+}
+
+/// Outcome of comparing fresh panic counts against the committed baseline.
+#[derive(Debug, Default)]
+pub struct BaselineCheck {
+    /// Files whose count grew — hard failures.
+    pub regressions: Vec<String>,
+    /// Files whose count shrank — the baseline can ratchet down.
+    pub ratchets: Vec<String>,
+}
+
+/// Compare per-file panic counts against the committed baseline. New or
+/// grown counts are regressions; shrunken counts invite a ratchet
+/// (re-run with `--write-baseline` and commit the smaller numbers).
+pub fn check_baseline(
+    counts: &BTreeMap<String, usize>,
+    baseline: &BTreeMap<String, usize>,
+) -> BaselineCheck {
+    let mut out = BaselineCheck::default();
+    for (file, &have) in counts {
+        let allowed = baseline.get(file).copied().unwrap_or(0);
+        match have.cmp(&allowed) {
+            std::cmp::Ordering::Greater => {
+                out.regressions.push(format!("{file}: {have} panic sites > baseline {allowed}"));
+            }
+            std::cmp::Ordering::Less => {
+                out.ratchets.push(format!("{file}: {have} panic sites < baseline {allowed}"));
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+    for (file, &allowed) in baseline {
+        if !counts.contains_key(file) {
+            out.ratchets.push(format!("{file}: 0 panic sites < baseline {allowed}"));
+        }
+    }
+    out
+}

@@ -1,0 +1,132 @@
+//! CLI for the determinism-contract linter. See the library docs for the
+//! rule set. Exit codes: 0 clean, 1 violations or baseline regressions,
+//! 2 usage/IO errors.
+//!
+//! ```text
+//! cargo run -p detlint                  # lint rust/src against the baseline
+//! cargo run -p detlint -- --write-baseline   # ratchet the panic baseline
+//! cargo run -p detlint -- --root PATH   # lint another checkout
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{baseline_json, check_baseline, parse_baseline, scan_tree, Report};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: detlint [--root REPO_ROOT] [--write-baseline]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    let mut args = std::env::args().skip(1);
+    // not a `for` loop: `--root` consumes the following argument too
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => {
+                println!("determinism-contract linter over rust/src (see tools/detlint)");
+                return usage();
+            }
+            _ => return usage(),
+        }
+    }
+    // default root: this crate lives at <repo>/tools/detlint
+    let default_root = || PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let root = root.unwrap_or_else(default_root);
+    let src = root.join("rust").join("src");
+    let report = match scan_tree(&src, "rust/src") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: cannot scan {}: {e}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let baseline_path = root.join("detlint.baseline.json");
+    if write_baseline {
+        let json = baseline_json(&report.panic_counts);
+        if let Err(e) = std::fs::write(&baseline_path, &json) {
+            eprintln!("detlint: cannot write {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        let total: usize = report.panic_counts.values().sum();
+        println!(
+            "detlint: wrote {} ({} files, {total} grandfathered panic sites)",
+            baseline_path.display(),
+            report.panic_counts.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline: BTreeMap<String, usize> = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match parse_baseline(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("detlint: {}: {e}", baseline_path.display());
+                return ExitCode::from(2);
+            }
+        },
+        Err(_) => {
+            eprintln!(
+                "detlint: no baseline at {} — every panic site counts as new \
+                 (run with --write-baseline to grandfather the current tree)",
+                baseline_path.display()
+            );
+            BTreeMap::new()
+        }
+    };
+
+    let check = check_baseline(&report.panic_counts, &baseline);
+    render(&report, &check.regressions, &check.ratchets);
+
+    if report.violations.is_empty() && check.regressions.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn render(report: &Report, regressions: &[String], ratchets: &[String]) {
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    for r in regressions {
+        println!("[panic-in-library] {r}");
+    }
+
+    if !report.allows.is_empty() {
+        println!("\nallow markers ({}):", report.allows.len());
+        println!("{:<44} {:>5}  {:<28} reason", "file", "line", "rule(s)");
+        for m in &report.allows {
+            let stale = if m.used { "" } else { "  [STALE: suppresses nothing]" };
+            let rules = m.rules.join(",");
+            println!("{:<44} {:>5}  {rules:<28} {}{stale}", m.file, m.line, m.reason);
+        }
+    }
+
+    if !ratchets.is_empty() {
+        println!("\nbaseline can ratchet down ({} files):", ratchets.len());
+        for r in ratchets {
+            println!("  {r}");
+        }
+        println!("  -> re-run with --write-baseline and commit the smaller counts");
+    }
+
+    let total: usize = report.panic_counts.values().sum();
+    println!(
+        "\ndetlint: {} files, {} violation(s), {} allow marker(s), \
+         {total} grandfathered panic site(s), {} baseline regression(s)",
+        report.files_scanned,
+        report.violations.len(),
+        report.allows.len(),
+        regressions.len()
+    );
+}

@@ -1,0 +1,8 @@
+// Fixture: the same pattern, suppressed by reasoned allow markers.
+// detlint: allow(nondeterministic-iteration) — never iterated, key-lookup only
+use std::collections::HashSet;
+
+// detlint: allow(nondeterministic-iteration) — contains() is order-free
+fn lookup_only(s: &HashSet<u64>) -> bool {
+    s.contains(&7)
+}

@@ -1,0 +1,25 @@
+// Fixture: unordered-float-reduction — f32 reductions outside the kernel
+// files where reduction order is the documented contract.
+fn turbofish(v: &[f32]) -> f32 {
+    v.iter().sum::<f32>()
+}
+
+fn ascribed(v: &[f32]) -> f32 {
+    let total: f32 = v.iter().sum();
+    total
+}
+
+fn folded(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |a, &b| a + b)
+}
+
+fn allowed(v: &[f32]) -> f32 {
+    // detlint: allow(unordered-float-reduction) — sequential one-pass sum
+    let total: f32 = v.iter().sum();
+    total
+}
+
+fn f64_is_fine(v: &[f32]) -> f64 {
+    let total: f64 = v.iter().map(|&x| x as f64).sum();
+    total
+}

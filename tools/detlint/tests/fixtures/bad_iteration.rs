@@ -1,0 +1,8 @@
+// Fixture: nondeterministic-iteration violations (one per use site).
+use std::collections::HashMap;
+
+fn exec_counts() -> HashMap<String, u64> {
+    let mut m = HashMap::new();
+    m.insert("train_step".to_string(), 1);
+    m
+}

@@ -1,0 +1,13 @@
+// Fixture: allow-needs-reason — a reasonless marker and an unknown rule.
+// detlint: allow(nondeterministic-iteration)
+use std::collections::HashMap;
+
+// detlint: allow(no-such-rule) — the rule name is wrong
+fn nothing() {}
+
+// detlint: allow(wallclock-in-logic) — stale: suppresses nothing below
+fn also_nothing() {}
+
+fn uses(m: &HashMap<u32, u32>) -> usize {
+    m.len()
+}

@@ -1,0 +1,6 @@
+// Fixture: unsafe-needs-safety — an unsafe block with no SAFETY comment.
+fn erase(x: &mut [u8]) {
+    unsafe {
+        std::ptr::write_bytes(x.as_mut_ptr(), 0, x.len());
+    }
+}

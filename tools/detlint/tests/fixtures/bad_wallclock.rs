@@ -1,0 +1,9 @@
+// Fixture: wallclock-in-logic violations — raw clock reads outside the
+// sanctioned util/timer.rs / util/bench.rs modules.
+use std::time::SystemTime;
+
+fn schedule_salt() -> u128 {
+    let t0 = std::time::Instant::now();
+    let _ = t0;
+    SystemTime::now().elapsed().map(|d| d.as_nanos()).unwrap_or(0)
+}

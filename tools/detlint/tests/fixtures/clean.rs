@@ -1,0 +1,12 @@
+// Fixture: a file the linter must pass untouched. Decoys live only in
+// comments and strings: HashMap, Instant::now, unsafe, .unwrap()
+use std::collections::BTreeMap;
+
+/* block comment decoys: HashSet SystemTime .expect( */
+fn deterministic(m: &BTreeMap<u32, u32>) -> f64 {
+    let doc = "prose HashMap and .sum::<f32>() stay prose";
+    let raw = r#"raw-string decoy: unsafe { HashSet } .unwrap()"#;
+    let lifetime_test: &'static str = "still fine";
+    let total: f64 = m.values().map(|&v| v as f64).sum();
+    total + (doc.len() + raw.len() + lifetime_test.len()) as f64
+}

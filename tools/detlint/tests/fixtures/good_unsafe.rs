@@ -1,0 +1,8 @@
+// Fixture: unsafe-needs-safety satisfied — the runtime/pool.rs model.
+fn erase(x: &mut [u8]) {
+    // SAFETY: the pointer and length come from the same live slice, so the
+    // write stays in bounds; u8 has no drop glue or validity invariants.
+    unsafe {
+        std::ptr::write_bytes(x.as_mut_ptr(), 0, x.len());
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: panic-in-library — three countable sites, one suppressed, and
+// decoys in comments/strings that must NOT count: .unwrap() .expect(
+fn three_sites(v: &[i32]) -> i32 {
+    let a: i32 = "7".parse().unwrap();
+    let b = v.first().expect("non-empty");
+    let c = v.last().unwrap(); // trailing comment with .unwrap() decoy
+    let _s = "string decoy: .unwrap() .expect(";
+    // detlint: allow(panic-in-library) — mutex poisoning is already fatal
+    let d = v.first().unwrap();
+    a + b + c + d
+}

@@ -1,0 +1,193 @@
+//! Regression pins for the linter itself: every rule gets a fixture pair
+//! (violation / allow-marker) plus baseline-ratchet decrease/increase
+//! coverage, so heuristic changes can never silently weaken the gate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use detlint::{
+    baseline_json, check_baseline, count_occurrences, has_token, parse_baseline, scan_file,
+    scan_tree, strip_comments_and_strings, Report,
+};
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
+}
+
+fn scan_fixtures() -> Report {
+    scan_tree(&fixtures_dir(), "fixtures").expect("fixtures scan")
+}
+
+fn rules_in(report: &Report, file: &str) -> Vec<(&'static str, usize)> {
+    report
+        .violations
+        .iter()
+        .filter(|v| v.file.ends_with(file))
+        .map(|v| (v.rule, v.line))
+        .collect()
+}
+
+#[test]
+fn nondeterministic_iteration_fires_per_use_site() {
+    let r = scan_fixtures();
+    let hits = rules_in(&r, "bad_iteration.rs");
+    assert_eq!(hits.len(), 3, "use + two construction sites: {hits:?}");
+    assert!(hits.iter().all(|(rule, _)| *rule == "nondeterministic-iteration"));
+}
+
+#[test]
+fn reasoned_allow_markers_suppress_and_are_tabulated() {
+    let r = scan_fixtures();
+    assert!(rules_in(&r, "allowed_iteration.rs").is_empty(), "markers must suppress");
+    let allows: Vec<_> =
+        r.allows.iter().filter(|m| m.file.ends_with("allowed_iteration.rs")).collect();
+    assert_eq!(allows.len(), 2);
+    assert!(allows.iter().all(|m| m.used && !m.reason.is_empty()));
+}
+
+#[test]
+fn wallclock_reads_fire_outside_timer_and_bench() {
+    let r = scan_fixtures();
+    let hits = rules_in(&r, "bad_wallclock.rs");
+    assert_eq!(hits.len(), 3, "use + Instant::now + SystemTime::now: {hits:?}");
+    assert!(hits.iter().all(|(rule, _)| *rule == "wallclock-in-logic"));
+}
+
+#[test]
+fn wallclock_rule_exempts_the_sanctioned_modules() {
+    let mut r = Report::default();
+    let src = "fn t() { let _ = std::time::Instant::now(); }\n";
+    scan_file("rust/src/util/timer.rs", src, &mut r);
+    scan_file("rust/src/util/bench.rs", src, &mut r);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn unsafe_requires_an_adjacent_safety_comment() {
+    let r = scan_fixtures();
+    let bad = rules_in(&r, "bad_unsafe.rs");
+    assert_eq!(bad, vec![("unsafe-needs-safety", 3)]);
+    assert!(rules_in(&r, "good_unsafe.rs").is_empty(), "SAFETY block must satisfy the rule");
+}
+
+#[test]
+fn float_reductions_fire_outside_kernel_files_and_respect_allows() {
+    let r = scan_fixtures();
+    let hits = rules_in(&r, "bad_float.rs");
+    assert_eq!(hits.len(), 3, "turbofish + ascribed + fold, minus allow + f64: {hits:?}");
+    assert!(hits.iter().all(|(rule, _)| *rule == "unordered-float-reduction"));
+}
+
+#[test]
+fn float_reductions_are_the_contract_inside_kernel_files() {
+    let mut r = Report::default();
+    let src = "fn s(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\n";
+    scan_file("rust/src/runtime/kernels.rs", src, &mut r);
+    scan_file("rust/src/runtime/layers.rs", src, &mut r);
+    assert!(r.violations.is_empty());
+}
+
+#[test]
+fn panic_sites_count_code_not_prose_and_respect_allows() {
+    let r = scan_fixtures();
+    let panics: BTreeMap<_, _> = r
+        .panic_counts
+        .iter()
+        .map(|(k, v)| (k.rsplit('/').next().unwrap().to_string(), *v))
+        .collect();
+    assert_eq!(panics.get("panics.rs"), Some(&3), "all counts: {panics:?}");
+    assert_eq!(panics.get("clean.rs"), None);
+    assert_eq!(panics.get("bad_wallclock.rs"), None);
+}
+
+#[test]
+fn clean_file_passes_every_rule() {
+    let r = scan_fixtures();
+    assert!(rules_in(&r, "clean.rs").is_empty());
+}
+
+#[test]
+fn reasonless_and_unknown_rule_markers_are_violations() {
+    let r = scan_fixtures();
+    let hits = rules_in(&r, "bad_marker.rs");
+    assert!(hits.contains(&("allow-needs-reason", 2)), "reasonless marker: {hits:?}");
+    assert!(hits.contains(&("allow-needs-reason", 5)), "unknown rule: {hits:?}");
+    assert!(hits.contains(&("nondeterministic-iteration", 11)), "unsuppressed use: {hits:?}");
+    let stale: Vec<_> = r
+        .allows
+        .iter()
+        .filter(|m| m.file.ends_with("bad_marker.rs") && !m.used)
+        .map(|m| m.line)
+        .collect();
+    // the unknown-rule marker and the wallclock marker both suppress nothing
+    assert_eq!(stale, vec![5, 8]);
+}
+
+#[test]
+fn baseline_ratchet_decrease_is_ok_increase_fails() {
+    let mut counts = BTreeMap::new();
+    counts.insert("rust/src/a.rs".to_string(), 3usize);
+    counts.insert("rust/src/new.rs".to_string(), 1usize);
+
+    // equal baseline: clean
+    let mut base = counts.clone();
+    let ok = check_baseline(&counts, &base);
+    assert!(ok.regressions.is_empty() && ok.ratchets.is_empty());
+
+    // counts fell below the baseline: no failure, but a ratchet invitation
+    base.insert("rust/src/a.rs".to_string(), 5);
+    base.insert("rust/src/gone.rs".to_string(), 2);
+    let down = check_baseline(&counts, &base);
+    assert!(down.regressions.is_empty());
+    assert_eq!(down.ratchets.len(), 2, "{:?}", down.ratchets);
+
+    // counts grew past the baseline (or appeared unbaselined): failure
+    base.insert("rust/src/a.rs".to_string(), 2);
+    base.remove("rust/src/new.rs");
+    let up = check_baseline(&counts, &base);
+    assert_eq!(up.regressions.len(), 2, "{:?}", up.regressions);
+}
+
+#[test]
+fn baseline_json_roundtrips_deterministically() {
+    let mut counts = BTreeMap::new();
+    counts.insert("rust/src/b.rs".to_string(), 12usize);
+    counts.insert("rust/src/a.rs".to_string(), 7usize);
+    let json = baseline_json(&counts);
+    assert_eq!(parse_baseline(&json).expect("roundtrip"), counts);
+    assert_eq!(json, baseline_json(&parse_baseline(&json).expect("again")));
+    assert!(parse_baseline("[]").is_err());
+    assert!(parse_baseline("{\"x\": -1}").is_err());
+    assert_eq!(parse_baseline("{}").expect("empty"), BTreeMap::new());
+}
+
+#[test]
+fn stripper_preserves_lines_and_blanks_prose() {
+    let src = "let a = \"HashMap\"; // HashSet\nlet b = 1; /* multi\nline SystemTime */ let c;\n";
+    let out = strip_comments_and_strings(src);
+    assert_eq!(out.lines().count(), src.lines().count());
+    assert!(!out.contains("HashMap") && !out.contains("HashSet"));
+    assert!(!out.contains("SystemTime"));
+    assert!(out.contains("let a =") && out.contains("let c;"));
+
+    let raw = "let r = r#\"unsafe .unwrap()\"#; let l: &'static str = \"x\";\n";
+    let out = strip_comments_and_strings(raw);
+    assert!(!out.contains("unsafe") && !out.contains(".unwrap()"));
+    assert!(out.contains("'static"), "lifetimes survive: {out}");
+
+    let chars = "let q = 'a'; let esc = '\\n'; let quote = '\"'; let h = HashMap::new();\n";
+    let out = strip_comments_and_strings(chars);
+    assert!(has_token(&out, "HashMap"), "code after char literals survives: {out}");
+    assert!(!out.contains('"'), "quote char literal must not open a string: {out}");
+}
+
+#[test]
+fn token_matching_respects_identifier_boundaries() {
+    assert!(has_token("use std::collections::HashMap;", "HashMap"));
+    assert!(!has_token("struct MyHashMapLike;", "HashMap"));
+    assert!(!has_token("let unsafely = 1;", "unsafe"));
+    assert!(has_token("unsafe { x }", "unsafe"));
+    assert_eq!(count_occurrences("a.unwrap().unwrap()", ".unwrap()"), 2);
+    assert_eq!(count_occurrences("a.unwrap_or(0)", ".unwrap()"), 0);
+    assert_eq!(count_occurrences("a.expect_err(\"e\")", ".expect("), 0);
+}
