@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         score_workers: args.flag_score_workers()?,
         train_workers: args.flag_train_workers()?,
         score_refresh_budget: args.flag_score_refresh_budget()?,
+        sampler: args.flag_sampler()?,
     };
     let sw = Stopwatch::new();
     run_figure(backend.as_ref(), "fig5", &opts)?;

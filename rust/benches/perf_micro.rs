@@ -39,6 +39,14 @@
 //! iterations — the ISSUE 6 acceptance floor), writing
 //! `BENCH_streaming.json` (`--out-json-streaming PATH`).
 //!
+//! The `sampler/scale` section sweeps the Fenwick resampler over pool
+//! sizes n ∈ {1k, 131k, 1M}: full build vs a warm-cache 512-leaf
+//! partial-update cycle vs a 128-draw plan, asserts the update path is at
+//! least 5x the build path at n = 1M and that both maintenance cycles
+//! grow sublinearly (at most 128x for 1000x the leaves), re-checks the
+//! bitwise update==rebuild contract at every size, and writes
+//! `BENCH_sampler.json` (`--out-json-sampler PATH`).
+//!
 //! PJRT engine benches run only when AOT artifacts are present.
 
 use std::time::Duration;
@@ -46,7 +54,7 @@ use std::time::Duration;
 use isample::config::Args;
 use isample::coordinator::cache::ScoreCache;
 use isample::coordinator::pipeline::gather_rows;
-use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
+use isample::coordinator::resample::{AliasSampler, CumulativeSampler, FenwickSampler, SamplerKind};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::coordinator::tau::TauEstimator;
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
@@ -99,15 +107,145 @@ fn main() -> anyhow::Result<()> {
             black_box(s.sample(&mut rng, 128));
         });
     }
+    if run("sampler/fenwick_build_640") {
+        bench("sampler/fenwick_build_640", target, || {
+            black_box(FenwickSampler::new(black_box(&probs)));
+        });
+    }
+    if run("sampler/fenwick_draw128_of_640") {
+        let s = FenwickSampler::new(&probs);
+        bench("sampler/fenwick_draw128_of_640", target, || {
+            black_box(s.sample(&mut rng, 128));
+        });
+    }
     if run("sampler/full_resample_plan") {
         bench("sampler/full_resample_plan", target, || {
-            black_box(resample_from_scores(black_box(&scores), 128, &mut rng, true));
+            black_box(resample_from_scores(black_box(&scores), 128, &mut rng, SamplerKind::Alias));
         });
     }
     if run("tau/estimate_640") {
         bench("tau/estimate_640", target, || {
             black_box(TauEstimator::tau_from_scores(black_box(&scores)));
         });
+    }
+
+    // ---------------- sampler scale sweep (ISSUE 8) ----------------
+    // Fenwick build vs partial-update vs draw throughput at n ∈ {1k, 131k,
+    // 1M}, written to BENCH_sampler.json (--out-json-sampler PATH). The
+    // acceptance numbers: a warm-cache partial-update cycle (512 stale
+    // leaves) beats a full rebuild by >= 5x at n = 1M on best observed
+    // iterations, and per-cycle maintenance grows sublinearly in n — the
+    // leaf count grows 1000x from 1k to 1M, the update and draw cycles may
+    // grow by at most 128x. A bitwise update-vs-rebuild check rides along
+    // at every size.
+    if run("sampler/scale") {
+        let mut suite = BenchSuite::new();
+        let dirty = 512usize;
+        let mut build_1m = f64::NAN;
+        let mut upd_1k = f64::NAN;
+        let mut upd_1m = f64::NAN;
+        let mut draw_1k = f64::NAN;
+        let mut draw_1m = f64::NAN;
+        for &(n, tag) in &[(1_000usize, "1k"), (131_072, "131k"), (1_000_000, "1M")] {
+            let weights: Vec<f32> =
+                (0..n).map(|i| 0.01 + ((i * 37) % 1000) as f32 / 1000.0).collect();
+            let r_build = bench(&format!("sampler/scale_fenwick_build_{tag}"), target, || {
+                black_box(FenwickSampler::new(black_box(&weights)));
+            });
+
+            // bitwise update == rebuild at this size
+            let stride = (n / dirty).max(1);
+            let mut leaves = weights.clone();
+            let mut mutated = FenwickSampler::new(&weights);
+            for k in 0..dirty {
+                let i = (k * stride) % n;
+                let v = 0.25 + k as f32;
+                leaves[i] = v;
+                mutated.update(i, v);
+            }
+            let fresh = FenwickSampler::new(&leaves);
+            assert_eq!(
+                mutated.total_mass().to_bits(),
+                fresh.total_mass().to_bits(),
+                "sampler/scale_{tag}: updated tree diverged bitwise from a fresh build"
+            );
+
+            // warm-cache maintenance cycle: `dirty` scattered fresh scores
+            let mut tree = FenwickSampler::new(&weights);
+            let mut tick = 0u32;
+            let r_update =
+                bench(&format!("sampler/scale_fenwick_update{dirty}_{tag}"), target, || {
+                    tick = tick.wrapping_add(1);
+                    let base = 0.5 + (tick % 7) as f32;
+                    for k in 0..dirty {
+                        tree.update((k * stride) % n, base + k as f32 * 1e-3);
+                    }
+                    black_box(tree.total_mass());
+                });
+            let r_draw = bench(&format!("sampler/scale_fenwick_draw128_{tag}"), target, || {
+                black_box(tree.sample(&mut rng, 128));
+            });
+            println!(
+                "sampler/scale_{tag}: build {:.0} rows/s, update-cycle {:.0} rows/s, \
+                 draw {:.0} rows/s",
+                r_build.rows_per_sec(n),
+                r_update.rows_per_sec(dirty),
+                r_draw.rows_per_sec(128)
+            );
+            suite.metric(&format!("fenwick_build_{tag}_rows_per_sec"), r_build.rows_per_sec(n));
+            suite.metric(
+                &format!("fenwick_update_cycle_{tag}_rows_per_sec"),
+                r_update.rows_per_sec(dirty),
+            );
+            suite.metric(&format!("fenwick_draw_{tag}_rows_per_sec"), r_draw.rows_per_sec(128));
+            match tag {
+                "1k" => {
+                    upd_1k = r_update.min_ns;
+                    draw_1k = r_draw.min_ns;
+                }
+                "1M" => {
+                    build_1m = r_build.min_ns;
+                    upd_1m = r_update.min_ns;
+                    draw_1m = r_draw.min_ns;
+                }
+                _ => {}
+            }
+            suite.push(r_build);
+            suite.push(r_update);
+            suite.push(r_draw);
+        }
+        // acceptance floor: warm-cache partial updates vs full rebuild at
+        // 1M, best observed iterations (noise-robust, like kernels/)
+        let update_vs_build_best = build_1m / upd_1m.max(1e-9);
+        println!(
+            "sampler/scale: 1M update-cycle is {update_vs_build_best:.1}x the full build \
+             (best observed)"
+        );
+        assert!(
+            update_vs_build_best >= 5.0,
+            "sampler/scale: {dirty}-leaf partial-update cycle at n=1M is only \
+             {update_vs_build_best:.2}x a full rebuild (acceptance floor: 5x)"
+        );
+        // sublinearity: 1000x more leaves may cost at most 128x per cycle
+        let update_growth = upd_1m / upd_1k.max(1e-9);
+        let draw_growth = draw_1m / draw_1k.max(1e-9);
+        assert!(
+            update_growth <= 128.0,
+            "sampler/scale: update cycle grew {update_growth:.1}x from 1k to 1M leaves \
+             (sublinearity bound: 128x for 1000x the leaves)"
+        );
+        assert!(
+            draw_growth <= 128.0,
+            "sampler/scale: draw cycle grew {draw_growth:.1}x from 1k to 1M leaves \
+             (sublinearity bound: 128x for 1000x the leaves)"
+        );
+        suite.metric("dirty_leaves", dirty as f64);
+        suite.metric("update_vs_build_best_speedup_1M", update_vs_build_best);
+        suite.metric("update_cycle_growth_1k_to_1M", update_growth);
+        suite.metric("draw_cycle_growth_1k_to_1M", draw_growth);
+        let out = args.flag("out-json-sampler").unwrap_or("BENCH_sampler.json");
+        suite.write_json(out)?;
+        println!("sampler bench results -> {out}");
     }
 
     // data generation (the producer side of the prefetch pipeline)

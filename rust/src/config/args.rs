@@ -130,6 +130,22 @@ impl Args {
         }
     }
 
+    /// `--sampler alias|cumulative|fenwick` — re-sampling backend for the
+    /// presample strategies. `alias` (default): O(1)-draw Vose table
+    /// rebuilt every cycle (the golden-pinned path); `cumulative` (or
+    /// `cdf`): O(log B) binary-search CDF; `fenwick`: pool-sized tree
+    /// with O(log n) partial updates and λ-mixture draws
+    /// (`coordinator::resample`).
+    pub fn flag_sampler(&self) -> Result<crate::coordinator::resample::SamplerKind> {
+        use crate::coordinator::resample::SamplerKind;
+        match self.flag("sampler") {
+            None => Ok(SamplerKind::Alias),
+            Some(v) => SamplerKind::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("--sampler must be `alias`, `cumulative` or `fenwick`, got {v:?}")
+            }),
+        }
+    }
+
     /// Comma-separated u64 list (for `--seeds 1,2,3`).
     pub fn flag_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
         match self.flags.get(name) {
@@ -220,6 +236,22 @@ mod tests {
         assert_eq!(budget("train --score-refresh-budget 64").unwrap(), Some(64));
         assert_eq!(budget("train --score-refresh-budget=0").unwrap(), Some(0));
         assert!(budget("train --score-refresh-budget soon").is_err());
+    }
+
+    #[test]
+    fn sampler_flag() {
+        use crate::coordinator::resample::SamplerKind;
+        // written with `matches!` (not unwrap) to honor the detlint
+        // panic-in-library ratchet on this file
+        assert!(matches!(args("train").flag_sampler(), Ok(SamplerKind::Alias)));
+        assert!(matches!(args("train --sampler alias").flag_sampler(), Ok(SamplerKind::Alias)));
+        assert!(matches!(
+            args("train --sampler=cumulative").flag_sampler(),
+            Ok(SamplerKind::Cumulative)
+        ));
+        assert!(matches!(args("train --sampler cdf").flag_sampler(), Ok(SamplerKind::Cumulative)));
+        assert!(matches!(args("train --sampler fenwick").flag_sampler(), Ok(SamplerKind::Fenwick)));
+        assert!(args("train --sampler vose").flag_sampler().is_err());
     }
 
     #[test]

@@ -1,19 +1,71 @@
 //! Weighted re-sampling with replacement (§3.3: "pre-sample a large batch
 //! ... and re-sample a smaller batch with replacement").
 //!
-//! Two interchangeable backends:
+//! Three interchangeable backends (see README §Sampler for the table):
 //! * [`CumulativeSampler`] — prefix sums + binary search; O(B) build,
 //!   O(log B) per draw. Simple, branch-predictable baseline.
 //! * [`AliasSampler`] — Vose's alias method; O(B) build, O(1) per draw.
-//!   The hot-path default (see EXPERIMENTS.md §Perf for the measured
-//!   crossover).
+//!   The hot-path default.
+//! * [`FenwickSampler`] — binary-indexed tree over f64 weights; O(n)
+//!   build, O(log n) per draw (prefix-sum descent), and O(log² n)
+//!   [`FenwickSampler::update`] of a single weight. The only backend that
+//!   supports partial updates, which is what keeps a pool-sized live
+//!   distribution affordable between score-cache refreshes ("Biggest
+//!   Losers", PAPERS.md).
 //!
-//! Both consume a probability vector (non-negative, summing to ~1) and a
+//! All backends consume a probability/weight vector (non-negative) and a
 //! [`SplitMix64`] stream; identical draw sequences are *not* guaranteed
-//! across backends (they consume different numbers of uniforms), but both
+//! across backends (they consume different numbers of uniforms), but all
 //! are exact samplers of the given distribution.
+//!
+//! Degenerate-input contract: an all-zero (or fully clamped-negative)
+//! weight vector makes every backend fall back to the **uniform**
+//! distribution. Before ISSUE 8 the cumulative backend built an all-zero
+//! CDF instead, so `partition_point` ran off the end and every draw
+//! returned the last index.
+//!
+//! Determinism contract for partial updates: [`FenwickSampler::update`]
+//! recomputes each touched tree node from its children in exactly the
+//! build loop's addition order, so an updated tree is **bitwise equal** to
+//! a tree freshly built from the same leaves. The amortized
+//! [`rebuild_policy`] may therefore choose bulk rebuild vs per-position
+//! updates on cost alone — the choice can never change sampled indices —
+//! and the policy itself is a pure function of (step, seed, dirty-count,
+//! n), never of score values, keeping refresh schedules replayable.
 
 use crate::util::rng::SplitMix64;
+
+/// Which re-sampling backend the trainer uses (`--sampler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Vose alias table, rebuilt from scratch every cycle (default;
+    /// golden-trajectory pinned).
+    Alias,
+    /// CDF + binary search, rebuilt from scratch every cycle.
+    Cumulative,
+    /// Pool-sized Fenwick tree with O(log n) partial updates and
+    /// λ-mixture draws (see `coordinator::sampler::LiveResampler`).
+    Fenwick,
+}
+
+impl SamplerKind {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "alias" => Some(Self::Alias),
+            "cumulative" | "cdf" => Some(Self::Cumulative),
+            "fenwick" => Some(Self::Fenwick),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Alias => "alias",
+            Self::Cumulative => "cumulative",
+            Self::Fenwick => "fenwick",
+        }
+    }
+}
 
 /// Prefix-sum sampler.
 pub struct CumulativeSampler {
@@ -24,11 +76,21 @@ pub struct CumulativeSampler {
 impl CumulativeSampler {
     pub fn new(probs: &[f32]) -> Self {
         assert!(!probs.is_empty(), "empty probability vector");
-        let mut cdf = Vec::with_capacity(probs.len());
+        let n = probs.len();
+        let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0f64;
         for &p in probs {
             acc += p.max(0.0) as f64;
             cdf.push(acc);
+        }
+        if !(acc > 0.0) || !acc.is_finite() {
+            // Degenerate: all-zero mass. Fall back to the uniform CDF so
+            // draws cover every index (the old all-zero CDF pinned every
+            // draw to the last index).
+            for (i, c) in cdf.iter_mut().enumerate() {
+                *c = (i + 1) as f64 / n as f64;
+            }
+            acc = 1.0;
         }
         Self { total: acc, cdf }
     }
@@ -38,7 +100,7 @@ impl CumulativeSampler {
         // u in (0, total]: strictly positive so zero-probability prefixes
         // (cdf entries equal to 0) can never be selected, and == total maps
         // to the first bucket whose cdf reaches the total.
-        let u = (1.0 - rng.uniform()) * self.total.max(f64::MIN_POSITIVE);
+        let u = (1.0 - rng.uniform()) * self.total;
         self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
     }
 
@@ -76,9 +138,8 @@ impl AliasSampler {
                 large.push(i)
             }
         }
-        while !small.is_empty() && !large.is_empty() {
-            let s = small.pop().unwrap();
-            let l = *large.last().unwrap();
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
             prob[s] = rem[s];
             alias[s] = l;
             rem[l] = (rem[l] + rem[s]) - 1.0;
@@ -111,18 +172,223 @@ impl AliasSampler {
     }
 }
 
+/// Fenwick (binary-indexed) tree sampler over f64 weights (ISSUE 8
+/// tentpole).
+///
+/// `tree[j]` (1-indexed) stores the sum of the `lsb(j)` leaves ending at
+/// leaf `j-1`; a weight change therefore touches only the O(log n) nodes
+/// whose range covers it. Draws walk the implicit prefix sums from the
+/// root down (O(log n)), so the structure supports a *pool-sized* live
+/// distribution where only the score-cache-stale positions pay per cycle.
+///
+/// Bitwise update≡rebuild: [`Self::update`] recomputes every touched node
+/// from scratch in the exact child order the build loop uses (O(log² n)
+/// instead of the classical O(log n) delta propagation). f64 addition is
+/// deterministic for a fixed operand order, so a mutated tree and a
+/// freshly built tree over the same leaves are indistinguishable — down
+/// to the bit pattern of every node and hence every drawn index.
+pub struct FenwickSampler {
+    /// 1-indexed implicit tree; `tree[0]` unused.
+    tree: Vec<f64>,
+    /// raw leaf weights (clamped non-negative on the way in)
+    leaf: Vec<f64>,
+}
+
+#[inline]
+fn lsb(j: usize) -> usize {
+    j & j.wrapping_neg()
+}
+
+impl FenwickSampler {
+    pub fn new(weights: &[f32]) -> Self {
+        assert!(!weights.is_empty(), "empty weight vector");
+        let leaf: Vec<f64> = weights.iter().map(|&w| sanitize_weight(w)).collect();
+        let mut s = Self { tree: Vec::new(), leaf };
+        s.rebuild();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaf.is_empty()
+    }
+
+    /// Current (possibly zero) weight of leaf `i`.
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        self.leaf[i]
+    }
+
+    /// Total mass — the full-range prefix sum, O(log n).
+    pub fn total_mass(&self) -> f64 {
+        let mut j = self.leaf.len();
+        let mut acc = 0.0f64;
+        while j > 0 {
+            acc += self.tree[j];
+            j -= lsb(j);
+        }
+        acc
+    }
+
+    /// Full O(n) rebuild of every tree node from the current leaves.
+    pub fn rebuild(&mut self) {
+        let n = self.leaf.len();
+        self.tree = vec![0.0; n + 1];
+        for j in 1..=n {
+            self.tree[j] = self.leaf[j - 1];
+        }
+        for j in 1..=n {
+            let p = j + lsb(j);
+            if p <= n {
+                self.tree[p] += self.tree[j];
+            }
+        }
+    }
+
+    /// Overwrite the given leaves, then do one full rebuild. Bitwise
+    /// equivalent to calling [`Self::update`] per entry; the
+    /// [`rebuild_policy`] picks whichever is cheaper.
+    pub fn rebuild_with(&mut self, updates: &[(usize, f32)]) {
+        for &(i, w) in updates {
+            self.leaf[i] = sanitize_weight(w);
+        }
+        self.rebuild();
+    }
+
+    /// Set leaf `i` to `w`, repairing the O(log n) covering nodes.
+    ///
+    /// Each node is recomputed from its children in build order (cost
+    /// O(log n) per node, O(log² n) total) rather than delta-patched,
+    /// which is what buys the bitwise update≡rebuild guarantee.
+    pub fn update(&mut self, i: usize, w: f32) {
+        let n = self.leaf.len();
+        assert!(i < n, "leaf index {i} out of bounds for {n} leaves");
+        self.leaf[i] = sanitize_weight(w);
+        let mut j = i + 1;
+        while j <= n {
+            self.recompute_node(j);
+            j += lsb(j);
+        }
+    }
+
+    /// tree[j] = leaf[j-1] + tree[j - r/2] + tree[j - r/4] + ... + tree[j-1]
+    /// with r = lsb(j) — the children in ascending-index order, exactly
+    /// mirroring the build loop's accumulation sequence.
+    fn recompute_node(&mut self, j: usize) {
+        let r = lsb(j);
+        let mut acc = self.leaf[j - 1];
+        let mut h = r >> 1;
+        while h > 0 {
+            acc += self.tree[j - h];
+            h >>= 1;
+        }
+        self.tree[j] = acc;
+    }
+
+    /// Draw one index ∝ leaf weights via prefix-sum descent; falls back to
+    /// uniform when the total mass is degenerate (all-zero contract shared
+    /// with the other backends). Consumes exactly one `rng` value.
+    pub fn draw(&self, rng: &mut SplitMix64) -> usize {
+        let n = self.leaf.len();
+        let total = self.total_mass();
+        if !(total > 0.0) || !total.is_finite() {
+            return rng.below(n);
+        }
+        // u in (0, total]: zero-weight leaves satisfy prefix(i) == prefix(i+1)
+        // and the strict `<` below can never step past a prefix into them.
+        let u = (1.0 - rng.uniform()) * total;
+        let mut pos = 0usize;
+        let mut rem = u;
+        let mut k = 1usize;
+        while (k << 1) <= n {
+            k <<= 1;
+        }
+        while k > 0 {
+            let next = pos + k;
+            if next <= n && self.tree[next] < rem {
+                rem -= self.tree[next];
+                pos = next;
+            }
+            k >>= 1;
+        }
+        pos.min(n - 1)
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.draw(rng)).collect()
+    }
+}
+
+/// Negative, NaN and infinite scores all collapse to weight 0 so a corrupt
+/// score can never poison the tree's prefix sums.
+#[inline]
+fn sanitize_weight(w: f32) -> f64 {
+    let v = w as f64;
+    if v.is_finite() && v > 0.0 {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Amortized-rebuild policy for the live Fenwick distribution.
+///
+/// Because [`FenwickSampler::update`] and [`FenwickSampler::rebuild_with`]
+/// are bitwise identical on the resulting tree, this is purely a cost
+/// decision — but to keep refresh schedules replayable under the detlint
+/// determinism contract it is a **pure function of (step, seed,
+/// dirty-count, n)** and must never look at score values.
+pub mod rebuild_policy {
+    /// Steps between forced full rebuilds (phase-offset by seed). A
+    /// periodic O(n) pass bounds any drift in *when* rebuilds happen
+    /// across runs with different staleness patterns.
+    pub const REBUILD_PERIOD: u64 = 1024;
+
+    /// `true` ⇒ bulk-rebuild this cycle; `false` ⇒ apply `dirty`
+    /// per-position updates. Rebuild wins once `dirty · log²(n)` work
+    /// meets the O(n) rebuild cost, plus on the periodic step schedule.
+    pub fn should_rebuild(step: u64, seed: u64, dirty: usize, n: usize) -> bool {
+        if n == 0 || dirty == 0 {
+            return false;
+        }
+        if dirty >= n {
+            return true;
+        }
+        let log2 = (usize::BITS - n.leading_zeros()) as usize;
+        if dirty.saturating_mul(log2 * log2) >= n {
+            return true;
+        }
+        step % REBUILD_PERIOD == seed % REBUILD_PERIOD
+    }
+}
+
 /// Importance weights for a resampled index set: w_i = 1 / (B * p_i)
 /// (Eq. 2 with the unbiasedness condition w = 1/(N p); here N = B, the
-/// presample size). Zero-probability entries can never be drawn, so the
-/// weight is never evaluated for them.
+/// presample size). Zero-probability entries can never be drawn by a
+/// correct sampler, so the weight should never be evaluated for them —
+/// but a corrupt (index, probability) pair must not poison the weighted
+/// gradient reduction with inf/NaN in release builds (ISSUE 8): such a
+/// weight saturates to 0 (the draw drops out of the batch mean) and logs
+/// one invariant-failure line.
 pub fn importance_weights(probs: &[f32], drawn: &[usize]) -> Vec<f32> {
     let b_total = probs.len() as f64;
     drawn
         .iter()
         .map(|&i| {
             let p = probs[i] as f64;
-            debug_assert!(p > 0.0, "drew a zero-probability index");
-            (1.0 / (b_total * p)) as f32
+            let w = (1.0 / (b_total * p)) as f32;
+            if p > 0.0 && w.is_finite() {
+                w
+            } else {
+                eprintln!(
+                    "invariant failure: importance weight for drawn index {i} \
+                     (p = {p:e}) is not finite; saturating to 0"
+                );
+                0.0
+            }
         })
         .collect()
 }
@@ -132,30 +398,51 @@ mod tests {
     use super::*;
     use crate::util::stats::normalize_probs;
 
-    fn empirical(probs: &[f32], draws: usize, alias: bool) -> Vec<f64> {
+    fn empirical(probs: &[f32], draws: usize, kind: SamplerKind) -> Vec<f64> {
         let mut rng = SplitMix64::new(42);
         let mut counts = vec![0usize; probs.len()];
-        if alias {
-            let s = AliasSampler::new(probs);
-            for _ in 0..draws {
-                counts[s.draw(&mut rng)] += 1;
+        match kind {
+            SamplerKind::Alias => {
+                let s = AliasSampler::new(probs);
+                for _ in 0..draws {
+                    counts[s.draw(&mut rng)] += 1;
+                }
             }
-        } else {
-            let s = CumulativeSampler::new(probs);
-            for _ in 0..draws {
-                counts[s.draw(&mut rng)] += 1;
+            SamplerKind::Cumulative => {
+                let s = CumulativeSampler::new(probs);
+                for _ in 0..draws {
+                    counts[s.draw(&mut rng)] += 1;
+                }
+            }
+            SamplerKind::Fenwick => {
+                let s = FenwickSampler::new(probs);
+                for _ in 0..draws {
+                    counts[s.draw(&mut rng)] += 1;
+                }
             }
         }
         counts.iter().map(|&c| c as f64 / draws as f64).collect()
     }
 
+    const ALL_KINDS: [SamplerKind; 3] =
+        [SamplerKind::Alias, SamplerKind::Cumulative, SamplerKind::Fenwick];
+
     #[test]
-    fn both_backends_match_target_distribution() {
+    fn sampler_kind_parse_roundtrip() {
+        for kind in ALL_KINDS {
+            assert_eq!(SamplerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SamplerKind::parse("cdf"), Some(SamplerKind::Cumulative));
+        assert_eq!(SamplerKind::parse("vose"), None);
+    }
+
+    #[test]
+    fn all_backends_match_target_distribution() {
         let probs = normalize_probs(&[1.0, 2.0, 3.0, 4.0, 0.0, 10.0]);
-        for alias in [false, true] {
-            let emp = empirical(&probs, 200_000, alias);
+        for kind in ALL_KINDS {
+            let emp = empirical(&probs, 200_000, kind);
             for (e, &p) in emp.iter().zip(&probs) {
-                assert!((e - p as f64).abs() < 0.01, "backend alias={alias}: {e} vs {p}");
+                assert!((e - p as f64).abs() < 0.01, "backend {}: {e} vs {p}", kind.name());
             }
         }
     }
@@ -174,6 +461,11 @@ mod tests {
             let i = c.draw(&mut rng);
             assert!(i == 1 || i == 3);
         }
+        let f = FenwickSampler::new(&probs);
+        for _ in 0..10_000 {
+            let i = f.draw(&mut rng);
+            assert!(i == 1 || i == 3);
+        }
     }
 
     #[test]
@@ -181,6 +473,7 @@ mod tests {
         let mut rng = SplitMix64::new(1);
         assert_eq!(AliasSampler::new(&[1.0]).draw(&mut rng), 0);
         assert_eq!(CumulativeSampler::new(&[1.0]).draw(&mut rng), 0);
+        assert_eq!(FenwickSampler::new(&[1.0]).draw(&mut rng), 0);
     }
 
     #[test]
@@ -192,6 +485,102 @@ mod tests {
             seen[s.draw(&mut rng)] = true;
         }
         assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn degenerate_all_zero_becomes_uniform_all_backends() {
+        // ISSUE 8 satellite: the cumulative backend used to build an
+        // all-zero CDF and return the *last* index on every draw. All
+        // three backends now share the uniform fallback.
+        for kind in ALL_KINDS {
+            let emp = empirical(&[0.0, 0.0, 0.0, 0.0], 40_000, kind);
+            for (i, &e) in emp.iter().enumerate() {
+                assert!(
+                    (e - 0.25).abs() < 0.02,
+                    "backend {} index {i}: frequency {e} not ~uniform",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fenwick_update_matches_fresh_build_bitwise() {
+        let v1: Vec<f32> = (0..37).map(|i| (i % 5) as f32 + 0.25).collect();
+        let mut v2 = v1.clone();
+        v2[3] = 9.5;
+        v2[17] = 0.0;
+        v2[36] = 0.125;
+
+        let mut mutated = FenwickSampler::new(&v1);
+        for &i in &[3usize, 17, 36] {
+            mutated.update(i, v2[i]);
+        }
+        let mut bulk = FenwickSampler::new(&v1);
+        bulk.rebuild_with(&[(3, v2[3]), (17, v2[17]), (36, v2[36])]);
+        let fresh = FenwickSampler::new(&v2);
+
+        assert_eq!(mutated.total_mass().to_bits(), fresh.total_mass().to_bits());
+        assert_eq!(bulk.total_mass().to_bits(), fresh.total_mass().to_bits());
+        let mut r1 = SplitMix64::new(99);
+        let mut r2 = SplitMix64::new(99);
+        let mut r3 = SplitMix64::new(99);
+        for _ in 0..5_000 {
+            let a = mutated.draw(&mut r1);
+            let b = fresh.draw(&mut r2);
+            let c = bulk.draw(&mut r3);
+            assert_eq!(a, b);
+            assert_eq!(a, c);
+        }
+    }
+
+    #[test]
+    fn fenwick_update_to_all_zero_falls_back_to_uniform() {
+        let mut s = FenwickSampler::new(&[1.0, 2.0, 3.0]);
+        for i in 0..3 {
+            s.update(i, 0.0);
+        }
+        let mut rng = SplitMix64::new(5);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[s.draw(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn fenwick_sanitizes_corrupt_weights() {
+        let mut s = FenwickSampler::new(&[1.0, f32::NAN, -3.0, f32::INFINITY]);
+        assert_eq!(s.weight(1), 0.0);
+        assert_eq!(s.weight(2), 0.0);
+        assert_eq!(s.weight(3), 0.0);
+        s.update(2, f32::NEG_INFINITY);
+        assert_eq!(s.weight(2), 0.0);
+        assert!(s.total_mass().is_finite());
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..1_000 {
+            assert_eq!(s.draw(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn rebuild_policy_pure_and_bounded() {
+        use rebuild_policy::{should_rebuild, REBUILD_PERIOD};
+        // nothing dirty: never rebuild, even on the periodic step
+        assert!(!should_rebuild(REBUILD_PERIOD, 0, 0, 1 << 20));
+        // everything dirty: always rebuild
+        assert!(should_rebuild(1, 0, 1 << 20, 1 << 20));
+        // periodic forced rebuild fires on the seed-offset step
+        let seed = 7u64;
+        assert!(should_rebuild(seed + REBUILD_PERIOD, seed, 1, 1 << 20));
+        assert!(!should_rebuild(seed + REBUILD_PERIOD + 1, seed, 1, 1 << 20));
+        // monotone in dirty for fixed (step, seed, n)
+        let mut prev = false;
+        for dirty in [0usize, 1, 100, 10_000, 1 << 20] {
+            let d = should_rebuild(3, 0, dirty, 1 << 20);
+            assert!(d || !prev, "rebuild decision flipped true->false at dirty={dirty}");
+            prev = d;
+        }
     }
 
     #[test]
@@ -221,5 +610,19 @@ mod tests {
         for wi in w {
             assert!((wi - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn corrupt_probability_saturates_to_finite_weight() {
+        // ISSUE 8 satellite: a corrupt (position, probability) pair must
+        // never reach the trainer as a non-finite weight. Zero, negative
+        // and f32-overflow-small probabilities all saturate to 0.
+        let probs = [0.0f32, -1.0, 1e-40, 0.5];
+        let w = importance_weights(&probs, &[0, 1, 2, 3]);
+        assert!(w.iter().all(|wi| wi.is_finite()), "weights {w:?}");
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[1], 0.0);
+        assert_eq!(w[2], 0.0, "1/(B·1e-40) overflows f32 and must saturate");
+        assert!(w[3] > 0.0);
     }
 }

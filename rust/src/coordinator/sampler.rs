@@ -11,7 +11,12 @@
 use crate::util::rng::SplitMix64;
 use crate::util::stats::normalize_probs;
 
-use super::resample::{importance_weights, AliasSampler, CumulativeSampler};
+use super::resample::{
+    importance_weights, rebuild_policy, AliasSampler, CumulativeSampler, FenwickSampler,
+};
+use super::tau::mixture;
+
+pub use super::resample::SamplerKind;
 
 // `ScoreKind` is owned by the scoring subsystem (`runtime::score`) since
 // the sharded-scoring refactor; re-exported here so existing paths keep
@@ -72,22 +77,129 @@ pub struct ResamplePlan {
     pub probs: Vec<f32>,
 }
 
-/// Resample `b` positions from `scores` (Alg. 1 lines 7–9).
-/// `use_alias` picks the O(1)-per-draw backend.
+/// Resample `b` positions from `scores` (Alg. 1 lines 7–9) with the given
+/// backend. `Fenwick` here builds a fresh (presample-sized) tree so all
+/// three backends share one interface for tests and benches; the trainer's
+/// incremental pool-sized path lives in [`LiveResampler`].
 pub fn resample_from_scores(
     scores: &[f32],
     b: usize,
     rng: &mut SplitMix64,
-    use_alias: bool,
+    kind: SamplerKind,
 ) -> ResamplePlan {
     let probs = normalize_probs(scores);
-    let positions = if use_alias {
-        AliasSampler::new(&probs).sample(rng, b)
-    } else {
-        CumulativeSampler::new(&probs).sample(rng, b)
+    let positions = match kind {
+        SamplerKind::Alias => AliasSampler::new(&probs).sample(rng, b),
+        SamplerKind::Cumulative => CumulativeSampler::new(&probs).sample(rng, b),
+        SamplerKind::Fenwick => FenwickSampler::new(&probs).sample(rng, b),
     };
     let weights = importance_weights(&probs, &positions);
     ResamplePlan { positions, weights, probs }
+}
+
+/// A training batch drawn from the live pool distribution: dataset (pool)
+/// indices — NOT presample positions — plus unbiased mixture importance
+/// weights.
+#[derive(Debug, Clone)]
+pub struct PoolPlan {
+    /// indices into the full training pool (0..n)
+    pub indices: Vec<usize>,
+    /// w_i = 1 / (n · p_mix(i)); bounded by 1/λ
+    pub weights: Vec<f32>,
+}
+
+/// The live cached-score resampler behind `--sampler fenwick` (ISSUE 8
+/// tentpole): a pool-sized [`FenwickSampler`] kept in sync with the
+/// [`super::cache::ScoreCache`] so a warm-cache cycle pays O(stale ·
+/// log² n) sampler maintenance instead of an O(B) rebuild, and the
+/// score-proportional distribution over the *whole pool* stays live
+/// between refreshes ("Biggest Losers", PAPERS.md).
+///
+/// Batches are drawn from the λ-mixture `p_mix = λ·u + (1−λ)·p_score`
+/// (see [`mixture`]) with matching unbiased weights `1/(n · p_mix)`.
+/// Every draw consumes exactly two rng values (one branch uniform + one
+/// for the chosen component), so trajectories are a pure function of
+/// (seed, score stream) — staged updates apply via [`Self::commit`]
+/// through the bitwise-neutral [`rebuild_policy`].
+pub struct LiveResampler {
+    tree: FenwickSampler,
+    seed: u64,
+    /// (pool index, fresh score) pairs staged since the last commit
+    pending: Vec<(usize, f32)>,
+}
+
+impl LiveResampler {
+    /// A live distribution over `n` pool samples, initially all-zero
+    /// (drawing before any score lands falls back to uniform).
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self { tree: FenwickSampler::new(&vec![0.0f32; n]), seed, pending: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    /// Stage one freshly scored pool sample for the next [`Self::commit`].
+    pub fn stage(&mut self, pool_index: usize, score: f32) {
+        self.pending.push((pool_index, score));
+    }
+
+    /// Apply all staged updates. The [`rebuild_policy`] — a pure function
+    /// of (step, seed, dirty-count, n) — picks bulk rebuild vs per-leaf
+    /// `update()`s; both produce bit-identical trees, so the choice only
+    /// moves cost. Returns `true` when a bulk rebuild ran.
+    pub fn commit(&mut self, step: u64) -> bool {
+        let rebuilt =
+            rebuild_policy::should_rebuild(step, self.seed, self.pending.len(), self.tree.len());
+        if rebuilt {
+            let pending = std::mem::take(&mut self.pending);
+            self.tree.rebuild_with(&pending);
+        } else {
+            for (i, s) in self.pending.drain(..) {
+                self.tree.update(i, s);
+            }
+        }
+        rebuilt
+    }
+
+    /// Draw a `b`-sample batch of pool indices from the λ-mixture, with
+    /// unbiased importance weights. A degenerate (all-zero) tree draws
+    /// pure uniform with unit weights.
+    pub fn plan(&self, b: usize, lambda: f64, rng: &mut SplitMix64) -> PoolPlan {
+        let n = self.tree.len();
+        let total = self.tree.total_mass();
+        let degenerate = !(total > 0.0) || !total.is_finite();
+        let lam = if degenerate { 1.0 } else { lambda.clamp(mixture::LAMBDA_FLOOR, 1.0) };
+        let mut indices = Vec::with_capacity(b);
+        for _ in 0..b {
+            // Both arms consume one value after the branch uniform, so a
+            // draw always advances the stream by exactly two.
+            let i = if rng.uniform() < lam { rng.below(n) } else { self.tree.draw(rng) };
+            indices.push(i);
+        }
+        let weights = indices
+            .iter()
+            .map(|&i| {
+                let p_score = if degenerate { 0.0 } else { self.tree.weight(i) / total };
+                let q = mixture::mix_prob(lam, n, p_score);
+                let w = (1.0 / (n as f64 * q)) as f32;
+                if q > 0.0 && w.is_finite() {
+                    w
+                } else {
+                    eprintln!(
+                        "invariant failure: mixture weight for pool index {i} \
+                         (q = {q:e}) is not finite; saturating to 0"
+                    );
+                    0.0
+                }
+            })
+            .collect();
+        PoolPlan { indices, weights }
+    }
 }
 
 #[cfg(test)]
@@ -108,8 +220,9 @@ mod tests {
         check("resample invariants", 200, |g| {
             let scores = g.scores(2..256);
             let b = g.usize_in(1..64);
-            let use_alias = g.bool();
-            let plan = resample_from_scores(&scores, b, &mut g.rng, use_alias);
+            let kind = [SamplerKind::Alias, SamplerKind::Cumulative, SamplerKind::Fenwick]
+                [g.usize_in(0..3)];
+            let plan = resample_from_scores(&scores, b, &mut g.rng, kind);
             assert_eq!(plan.positions.len(), b);
             assert_eq!(plan.weights.len(), b);
             // probabilities are a distribution
@@ -127,8 +240,71 @@ mod tests {
     #[test]
     fn uniform_scores_degenerate_to_unit_weights() {
         let mut rng = SplitMix64::new(4);
-        let plan = resample_from_scores(&[1.0; 64], 16, &mut rng, true);
+        let plan = resample_from_scores(&[1.0; 64], 16, &mut rng, SamplerKind::Alias);
         assert!(plan.weights.iter().all(|&w| (w - 1.0).abs() < 1e-5));
     }
 
+    #[test]
+    fn live_resampler_unscored_pool_draws_uniform_unit_weights() {
+        let mut live = LiveResampler::new(128, 9);
+        let mut rng = SplitMix64::new(2);
+        let plan = live.plan(64, 0.3, &mut rng);
+        assert_eq!(plan.indices.len(), 64);
+        assert!(plan.indices.iter().all(|&i| i < 128));
+        assert!(plan.weights.iter().all(|&w| (w - 1.0).abs() < 1e-6), "{:?}", plan.weights);
+    }
+
+    #[test]
+    fn live_resampler_commit_paths_are_bit_identical() {
+        // per-leaf update vs bulk rebuild must yield identical plans; we
+        // force each path with dirty counts on either side of the policy
+        // threshold and compare against a third tree built directly.
+        let n = 512;
+        let updates: Vec<(usize, f32)> = (0..40).map(|k| (k * 11 % n, 0.5 + k as f32)).collect();
+
+        // `a`: one staged score per commit — dirty=1, 1·log²(512) < 512 and
+        // step 3 misses the seed-1 periodic slot, so every commit takes the
+        // per-leaf update path.
+        let mut a = LiveResampler::new(n, 1);
+        for &(i, s) in &updates {
+            a.stage(i, s);
+            assert!(!a.commit(3));
+        }
+        // `b`: all 40 at once — 40·log²(512) ≥ 512 forces the bulk rebuild.
+        let mut b = LiveResampler::new(n, 1);
+        for &(i, s) in &updates {
+            b.stage(i, s);
+        }
+        assert!(b.commit(1));
+        let mut r1 = SplitMix64::new(77);
+        let mut r2 = SplitMix64::new(77);
+        let p1 = a.plan(256, 0.2, &mut r1);
+        let p2 = b.plan(256, 0.2, &mut r2);
+        assert_eq!(p1.indices, p2.indices);
+        for (w1, w2) in p1.weights.iter().zip(&p2.weights) {
+            assert_eq!(w1.to_bits(), w2.to_bits());
+        }
+    }
+
+    #[test]
+    fn live_resampler_mixture_weights_are_unbiased_over_pool() {
+        // E_q[w · f] over mixture draws must match the pool mean of f.
+        let n = 200;
+        let f: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).cos() + 3.0).collect();
+        let mut live = LiveResampler::new(n, 5);
+        for i in 0..n {
+            live.stage(i, 0.1 + (i % 13) as f32);
+        }
+        live.commit(0);
+        let mut rng = SplitMix64::new(21);
+        let mut acc = 0.0f64;
+        let draws = 400_000;
+        let plan = live.plan(draws, 0.35, &mut rng);
+        for (&i, &w) in plan.indices.iter().zip(&plan.weights) {
+            acc += w as f64 * f[i];
+        }
+        let est = acc / draws as f64;
+        let truth: f64 = f.iter().sum::<f64>() / n as f64;
+        assert!((est - truth).abs() < 0.02, "estimate {est} vs {truth}");
+    }
 }

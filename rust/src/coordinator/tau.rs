@@ -16,10 +16,14 @@
 
 use crate::util::stats::{normalize_probs, Ema};
 
-/// Upper clamp for a single τ observation: with B ≤ 4096 presamples the
-/// theoretical max is √B ≈ 64 when all mass sits on one sample; anything
-/// above is fp noise from a near-singular distribution.
-const TAU_CLAMP: f64 = 1e3;
+/// Upper clamp for a single τ observation on B scores: all mass on one of
+/// B samples gives exactly τ = √B, so anything above √B is fp noise from a
+/// near-singular distribution. (Fixed in ISSUE 8: this used to be a flat
+/// `1e3`, which the near-singular branch returned verbatim — violating the
+/// property-pinned `τ ≤ √B` bound for any B < 10⁶.)
+fn tau_cap(n: usize) -> f64 {
+    (n as f64).sqrt().max(1.0)
+}
 
 #[derive(Debug, Clone)]
 pub struct TauEstimator {
@@ -41,15 +45,23 @@ impl TauEstimator {
 
     /// Eq. 26 for one score vector (un-normalized scores accepted).
     pub fn tau_from_scores(scores: &[f32]) -> f64 {
-        let g = normalize_probs(scores);
+        Self::tau_from_distribution(&normalize_probs(scores))
+    }
+
+    /// Eq. 26 for an already-normalized distribution `g`. Public so the
+    /// near-singular guard can be exercised directly (a well-normalized
+    /// `g` satisfies Σg ≈ 1, which keeps `1/τ²` positive in exact
+    /// arithmetic; the guard exists for fp pathology).
+    pub fn tau_from_distribution(g: &[f32]) -> f64 {
         let n = g.len();
         if n == 0 {
             return 1.0;
         }
+        let cap = tau_cap(n);
         let u = 1.0 / n as f64;
         let mut dist2 = 0.0f64;
         let mut sumsq = 0.0f64;
-        for &gi in &g {
+        for &gi in g {
             let gi = gi as f64;
             dist2 += (gi - u) * (gi - u);
             sumsq += gi * gi;
@@ -59,14 +71,21 @@ impl TauEstimator {
         }
         let inv_tau_sq = 1.0 - dist2 / sumsq; // = 1/τ² by Eq. 25–26
         if inv_tau_sq <= 0.0 {
-            return TAU_CLAMP;
+            // near-singular: all mass effectively on one sample ⇒ τ = √n
+            return cap;
         }
-        (1.0 / inv_tau_sq.sqrt()).clamp(1.0, TAU_CLAMP)
+        (1.0 / inv_tau_sq.sqrt()).clamp(1.0, cap)
     }
 
     /// Feed one presample's scores; returns the smoothed τ.
     pub fn update(&mut self, scores: &[f32]) -> f64 {
-        self.last_raw = Self::tau_from_scores(scores);
+        self.update_raw(Self::tau_from_scores(scores))
+    }
+
+    /// Feed one externally computed raw τ observation (the mixture-aware
+    /// gate feeds [`mixture::tau_mixture`] here); returns the smoothed τ.
+    pub fn update_raw(&mut self, raw: f64) -> f64 {
+        self.last_raw = raw;
         self.tau = self.ema.update(self.last_raw);
         self.observations += 1;
         self.tau
@@ -82,6 +101,84 @@ impl TauEstimator {
 
     pub fn observations(&self) -> u64 {
         self.observations
+    }
+}
+
+/// Mixture-aware importance sampling (ISSUE 8 tentpole), after *Exploring
+/// Variance Reduction in Importance Sampling for Efficient DNN Training*
+/// (Kutsuna, PAPERS.md): draw from the mixture
+///
+/// ```text
+/// p_mix(i) = λ · 1/n + (1 − λ) · p_score(i)
+/// ```
+///
+/// instead of pure `p_score`. Mixing toward uniform (a) bounds every
+/// probability away from zero, so importance weights `1/(n · p_mix)` are
+/// bounded by `1/λ` and the degenerate/near-singular edge cases cannot
+/// produce unbounded weights, and (b) hedges against a noisy or stale
+/// score signal — Kutsuna's analysis shows an *optimal* interior λ when
+/// the scores only approximate the true per-sample gradient norms.
+pub mod mixture {
+    use super::TauEstimator;
+    use crate::util::stats::normalize_probs;
+
+    /// Lower clamp for λ: keeps every mixture probability ≥ λ/n, hence
+    /// every importance weight ≤ 1/λ = 20, no matter how concentrated or
+    /// corrupt the score vector is.
+    pub const LAMBDA_FLOOR: f64 = 0.05;
+
+    /// Moment-based estimate of the optimal mixing weight λ* from one
+    /// presample's scores.
+    ///
+    /// For the normalized scores g the squared coefficient of variation
+    /// is c_v² = Var(g)/Mean(g)² = n·Σg² − 1 = τ² − 1 (Eq. 26), and the
+    /// variance-minimizing shrinkage weight toward uniform for a signal
+    /// with that dispersion is λ* = 1/(1 + c_v²) = 1/τ² — the moment form
+    /// of Kutsuna's optimal-mixing estimate. Uninformative scores (τ→1)
+    /// give λ→1 (pure uniform); a strongly concentrated signal drives λ
+    /// to the [`LAMBDA_FLOOR`].
+    pub fn optimal_lambda(scores: &[f32]) -> f64 {
+        let tau = TauEstimator::tau_from_scores(scores);
+        (1.0 / (tau * tau)).clamp(LAMBDA_FLOOR, 1.0)
+    }
+
+    /// Mixture probability of one index given its score-proportional
+    /// probability `p_score` (in [0, 1]).
+    #[inline]
+    pub fn mix_prob(lambda: f64, n: usize, p_score: f64) -> f64 {
+        lambda / n as f64 + (1.0 - lambda) * p_score
+    }
+
+    /// Variance-reduction factor of the λ-mixture against uniform:
+    /// τ_mix = √(V_u / V_mix) with V_q = Σ g_i²/q_i (the second moment of
+    /// the importance-weighted estimator under proposal q) and V_u =
+    /// n·Σg². Reduces to Eq. 26's τ at λ = 0 and to exactly 1 at λ = 1;
+    /// clamped to [1, √n]. The τ-gate feeds this (not the pure-score τ)
+    /// when the mixture path is active, so the switch compares the
+    /// variance reduction *actually achievable by the mixture* against
+    /// uniform.
+    pub fn tau_mixture(scores: &[f32], lambda: f64) -> f64 {
+        let g = normalize_probs(scores);
+        let n = g.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let cap = (n as f64).sqrt().max(1.0);
+        let mut sumsq = 0.0f64;
+        let mut v_mix = 0.0f64;
+        for &gi in &g {
+            let gi = gi as f64;
+            sumsq += gi * gi;
+            let q = mix_prob(lambda, n, gi);
+            if q > 0.0 {
+                v_mix += gi * gi / q;
+            }
+        }
+        if sumsq <= 0.0 || v_mix <= 0.0 {
+            return 1.0;
+        }
+        let v_u = n as f64 * sumsq;
+        (v_u / v_mix).sqrt().clamp(1.0, cap)
     }
 }
 
@@ -188,6 +285,81 @@ mod tests {
             assert!(t >= 1.0 - 1e-12, "tau {t} < 1");
             assert!(t <= bound, "tau {t} > sqrt(B) {bound}");
         });
+    }
+
+    #[test]
+    fn one_hot_scores_give_tau_sqrt_n() {
+        // ISSUE 8 regression: with all mass on one of n samples, τ = √n
+        // exactly. The near-singular branch used to return 1e3, blowing
+        // through the τ ≤ √B bound for any B < 10⁶.
+        let n = 64;
+        let mut scores = vec![0.0f32; n];
+        scores[13] = 5.0;
+        let t = TauEstimator::tau_from_scores(&scores);
+        let cap = (n as f64).sqrt();
+        assert!(t <= cap + 1e-12, "tau {t} exceeds sqrt(n) {cap}");
+        assert!((t - cap).abs() < 1e-6, "one-hot tau {t} should be ~sqrt(n) {cap}");
+    }
+
+    #[test]
+    fn near_singular_branch_clamps_to_sqrt_n() {
+        // Exercise the inv_tau_sq <= 0 guard directly: a (pathological)
+        // "distribution" with Σg < 1/2 makes dist2 exceed sumsq, which is
+        // what fp cancellation produces in the wild. The guard must clamp
+        // to √n, not the old 1e3 constant.
+        let g = [0.2f32, 0.1];
+        let t = TauEstimator::tau_from_distribution(&g);
+        assert!((t - 2.0f64.sqrt()).abs() < 1e-12, "near-singular tau {t} != sqrt(2)");
+    }
+
+    #[test]
+    fn mixture_lambda_limits() {
+        // uniform scores: τ = 1 ⇒ λ* = 1 (pure uniform sampling)
+        let l = mixture::optimal_lambda(&[0.5; 64]);
+        assert!((l - 1.0).abs() < 1e-9, "lambda {l}");
+        // one-hot: τ = 8 ⇒ 1/τ² = 1/64 clamps to the floor
+        let mut scores = vec![0.0f32; 64];
+        scores[0] = 1.0;
+        let l = mixture::optimal_lambda(&scores);
+        assert!((l - mixture::LAMBDA_FLOOR).abs() < 1e-12, "lambda {l}");
+        // mild concentration: interior λ
+        let scores: Vec<f32> = (0..64).map(|i| 1.0 + (i % 4) as f32).collect();
+        let l = mixture::optimal_lambda(&scores);
+        assert!(l > mixture::LAMBDA_FLOOR && l < 1.0, "lambda {l} not interior");
+    }
+
+    #[test]
+    fn mixture_tau_endpoints_and_monotonicity() {
+        let scores: Vec<f32> = (0..128).map(|i| 0.05 + ((i * 13) % 11) as f32).collect();
+        // λ=0 recovers Eq. 26's τ (same quantity, different algebra: the
+        // fp gap is bounded by the f32 normalization error)
+        let t0 = mixture::tau_mixture(&scores, 0.0);
+        let t_eq26 = TauEstimator::tau_from_scores(&scores);
+        assert!((t0 - t_eq26).abs() < 1e-3 * t_eq26, "{t0} vs {t_eq26}");
+        // λ=1 is uniform: no variance reduction
+        let t1 = mixture::tau_mixture(&scores, 1.0);
+        assert!((t1 - 1.0).abs() < 1e-9, "tau_mixture at lambda=1: {t1}");
+        // more uniform mixing can only shrink the variance-reduction factor
+        let mut prev = f64::INFINITY;
+        for l in [0.0, 0.1, 0.3, 0.6, 1.0] {
+            let t = mixture::tau_mixture(&scores, l);
+            assert!(t <= prev + 1e-9, "tau_mixture not monotone at lambda={l}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn mixture_weights_bounded_by_inverse_lambda() {
+        // p_mix >= λ/n ⇒ w = 1/(n·p_mix) <= 1/λ, even for one-hot scores
+        let mut scores = vec![0.0f32; 256];
+        scores[7] = 1.0;
+        let l = mixture::optimal_lambda(&scores);
+        let probs = crate::util::stats::normalize_probs(&scores);
+        for &p in &probs {
+            let q = mixture::mix_prob(l, probs.len(), p as f64);
+            let w = 1.0 / (probs.len() as f64 * q);
+            assert!(w <= 1.0 / l + 1e-9, "weight {w} exceeds 1/lambda {}", 1.0 / l);
+        }
     }
 
     #[test]

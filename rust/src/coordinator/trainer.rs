@@ -50,8 +50,8 @@ use super::cache::ScoreCache;
 use super::history::{LoshchilovHutter, SchaulProportional};
 use super::metrics::{MetricsLog, Row};
 use super::pipeline::{gather_rows, PipelineStats, PrefetchedBatch, Prefetcher};
-use super::sampler::{resample_from_scores, ScoreKind, StrategyKind};
-use super::tau::TauEstimator;
+use super::sampler::{resample_from_scores, LiveResampler, SamplerKind, ScoreKind, StrategyKind};
+use super::tau::{mixture, TauEstimator};
 
 /// The score backend for one presample pass. Forward-pass kinds (loss,
 /// upper bound) chunk across `score_workers` scoped threads as before;
@@ -135,8 +135,15 @@ pub struct TrainerConfig {
     /// evaluate on the test split every this many seconds (0 = never).
     pub eval_every_secs: f64,
     pub seed: u64,
-    /// O(1) alias sampler vs O(log B) cumulative sampler.
-    pub use_alias: bool,
+    /// Re-sampling backend (`--sampler`). `Alias` (default, golden-pinned)
+    /// and `Cumulative` rebuild a presample-sized distribution every
+    /// cycle; `Fenwick` keeps a *pool-sized* live distribution with
+    /// O(log n) partial updates fed by the score cache and draws training
+    /// batches from the λ-mixture `λ·u + (1−λ)·p_score` with unbiased
+    /// weights (ISSUE 8) — its τ-gate observes the mixture's variance
+    /// reduction (`tau::mixture::tau_mixture`) instead of the pure-score
+    /// Eq. 26 value.
+    pub sampler: SamplerKind,
     pub prefetch_depth: usize,
     /// Prefetch worker count. NOTE: with more than one worker the batch
     /// arrival order is nondeterministic (by design — it is a racy queue);
@@ -218,7 +225,7 @@ impl TrainerConfig {
             max_steps: Some(2_000),
             eval_every_secs: 0.0,
             seed: 42,
-            use_alias: true,
+            sampler: SamplerKind::Alias,
             // Default: synchronous batch assembly. On multi-core machines
             // set prefetch_threads >= 1 to overlap data generation with the
             // device; on this single-core testbed worker threads only add
@@ -291,6 +298,12 @@ impl TrainerConfig {
     /// Set the batch-compute worker count (see `train_workers`).
     pub fn with_train_workers(mut self, workers: usize) -> Self {
         self.train_workers = workers.max(1);
+        self
+    }
+
+    /// Set the re-sampling backend (see `sampler`).
+    pub fn with_sampler(mut self, sampler: SamplerKind) -> Self {
+        self.sampler = sampler;
         self
     }
 
@@ -571,6 +584,15 @@ impl<'e> Trainer<'e> {
             }
             _ => None,
         };
+        // `--sampler fenwick`: the pool-sized live distribution (ISSUE 8).
+        // Fresh scores recorded into the cache also land here as O(log n)
+        // partial updates, so resampling never rebuilds from scratch.
+        let mut live: Option<LiveResampler> = match &strategy {
+            StrategyKind::Presample { .. } if self.cfg.sampler == SamplerKind::Fenwick => {
+                Some(LiveResampler::new(train.len(), self.cfg.seed))
+            }
+            _ => None,
+        };
 
         loop {
             // -- termination ---------------------------------------------------
@@ -641,21 +663,46 @@ impl<'e> Trainer<'e> {
                             score_backend(self.backend, self.cfg.score_workers, *score)
                                 .score_subset(&scorer, &pb.x, &pb.y, *score, &stale)
                                 .map(|fresh| {
+                                    if let Some(live) = live.as_mut() {
+                                        // only stale positions touch the
+                                        // live tree: O(stale · log² n)
+                                        for (&p, &v) in stale.iter().zip(&fresh) {
+                                            live.stage(pb.indices[p], v);
+                                        }
+                                    }
                                     cache.record(&pb.indices, &stale, &fresh, step);
                                     cache.lookup(&pb.indices)
                                 })
                         })?;
-                        let plan = timed!(
-                            self.timers,
-                            "resample",
-                            resample_from_scores(
-                                &scores,
-                                self.batch,
-                                &mut self.rng,
-                                self.cfg.use_alias,
-                            )
-                        );
-                        let (x, y) = gather_rows(&pb, &plan.positions);
+                        // fenwick: mixture draws over the whole pool; the
+                        // gate observes the mixture's variance reduction
+                        let mix_lambda =
+                            live.is_some().then(|| mixture::optimal_lambda(&scores));
+                        let (x, y, weights) = match (live.as_mut(), mix_lambda) {
+                            (Some(live), Some(lam)) => {
+                                let plan = timed!(self.timers, "resample", {
+                                    live.commit(step);
+                                    live.plan(self.batch, lam, &mut self.rng)
+                                });
+                                let (x, y) =
+                                    timed!(self.timers, "data", train.batch(&plan.indices, pb.epoch));
+                                (x, y, plan.weights)
+                            }
+                            _ => {
+                                let plan = timed!(
+                                    self.timers,
+                                    "resample",
+                                    resample_from_scores(
+                                        &scores,
+                                        self.batch,
+                                        &mut self.rng,
+                                        self.cfg.sampler,
+                                    )
+                                );
+                                let (x, y) = gather_rows(&pb, &plan.positions);
+                                (x, y, plan.weights)
+                            }
+                        };
                         // §5 extension: linear-scaling rule on the
                         // τ-equivalent batch increase (off when cap = 0)
                         let step_lr = if self.cfg.adaptive_lr_cap > 0.0 {
@@ -666,9 +713,16 @@ impl<'e> Trainer<'e> {
                         let out = timed!(
                             self.timers,
                             "step",
-                            self.backend.train_step(&mut self.state, &x, &y, &plan.weights, step_lr)
+                            self.backend.train_step(&mut self.state, &x, &y, &weights, step_lr)
                         )?;
-                        self.tau.update(&scores);
+                        match mix_lambda {
+                            Some(lam) => {
+                                self.tau.update_raw(mixture::tau_mixture(&scores, lam));
+                            }
+                            None => {
+                                self.tau.update(&scores);
+                            }
+                        }
                         loss = out.loss as f64;
                     } else {
                         is_active = false;
@@ -685,7 +739,21 @@ impl<'e> Trainer<'e> {
                             )
                         )?;
                         // Alg. 1 line 15: scores from the warmup step are free.
-                        self.tau.update(&out.scores);
+                        match live.as_mut() {
+                            Some(live) => {
+                                // fenwick: warmup scores seed the live pool
+                                // distribution, and the gate consistently
+                                // observes the *mixture* variance reduction
+                                for (&i, &v) in b.indices.iter().zip(&out.scores) {
+                                    live.stage(i, v);
+                                }
+                                let lam = mixture::optimal_lambda(&out.scores);
+                                self.tau.update_raw(mixture::tau_mixture(&out.scores, lam));
+                            }
+                            None => {
+                                self.tau.update(&out.scores);
+                            }
+                        }
                         loss = out.loss as f64;
                     }
                 }

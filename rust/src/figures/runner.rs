@@ -20,6 +20,7 @@ use crate::analysis::correlation::correlation_at_state;
 use crate::analysis::variance::{measure_at_state, VarianceConfig};
 use crate::baselines::svrg::{run_svrg, SvrgConfig};
 use crate::coordinator::metrics::CsvSink;
+use crate::coordinator::sampler::SamplerKind;
 use crate::coordinator::trainer::{Trainer, TrainerConfig};
 use crate::coordinator::StrategyKind;
 use crate::data::finetune::FinetuneFeatures;
@@ -51,6 +52,9 @@ pub struct FigOptions {
     /// the score cache (fig7). `None` = the sweep's default budget; it
     /// never changes the full re-score legs.
     pub score_refresh_budget: Option<u64>,
+    /// re-sampling backend for every training run (`--sampler`; default
+    /// alias, the golden-pinned path — see `TrainerConfig::sampler`)
+    pub sampler: SamplerKind,
 }
 
 impl Default for FigOptions {
@@ -64,6 +68,7 @@ impl Default for FigOptions {
             score_workers: default_score_workers(),
             train_workers: default_train_workers(),
             score_refresh_budget: None,
+            sampler: SamplerKind::Alias,
         }
     }
 }
@@ -374,7 +379,8 @@ fn run_strategies(
                 .clone()
                 .with_seed(seed)
                 .with_score_workers(opts.score_workers)
-                .with_train_workers(opts.train_workers);
+                .with_train_workers(opts.train_workers)
+                .with_sampler(opts.sampler);
             c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
             let mut trainer = Trainer::new(backend, c)?;
             let report = trainer.run(&split.train, Some(&split.test))?;

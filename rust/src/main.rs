@@ -48,6 +48,8 @@ MODELS    pjrt: mlp10 cnn10 cnn100 finetune lstm
           native: mlp10 mlp100 conv10 seq64 (MLP / conv / sequence stacks)
 STRATEGY  uniform loss upper-bound gradient-norm loshchilov-hutter schaul
 FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
+          --sampler alias|cumulative|fenwick (resampling backend; fenwick =
+                             O(log n) partial updates + λ-mixture draws)
           --score-workers N (presample scoring threads; default = cores)
           --train-workers N (batch-compute threads, native backend;
                              default = cores; bit-identical for any N)
@@ -68,6 +70,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.a_tau = args.flag_f64("a-tau", cfg.a_tau)?;
     cfg.base_lr = args.flag_f64("lr", cfg.base_lr as f64)? as f32;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    cfg.sampler = args.flag_sampler()?;
     cfg.score_workers = args.flag_score_workers()?;
     cfg.score_refresh_budget = args.flag_score_refresh_budget()?;
     cfg.train_workers = args.flag_train_workers()?;
@@ -121,6 +124,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         score_workers: args.flag_score_workers()?,
         train_workers: args.flag_train_workers()?,
         score_refresh_budget: args.flag_score_refresh_budget()?,
+        sampler: args.flag_sampler()?,
     };
     run_figure(backend.as_ref(), fig, &opts)
 }

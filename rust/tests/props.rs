@@ -18,10 +18,16 @@
 //! which is what carries every worker-count guarantee over to the
 //! cache-blocked hot path. ISSUE 6 adds the score-cache determinism
 //! property: the staleness refresh schedule must be a pure function of
-//! (step, seed), never of the score values themselves.
+//! (step, seed), never of the score values themselves. ISSUE 8 extends
+//! that contract to the Fenwick resampler: the amortized rebuild schedule
+//! (`resample::rebuild_policy`) must be a pure function of
+//! (step, seed, dirty-count, pool size) — monotone in the dirty count,
+//! never firing on a clean tree, always firing on a fully-dirty one.
 
 use isample::coordinator::cache::ScoreCache;
-use isample::coordinator::resample::{importance_weights, AliasSampler, CumulativeSampler};
+use isample::coordinator::resample::{
+    importance_weights, rebuild_policy, AliasSampler, CumulativeSampler, SamplerKind,
+};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::coordinator::tau::{cost_model, TauEstimator};
 use isample::data::sequence::PermutedSequences;
@@ -420,10 +426,52 @@ fn prop_resample_positions_within_presample() {
     check("resample positions bounded", 300, |g: &mut Gen| {
         let scores = g.scores(1..512);
         let b = g.usize_in(1..256);
-        let use_alias = g.bool();
-        let plan = resample_from_scores(&scores, b, &mut g.rng, use_alias);
+        let kind =
+            [SamplerKind::Alias, SamplerKind::Cumulative, SamplerKind::Fenwick][g.usize_in(0..3)];
+        let plan = resample_from_scores(&scores, b, &mut g.rng, kind);
         assert!(plan.positions.iter().all(|&p| p < scores.len()));
         assert!(plan.weights.iter().all(|&w| w.is_finite() && w > 0.0));
+    });
+}
+
+#[test]
+fn prop_rebuild_schedule_is_pure_and_monotone_in_dirty_count() {
+    // ISSUE 8 determinism contract: the Fenwick amortized-rebuild decision
+    // is a pure function of (step, seed, dirty, n) — same inputs, same
+    // answer, regardless of score values or call history — and is monotone
+    // in the dirty count: more staleness never flips rebuild -> update.
+    // The endpoints are pinned: a clean tree never rebuilds, a fully
+    // dirty tree always does.
+    check("rebuild schedule pure + monotone", 300, |g: &mut Gen| {
+        let n = g.usize_in(1..1 << 20);
+        let step = g.rng.next_u64();
+        let seed = g.rng.next_u64();
+        let dirty = g.usize_in(0..n + 1);
+
+        // pure: re-asking must give the same answer
+        let d = rebuild_policy::should_rebuild(step, seed, dirty, n);
+        assert_eq!(d, rebuild_policy::should_rebuild(step, seed, dirty, n));
+
+        // endpoints
+        assert!(!rebuild_policy::should_rebuild(step, seed, 0, n), "rebuilt a clean tree");
+        assert!(rebuild_policy::should_rebuild(step, seed, n, n), "fully dirty must rebuild");
+
+        // monotone in dirty for fixed (step, seed, n)
+        if dirty > 0 {
+            let less = rebuild_policy::should_rebuild(step, seed, dirty - 1, n);
+            assert!(d || !less, "decision flipped true->false from dirty {} to {dirty}", dirty - 1);
+        }
+        if dirty < n {
+            let more = rebuild_policy::should_rebuild(step, seed, dirty + 1, n);
+            assert!(more || !d, "decision flipped true->false from dirty {dirty} to {}", dirty + 1);
+        }
+
+        // the periodic forced rebuild fires on every seed-offset step
+        // (the decision depends on the step only through step % PERIOD)
+        if dirty > 0 {
+            let offset_step = seed % rebuild_policy::REBUILD_PERIOD;
+            assert!(rebuild_policy::should_rebuild(offset_step, seed, dirty, n));
+        }
     });
 }
 

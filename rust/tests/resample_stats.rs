@@ -1,9 +1,12 @@
 //! Statistical coverage for `coordinator::resample` plus the sharded
 //! scoring determinism contract — none of it needs AOT artifacts.
 //!
-//! * The two resampling backends ([`AliasSampler`], [`CumulativeSampler`])
-//!   must recover the same empirical distribution (chi-square tolerance)
-//!   on a fixed-seed SplitMix64 stream.
+//! * The three resampling backends ([`AliasSampler`], [`CumulativeSampler`],
+//!   [`FenwickSampler`]) must recover the same empirical distribution
+//!   (chi-square tolerance) on a fixed-seed SplitMix64 stream.
+//! * A Fenwick tree maintained by `update()` must be **bitwise** identical
+//!   to one rebuilt from scratch on the same leaves — total mass and the
+//!   full draw stream (the partial-update determinism contract).
 //! * Parallel (`ScoreBackend::Threaded`) and serial scoring must produce
 //!   bit-identical score vectors, and therefore bit-identical sampled
 //!   indices for a fixed seed.
@@ -14,7 +17,7 @@
 //!   distribution the fresh scores define (chi-square).
 
 use isample::coordinator::cache::ScoreCache;
-use isample::coordinator::resample::{AliasSampler, CumulativeSampler};
+use isample::coordinator::resample::{AliasSampler, CumulativeSampler, FenwickSampler, SamplerKind};
 use isample::coordinator::sampler::resample_from_scores;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
@@ -52,25 +55,34 @@ fn chi_square_two_sample(a: &[u64], b: &[u64]) -> f64 {
     chi2
 }
 
-fn empirical_counts(probs: &[f32], draws: u64, use_alias: bool, seed: u64) -> Vec<u64> {
+fn empirical_counts(probs: &[f32], draws: u64, kind: SamplerKind, seed: u64) -> Vec<u64> {
     let mut rng = SplitMix64::new(seed);
     let mut counts = vec![0u64; probs.len()];
-    if use_alias {
-        let s = AliasSampler::new(probs);
-        for _ in 0..draws {
-            counts[s.draw(&mut rng)] += 1;
+    match kind {
+        SamplerKind::Alias => {
+            let s = AliasSampler::new(probs);
+            for _ in 0..draws {
+                counts[s.draw(&mut rng)] += 1;
+            }
         }
-    } else {
-        let s = CumulativeSampler::new(probs);
-        for _ in 0..draws {
-            counts[s.draw(&mut rng)] += 1;
+        SamplerKind::Cumulative => {
+            let s = CumulativeSampler::new(probs);
+            for _ in 0..draws {
+                counts[s.draw(&mut rng)] += 1;
+            }
+        }
+        SamplerKind::Fenwick => {
+            let s = FenwickSampler::new(probs);
+            for _ in 0..draws {
+                counts[s.draw(&mut rng)] += 1;
+            }
         }
     }
     counts
 }
 
 #[test]
-fn alias_and_cumulative_agree_in_distribution_chi_square() {
+fn all_backends_agree_in_distribution_chi_square() {
     // 16-bin support incl. a zero-probability bin and a heavy tail.
     let mut scores: Vec<f32> = (0..16).map(|i| 0.05 + ((i * 7) % 11) as f32 / 11.0).collect();
     scores[3] = 0.0;
@@ -78,19 +90,54 @@ fn alias_and_cumulative_agree_in_distribution_chi_square() {
     let probs = normalize_probs(&scores);
     let draws = 200_000u64;
 
-    let alias = empirical_counts(&probs, draws, true, 0xC0FFEE);
-    let cdf = empirical_counts(&probs, draws, false, 0xC0FFEE ^ 1);
+    let alias = empirical_counts(&probs, draws, SamplerKind::Alias, 0xC0FFEE);
+    let cdf = empirical_counts(&probs, draws, SamplerKind::Cumulative, 0xC0FFEE ^ 1);
+    let fenwick = empirical_counts(&probs, draws, SamplerKind::Fenwick, 0xC0FFEE ^ 2);
 
     // df = 14 (15 live bins − 1): the 99.9% quantile is ~36.1. On a fixed
     // seed anything in that region is a sampler bug, not bad luck.
     let chi_alias = chi_square_vs_expected(&alias, &probs, draws);
     let chi_cdf = chi_square_vs_expected(&cdf, &probs, draws);
+    let chi_fen = chi_square_vs_expected(&fenwick, &probs, draws);
     assert!(chi_alias < 40.0, "alias off-distribution: chi2 {chi_alias}");
     assert!(chi_cdf < 40.0, "cumulative off-distribution: chi2 {chi_cdf}");
+    assert!(chi_fen < 40.0, "fenwick off-distribution: chi2 {chi_fen}");
 
-    // and against each other (df = 14 again, homogeneity test)
-    let chi_pair = chi_square_two_sample(&alias, &cdf);
-    assert!(chi_pair < 40.0, "backends disagree: chi2 {chi_pair}");
+    // and pairwise against each other (df = 14 again, homogeneity tests)
+    let chi_ac = chi_square_two_sample(&alias, &cdf);
+    let chi_af = chi_square_two_sample(&alias, &fenwick);
+    assert!(chi_ac < 40.0, "alias vs cumulative disagree: chi2 {chi_ac}");
+    assert!(chi_af < 40.0, "alias vs fenwick disagree: chi2 {chi_af}");
+}
+
+#[test]
+fn fenwick_update_matches_rebuild_bitwise_across_draw_stream() {
+    // The partial-update determinism contract at integration scale: after
+    // scattered `update()`s the tree must equal a from-scratch build on
+    // the same leaves — same total mass to the bit, same 200k-draw stream.
+    let n = 4_096usize;
+    let mut leaves: Vec<f32> = (0..n).map(|i| 0.01 + ((i * 131) % 997) as f32 / 997.0).collect();
+    let mut updated = FenwickSampler::new(&leaves);
+    for k in 0..700 {
+        let i = (k * 53) % n;
+        let v = ((k * 17) % 29) as f32 / 7.0; // hits 0.0 too (zeroed leaves)
+        leaves[i] = v;
+        updated.update(i, v);
+    }
+    let fresh = FenwickSampler::new(&leaves);
+    assert_eq!(
+        updated.total_mass().to_bits(),
+        fresh.total_mass().to_bits(),
+        "total mass diverged bitwise after 700 partial updates"
+    );
+    let mut rng_u = SplitMix64::new(0xFE11);
+    let mut rng_f = SplitMix64::new(0xFE11);
+    for d in 0..200_000u64 {
+        let a = updated.draw(&mut rng_u);
+        let b = fresh.draw(&mut rng_f);
+        assert_eq!(a, b, "draw {d} diverged: updated {a} vs fresh {b}");
+        assert!(leaves[a] > 0.0, "draw {d} selected a zero-weight leaf {a}");
+    }
 }
 
 #[test]
@@ -138,8 +185,8 @@ fn cached_distribution_matches_fresh_rebuild_at_refresh_boundaries() {
     // re-scoring cycle would have selected
     let mut rng_c = SplitMix64::new(123);
     let mut rng_f = SplitMix64::new(123);
-    let plan_c = resample_from_scores(&cache.lookup(&indices), 64, &mut rng_c, true);
-    let plan_f = resample_from_scores(&rebuilt, 64, &mut rng_f, true);
+    let plan_c = resample_from_scores(&cache.lookup(&indices), 64, &mut rng_c, SamplerKind::Alias);
+    let plan_f = resample_from_scores(&rebuilt, 64, &mut rng_f, SamplerKind::Alias);
     assert_eq!(plan_c.positions, plan_f.positions);
     assert_eq!(plan_c.weights, plan_f.weights);
     assert_eq!(plan_c.probs, plan_f.probs);
@@ -161,14 +208,14 @@ fn cached_distribution_sampling_stays_on_distribution_chi_square() {
     cache.record(&indices, &all, &fresh, 1);
     let probs = normalize_probs(&cache.lookup(&indices));
     let draws = 200_000u64;
-    let counts = empirical_counts(&probs, draws, true, 0xD1CE);
+    let counts = empirical_counts(&probs, draws, SamplerKind::Alias, 0xD1CE);
     // df = 63: the 99.9% quantile is ~104. Fixed seed — exceeding the
     // padded bound means the cached path corrupted the distribution.
     let chi2 = chi_square_vs_expected(&counts, &probs, draws);
     assert!(chi2 < 120.0, "cached-distribution draws off-distribution: chi2 {chi2}");
 
     // homogeneity against a draw stream from the freshly-computed probs
-    let counts_fresh = empirical_counts(&normalize_probs(&fresh), draws, true, 0xF00D);
+    let counts_fresh = empirical_counts(&normalize_probs(&fresh), draws, SamplerKind::Alias, 0xF00D);
     let chi_pair = chi_square_two_sample(&counts, &counts_fresh);
     assert!(chi_pair < 120.0, "cached vs fresh draw streams disagree: chi2 {chi_pair}");
 }
@@ -192,8 +239,8 @@ fn parallel_and_serial_scoring_yield_identical_sampled_indices() {
         // identical scores + identically-seeded rng => identical resample
         let mut rng_s = SplitMix64::new(123);
         let mut rng_p = SplitMix64::new(123);
-        let plan_s = resample_from_scores(&serial, 128, &mut rng_s, true);
-        let plan_p = resample_from_scores(&par, 128, &mut rng_p, true);
+        let plan_s = resample_from_scores(&serial, 128, &mut rng_s, SamplerKind::Alias);
+        let plan_p = resample_from_scores(&par, 128, &mut rng_p, SamplerKind::Alias);
         assert_eq!(plan_s.positions, plan_p.positions, "{workers} workers");
         assert_eq!(plan_s.weights, plan_p.weights, "{workers} workers");
         assert_eq!(plan_s.probs, plan_p.probs, "{workers} workers");
@@ -214,8 +261,8 @@ fn scoring_determinism_holds_for_every_kind_and_the_cdf_backend() {
 
         let mut rng_s = SplitMix64::new(77);
         let mut rng_p = SplitMix64::new(77);
-        let plan_s = resample_from_scores(&serial, 64, &mut rng_s, false);
-        let plan_p = resample_from_scores(&par, 64, &mut rng_p, false);
+        let plan_s = resample_from_scores(&serial, 64, &mut rng_s, SamplerKind::Cumulative);
+        let plan_p = resample_from_scores(&par, 64, &mut rng_p, SamplerKind::Cumulative);
         assert_eq!(plan_s.positions, plan_p.positions, "kind {}", kind.name());
     }
 }
