@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         train_workers: args.flag_train_workers()?,
         score_refresh_budget: args.flag_score_refresh_budget()?,
         sampler: args.flag_sampler()?,
+        score_precision: args.flag_score_precision()?,
     };
     let sw = Stopwatch::new();
     run_figure(backend.as_ref(), "fig1", &opts)?;

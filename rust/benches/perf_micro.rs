@@ -10,9 +10,14 @@
 //! against the scalar-reference layer walk (forward+backward rows/sec per
 //! model, plus the score-only fast path vs a full-scratch forward),
 //! asserts the block path is **bit-identical** to the reference *and* at
-//! least 1.5x faster on mlp10 and conv10 (the ISSUE 5 acceptance floor,
-//! gated on best-observed iterations so runner noise cannot flake it),
-//! and writes `BENCH_kernels.json` (`--out-json-kernels PATH`).
+//! least 2.5x faster on mlp10 and conv10 (the SIMD-era acceptance floor —
+//! raised from ISSUE 5's autovectorizer-era 1.5x; gated on best-observed
+//! iterations so runner noise cannot flake it), and writes
+//! `BENCH_kernels.json` (`--out-json-kernels PATH`). Two extra legs ride
+//! along under the `bench_trend.py` gate: `simd_vs_autovec` (the blocked
+//! walk with dispatch pinned to the scalar tiles vs the explicit-SIMD
+//! default — what the hand-written lanes buy over the autovectorizer) and
+//! `bf16_score` (the bf16-storage scoring fast path vs the f32 one).
 //!
 //! The `score/` section measures serial-vs-sharded presample scoring on
 //! the pure-rust [`NativeScorer`] (no artifacts needed), asserts the
@@ -65,7 +70,9 @@ use isample::runtime::checkpoint::state_checksum;
 use isample::runtime::init::init_params;
 use isample::runtime::kernels::MAX_BLOCK_ROWS;
 use isample::runtime::score::{default_score_workers, NativeScorer, ScoreBackend, ScoreKind};
-use isample::runtime::{default_train_workers, Engine, NativeEngine};
+use isample::runtime::{
+    default_train_workers, set_forced_kernel_path, BlockScratch, Engine, KernelPath, NativeEngine,
+};
 use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
 use isample::util::digest::digest_f64;
 use isample::util::rng::SplitMix64;
@@ -272,11 +279,15 @@ fn main() -> anyhow::Result<()> {
 
     // ---------------- block compute kernels ----------------
     // Blocked vs scalar-reference rows/sec for the native layer walks
-    // (ISSUE 5 acceptance: blocked fwd+bwd >= 1.5x the scalar reference on
-    // mlp10 and conv10 — asserted here, recorded in BENCH_kernels.json),
-    // plus the score-only fast path vs the old full-scratch per-row
-    // forward. Outputs are additionally asserted bit-identical, so this
-    // bench doubles as a kernel-correctness smoke.
+    // (acceptance: blocked fwd+bwd >= 2.5x the scalar reference on mlp10
+    // and conv10 with the explicit-SIMD tiles — raised from ISSUE 5's
+    // autovectorizer-era 1.5x; asserted here, recorded in
+    // BENCH_kernels.json), the blocked walk on the scalar-tile dispatch
+    // path (the `simd_vs_autovec` leg), the score-only fast path vs the
+    // old full-scratch per-row forward, and the bf16-storage scoring fast
+    // path vs the f32 one (the `bf16_score` leg). Outputs are
+    // additionally asserted bit-identical (f32 legs) or path-invariant
+    // (bf16), so this bench doubles as a kernel-correctness smoke.
     if run("kernels/") {
         let mut suite = BenchSuite::new();
         let native = NativeEngine::with_default_models();
@@ -312,18 +323,19 @@ fn main() -> anyhow::Result<()> {
                 black_box(&grads_ref);
             });
 
-            // forward+backward: the block-kernel walk
+            // forward+backward: the block-kernel walk (shared by the
+            // default-dispatch and forced-scalar-tile legs)
             let mut bs = m.block_scratch();
             let mut grads_blk = m.zero_grads();
-            let r_block = bench(&format!("kernels/{model_name}/fwd_bwd_blocked"), target, || {
-                for g in grads_blk.iter_mut() {
+            let blocked_walk = |bs: &mut BlockScratch, grads: &mut Vec<Vec<f32>>| {
+                for g in grads.iter_mut() {
                     g.fill(0.0);
                 }
                 let mut start = 0usize;
                 while start < rows {
                     let b = (rows - start).min(MAX_BLOCK_ROWS);
                     let xb = &x[start * d..(start + b) * d];
-                    m.forward_block(&params, xb, b, &mut bs);
+                    m.forward_block(&params, xb, b, bs);
                     let pm = bs.probs_mut();
                     for r in 0..b {
                         let yy = m.clamp_label(y[start + r]);
@@ -333,9 +345,12 @@ fn main() -> anyhow::Result<()> {
                             *g *= coeff;
                         }
                     }
-                    m.backward_block(&params, xb, b, &mut bs, &mut grads_blk);
+                    m.backward_block(&params, xb, b, bs, grads);
                     start += b;
                 }
+            };
+            let r_block = bench(&format!("kernels/{model_name}/fwd_bwd_blocked"), target, || {
+                blocked_walk(&mut bs, &mut grads_blk);
                 black_box(&grads_blk);
             });
             assert_eq!(
@@ -356,9 +371,9 @@ fn main() -> anyhow::Result<()> {
                 r_scalar.rows_per_sec(rows)
             );
             assert!(
-                speedup_best >= 1.5,
+                speedup_best >= 2.5,
                 "kernels/{model_name}: blocked fwd+bwd best case is only {speedup_best:.2}x \
-                 the scalar reference (mean {speedup:.2}x; acceptance floor: 1.5x)"
+                 the scalar reference (mean {speedup:.2}x; acceptance floor: 2.5x)"
             );
             let sps_scalar = r_scalar.rows_per_sec(rows);
             let sps_block = r_block.rows_per_sec(rows);
@@ -366,6 +381,38 @@ fn main() -> anyhow::Result<()> {
             suite.metric(&format!("{model_name}_fwd_bwd_best_speedup"), speedup_best);
             suite.metric(&format!("{model_name}_fwd_bwd_scalar_rows_per_sec"), sps_scalar);
             suite.metric(&format!("{model_name}_fwd_bwd_blocked_rows_per_sec"), sps_block);
+
+            // simd_vs_autovec leg: the same blocked walk with dispatch
+            // pinned to the scalar tiles — what the explicit lanes buy
+            // over the autovectorizer. Bit-identity across paths is the
+            // tentpole contract, so the gradients must not move.
+            set_forced_kernel_path(Some(KernelPath::Scalar));
+            let r_autovec =
+                bench(&format!("kernels/{model_name}/fwd_bwd_blocked_scalar_tiles"), target, || {
+                    blocked_walk(&mut bs, &mut grads_blk);
+                    black_box(&grads_blk);
+                });
+            set_forced_kernel_path(None);
+            assert_eq!(
+                grads_blk, grads_ref,
+                "kernels/{model_name}: scalar-tile gradients must be bit-identical too"
+            );
+            let simd_vs_autovec = r_autovec.mean_ns / r_block.mean_ns.max(1e-9);
+            let simd_vs_autovec_best = r_autovec.min_ns / r_block.min_ns.max(1e-9);
+            println!(
+                "kernels/{model_name}: SIMD tiles {simd_vs_autovec:.2}x the autovectorized \
+                 scalar tiles (best {simd_vs_autovec_best:.2}x, {:.0} rows/s scalar tiles)",
+                r_autovec.rows_per_sec(rows)
+            );
+            suite.metric(&format!("{model_name}_simd_vs_autovec_speedup"), simd_vs_autovec);
+            suite.metric(
+                &format!("{model_name}_simd_vs_autovec_best_speedup"),
+                simd_vs_autovec_best,
+            );
+            suite.metric(
+                &format!("{model_name}_fwd_bwd_scalar_tiles_rows_per_sec"),
+                r_autovec.rows_per_sec(rows),
+            );
 
             // score-only fast path vs the old full-scratch per-row forward
             let mut loss_b = vec![0.0f32; rows];
@@ -413,10 +460,65 @@ fn main() -> anyhow::Result<()> {
             let fast_rps = r_fast.rows_per_sec(rows);
             suite.metric(&format!("{model_name}_score_fastpath_speedup"), score_speedup);
             suite.metric(&format!("{model_name}_score_fastpath_rows_per_sec"), fast_rps);
+
+            // bf16_score leg: the reduced-precision scoring fast path
+            // (bf16 parameter storage, f32 accumulate) vs the f32 one.
+            // Value fidelity is pinned by the library tests; here the
+            // walk only has to be deterministic (two passes, same bits).
+            let qp = m.quantize_params(&params);
+            let mut loss_q = vec![0.0f32; rows];
+            let mut ub_q = vec![0.0f32; rows];
+            let r_bf16 = bench(&format!("kernels/{model_name}/score_bf16"), target, || {
+                let mut start = 0usize;
+                while start < rows {
+                    let b = (rows - start).min(MAX_BLOCK_ROWS);
+                    m.scores_block_bf16(
+                        &qp,
+                        &x[start * d..(start + b) * d],
+                        &y[start..start + b],
+                        b,
+                        &mut bs,
+                        &mut loss_q[start..start + b],
+                        &mut ub_q[start..start + b],
+                    );
+                    start += b;
+                }
+                black_box(&ub_q);
+            });
+            let ub_q_ref = ub_q.clone();
+            let mut start = 0usize;
+            while start < rows {
+                let b = (rows - start).min(MAX_BLOCK_ROWS);
+                m.scores_block_bf16(
+                    &qp,
+                    &x[start * d..(start + b) * d],
+                    &y[start..start + b],
+                    b,
+                    &mut bs,
+                    &mut loss_q[start..start + b],
+                    &mut ub_q[start..start + b],
+                );
+                start += b;
+            }
+            assert_eq!(ub_q, ub_q_ref, "kernels/{model_name}: bf16 scores must be deterministic");
+            let bf16_speedup = r_fast.mean_ns / r_bf16.mean_ns.max(1e-9);
+            println!(
+                "kernels/{model_name}: bf16 score path {bf16_speedup:.2}x the f32 fast path \
+                 ({:.0} rows/s)",
+                r_bf16.rows_per_sec(rows)
+            );
+            suite.metric(&format!("{model_name}_bf16_score_speedup"), bf16_speedup);
+            suite.metric(
+                &format!("{model_name}_bf16_score_rows_per_sec"),
+                r_bf16.rows_per_sec(rows),
+            );
+
             suite.push(r_scalar);
             suite.push(r_block);
+            suite.push(r_autovec);
             suite.push(r_fast);
             suite.push(r_slow);
+            suite.push(r_bf16);
         }
         suite.metric("rows", 256.0);
         let out = args.flag("out-json-kernels").unwrap_or("BENCH_kernels.json");

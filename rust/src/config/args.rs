@@ -34,8 +34,8 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    flags.insert(name.to_string(), it.next().unwrap());
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    flags.insert(name.to_string(), v);
                 } else {
                     flags.insert(name.to_string(), "true".to_string());
                 }
@@ -146,6 +146,22 @@ impl Args {
         }
     }
 
+    /// `--score-precision f32|bf16` — numeric precision of the presample
+    /// scoring pass. `f32` (default): scoring is bit-identical to the
+    /// training forward (the golden-pinned path). `bf16`: parameters are
+    /// walked in bf16 storage — cheaper scoring, same score *ranking* to
+    /// within the pinned overlap threshold, NOT bit-comparable to f32.
+    /// Training numerics are always f32 either way.
+    pub fn flag_score_precision(&self) -> Result<crate::runtime::score::ScorePrecision> {
+        use crate::runtime::score::ScorePrecision;
+        match self.flag("score-precision") {
+            None => Ok(ScorePrecision::F32),
+            Some(v) => ScorePrecision::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("--score-precision must be `f32` or `bf16`, got {v:?}")
+            }),
+        }
+    }
+
     /// Comma-separated u64 list (for `--seeds 1,2,3`).
     pub fn flag_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
         match self.flags.get(name) {
@@ -252,6 +268,22 @@ mod tests {
         assert!(matches!(args("train --sampler cdf").flag_sampler(), Ok(SamplerKind::Cumulative)));
         assert!(matches!(args("train --sampler fenwick").flag_sampler(), Ok(SamplerKind::Fenwick)));
         assert!(args("train --sampler vose").flag_sampler().is_err());
+    }
+
+    #[test]
+    fn score_precision_flag() {
+        use crate::runtime::score::ScorePrecision;
+        // `matches!` (not unwrap) honors the detlint ratchet on this file
+        assert!(matches!(args("train").flag_score_precision(), Ok(ScorePrecision::F32)));
+        assert!(matches!(
+            args("train --score-precision f32").flag_score_precision(),
+            Ok(ScorePrecision::F32)
+        ));
+        assert!(matches!(
+            args("train --score-precision=bf16").flag_score_precision(),
+            Ok(ScorePrecision::Bf16)
+        ));
+        assert!(args("train --score-precision fp16").flag_score_precision().is_err());
     }
 
     #[test]

@@ -27,7 +27,7 @@ use anyhow::{bail, Result};
 
 use crate::data::Dataset;
 use crate::runtime::pool::default_train_workers;
-use crate::runtime::score::{default_score_workers, BackendScorer, ScoreBackend};
+use crate::runtime::score::{default_score_workers, BackendScorer, ScoreBackend, ScorePrecision};
 use crate::runtime::{Backend, ModelInfo, ModelState};
 use crate::util::rng::SplitMix64;
 use crate::util::timer::{PhaseTimers, Stopwatch};
@@ -173,6 +173,14 @@ pub struct TrainerConfig {
     /// (`runtime::native::train_chunk_plan`). Applied to the backend at
     /// [`Trainer::new`].
     pub train_workers: usize,
+    /// Presample scoring precision (`--score-precision`): `Bf16` walks
+    /// bf16-stored parameters in the scoring forward (half the weight
+    /// streaming; score *ranking* preserved to within the pinned overlap
+    /// threshold) while training, eval and the gradient-norm oracle stay
+    /// f32. `F32` (default) keeps scoring bit-identical to the training
+    /// forward — the golden-pinned behavior. Applied to the backend at
+    /// [`Trainer::new`]; PJRT ignores it (artifacts are baked at f32).
+    pub score_precision: ScorePrecision,
     /// record a metrics row every `log_every` steps.
     pub log_every: u64,
     /// The paper's §5 future-work extension: when importance sampling is
@@ -236,6 +244,7 @@ impl TrainerConfig {
             score_workers: default_score_workers(),
             score_refresh_budget: None,
             train_workers: default_train_workers(),
+            score_precision: ScorePrecision::F32,
             log_every: 10,
             adaptive_lr_cap: 0.0,
         }
@@ -307,6 +316,12 @@ impl TrainerConfig {
         self
     }
 
+    /// Set the presample scoring precision (see `score_precision`).
+    pub fn with_score_precision(mut self, precision: ScorePrecision) -> Self {
+        self.score_precision = precision;
+        self
+    }
+
     /// The scoring entry (and batch size) this strategy needs beyond
     /// `train_step`, with `presample == 0` resolved to the model's largest
     /// advertised B — the exact resolution [`Trainer::new`] applies. One
@@ -356,6 +371,8 @@ impl<'e> Trainer<'e> {
         // tune the backend's data-parallel batch compute for this run
         // (bit-identical for any count, so safe on every strategy)
         backend.set_train_workers(cfg.train_workers.max(1));
+        // scoring precision only touches fwd_scores; training stays f32
+        backend.set_score_precision(cfg.score_precision);
         let info = backend.model_info(&cfg.model)?;
         let batch = info.batch;
         let eval_batch = info.eval_batch;

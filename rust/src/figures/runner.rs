@@ -28,7 +28,7 @@ use crate::data::sequence::PermutedSequences;
 use crate::data::synthetic::SyntheticImages;
 use crate::data::{Dataset, Split};
 use crate::runtime::pool::default_train_workers;
-use crate::runtime::score::default_score_workers;
+use crate::runtime::score::{default_score_workers, ScorePrecision};
 use crate::runtime::Backend;
 
 /// Shared options for every figure harness.
@@ -55,6 +55,10 @@ pub struct FigOptions {
     /// re-sampling backend for every training run (`--sampler`; default
     /// alias, the golden-pinned path — see `TrainerConfig::sampler`)
     pub sampler: SamplerKind,
+    /// presample scoring precision for every training run
+    /// (`--score-precision`; default f32, the golden-pinned path — see
+    /// `TrainerConfig::score_precision`)
+    pub score_precision: ScorePrecision,
 }
 
 impl Default for FigOptions {
@@ -69,6 +73,7 @@ impl Default for FigOptions {
             train_workers: default_train_workers(),
             score_refresh_budget: None,
             sampler: SamplerKind::Alias,
+            score_precision: ScorePrecision::F32,
         }
     }
 }
@@ -380,7 +385,8 @@ fn run_strategies(
                 .with_seed(seed)
                 .with_score_workers(opts.score_workers)
                 .with_train_workers(opts.train_workers)
-                .with_sampler(opts.sampler);
+                .with_sampler(opts.sampler)
+                .with_score_precision(opts.score_precision);
             c.eval_every_secs = (opts.budget_secs / 12.0).max(1.0);
             let mut trainer = Trainer::new(backend, c)?;
             let report = trainer.run(&split.train, Some(&split.test))?;

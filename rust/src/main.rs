@@ -55,6 +55,8 @@ FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
                              default = cores; bit-identical for any N)
           --score-refresh-budget K|inf (serve cached presample scores for up
                              to K steps of age; inf = re-score every cycle)
+          --score-precision f32|bf16 (presample scoring precision; bf16 =
+                             cheaper scoring, ranking-fidelity contract)
           --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
 "#;
 
@@ -74,6 +76,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     cfg.score_workers = args.flag_score_workers()?;
     cfg.score_refresh_budget = args.flag_score_refresh_budget()?;
     cfg.train_workers = args.flag_train_workers()?;
+    cfg.score_precision = args.flag_score_precision()?;
     cfg.eval_every_secs = args.flag_f64("eval-every", 10.0)?;
     if let Some(b) = args.flag("budget") {
         cfg = cfg.with_budget(b.parse().context("--budget")?);
@@ -125,6 +128,7 @@ fn cmd_figure(args: &Args, artifacts: &str) -> Result<()> {
         train_workers: args.flag_train_workers()?,
         score_refresh_budget: args.flag_score_refresh_budget()?,
         sampler: args.flag_sampler()?,
+        score_precision: args.flag_score_precision()?,
     };
     run_figure(backend.as_ref(), fig, &opts)
 }

@@ -32,6 +32,7 @@ use xla::Literal;
 use super::engine::{Engine, ModelState, StepOutput};
 use super::manifest::ModelInfo;
 use super::native::NativeEngine;
+use super::score::ScorePrecision;
 use super::tensor::HostTensor;
 
 /// An execution substrate for training, scoring and evaluation.
@@ -71,6 +72,14 @@ pub trait Backend: Sync {
     fn train_workers(&self) -> usize {
         1
     }
+
+    /// Set the numeric precision of the presample scoring pass
+    /// (`--score-precision`). Only `fwd_scores` is affected — training,
+    /// eval and the gradient-norm oracle always run f32. Interior-mutable
+    /// like [`set_train_workers`](Self::set_train_workers). Backends
+    /// without a reduced-precision walk (PJRT artifacts are baked at f32)
+    /// ignore it and keep scoring in f32.
+    fn set_score_precision(&self, _precision: ScorePrecision) {}
 
     /// One weighted SGD+momentum step (Eq. 2). Updates `state` in place and
     /// returns the weighted mean loss plus the per-sample loss and Eq.-20

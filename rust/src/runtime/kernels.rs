@@ -10,8 +10,7 @@
 //! * weight traffic is amortized across the block (each weight row is
 //!   loaded once and applied to every row lane), and
 //! * accumulator tiles live in registers across the whole reduction (the
-//!   fixed `MR × NR` lane grid), with unit-stride inner loops the
-//!   autovectorizer can turn into SIMD.
+//!   fixed `MR × NR` lane grid), with unit-stride inner loops.
 //!
 //! # Determinism contract (bit-identity with the scalar walk)
 //!
@@ -40,18 +39,55 @@
 //! are `-0.0`). `rust/tests/props.rs` pins the resulting block == scalar
 //! bit-identity across random shapes, block splits and architectures.
 //!
-//! Consequently the block-batched passes are bit-identical to the
-//! per-row scalar walk — numerics are a pure function of the model dims
-//! and the row values, never of the internal block size, the chunk plan
-//! or the worker count. The PR 3/4 parallel==serial guarantees and the
-//! golden trajectories carry over unchanged.
+//! # SIMD dispatch
+//!
+//! The full `MR × NR` register tiles exist twice: as plain scalar loops
+//! (the executable spec, and the fallback on every target) and as explicit
+//! SSE2 implementations (`mod simd`, x86_64 only) that widen the *output*
+//! lanes four at a time instead of waiting on the autovectorizer.
+//! Dispatch is runtime, not compile-time: [`active_path`] resolves to
+//! [`KernelPath::Simd`] when the host supports it, can be pinned
+//! process-wide with the `ISAMPLE_FORCE_SCALAR` environment variable
+//! (read once, the CI scalar-fallback leg), and can be overridden
+//! in-process via [`set_forced_kernel_path`] (tests and benches). Every
+//! dispatched kernel also has a `*_on(path, ..)` variant that selects a
+//! path explicitly, ignoring the override.
+//!
+//! The SIMD tiles obey the exact same contract as the scalar tiles: SSE2
+//! has no FMA contraction — `_mm_mul_ps`/`_mm_add_ps` perform one
+//! IEEE-754 rounding per lane per op, just like the scalar `*`/`+` — and
+//! lanes span only independent output elements while every reduction
+//! stays sequential in the reference index order. Both paths are
+//! therefore **bit-identical** and the dispatch choice is unobservable
+//! (pinned by the in-module tests and `rust/tests/props.rs`); no goldens
+//! move when the default flips. Edge tiles, [`bias_init`], [`im2col`] and
+//! [`col2im_acc`] stay scalar: the latter three are pure data movement
+//! (`copy_from_slice` lowers to memcpy — already optimal), and partial
+//! tiles are cold by construction.
+//!
+//! # bf16 storage kernels
+//!
+//! [`gemm_acc_bf16`] / [`bias_init_bf16`] take the *parameters* in bf16
+//! storage (`u16` bit patterns, [`crate::util::bf16`]), widen each value
+//! to f32 on the fly (an exact `<< 16` bit extension — no rounding) and
+//! accumulate in f32 with the same per-element chains as the f32 kernels.
+//! They halve parameter memory traffic for the presample scoring fast
+//! path. Results are NOT bit-comparable to the f32 kernels (the storage
+//! narrowing rounds every weight once), but the Scalar and Simd paths of
+//! the bf16 kernels are bit-identical to each other: the SSE2 widening is
+//! the same `<< 16` the scalar helper performs.
+
+use crate::util::bf16::bf16_to_f32;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 /// Row lanes per microkernel tile (how many batch rows one register tile
 /// covers). 4 row lanes × [`NR`] output lanes = 32 f32 accumulators — a
 /// full register tile on SSE2, still comfortable on AVX.
 pub const MR: usize = 4;
 
-/// Output-unit lanes per microkernel tile (unit-stride, SIMD-friendly).
+/// Output-unit lanes per microkernel tile (unit-stride, two 4-wide SSE2
+/// vectors).
 pub const NR: usize = 8;
 
 /// Row count per internal sub-block of a batch-level pass. Bounds the
@@ -59,15 +95,116 @@ pub const NR: usize = 8;
 /// module-level determinism contract).
 pub const MAX_BLOCK_ROWS: usize = 32;
 
+/// Which implementation of the full register tiles runs. Both paths are
+/// bit-identical (see the module docs); the choice is purely about speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Plain scalar loops — the executable spec, available everywhere.
+    Scalar,
+    /// Explicit SSE2 tiles on x86_64. On other targets this path is a
+    /// *request* and resolves to the scalar tiles.
+    Simd,
+}
+
+impl KernelPath {
+    /// Stable name for logs and bench metric labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Simd => "simd",
+        }
+    }
+}
+
+/// Both dispatchable paths, for tests and benches that sweep them.
+pub const KERNEL_PATHS: [KernelPath; 2] = [KernelPath::Scalar, KernelPath::Simd];
+
+/// In-process dispatch override: 0 = none, 1 = scalar, 2 = simd.
+static FORCED_PATH: AtomicU8 = AtomicU8::new(0);
+
+/// Force every dispatched kernel ([`gemm_acc`] & co — NOT the explicit
+/// `*_on` variants) onto one path, or `None` to restore the default.
+/// Process-global; safe to flip at any time because both paths are
+/// bit-identical — a racing reader merely runs the other (equal) tiles.
+pub fn set_forced_kernel_path(path: Option<KernelPath>) {
+    let v = match path {
+        None => 0,
+        Some(KernelPath::Scalar) => 1,
+        Some(KernelPath::Simd) => 2,
+    };
+    FORCED_PATH.store(v, Ordering::SeqCst);
+}
+
+/// True when the host can actually run the explicit SIMD tiles.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SSE2 is part of the x86_64 baseline ABI, so this is always
+        // true in practice; the runtime check keeps the dispatch honest
+        // and the pattern ready for wider tiles.
+        is_x86_feature_detected!("sse2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn default_path() -> KernelPath {
+    static DEFAULT: OnceLock<KernelPath> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        let forced_scalar =
+            std::env::var_os("ISAMPLE_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0");
+        if !forced_scalar && simd_available() {
+            KernelPath::Simd
+        } else {
+            KernelPath::Scalar
+        }
+    })
+}
+
+/// The path the argument-less kernels dispatch to right now: the
+/// [`set_forced_kernel_path`] override if set, else the cached default
+/// (`ISAMPLE_FORCE_SCALAR` environment flag, read once, then hardware
+/// feature detection).
+pub fn active_path() -> KernelPath {
+    match FORCED_PATH.load(Ordering::Relaxed) {
+        1 => KernelPath::Scalar,
+        2 => KernelPath::Simd,
+        _ => default_path(),
+    }
+}
+
+#[inline]
+fn take_simd(path: KernelPath) -> bool {
+    path == KernelPath::Simd && simd_available()
+}
+
 /// `c[r, o] += Σ_i a[r, i] · w[i, o]` for a `rows × k` row-major `a`, a
 /// `k × n` row-major `w` and a `rows × n` row-major `c` (which the caller
 /// pre-initializes — bias rows for a forward pass, zeros for a fresh
 /// accumulation). Per element the reduction is `i`-ascending, extending
 /// whatever value `c` already holds — exactly the scalar forward walk.
+/// Runs the [`active_path`] tiles; see [`gemm_acc_on`].
 pub fn gemm_acc(a: &[f32], rows: usize, k: usize, w: &[f32], n: usize, c: &mut [f32]) {
+    gemm_acc_on(active_path(), a, rows, k, w, n, c);
+}
+
+/// [`gemm_acc`] with explicit tile selection (ignores the dispatch
+/// override — tests and benches use this to pin a path).
+pub fn gemm_acc_on(
+    path: KernelPath,
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), rows * k, "gemm_acc: a shape");
     assert_eq!(w.len(), k * n, "gemm_acc: w shape");
     assert_eq!(c.len(), rows * n, "gemm_acc: c shape");
+    let simd = take_simd(path);
     let mut r0 = 0;
     while r0 < rows {
         let mr = (rows - r0).min(MR);
@@ -75,7 +212,11 @@ pub fn gemm_acc(a: &[f32], rows: usize, k: usize, w: &[f32], n: usize, c: &mut [
         while o0 < n {
             let nr = (n - o0).min(NR);
             if mr == MR && nr == NR {
-                gemm_tile(a, r0, k, w, o0, n, c);
+                if simd {
+                    simd::gemm_tile(a, r0, k, w, o0, n, c);
+                } else {
+                    gemm_tile(a, r0, k, w, o0, n, c);
+                }
             } else {
                 gemm_edge(a, r0, mr, k, w, o0, nr, n, c);
             }
@@ -85,7 +226,7 @@ pub fn gemm_acc(a: &[f32], rows: usize, k: usize, w: &[f32], n: usize, c: &mut [
     }
 }
 
-/// The full `MR × NR` register tile of [`gemm_acc`].
+/// The full `MR × NR` register tile of [`gemm_acc`] (scalar spec).
 #[inline]
 fn gemm_tile(a: &[f32], r0: usize, k: usize, w: &[f32], o0: usize, n: usize, c: &mut [f32]) {
     let mut acc = [[0.0f32; NR]; MR];
@@ -143,15 +284,132 @@ fn gemm_edge(
     }
 }
 
+/// [`gemm_acc`] with the weight matrix in bf16 storage: per element the
+/// reduction is `i`-ascending over `a[r, i] · widen(w[i, o])`, where
+/// `widen` is the exact bf16 → f32 bit extension and the accumulation is
+/// f32 — NOT bit-comparable to the f32 kernel (storage rounds the
+/// weights once), but bit-identical across [`KernelPath`]s.
+pub fn gemm_acc_bf16(a: &[f32], rows: usize, k: usize, w: &[u16], n: usize, c: &mut [f32]) {
+    gemm_acc_bf16_on(active_path(), a, rows, k, w, n, c);
+}
+
+/// [`gemm_acc_bf16`] with explicit tile selection.
+pub fn gemm_acc_bf16_on(
+    path: KernelPath,
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[u16],
+    n: usize,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * k, "gemm_acc_bf16: a shape");
+    assert_eq!(w.len(), k * n, "gemm_acc_bf16: w shape");
+    assert_eq!(c.len(), rows * n, "gemm_acc_bf16: c shape");
+    let simd = take_simd(path);
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = (rows - r0).min(MR);
+        let mut o0 = 0;
+        while o0 < n {
+            let nr = (n - o0).min(NR);
+            if mr == MR && nr == NR {
+                if simd {
+                    simd::gemm_tile_bf16(a, r0, k, w, o0, n, c);
+                } else {
+                    gemm_tile_bf16(a, r0, k, w, o0, n, c);
+                }
+            } else {
+                gemm_edge_bf16(a, r0, mr, k, w, o0, nr, n, c);
+            }
+            o0 += nr;
+        }
+        r0 += mr;
+    }
+}
+
+/// The full `MR × NR` register tile of [`gemm_acc_bf16`] (scalar spec):
+/// the weight row is widened into a stack tile once per `i`, then the
+/// accumulation proceeds exactly like the f32 tile.
+#[inline]
+fn gemm_tile_bf16(a: &[f32], r0: usize, k: usize, w: &[u16], o0: usize, n: usize, c: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&c[(r0 + r) * n + o0..][..NR]);
+    }
+    let a0 = &a[r0 * k..][..k];
+    let a1 = &a[(r0 + 1) * k..][..k];
+    let a2 = &a[(r0 + 2) * k..][..k];
+    let a3 = &a[(r0 + 3) * k..][..k];
+    for (i, wrow) in w.chunks_exact(n).enumerate() {
+        let mut wt = [0.0f32; NR];
+        for (wf, &wb) in wt.iter_mut().zip(&wrow[o0..o0 + NR]) {
+            *wf = bf16_to_f32(wb);
+        }
+        let xs = [a0[i], a1[i], a2[i], a3[i]];
+        for (accr, &xv) in acc.iter_mut().zip(&xs) {
+            for (av, &wv) in accr.iter_mut().zip(&wt) {
+                *av += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[(r0 + r) * n + o0..][..NR].copy_from_slice(accr);
+    }
+}
+
+/// Partial-tile edge of [`gemm_acc_bf16`], widening in the inner loop.
+#[allow(clippy::too_many_arguments)]
+fn gemm_edge_bf16(
+    a: &[f32],
+    r0: usize,
+    mr: usize,
+    k: usize,
+    w: &[u16],
+    o0: usize,
+    nr: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    let mut acc = [0.0f32; NR];
+    for r in r0..r0 + mr {
+        let arow = &a[r * k..][..k];
+        let accs = &mut acc[..nr];
+        accs.copy_from_slice(&c[r * n + o0..][..nr]);
+        for (i, &xv) in arow.iter().enumerate() {
+            let wrow = &w[i * n + o0..][..nr];
+            for (av, &wb) in accs.iter_mut().zip(wrow) {
+                *av += xv * bf16_to_f32(wb);
+            }
+        }
+        c[r * n + o0..][..nr].copy_from_slice(accs);
+    }
+}
+
 /// `gw[i, o] += Σ_r x[r, i] · g[r, o]` — the weight-gradient outer-product
 /// accumulation over a block of rows (`x` is `rows × k`, `g` is `rows × n`,
 /// `gw` is `k × n`). Per element the reduction is `r`-ascending and extends
 /// the value already in `gw`, so accumulating block after block reproduces
-/// the scalar row-by-row backward walk bit for bit.
+/// the scalar row-by-row backward walk bit for bit. Runs the
+/// [`active_path`] tiles; see [`gemm_at_b_acc_on`].
 pub fn gemm_at_b_acc(x: &[f32], g: &[f32], rows: usize, k: usize, n: usize, gw: &mut [f32]) {
+    gemm_at_b_acc_on(active_path(), x, g, rows, k, n, gw);
+}
+
+/// [`gemm_at_b_acc`] with explicit tile selection.
+pub fn gemm_at_b_acc_on(
+    path: KernelPath,
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    gw: &mut [f32],
+) {
     assert_eq!(x.len(), rows * k, "gemm_at_b_acc: x shape");
     assert_eq!(g.len(), rows * n, "gemm_at_b_acc: g shape");
     assert_eq!(gw.len(), k * n, "gemm_at_b_acc: gw shape");
+    let simd = take_simd(path);
     let mut i0 = 0;
     while i0 < k {
         let mi = (k - i0).min(MR);
@@ -159,7 +417,11 @@ pub fn gemm_at_b_acc(x: &[f32], g: &[f32], rows: usize, k: usize, n: usize, gw: 
         while o0 < n {
             let no = (n - o0).min(NR);
             if mi == MR && no == NR {
-                at_b_tile(x, g, rows, k, n, i0, o0, gw);
+                if simd {
+                    simd::at_b_tile(x, g, rows, k, n, i0, o0, gw);
+                } else {
+                    at_b_tile(x, g, rows, k, n, i0, o0, gw);
+                }
             } else {
                 at_b_edge(x, g, rows, k, n, i0, mi, o0, no, gw);
             }
@@ -169,7 +431,7 @@ pub fn gemm_at_b_acc(x: &[f32], g: &[f32], rows: usize, k: usize, n: usize, gw: 
     }
 }
 
-/// The full `MR × NR` register tile of [`gemm_at_b_acc`].
+/// The full `MR × NR` register tile of [`gemm_at_b_acc`] (scalar spec).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn at_b_tile(
@@ -230,47 +492,79 @@ fn at_b_edge(
 /// (`g · Wᵀ`) for a block of rows, **assigned** (not accumulated). Per
 /// element the reduction is `o`-ascending from `0.0` — exactly the scalar
 /// `dense_input_grad` dot product — with the `w` row streamed once per
-/// [`MR`] row lanes instead of once per row.
+/// [`MR`] row lanes instead of once per row. Runs the [`active_path`]
+/// tiles; see [`gemm_b_wt_on`].
 pub fn gemm_b_wt(g: &[f32], w: &[f32], rows: usize, k: usize, n: usize, gin: &mut [f32]) {
+    gemm_b_wt_on(active_path(), g, w, rows, k, n, gin);
+}
+
+/// [`gemm_b_wt`] with explicit tile selection.
+pub fn gemm_b_wt_on(
+    path: KernelPath,
+    g: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    gin: &mut [f32],
+) {
     assert_eq!(g.len(), rows * n, "gemm_b_wt: g shape");
     assert_eq!(w.len(), k * n, "gemm_b_wt: w shape");
     assert_eq!(gin.len(), rows * k, "gemm_b_wt: gin shape");
+    let simd = take_simd(path);
     let mut r0 = 0;
     while r0 < rows {
         let mr = (rows - r0).min(MR);
         if mr == MR {
-            let g0 = &g[r0 * n..][..n];
-            let g1 = &g[(r0 + 1) * n..][..n];
-            let g2 = &g[(r0 + 2) * n..][..n];
-            let g3 = &g[(r0 + 3) * n..][..n];
-            for (i, wrow) in w.chunks_exact(n).enumerate() {
-                let mut acc = [0.0f32; MR];
-                for (o, &wv) in wrow.iter().enumerate() {
-                    acc[0] += wv * g0[o];
-                    acc[1] += wv * g1[o];
-                    acc[2] += wv * g2[o];
-                    acc[3] += wv * g3[o];
-                }
-                for (r, &av) in acc.iter().enumerate() {
-                    gin[(r0 + r) * k + i] = av;
-                }
+            if simd {
+                simd::b_wt_full(g, w, r0, k, n, gin);
+            } else {
+                b_wt_full(g, w, r0, k, n, gin);
             }
         } else {
-            for r in r0..r0 + mr {
-                let grow = &g[r * n..][..n];
-                let ginr = &mut gin[r * k..][..k];
-                for (i, gi) in ginr.iter_mut().enumerate() {
-                    let wrow = &w[i * n..][..n];
-                    *gi = wrow.iter().zip(grow).map(|(&wv, &gv)| wv * gv).sum();
-                }
-            }
+            b_wt_edge(g, w, r0, mr, k, n, gin);
         }
         r0 += mr;
     }
 }
 
+/// The full-[`MR`] row band of [`gemm_b_wt`] (scalar spec): four
+/// independent per-row accumulators, one sequential `o`-reduction.
+#[inline]
+fn b_wt_full(g: &[f32], w: &[f32], r0: usize, k: usize, n: usize, gin: &mut [f32]) {
+    let g0 = &g[r0 * n..][..n];
+    let g1 = &g[(r0 + 1) * n..][..n];
+    let g2 = &g[(r0 + 2) * n..][..n];
+    let g3 = &g[(r0 + 3) * n..][..n];
+    for (i, wrow) in w.chunks_exact(n).enumerate() {
+        let mut acc = [0.0f32; MR];
+        for (o, &wv) in wrow.iter().enumerate() {
+            acc[0] += wv * g0[o];
+            acc[1] += wv * g1[o];
+            acc[2] += wv * g2[o];
+            acc[3] += wv * g3[o];
+        }
+        for (r, &av) in acc.iter().enumerate() {
+            gin[(r0 + r) * k + i] = av;
+        }
+    }
+}
+
+/// Partial row band of [`gemm_b_wt`]: plain per-row dot products.
+fn b_wt_edge(g: &[f32], w: &[f32], r0: usize, mr: usize, k: usize, n: usize, gin: &mut [f32]) {
+    for r in r0..r0 + mr {
+        let grow = &g[r * n..][..n];
+        let ginr = &mut gin[r * k..][..k];
+        for (i, gi) in ginr.iter_mut().enumerate() {
+            let wrow = &w[i * n..][..n];
+            *gi = wrow.iter().zip(grow).map(|(&wv, &gv)| wv * gv).sum();
+        }
+    }
+}
+
 /// Copy the bias vector into every row of a `rows × b.len()` block — the
-/// pre-initialization [`gemm_acc`] extends.
+/// pre-initialization [`gemm_acc`] extends. Pure data movement
+/// (`copy_from_slice` lowers to memcpy), so there is no SIMD variant.
 pub fn bias_init(b: &[f32], rows: usize, out: &mut [f32]) {
     assert_eq!(out.len(), rows * b.len(), "bias_init: out shape");
     for orow in out.chunks_exact_mut(b.len()) {
@@ -278,11 +572,44 @@ pub fn bias_init(b: &[f32], rows: usize, out: &mut [f32]) {
     }
 }
 
+/// [`bias_init`] with the bias vector in bf16 storage: widen once into
+/// the first row, then replicate — after the exact bit extension this is
+/// the same memcpy pattern as the f32 variant.
+pub fn bias_init_bf16(b: &[u16], rows: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), rows * b.len(), "bias_init_bf16: out shape");
+    if rows == 0 || b.is_empty() {
+        return;
+    }
+    let (first, rest) = out.split_at_mut(b.len());
+    for (o, &bb) in first.iter_mut().zip(b) {
+        *o = bf16_to_f32(bb);
+    }
+    for orow in rest.chunks_exact_mut(b.len()) {
+        orow.copy_from_slice(first);
+    }
+}
+
 /// `gb[o] += Σ_r g[r, o]` — the bias gradient over a block of rows,
-/// `r`-ascending per element, extending the value already in `gb`.
+/// `r`-ascending per element, extending the value already in `gb`. Runs
+/// the [`active_path`] tiles; see [`bias_acc_on`].
 pub fn bias_acc(g: &[f32], rows: usize, n: usize, gb: &mut [f32]) {
+    bias_acc_on(active_path(), g, rows, n, gb);
+}
+
+/// [`bias_acc`] with explicit tile selection.
+pub fn bias_acc_on(path: KernelPath, g: &[f32], rows: usize, n: usize, gb: &mut [f32]) {
     assert_eq!(g.len(), rows * n, "bias_acc: g shape");
     assert_eq!(gb.len(), n, "bias_acc: gb shape");
+    if take_simd(path) {
+        simd::bias_acc(g, n, gb);
+    } else {
+        bias_acc_scalar(g, n, gb);
+    }
+}
+
+/// Scalar spec of [`bias_acc`]: rows outer, outputs inner — per element
+/// `gb[o]` the adds arrive in `r`-ascending order.
+fn bias_acc_scalar(g: &[f32], n: usize, gb: &mut [f32]) {
     for grow in g.chunks_exact(n) {
         for (b, &gv) in gb.iter_mut().zip(grow) {
             *b += gv;
@@ -294,9 +621,10 @@ pub fn bias_acc(g: &[f32], rows: usize, n: usize, gb: &mut [f32]) {
 /// step, copy the `kernel × in_ch` input window into
 /// `patch[(r·t_out + t), (k·in_ch + c)]`. Because the input layout is
 /// `[time, ch]`, each window is **contiguous** — im2col is a strided
-/// memcpy — and the patch matrix turns the convolution into the dense
-/// [`gemm_acc`] / [`gemm_at_b_acc`] kernels with `k·in_ch` inputs, in the
-/// exact `(k, c)`-ascending tap order of the scalar conv walk.
+/// memcpy (already optimal data movement, no SIMD variant) — and the
+/// patch matrix turns the convolution into the dense [`gemm_acc`] /
+/// [`gemm_at_b_acc`] kernels with `k·in_ch` inputs, in the exact
+/// `(k, c)`-ascending tap order of the scalar conv walk.
 #[allow(clippy::too_many_arguments)]
 pub fn im2col(
     input: &[f32],
@@ -354,9 +682,234 @@ pub fn col2im_acc(
     }
 }
 
+/// Explicit SSE2 register tiles (x86_64 only). Each function mirrors its
+/// scalar twin exactly: lanes span only *independent* output elements,
+/// every reduction runs in the reference index order, and SSE2
+/// `_mm_mul_ps` / `_mm_add_ps` perform one IEEE-754 rounding per lane per
+/// op with no FMA contraction — so each tile is bit-identical to its
+/// scalar spec (pinned by the in-module tests and `rust/tests/props.rs`).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::{MR, NR};
+    use std::arch::x86_64::{
+        _mm_add_ps, _mm_castsi128_ps, _mm_loadu_ps, _mm_loadu_si128, _mm_mul_ps, _mm_set1_ps,
+        _mm_set_ps, _mm_setzero_ps, _mm_setzero_si128, _mm_storeu_ps, _mm_unpackhi_epi16,
+        _mm_unpacklo_epi16,
+    };
+
+    /// SSE2 twin of the scalar `gemm_tile`: [`MR`] broadcast lanes ×
+    /// two 4-wide output vectors, `i`-reduction sequential.
+    pub(super) fn gemm_tile(
+        a: &[f32],
+        r0: usize,
+        k: usize,
+        w: &[f32],
+        o0: usize,
+        n: usize,
+        c: &mut [f32],
+    ) {
+        let a0 = &a[r0 * k..][..k];
+        let a1 = &a[(r0 + 1) * k..][..k];
+        let a2 = &a[(r0 + 2) * k..][..k];
+        let a3 = &a[(r0 + 3) * k..][..k];
+        // SAFETY: SSE2 is unconditionally available on x86_64 (baseline
+        // ABI). Every `loadu`/`storeu` below reads or writes 4 f32s
+        // through `.as_ptr()`/`.as_mut_ptr()` of a slice bounds-checked
+        // to exactly NR = 8 elements (offsets 0 and 4), so all pointer
+        // accesses stay in bounds; the `u` variants carry no alignment
+        // requirement.
+        unsafe {
+            let mut acc = [[_mm_setzero_ps(); 2]; MR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let crow = &c[(r0 + r) * n + o0..][..NR];
+                accr[0] = _mm_loadu_ps(crow.as_ptr());
+                accr[1] = _mm_loadu_ps(crow.as_ptr().add(4));
+            }
+            for (i, wrow) in w.chunks_exact(n).enumerate() {
+                let wt = &wrow[o0..o0 + NR];
+                let w01 = _mm_loadu_ps(wt.as_ptr());
+                let w23 = _mm_loadu_ps(wt.as_ptr().add(4));
+                let xs = [a0[i], a1[i], a2[i], a3[i]];
+                for (accr, &xv) in acc.iter_mut().zip(&xs) {
+                    let xb = _mm_set1_ps(xv);
+                    accr[0] = _mm_add_ps(accr[0], _mm_mul_ps(xb, w01));
+                    accr[1] = _mm_add_ps(accr[1], _mm_mul_ps(xb, w23));
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow = &mut c[(r0 + r) * n + o0..][..NR];
+                _mm_storeu_ps(crow.as_mut_ptr(), accr[0]);
+                _mm_storeu_ps(crow.as_mut_ptr().add(4), accr[1]);
+            }
+        }
+    }
+
+    /// SSE2 twin of the scalar `gemm_tile_bf16`: the bf16 → f32 widening
+    /// is a 16-bit zero-interleave (each u32 lane becomes `w << 16`) —
+    /// the exact bit extension `bf16_to_f32` performs, so this path and
+    /// the scalar path compute identical products.
+    pub(super) fn gemm_tile_bf16(
+        a: &[f32],
+        r0: usize,
+        k: usize,
+        w: &[u16],
+        o0: usize,
+        n: usize,
+        c: &mut [f32],
+    ) {
+        let a0 = &a[r0 * k..][..k];
+        let a1 = &a[(r0 + 1) * k..][..k];
+        let a2 = &a[(r0 + 2) * k..][..k];
+        let a3 = &a[(r0 + 3) * k..][..k];
+        // SAFETY: as in `gemm_tile` for the f32 loads/stores; the one
+        // integer load reads 8 u16s (16 bytes) through `.as_ptr()` of a
+        // slice bounds-checked to exactly NR = 8 elements, unaligned
+        // load, in bounds.
+        unsafe {
+            let mut acc = [[_mm_setzero_ps(); 2]; MR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let crow = &c[(r0 + r) * n + o0..][..NR];
+                accr[0] = _mm_loadu_ps(crow.as_ptr());
+                accr[1] = _mm_loadu_ps(crow.as_ptr().add(4));
+            }
+            let z = _mm_setzero_si128();
+            for (i, wrow) in w.chunks_exact(n).enumerate() {
+                let wt = &wrow[o0..o0 + NR];
+                let wb = _mm_loadu_si128(wt.as_ptr().cast());
+                // interleaving zeros below the u16s yields u32 lanes of
+                // `w << 16` == the bf16 widening, low then high half
+                let w01 = _mm_castsi128_ps(_mm_unpacklo_epi16(z, wb));
+                let w23 = _mm_castsi128_ps(_mm_unpackhi_epi16(z, wb));
+                let xs = [a0[i], a1[i], a2[i], a3[i]];
+                for (accr, &xv) in acc.iter_mut().zip(&xs) {
+                    let xb = _mm_set1_ps(xv);
+                    accr[0] = _mm_add_ps(accr[0], _mm_mul_ps(xb, w01));
+                    accr[1] = _mm_add_ps(accr[1], _mm_mul_ps(xb, w23));
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow = &mut c[(r0 + r) * n + o0..][..NR];
+                _mm_storeu_ps(crow.as_mut_ptr(), accr[0]);
+                _mm_storeu_ps(crow.as_mut_ptr().add(4), accr[1]);
+            }
+        }
+    }
+
+    /// SSE2 twin of the scalar `at_b_tile`: gradient lanes vectorized,
+    /// `r`-reduction sequential.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn at_b_tile(
+        x: &[f32],
+        g: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        o0: usize,
+        gw: &mut [f32],
+    ) {
+        // SAFETY: SSE2 baseline as in `gemm_tile`; every vector load and
+        // store covers 4 f32s at offsets 0/4 of a slice bounds-checked
+        // to exactly NR = 8 elements — in bounds, unaligned ok.
+        unsafe {
+            let mut acc = [[_mm_setzero_ps(); 2]; MR];
+            for (ii, accr) in acc.iter_mut().enumerate() {
+                let grow = &gw[(i0 + ii) * n + o0..][..NR];
+                accr[0] = _mm_loadu_ps(grow.as_ptr());
+                accr[1] = _mm_loadu_ps(grow.as_ptr().add(4));
+            }
+            for r in 0..rows {
+                let xt = &x[r * k + i0..][..MR];
+                let gt = &g[r * n + o0..][..NR];
+                let g01 = _mm_loadu_ps(gt.as_ptr());
+                let g23 = _mm_loadu_ps(gt.as_ptr().add(4));
+                for (accr, &xv) in acc.iter_mut().zip(xt) {
+                    let xb = _mm_set1_ps(xv);
+                    accr[0] = _mm_add_ps(accr[0], _mm_mul_ps(xb, g01));
+                    accr[1] = _mm_add_ps(accr[1], _mm_mul_ps(xb, g23));
+                }
+            }
+            for (ii, accr) in acc.iter().enumerate() {
+                let grow = &mut gw[(i0 + ii) * n + o0..][..NR];
+                _mm_storeu_ps(grow.as_mut_ptr(), accr[0]);
+                _mm_storeu_ps(grow.as_mut_ptr().add(4), accr[1]);
+            }
+        }
+    }
+
+    /// SSE2 twin of the scalar `b_wt_full`: one 4-lane accumulator whose
+    /// lanes are the [`MR`] independent rows, `o`-reduction sequential
+    /// via a per-`o` row gather.
+    pub(super) fn b_wt_full(g: &[f32], w: &[f32], r0: usize, k: usize, n: usize, gin: &mut [f32]) {
+        let g0 = &g[r0 * n..][..n];
+        let g1 = &g[(r0 + 1) * n..][..n];
+        let g2 = &g[(r0 + 2) * n..][..n];
+        let g3 = &g[(r0 + 3) * n..][..n];
+        // SAFETY: SSE2 baseline as in `gemm_tile`. All reads go through
+        // safe slice indexing; the only raw-pointer op is the 4-f32
+        // store into `out`, a local array of exactly MR = 4 f32s.
+        unsafe {
+            for (i, wrow) in w.chunks_exact(n).enumerate() {
+                let mut acc = _mm_setzero_ps();
+                for (o, &wv) in wrow.iter().enumerate() {
+                    // lane r holds g_r[o] (`set_ps` lists high-to-low)
+                    let gv = _mm_set_ps(g3[o], g2[o], g1[o], g0[o]);
+                    acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(wv), gv));
+                }
+                let mut out = [0.0f32; MR];
+                _mm_storeu_ps(out.as_mut_ptr(), acc);
+                for (r, &av) in out.iter().enumerate() {
+                    gin[(r0 + r) * k + i] = av;
+                }
+            }
+        }
+    }
+
+    /// SSE2 twin of the scalar `bias_acc_scalar`: lanes across outputs,
+    /// rows strictly sequential per lane — per element `gb[o]` the adds
+    /// arrive in the same `r`-ascending order as the scalar walk (its
+    /// rows-outer/outputs-inner loop touches each `gb[o]` in exactly
+    /// that sequence).
+    pub(super) fn bias_acc(g: &[f32], n: usize, gb: &mut [f32]) {
+        let lanes = n - n % 4;
+        // SAFETY: SSE2 baseline as in `gemm_tile`; vector loads/stores
+        // cover offsets `o .. o + 4` with `o + 4 <= lanes <= n`, inside
+        // both `gb` (len n, caller-asserted) and each `grow` (len n by
+        // `chunks_exact`). The tail past `lanes` is safe scalar code.
+        unsafe {
+            let mut o = 0;
+            while o < lanes {
+                let mut acc = _mm_loadu_ps(gb.as_ptr().add(o));
+                for grow in g.chunks_exact(n) {
+                    acc = _mm_add_ps(acc, _mm_loadu_ps(grow.as_ptr().add(o)));
+                }
+                _mm_storeu_ps(gb.as_mut_ptr().add(o), acc);
+                o += 4;
+            }
+        }
+        for (o, b) in gb.iter_mut().enumerate().skip(lanes) {
+            for grow in g.chunks_exact(n) {
+                *b += grow[o];
+            }
+        }
+    }
+}
+
+/// Non-x86_64 fallback: the `Simd` path is a *request* — on targets
+/// without explicit tiles it resolves to the scalar twins so every
+/// dispatch call site compiles everywhere, while [`simd_available`]
+/// reports `false` and the default path stays `Scalar`.
+#[cfg(not(target_arch = "x86_64"))]
+mod simd {
+    pub(super) use super::{
+        at_b_tile, b_wt_full, bias_acc_scalar as bias_acc, gemm_tile, gemm_tile_bf16,
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bf16::f32_to_bf16;
 
     /// Deterministic pseudo-random fill (no external RNG needed here).
     fn fill(v: &mut [f32], salt: usize) {
@@ -378,7 +931,7 @@ mod tests {
     ];
 
     #[test]
-    fn gemm_acc_matches_scalar_reference_bitwise() {
+    fn gemm_acc_matches_scalar_reference_bitwise_on_both_paths() {
         for &(rows, k, n) in SHAPES {
             let mut a = vec![0.0f32; rows * k];
             let mut w = vec![0.0f32; k * n];
@@ -386,18 +939,53 @@ mod tests {
             fill(&mut a, 1);
             fill(&mut w, 2);
             fill(&mut c0, 3); // arbitrary pre-init (bias-like)
-            let mut c = c0.clone();
-            gemm_acc(&a, rows, k, &w, n, &mut c);
             // scalar reference: the layers.rs dense forward walk
-            let mut r0 = c0.clone();
+            let mut want = c0.clone();
             for r in 0..rows {
                 for (i, &xv) in a[r * k..][..k].iter().enumerate() {
                     for o in 0..n {
-                        r0[r * n + o] += xv * w[i * n + o];
+                        want[r * n + o] += xv * w[i * n + o];
                     }
                 }
             }
-            assert_eq!(c, r0, "gemm_acc {rows}x{k}x{n}");
+            for path in KERNEL_PATHS {
+                let mut c = c0.clone();
+                gemm_acc_on(path, &a, rows, k, &w, n, &mut c);
+                assert_eq!(c, want, "gemm_acc[{}] {rows}x{k}x{n}", path.name());
+            }
+            let mut c = c0.clone();
+            gemm_acc(&a, rows, k, &w, n, &mut c);
+            assert_eq!(c, want, "gemm_acc dispatched {rows}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_acc_bf16_matches_the_widened_scalar_walk_bitwise_on_both_paths() {
+        for &(rows, k, n) in SHAPES {
+            let mut a = vec![0.0f32; rows * k];
+            let mut wf = vec![0.0f32; k * n];
+            let mut c0 = vec![0.0f32; rows * n];
+            fill(&mut a, 11);
+            fill(&mut wf, 12);
+            fill(&mut c0, 13);
+            let wq: Vec<u16> = wf.iter().map(|&x| f32_to_bf16(x)).collect();
+            // reference: scalar walk over the exactly-widened weights
+            let mut want = c0.clone();
+            for r in 0..rows {
+                for (i, &xv) in a[r * k..][..k].iter().enumerate() {
+                    for o in 0..n {
+                        want[r * n + o] += xv * bf16_to_f32(wq[i * n + o]);
+                    }
+                }
+            }
+            for path in KERNEL_PATHS {
+                let mut c = c0.clone();
+                gemm_acc_bf16_on(path, &a, rows, k, &wq, n, &mut c);
+                assert_eq!(c, want, "gemm_acc_bf16[{}] {rows}x{k}x{n}", path.name());
+            }
+            let mut c = c0.clone();
+            gemm_acc_bf16(&a, rows, k, &wq, n, &mut c);
+            assert_eq!(c, want, "gemm_acc_bf16 dispatched {rows}x{k}x{n}");
         }
     }
 
@@ -410,72 +998,104 @@ mod tests {
             fill(&mut x, 4);
             fill(&mut g, 5);
             fill(&mut gw0, 6); // pre-existing partial gradient
-            let mut gw = gw0.clone();
-            gemm_at_b_acc(&x, &g, rows, k, n, &mut gw);
             // scalar reference: row-by-row outer products, r-ascending
-            let mut r0 = gw0.clone();
+            let mut want = gw0.clone();
             for r in 0..rows {
                 for i in 0..k {
                     let xv = x[r * k + i];
                     if xv != 0.0 {
                         for o in 0..n {
-                            r0[i * n + o] += xv * g[r * n + o];
+                            want[i * n + o] += xv * g[r * n + o];
                         }
                     }
                 }
             }
-            assert_eq!(gw, r0, "gemm_at_b_acc {rows}x{k}x{n}");
-            // splitting the rows into two blocks must not change a bit
-            if rows > 1 {
-                let half = rows / 2;
-                let mut gw2 = gw0.clone();
-                gemm_at_b_acc(&x[..half * k], &g[..half * n], half, k, n, &mut gw2);
-                gemm_at_b_acc(&x[half * k..], &g[half * n..], rows - half, k, n, &mut gw2);
-                assert_eq!(gw2, gw, "block split changed bits {rows}x{k}x{n}");
+            for path in KERNEL_PATHS {
+                let mut gw = gw0.clone();
+                gemm_at_b_acc_on(path, &x, &g, rows, k, n, &mut gw);
+                assert_eq!(gw, want, "gemm_at_b_acc[{}] {rows}x{k}x{n}", path.name());
+                // splitting the rows into two blocks must not change a bit
+                if rows > 1 {
+                    let half = rows / 2;
+                    let mut gw2 = gw0.clone();
+                    gemm_at_b_acc_on(path, &x[..half * k], &g[..half * n], half, k, n, &mut gw2);
+                    gemm_at_b_acc_on(
+                        path,
+                        &x[half * k..],
+                        &g[half * n..],
+                        rows - half,
+                        k,
+                        n,
+                        &mut gw2,
+                    );
+                    assert_eq!(gw2, gw, "block split changed bits {rows}x{k}x{n}");
+                }
             }
         }
     }
 
     #[test]
-    fn gemm_b_wt_matches_scalar_dot_bitwise() {
+    fn gemm_b_wt_matches_scalar_dot_bitwise_on_both_paths() {
         for &(rows, k, n) in SHAPES {
             let mut g = vec![0.0f32; rows * n];
             let mut w = vec![0.0f32; k * n];
             fill(&mut g, 7);
             fill(&mut w, 8);
-            let mut gin = vec![f32::NAN; rows * k]; // assignment must cover all
-            gemm_b_wt(&g, &w, rows, k, n, &mut gin);
-            for r in 0..rows {
-                for i in 0..k {
-                    let want: f32 = w[i * n..][..n]
-                        .iter()
-                        .zip(&g[r * n..][..n])
-                        .map(|(&wv, &gv)| wv * gv)
-                        .sum();
-                    assert_eq!(gin[r * k + i], want, "gemm_b_wt {rows}x{k}x{n} r{r} i{i}");
+            for path in KERNEL_PATHS {
+                let mut gin = vec![f32::NAN; rows * k]; // assignment must cover all
+                gemm_b_wt_on(path, &g, &w, rows, k, n, &mut gin);
+                for r in 0..rows {
+                    for i in 0..k {
+                        let want: f32 = w[i * n..][..n]
+                            .iter()
+                            .zip(&g[r * n..][..n])
+                            .map(|(&wv, &gv)| wv * gv)
+                            .sum();
+                        let p = path.name();
+                        assert_eq!(gin[r * k + i], want, "gemm_b_wt[{p}] {rows}x{k}x{n} r{r} i{i}");
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn bias_kernels_match_reference() {
+    fn bias_kernels_match_reference_on_both_paths() {
         let b = [0.5f32, -1.25, 2.0];
         let mut out = vec![0.0f32; 12];
         bias_init(&b, 4, &mut out);
         assert!(out.chunks_exact(3).all(|r| r == b.as_slice()));
 
-        let mut g = vec![0.0f32; 12];
-        fill(&mut g, 9);
-        let mut gb = vec![0.25f32; 3];
-        let mut want = gb.clone();
-        for r in 0..4 {
-            for o in 0..3 {
-                want[o] += g[r * 3 + o];
+        // a width crossing the 4-lane boundary so the SIMD tail runs too
+        for n in [3usize, 8, 11] {
+            let rows = 5;
+            let mut g = vec![0.0f32; rows * n];
+            fill(&mut g, 9);
+            let gb0 = vec![0.25f32; n];
+            let mut want = gb0.clone();
+            for r in 0..rows {
+                for o in 0..n {
+                    want[o] += g[r * n + o];
+                }
+            }
+            for path in KERNEL_PATHS {
+                let mut gb = gb0.clone();
+                bias_acc_on(path, &g, rows, n, &mut gb);
+                assert_eq!(gb, want, "bias_acc[{}] n={n}", path.name());
             }
         }
-        bias_acc(&g, 4, 3, &mut gb);
-        assert_eq!(gb, want);
+    }
+
+    #[test]
+    fn bias_init_bf16_replicates_the_widened_bias() {
+        let bf = [0.5f32, -1.25, 2.0, 0.3337]; // last one rounds in bf16
+        let bq: Vec<u16> = bf.iter().map(|&x| f32_to_bf16(x)).collect();
+        let widened: Vec<f32> = bq.iter().map(|&b| bf16_to_f32(b)).collect();
+        let mut out = vec![f32::NAN; 12];
+        bias_init_bf16(&bq, 3, &mut out);
+        assert!(out.chunks_exact(4).all(|r| r == widened.as_slice()));
+        // rows = 0 is a no-op, not a panic
+        bias_init_bf16(&bq, 0, &mut []);
     }
 
     #[test]
@@ -518,8 +1138,27 @@ mod tests {
     }
 
     #[test]
+    fn forced_path_override_controls_dispatch() {
+        // safe to run concurrently with the other lib tests: a racing
+        // reader just runs the other, bit-identical tiles
+        set_forced_kernel_path(Some(KernelPath::Scalar));
+        assert_eq!(active_path(), KernelPath::Scalar);
+        set_forced_kernel_path(Some(KernelPath::Simd));
+        assert_eq!(active_path(), KernelPath::Simd);
+        set_forced_kernel_path(None);
+        assert!(KERNEL_PATHS.contains(&active_path()));
+        if cfg!(target_arch = "x86_64") {
+            assert!(simd_available(), "SSE2 is baseline on x86_64");
+        } else {
+            assert!(!simd_available());
+        }
+    }
+
+    #[test]
     fn lane_constants_are_sane() {
         assert!(MR >= 1 && NR >= 1);
         assert!(MAX_BLOCK_ROWS >= MR);
+        assert_eq!(KernelPath::Scalar.name(), "scalar");
+        assert_eq!(KernelPath::Simd.name(), "simd");
     }
 }

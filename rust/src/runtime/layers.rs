@@ -48,8 +48,23 @@
 //! backward), so the PR 3 golden trajectories for `mlp10`/`mlp100` are
 //! preserved bit for bit — and because the kernels are bit-identical to
 //! that walk, they are preserved across the block-kernel refactor too.
+//!
+//! **bf16 scoring fast path.** Sample selection only needs score *ranking*
+//! fidelity, so the presample pass can run over narrowed parameters:
+//! [`LayerModel::quantize_params`] rounds a spec-shaped f32 parameter list
+//! to bf16 storage once, and [`LayerModel::forward_block_bf16`] /
+//! [`LayerModel::scores_block_bf16`] walk the same block path through the
+//! bf16-storage kernels (f32 activations and accumulation, parameters
+//! widened on the fly — half the parameter memory traffic). The bf16
+//! scores are NOT bit-comparable to the f32 path (storage rounds every
+//! parameter once) but are themselves fully deterministic: bit-identical
+//! across kernel dispatch paths, block splits and worker counts. The
+//! `bf16_` acceptance tests in `rust/tests/native_train.rs` pin the
+//! ranking-fidelity contract (sampled-index overlap vs f32).
 
 use anyhow::{bail, Context, Result};
+
+use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
 
 use super::kernels;
 use super::manifest::{InitKind, ParamSpec};
@@ -447,6 +462,74 @@ impl Layer {
         }
     }
 
+    /// Forward a block over **bf16-storage parameters** — the
+    /// reduced-precision scoring fast path. Activations and accumulation
+    /// stay f32; parameters are widened on the fly inside the kernels (an
+    /// exact bit extension), so the walk order and scratch layout match
+    /// [`forward_block`](Self::forward_block) exactly. Param-free layers
+    /// run their ordinary (bit-identical) f32 block walk.
+    fn forward_block_bf16(
+        &self,
+        params: &[Vec<u16>],
+        input: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        patch: &mut Vec<f32>,
+    ) {
+        match *self {
+            Layer::Dense { out_dim } => {
+                let in_dim = input.len() / rows;
+                let (w, b) = (&params[0], &params[1]);
+                kernels::bias_init_bf16(b, rows, out);
+                kernels::gemm_acc_bf16(input, rows, in_dim, w, out_dim, out);
+            }
+            Layer::Relu => {
+                for (o, &v) in out.iter_mut().zip(input) {
+                    *o = v.max(0.0);
+                }
+            }
+            Layer::Conv1d { in_ch, out_ch, kernel, stride } => {
+                let in_dim = input.len() / rows;
+                let t_out = out.len() / rows / out_ch;
+                let (w, b) = (&params[0], &params[1]);
+                kernels::im2col(input, rows, in_dim, in_ch, kernel, stride, t_out, patch);
+                let rt = rows * t_out;
+                kernels::bias_init_bf16(b, rt, out);
+                kernels::gemm_acc_bf16(patch, rt, kernel * in_ch, w, out_ch, out);
+            }
+            // param-free gather layer: the f32 walk IS the bf16 walk
+            Layer::GlobalAvgPool { .. } => {
+                let in_dim = input.len() / rows;
+                let out_dim = out.len() / rows;
+                for r in 0..rows {
+                    self.forward(
+                        &[],
+                        &input[r * in_dim..][..in_dim],
+                        &mut out[r * out_dim..][..out_dim],
+                    );
+                }
+            }
+            Layer::EmbeddingBag { vocab, dim, lo, hi, positional, gain } => {
+                let e = &params[0];
+                let in_dim = input.len() / rows;
+                let scale = gain / in_dim as f32;
+                for (r, inp) in input.chunks_exact(in_dim).enumerate() {
+                    let out_r = &mut out[r * dim..][..dim];
+                    out_r.fill(0.0);
+                    for (p, &v) in inp.iter().enumerate() {
+                        let row = bag_row(p, v, vocab, lo, hi, positional);
+                        for (o, &eb) in out_r.iter_mut().zip(&e[row * dim..(row + 1) * dim]) {
+                            *o += bf16_to_f32(eb);
+                        }
+                    }
+                    for o in out_r.iter_mut() {
+                        *o *= scale;
+                    }
+                }
+            }
+        }
+    }
+
     /// Backward a whole block: accumulate this layer's parameter gradients
     /// into `grads` and, when `gin` is given (pre-zeroed, `rows × in_dim`),
     /// the gradient w.r.t. the layer's input block. Bit-identical to
@@ -774,8 +857,9 @@ impl LayerModel {
             let d = layer.out_dim(dims[i]).with_context(|| format!("layer {i} ({layer:?})"))?;
             dims.push(d);
         }
-        if *dims.last().unwrap() < 2 {
-            bail!("softmax head needs >= 2 classes, got {}", dims.last().unwrap());
+        let head = dims[dims.len() - 1];
+        if head < 2 {
+            bail!("softmax head needs >= 2 classes, got {head}");
         }
         let mut param_start = Vec::with_capacity(layers.len());
         let mut param_elems = Vec::new();
@@ -810,7 +894,8 @@ impl LayerModel {
     }
 
     pub fn num_classes(&self) -> usize {
-        *self.dims.last().unwrap()
+        // dims is never empty: new() seeds it with in_dim
+        self.dims[self.dims.len() - 1]
     }
 
     pub fn layers(&self) -> &[Layer] {
@@ -894,6 +979,19 @@ impl LayerModel {
     fn layer_params<'p>(&self, params: &'p [Vec<f32>], i: usize) -> &'p [Vec<f32>] {
         let start = self.param_start[i];
         &params[start..start + self.layers[i].num_param_tensors()]
+    }
+
+    fn layer_params_bf16<'p>(&self, params: &'p [Vec<u16>], i: usize) -> &'p [Vec<u16>] {
+        let start = self.param_start[i];
+        &params[start..start + self.layers[i].num_param_tensors()]
+    }
+
+    /// Narrow a spec-shaped f32 parameter list to bf16 storage (one
+    /// round-to-nearest-even per element, [`crate::util::bf16`]) — the
+    /// parameter form the reduced-precision scoring fast path walks.
+    /// Quantize once per parameter version, score many blocks.
+    pub fn quantize_params(&self, params: &[Vec<f32>]) -> Vec<Vec<u16>> {
+        params.iter().map(|t| t.iter().map(|&v| f32_to_bf16(v)).collect()).collect()
     }
 
     /// Forward one row: fills `scratch.acts` layer by layer and applies the
@@ -1004,6 +1102,98 @@ impl LayerModel {
             let yy = self.clamp_label(y[r]);
             out_loss[r] = row_loss(prow, yy);
             out_score[r] = row_score(prow, yy);
+        }
+    }
+
+    /// [`forward_block`](Self::forward_block) against bf16-stored
+    /// parameters (from [`quantize_params`](Self::quantize_params)):
+    /// weights widen to f32 lane-by-lane inside the kernels, activations
+    /// and the softmax stay f32. Bit-identical across block splits and
+    /// kernel dispatch paths, but NOT bit-comparable to the f32 walk —
+    /// the storage rounding perturbs every weight. See the module doc.
+    pub fn forward_block_bf16(
+        &self,
+        params: &[Vec<u16>],
+        x: &[f32],
+        rows: usize,
+        s: &mut BlockScratch,
+    ) {
+        debug_assert_eq!(x.len(), rows * self.dims[0]);
+        s.ensure(self, rows);
+        let BlockScratch { acts, patch, .. } = s;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (prev, rest) = acts.split_at_mut(i);
+            let input: &[f32] = if i == 0 { x } else { &prev[i - 1] };
+            let p = self.layer_params_bf16(params, i);
+            layer.forward_block_bf16(p, input, rows, &mut rest[0], &mut patch[i]);
+        }
+        let c = self.num_classes();
+        if let Some(last) = acts.last_mut() {
+            for p in last.chunks_exact_mut(c) {
+                softmax_in_place(p);
+            }
+        }
+    }
+
+    /// [`scores_block`](Self::scores_block) through bf16 parameter
+    /// storage — the reduced-precision presample scoring fast path. Same
+    /// score-only contract (no gradient scratch touched); ranking
+    /// fidelity vs the f32 path is pinned by the `bf16_` acceptance
+    /// tests in `rust/tests/native_train.rs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scores_block_bf16(
+        &self,
+        params: &[Vec<u16>],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        s: &mut BlockScratch,
+        out_loss: &mut [f32],
+        out_score: &mut [f32],
+    ) {
+        debug_assert!(y.len() >= rows && out_loss.len() >= rows && out_score.len() >= rows);
+        self.forward_block_bf16(params, x, rows, s);
+        let c = self.num_classes();
+        for (r, prow) in s.probs().chunks_exact(c).enumerate() {
+            let yy = self.clamp_label(y[r]);
+            out_loss[r] = row_loss(prow, yy);
+            out_score[r] = row_score(prow, yy);
+        }
+    }
+
+    /// Accumulate the loss sum + correct-prediction count of a block —
+    /// the eval-side twin of [`scores_block`](Self::scores_block),
+    /// sharing its score-only fast path (one block forward, no gradient
+    /// scratch). Accumulates into the caller's running sums so the f64
+    /// loss chain stays strictly per-row sequential across block
+    /// boundaries — bit-for-bit the historical `eval_metrics` walk,
+    /// including its resolve-ties-to-the-LAST-maximal-class argmax.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_block(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        s: &mut BlockScratch,
+        sum_loss: &mut f64,
+        correct: &mut i64,
+    ) {
+        debug_assert!(y.len() >= rows);
+        self.forward_block(params, x, rows, s);
+        let c = self.num_classes();
+        for (r, prow) in s.probs().chunks_exact(c).enumerate() {
+            let yy = self.clamp_label(y[r]);
+            *sum_loss += row_loss(prow, yy) as f64;
+            let pred = prow
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(k, _)| k)
+                .unwrap_or(0);
+            if pred == yy {
+                *correct += 1;
+            }
         }
     }
 
@@ -1320,6 +1510,124 @@ mod tests {
                 let (l, u) = m.row_scores(&params, &x[r * d..(r + 1) * d], y[r], &mut s);
                 assert_eq!((bl[r], bu[r]), (l, u), "row {r} scores diverged");
             }
+        }
+    }
+
+    #[test]
+    fn bf16_scores_track_the_f32_walk_within_storage_rounding() {
+        // The bf16 fast path perturbs every weight by at most one part in
+        // 256, so per-row losses and Eq.-20 scores stay close to the f32
+        // walk — close in value here, close in *ranking* in the
+        // train-level acceptance test (rust/tests/native_train.rs).
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(9, &m.param_specs());
+            let qp = m.quantize_params(&params);
+            let n = 7usize;
+            let d = m.in_dim();
+            let c = m.num_classes();
+            let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 + 3) as f32 * 0.23).sin()).collect();
+            let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+
+            let mut bs = m.block_scratch();
+            let mut fl = vec![0.0f32; n];
+            let mut fu = vec![0.0f32; n];
+            m.scores_block(&params, &x, &y, n, &mut bs, &mut fl, &mut fu);
+            let mut ql = vec![0.0f32; n];
+            let mut qu = vec![0.0f32; n];
+            m.scores_block_bf16(&qp, &x, &y, n, &mut bs, &mut ql, &mut qu);
+
+            for r in 0..n {
+                assert!(ql[r].is_finite() && qu[r].is_finite() && qu[r] >= 0.0);
+                let dl = (ql[r] - fl[r]).abs();
+                let du = (qu[r] - fu[r]).abs();
+                assert!(dl <= 0.15 * fl[r].abs() + 0.02, "row {r} loss {} vs {}", ql[r], fl[r]);
+                assert!(du <= 0.15 * fu[r].abs() + 0.02, "row {r} score {} vs {}", qu[r], fu[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_block_walk_is_invariant_to_block_splits() {
+        // Same blocking-invariance contract as the f32 path: bf16 scores
+        // of a batch never depend on how the batch is split into blocks.
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(11, &m.param_specs());
+            let qp = m.quantize_params(&params);
+            let n = 7usize;
+            let d = m.in_dim();
+            let c = m.num_classes();
+            let x: Vec<f32> = (0..n * d).map(|i| ((i * 5 + 1) as f32 * 0.31).cos()).collect();
+            let y: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+
+            let mut bs = m.block_scratch();
+            let mut rl = vec![0.0f32; n];
+            let mut ru = vec![0.0f32; n];
+            m.scores_block_bf16(&qp, &x, &y, n, &mut bs, &mut rl, &mut ru);
+
+            for blocks in [vec![4, n - 4], vec![1; n]] {
+                let mut sl = vec![0.0f32; n];
+                let mut su = vec![0.0f32; n];
+                let mut start = 0usize;
+                for rows in blocks {
+                    m.scores_block_bf16(
+                        &qp,
+                        &x[start * d..(start + rows) * d],
+                        &y[start..start + rows],
+                        rows,
+                        &mut bs,
+                        &mut sl[start..start + rows],
+                        &mut su[start..start + rows],
+                    );
+                    start += rows;
+                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(bits(&sl), bits(&rl), "losses diverged across block split");
+                assert_eq!(bits(&su), bits(&ru), "scores diverged across block split");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_block_matches_the_per_row_reference() {
+        for m in [LayerModel::mlp(6, 5, 3).unwrap(), conv_stack(), seq_stack()] {
+            let params = init_params(5, &m.param_specs());
+            let n = 7usize;
+            let d = m.in_dim();
+            let c = m.num_classes();
+            let x: Vec<f32> = (0..n * d).map(|i| ((i * 3 + 2) as f32 * 0.47).sin()).collect();
+            let y: Vec<i32> = (0..n).map(|i| ((i + 1) % c) as i32).collect();
+
+            // per-row reference: scalar forward, f64 loss sum, last-max argmax
+            let mut s = m.scratch();
+            let mut ref_loss = 0.0f64;
+            let mut ref_correct = 0i64;
+            for r in 0..n {
+                m.forward_row(&params, &x[r * d..(r + 1) * d], &mut s);
+                let prow = s.probs();
+                let yy = m.clamp_label(y[r]);
+                ref_loss += row_loss(prow, yy) as f64;
+                let pred = prow
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(k, _)| k)
+                    .unwrap_or(0);
+                if pred == yy {
+                    ref_correct += 1;
+                }
+            }
+
+            // whole batch and a split both reproduce it exactly: the
+            // accumulator signature keeps the f64 chain per-row
+            // sequential regardless of block boundaries
+            let mut bs = m.block_scratch();
+            let (mut l, mut k) = (0.0f64, 0i64);
+            m.eval_block(&params, &x, &y, n, &mut bs, &mut l, &mut k);
+            assert_eq!((l, k), (ref_loss, ref_correct));
+            let (mut l, mut k) = (0.0f64, 0i64);
+            m.eval_block(&params, &x[..4 * d], &y[..4], 4, &mut bs, &mut l, &mut k);
+            m.eval_block(&params, &x[4 * d..], &y[4..], n - 4, &mut bs, &mut l, &mut k);
+            assert_eq!((l, k), (ref_loss, ref_correct));
         }
     }
 

@@ -32,6 +32,11 @@
 //! chunks walk the stack at once, amortizing weight traffic across rows,
 //! while staying **bit-identical** to the per-row scalar reference walk —
 //! so every determinism guarantee above survives the fast path unchanged.
+//! The inner tiles dispatch at runtime between explicit-SIMD and scalar
+//! twins ([`kernels::KernelPath`]; both produce the same bits), and a
+//! bf16-storage scoring variant behind `--score-precision bf16`
+//! ([`ScorePrecision`]) trades bit-comparability with the f32 walk for
+//! cheaper presample scoring while preserving score *ranking*.
 
 pub mod backend;
 pub mod checkpoint;
@@ -48,12 +53,13 @@ pub mod tensor;
 
 pub use backend::Backend;
 pub use engine::{clone_literals, Engine, ModelState};
+pub use kernels::{set_forced_kernel_path, simd_available, KernelPath, KERNEL_PATHS};
 pub use layers::{BlockScratch, Layer, LayerModel};
 pub use manifest::{InitKind, Manifest, ModelInfo};
 pub use native::{train_chunk_plan, NativeEngine, NativeModelSpec};
 pub use pool::{default_train_workers, ObjectPool, WorkerPool};
 pub use score::{
     default_score_workers, BackendScorer, NativeScorer, RowChunk, SampleScorer, ScoreBackend,
-    ScoreKind,
+    ScoreKind, ScorePrecision,
 };
 pub use tensor::HostTensor;

@@ -56,7 +56,7 @@
 //!   and a fixed seed reproduces a trajectory bit for bit.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -69,7 +69,7 @@ use super::kernels::MAX_BLOCK_ROWS;
 use super::layers::{row_loss, row_score, BlockScratch, Layer, LayerModel};
 use super::manifest::{ModelInfo, Selfcheck};
 use super::pool::{default_train_workers, ObjectPool, Task, WorkerPool};
-use super::score::{split_rows, NativeScorer};
+use super::score::{split_rows, NativeScorer, ScorePrecision};
 use super::tensor::{f32_literal, literal_to_f32_vec, HostTensor};
 
 /// Row granularity of the deterministic train-side chunk plan. Chunks are
@@ -265,6 +265,10 @@ pub struct NativeEngine {
     /// Batch-compute worker threads (`--train-workers`); any value is
     /// bit-identical (see module docs).
     train_workers: AtomicUsize,
+    /// Presample scoring precision (`--score-precision`): 0 = f32,
+    /// 1 = bf16 parameter storage. Only `fwd_scores` reads it — training,
+    /// eval and the gradient-norm oracle always run f32.
+    score_precision: AtomicU8,
     /// The shared pool, built lazily on first parallel use and rebuilt
     /// only when the worker count changes — never per step.
     pool: Mutex<Option<Arc<WorkerPool>>>,
@@ -296,6 +300,7 @@ impl NativeEngine {
             momentum: 0.9,
             weight_decay: 5e-4,
             train_workers: AtomicUsize::new(default_train_workers()),
+            score_precision: AtomicU8::new(0),
             pool: Mutex::new(None),
             arenas: ObjectPool::new(),
             grad_bufs: ObjectPool::new(),
@@ -332,6 +337,30 @@ impl NativeEngine {
 
     pub fn train_workers(&self) -> usize {
         self.train_workers.load(Ordering::SeqCst)
+    }
+
+    /// Builder form of [`set_score_precision`](Self::set_score_precision).
+    pub fn with_score_precision(self, precision: ScorePrecision) -> Self {
+        self.set_score_precision(precision);
+        self
+    }
+
+    /// Set the presample scoring precision (`--score-precision`).
+    /// Interior-mutable like [`set_train_workers`](Self::set_train_workers);
+    /// takes effect on the next `fwd_scores` call.
+    pub fn set_score_precision(&self, precision: ScorePrecision) {
+        let v = match precision {
+            ScorePrecision::F32 => 0,
+            ScorePrecision::Bf16 => 1,
+        };
+        self.score_precision.store(v, Ordering::SeqCst);
+    }
+
+    pub fn score_precision(&self) -> ScorePrecision {
+        match self.score_precision.load(Ordering::SeqCst) {
+            0 => ScorePrecision::F32,
+            _ => ScorePrecision::Bf16,
+        }
     }
 
     /// The shared pool at the current worker count (lazily spawned).
@@ -665,6 +694,10 @@ impl Backend for NativeEngine {
         NativeEngine::train_workers(self)
     }
 
+    fn set_score_precision(&self, precision: ScorePrecision) {
+        NativeEngine::set_score_precision(self, precision);
+    }
+
     fn model_info(&self, model: &str) -> Result<&ModelInfo> {
         Ok(&self.model(model)?.info)
     }
@@ -748,18 +781,26 @@ impl Backend for NativeEngine {
         let mut loss_vec = vec![0.0f32; n];
         let mut scores = vec![0.0f32; n];
         let mut arena = self.arenas.checkout_or(BlockScratch::new);
+        // `--score-precision bf16`: narrow the parameters once per call
+        // (tiny next to the B-row forward) and walk the bf16 kernels.
+        // Long-lived scoring loops that want to amortize the narrowing
+        // use `NativeScorer::with_precision` instead.
+        let qp = match self.score_precision() {
+            ScorePrecision::F32 => None,
+            ScorePrecision::Bf16 => Some(model.quantize_params(&p)),
+        };
         let mut start = 0usize;
         while start < n {
             let rows = (n - start).min(MAX_BLOCK_ROWS);
-            model.scores_block(
-                &p,
-                &x.data[start * d..(start + rows) * d],
-                &y[start..start + rows],
-                rows,
-                &mut arena,
-                &mut loss_vec[start..start + rows],
-                &mut scores[start..start + rows],
-            );
+            let xb = &x.data[start * d..(start + rows) * d];
+            let yb = &y[start..start + rows];
+            let lw = &mut loss_vec[start..start + rows];
+            let uw = &mut scores[start..start + rows];
+            if let Some(qp) = &qp {
+                model.scores_block_bf16(qp, xb, yb, rows, &mut arena, lw, uw);
+            } else {
+                model.scores_block(&p, xb, yb, rows, &mut arena, lw, uw);
+            }
             start += rows;
         }
         self.arenas.put(arena);
@@ -773,8 +814,10 @@ impl Backend for NativeEngine {
         let model = &m.spec.model;
         let chunks = self.train_plan(n);
         let d = x.shape[1];
-        let c = model.num_classes();
         let outs = self.run_chunks(&chunks, |start, len| {
+            // Same score-only fast path as `fwd_scores`: `eval_block` is
+            // one block forward per sub-block — no gradient scratch, no
+            // per-call allocation beyond the pooled arena checkout.
             let mut arena = self.arenas.checkout_or(BlockScratch::new);
             let mut sum_loss = 0.0f64;
             let mut correct = 0i64;
@@ -782,20 +825,15 @@ impl Backend for NativeEngine {
             while done < len {
                 let rows = (len - done).min(MAX_BLOCK_ROWS);
                 let r0 = start + done;
-                model.forward_block(&p, &x.data[r0 * d..(r0 + rows) * d], rows, &mut arena);
-                for (r, prow) in arena.probs().chunks_exact(c).enumerate() {
-                    let yy = model.clamp_label(y[r0 + r]);
-                    sum_loss += row_loss(prow, yy) as f64;
-                    let argmax = prow
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                        .map(|(k, _)| k)
-                        .unwrap_or(0);
-                    if argmax == yy {
-                        correct += 1;
-                    }
-                }
+                model.eval_block(
+                    &p,
+                    &x.data[r0 * d..(r0 + rows) * d],
+                    &y[r0..r0 + rows],
+                    rows,
+                    &mut arena,
+                    &mut sum_loss,
+                    &mut correct,
+                );
                 done += rows;
             }
             self.arenas.put(arena);
@@ -1152,33 +1190,77 @@ mod tests {
     }
 
     #[test]
-    fn hot_loop_arenas_are_recycled_across_steps() {
+    fn hot_loop_arenas_are_recycled_across_steps() -> anyhow::Result<()> {
         // Serial engine: pool sizes are deterministic. grad_chunk_plan(20)
         // has 3 chunks, so the first step creates exactly 3 partial
         // buffers and 1 arena; every later call must recycle instead of
         // growing the pools.
         let ne = tiny_engine().with_train_workers(1);
-        let mut state = ne.init_state("tiny", 1).unwrap();
+        let mut state = ne.init_state("tiny", 1)?;
         let (x, y) = tiny_batch(20, 6, 3);
         let w = [1.0f32; 20];
         for _ in 0..3 {
-            ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
-            ne.fwd_scores(&state, &x, &y).unwrap();
-            ne.grad_norms(&state, &x, &y).unwrap();
-            ne.eval_metrics(&state, &x, &y).unwrap();
-            ne.weighted_grad(&state, &x, &y, &w).unwrap();
+            ne.train_step(&mut state, &x, &y, &w, 0.1)?;
+            ne.fwd_scores(&state, &x, &y)?;
+            ne.grad_norms(&state, &x, &y)?;
+            ne.eval_metrics(&state, &x, &y)?;
+            ne.weighted_grad(&state, &x, &y, &w)?;
         }
         assert_eq!(ne.arenas.idle(), 1, "serial runs cycle one arena");
         assert_eq!(ne.grad_bufs.idle(), 3, "one partial buffer per grad chunk");
         assert_eq!(ne.row_bufs.idle(), 2, "weighted_grad's loss/score scratch");
         let before = (ne.arenas.idle(), ne.grad_bufs.idle(), ne.row_bufs.idle());
-        ne.train_step(&mut state, &x, &y, &w, 0.1).unwrap();
-        ne.fwd_scores(&state, &x, &y).unwrap();
+        ne.train_step(&mut state, &x, &y, &w, 0.1)?;
+        ne.fwd_scores(&state, &x, &y)?;
         assert_eq!(
             (ne.arenas.idle(), ne.grad_bufs.idle(), ne.row_bufs.idle()),
             before,
             "steady state must not allocate new arenas"
         );
+        // the bf16 scoring path and the eval_block fast path recycle the
+        // same pooled arenas — neither grows any pool in steady state
+        ne.set_score_precision(ScorePrecision::Bf16);
+        ne.fwd_scores(&state, &x, &y)?;
+        ne.eval_metrics(&state, &x, &y)?;
+        ne.set_score_precision(ScorePrecision::F32);
+        assert_eq!(
+            (ne.arenas.idle(), ne.grad_bufs.idle(), ne.row_bufs.idle()),
+            before,
+            "bf16 scoring and eval must recycle the pooled arenas too"
+        );
+        Ok(())
+    }
+
+    #[test]
+    fn bf16_score_precision_switches_only_fwd_scores() -> anyhow::Result<()> {
+        let ne = tiny_engine();
+        let state = ne.init_state("tiny", 7)?;
+        let (x, y) = tiny_batch(40, 6, 3);
+        let (l32, s32) = ne.fwd_scores(&state, &x, &y)?;
+        let eval32 = ne.eval_metrics(&state, &x, &y)?;
+        let gn32 = ne.grad_norms(&state, &x, &y)?;
+
+        ne.set_score_precision(ScorePrecision::Bf16);
+        assert_eq!(ne.score_precision(), ScorePrecision::Bf16);
+        let (lb, sb) = ne.fwd_scores(&state, &x, &y)?;
+        // close to the f32 walk (storage rounding only perturbs weights)
+        for (a, b) in lb.iter().zip(&l32).chain(sb.iter().zip(&s32)) {
+            assert!(a.is_finite() && (a - b).abs() <= 0.15 * b.abs() + 0.02, "{a} vs {b}");
+        }
+        // deterministic: a second bf16 pass is bit-identical
+        assert_eq!(ne.fwd_scores(&state, &x, &y)?, (lb, sb));
+        // eval and the gradient-norm oracle ignore the flag entirely
+        assert_eq!(ne.eval_metrics(&state, &x, &y)?, eval32);
+        assert_eq!(ne.grad_norms(&state, &x, &y)?, gn32);
+
+        // switching back restores the f32 walk bit-for-bit
+        ne.set_score_precision(ScorePrecision::F32);
+        assert_eq!(ne.fwd_scores(&state, &x, &y)?, (l32, s32));
+        // builder form + default
+        assert_eq!(tiny_engine().score_precision(), ScorePrecision::F32);
+        let nb = tiny_engine().with_score_precision(ScorePrecision::Bf16);
+        assert_eq!(nb.score_precision(), ScorePrecision::Bf16);
+        Ok(())
     }
 
     #[test]

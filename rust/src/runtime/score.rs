@@ -20,7 +20,9 @@
 //!   `runtime::layers`. Loss/upper-bound scoring takes the **score-only
 //!   fast path** (`scores_block` + pooled arenas): one block forward per
 //!   sub-block, zero gradient scratch, zero per-call allocation beyond
-//!   the output vector.
+//!   the output vector — optionally through bf16 parameter storage
+//!   ([`ScorePrecision::Bf16`]), which halves the weight-streaming
+//!   footprint at the cost of bit-comparability with the f32 walk.
 //! * [`ScoreBackend`] — the serial path, plus a threaded backend that
 //!   splits the batch into contiguous per-worker chunks, scores them on
 //!   scoped worker threads (the same std-only idiom as
@@ -69,6 +71,40 @@ impl ScoreKind {
         match self {
             ScoreKind::GradNorm => "grad_norms",
             _ => "fwd_scores",
+        }
+    }
+}
+
+/// Numeric storage precision of the presample scoring pass
+/// (`--score-precision`). Training numerics are always f32; this only
+/// affects the loss/upper-bound forward walk that *ranks* presample rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScorePrecision {
+    /// Full f32 walk — bit-identical to the training forward (default).
+    #[default]
+    F32,
+    /// bf16 parameter storage widened to f32 inside the kernels: half the
+    /// weight-streaming footprint, same score *ranking* to within the
+    /// pinned overlap threshold (`bf16_` tests in
+    /// `rust/tests/native_train.rs`). NOT bit-comparable to the f32 path —
+    /// the storage rounding perturbs every weight.
+    Bf16,
+}
+
+impl ScorePrecision {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScorePrecision::F32 => "f32",
+            ScorePrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a `--score-precision` flag value.
+    pub fn parse(s: &str) -> Option<ScorePrecision> {
+        match s {
+            "f32" => Some(ScorePrecision::F32),
+            "bf16" => Some(ScorePrecision::Bf16),
+            _ => None,
         }
     }
 }
@@ -160,6 +196,10 @@ impl SampleScorer for BackendScorer<'_> {
 pub struct NativeScorer {
     model: LayerModel,
     params: Vec<Vec<f32>>,
+    /// bf16 narrowing of `params`, present iff the scorer was switched to
+    /// [`ScorePrecision::Bf16`] — quantized once at construction, walked
+    /// by every loss/upper-bound call thereafter.
+    qparams: Option<Vec<Vec<u16>>>,
     /// Persistent block-walk arenas: worker threads check one out per
     /// `score_rows` call, so repeated scoring passes allocate nothing but
     /// their output vector (the score-only fast path never touches
@@ -173,7 +213,7 @@ impl NativeScorer {
     pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, seed: u64) -> Self {
         let model = LayerModel::mlp(feature_dim, hidden, num_classes).expect("invalid mlp");
         let params = init::init_params(seed, &model.param_specs());
-        Self { model, params, arenas: ObjectPool::new() }
+        Self { model, params, qparams: None, arenas: ObjectPool::new() }
     }
 
     /// A scorer over an explicit layer stack + host parameters — how the
@@ -181,7 +221,18 @@ impl NativeScorer {
     /// architecture) to the scoring subsystem.
     pub fn from_model(model: LayerModel, params: Vec<Vec<f32>>) -> Result<Self> {
         model.check_params(&params)?;
-        Ok(Self { model, params, arenas: ObjectPool::new() })
+        Ok(Self { model, params, qparams: None, arenas: ObjectPool::new() })
+    }
+
+    /// Switch the loss/upper-bound fast path to bf16 parameter storage
+    /// (quantizes once, up front). Gradient-norm scoring always stays
+    /// f32 — the oracle is training-grade by definition.
+    pub fn with_precision(mut self, precision: ScorePrecision) -> Self {
+        self.qparams = match precision {
+            ScorePrecision::F32 => None,
+            ScorePrecision::Bf16 => Some(self.model.quantize_params(&self.params)),
+        };
+        self
     }
 
     pub fn feature_dim(&self) -> usize {
@@ -227,10 +278,12 @@ impl SampleScorer for NativeScorer {
                     let yb = &y[start..start + rows];
                     let spare_w = &mut spare[start..start + rows];
                     let out_w = &mut out[start..start + rows];
-                    if kind == ScoreKind::Loss {
-                        m.scores_block(p, xb, yb, rows, &mut arena, out_w, spare_w);
+                    let (lw, uw) =
+                        if kind == ScoreKind::Loss { (out_w, spare_w) } else { (spare_w, out_w) };
+                    if let Some(qp) = &self.qparams {
+                        m.scores_block_bf16(qp, xb, yb, rows, &mut arena, lw, uw);
                     } else {
-                        m.scores_block(p, xb, yb, rows, &mut arena, spare_w, out_w);
+                        m.scores_block(p, xb, yb, rows, &mut arena, lw, uw);
                     }
                     start += rows;
                 }
@@ -496,6 +549,45 @@ mod tests {
                 assert_eq!(par, serial, "workers={workers} kind={}", kind.name());
             }
         }
+    }
+
+    #[test]
+    fn bf16_scorer_is_deterministic_and_tracks_the_f32_values() -> anyhow::Result<()> {
+        let full = NativeScorer::new(24, 16, 5, 3);
+        let bf = NativeScorer::new(24, 16, 5, 3).with_precision(ScorePrecision::Bf16);
+        let (x, y) = toy_batch(101, 24, 5);
+        for kind in [ScoreKind::UpperBound, ScoreKind::Loss] {
+            let serial = ScoreBackend::Serial.score(&bf, &x, &y, kind)?;
+            assert!(serial.iter().all(|s| s.is_finite()));
+            // sharding stays bit-identical on the bf16 path too
+            for workers in [2, 9] {
+                let par = ScoreBackend::from_workers(workers).score(&bf, &x, &y, kind)?;
+                assert_eq!(par, serial, "workers={workers} kind={}", kind.name());
+            }
+            // values track the f32 walk to within storage rounding
+            let reference = ScoreBackend::Serial.score(&full, &x, &y, kind)?;
+            let mean_dev = serial
+                .iter()
+                .zip(&reference)
+                .map(|(b, f)| ((b - f).abs() / f.abs().max(1e-3)) as f64)
+                .sum::<f64>()
+                / serial.len() as f64;
+            assert!(mean_dev < 0.1, "kind={} mean relative deviation {mean_dev}", kind.name());
+        }
+        // the gradient-norm oracle ignores score precision entirely
+        let gn_full = ScoreBackend::Serial.score(&full, &x, &y, ScoreKind::GradNorm)?;
+        let gn_bf = ScoreBackend::Serial.score(&bf, &x, &y, ScoreKind::GradNorm)?;
+        assert_eq!(gn_bf, gn_full);
+        Ok(())
+    }
+
+    #[test]
+    fn score_precision_flag_round_trips() {
+        assert_eq!(ScorePrecision::default(), ScorePrecision::F32);
+        for p in [ScorePrecision::F32, ScorePrecision::Bf16] {
+            assert_eq!(ScorePrecision::parse(p.name()), Some(p));
+        }
+        assert_eq!(ScorePrecision::parse("fp16"), None);
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Brain-float-16 storage conversions for the reduced-precision scoring
+//! fast path.
+//!
+//! bf16 is the upper 16 bits of an IEEE-754 binary32 (1 sign, 8 exponent,
+//! 7 mantissa bits): widening is an exact bit extension (`<< 16`, no
+//! rounding) and narrowing rounds the dropped mantissa bits to nearest,
+//! ties to even. Both directions are pure integer bit manipulation — no
+//! architecture support needed, deterministic on every target.
+//!
+//! Consumed by `runtime::kernels::gemm_acc_bf16` & co: model parameters
+//! are stored as `u16` bit patterns, widened on the fly inside the tile,
+//! and accumulated in f32. Scoring through bf16 storage is NOT
+//! bit-comparable to the f32 path (the storage rounding perturbs every
+//! weight); the contract is score *ranking* fidelity, pinned by the
+//! `bf16_` acceptance tests in `rust/tests/native_train.rs`.
+
+/// Round an f32 to its nearest bf16 bit pattern (ties to even).
+///
+/// The rounding increment `0x7FFF + lsb` implements round-to-nearest-even
+/// on the truncated mantissa, and a carry propagates cleanly through the
+/// exponent field, so values beyond the bf16 finite range saturate to
+/// ±infinity exactly like a hardware narrow. NaN is special-cased first:
+/// the rounding carry could turn a signaling-NaN payload into infinity,
+/// so NaNs instead quieten (top mantissa bit set) and keep their sign.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// Widen a bf16 bit pattern to the f32 it denotes (exact, no rounding).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Narrow-then-widen an f32 through bf16 storage — the weight value the
+/// bf16 kernels actually multiply with.
+pub fn bf16_round_trip(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_representable_values_round_trip_bitwise() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 2.5, -2.5, 0.15625, 256.0, -1.0e30] {
+            let rt = bf16_round_trip(x);
+            // every value above has at most 7 mantissa bits set
+            assert_eq!(rt.to_bits(), x.to_bits(), "{x} -> {rt}");
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn narrowing_rounds_ties_to_even() {
+        // 0x3F80_8000 sits exactly between bf16 0x3F80 and 0x3F81: the
+        // kept mantissa lsb is 0, so the tie resolves DOWN (to even).
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // 0x3F81_8000 is the next tie; kept lsb is 1, so it resolves UP.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // one ulp either side of a tie rounds to nearest, not to even
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_7FFF)), 0x3F81);
+        // sign is carried through the same integer path
+        assert_eq!(f32_to_bf16(f32::from_bits(0xBF80_8000)), 0xBF80);
+    }
+
+    #[test]
+    fn subnormals_narrow_through_the_same_integer_path() {
+        // the smallest f32 subnormal is far below the smallest bf16
+        // subnormal -> rounds to +0.0
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x8000_0001)), 0x8000);
+        // an f32 subnormal on the bf16 subnormal grid survives exactly
+        let sub = f32::from_bits(0x0001_0000);
+        assert!(sub != 0.0 && !sub.is_normal());
+        assert_eq!(bf16_round_trip(sub).to_bits(), sub.to_bits());
+        // f32::MIN_POSITIVE (smallest normal) is bf16-representable
+        assert_eq!(bf16_round_trip(f32::MIN_POSITIVE), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn nan_narrows_to_a_quiet_nan_never_to_infinity() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // a signaling NaN whose payload lives entirely in the dropped
+        // bits would carry into the exponent (-> infinity) without the
+        // special case; it must stay NaN and keep its sign
+        for bits in [0x7F80_0001u32, 0xFF80_0001] {
+            let narrowed = f32_to_bf16(f32::from_bits(bits));
+            let widened = bf16_to_f32(narrowed);
+            assert!(widened.is_nan(), "{bits:#010x} -> {narrowed:#06x}");
+            assert_eq!(widened.is_sign_negative(), bits >> 31 == 1);
+            // quiet bit is set in the narrowed pattern
+            assert_ne!(narrowed & 0x0040, 0);
+        }
+    }
+
+    #[test]
+    fn finite_overflow_saturates_to_infinity() {
+        // f32::MAX is closer to 2^128 than to the largest finite bf16
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MIN)), f32::NEG_INFINITY);
+        // the largest finite bf16 itself round-trips
+        let max_bf16 = bf16_to_f32(0x7F7F);
+        assert_eq!(f32_to_bf16(max_bf16), 0x7F7F);
+    }
+
+    #[test]
+    fn narrowing_error_is_within_one_part_in_256() {
+        // 8-bit mantissa (implicit bit + 7 stored) -> relative error
+        // bounded by 2^-8 for normal values
+        for i in 0..1000 {
+            let x = (i as f32 - 500.0) * 0.731 + 0.017;
+            let rt = bf16_round_trip(x);
+            assert!((rt - x).abs() <= x.abs() / 256.0, "{x} -> {rt}");
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! property-testing kit used by the coordinator invariants.
 
 pub mod bench;
+pub mod bf16;
 pub mod digest;
 pub mod json;
 pub mod prop;

@@ -406,6 +406,50 @@ fn sharded_scoring_is_bit_identical_through_the_trainer_scorer() {
     }
 }
 
+#[test]
+fn bf16_scoring_preserves_the_resampling_decisions() {
+    // ISSUE 9 acceptance: bf16 presample scoring is a *ranking-fidelity*
+    // contract, not a bitwise one. At a fixed seed, (a) the bf16 score
+    // walk must be deterministic, (b) the scores must track the f32 walk
+    // in relative terms, and (c) the resample plan drawn from bf16 scores
+    // must overlap the f32 plan above a pinned floor. The Cumulative
+    // sampler makes (c) boundary-stable: a tiny score perturbation only
+    // moves draws that land right on a CDF edge.
+    use isample::coordinator::sampler::{resample_from_scores, SamplerKind};
+    use isample::runtime::ScorePrecision;
+    use isample::util::rng::SplitMix64;
+
+    let ne = sep_engine();
+    let state = ne.init_state("sep", 17).unwrap();
+    let split = sep_split();
+    let idx: Vec<usize> = (0..640).collect();
+    let (x, y) = split.train.batch(&idx, 0);
+
+    let (_, s32) = ne.fwd_scores(&state, &x, &y).unwrap();
+    ne.set_score_precision(ScorePrecision::Bf16);
+    let (_, s16) = ne.fwd_scores(&state, &x, &y).unwrap();
+    let (_, s16b) = ne.fwd_scores(&state, &x, &y).unwrap();
+    ne.set_score_precision(ScorePrecision::F32);
+    assert_eq!(s16, s16b, "bf16 scoring must be deterministic");
+
+    // (b) relative fidelity of the raw scores
+    let mean_rel = s32
+        .iter()
+        .zip(&s16)
+        .map(|(&a, &b)| ((a - b).abs() / a.abs().max(1e-6)) as f64)
+        .sum::<f64>()
+        / s32.len() as f64;
+    assert!(mean_rel < 0.1, "mean relative score deviation {mean_rel} too large");
+
+    // (c) sampled-index overlap at a fixed resampling seed (B=640 -> b=128)
+    let plan32 = resample_from_scores(&s32, 128, &mut SplitMix64::new(7), SamplerKind::Cumulative);
+    let plan16 = resample_from_scores(&s16, 128, &mut SplitMix64::new(7), SamplerKind::Cumulative);
+    let same = plan32.positions.iter().zip(&plan16.positions).filter(|(a, b)| a == b).count();
+    let overlap = same as f64 / plan32.positions.len() as f64;
+    println!("bf16/f32 resample overlap {overlap:.3} (mean rel dev {mean_rel:.4})");
+    assert!(overlap >= 0.7, "sampled-index overlap {overlap:.3} below the 0.7 acceptance floor");
+}
+
 /// A native backend whose `eval_metrics` only accepts one batch size —
 /// the shape of a PJRT engine with a single baked eval artifact. Forces
 /// `Trainer::evaluate` down its wrapped-tail path.

@@ -36,7 +36,9 @@ use isample::data::Dataset;
 use isample::runtime::checkpoint::state_checksum;
 use isample::runtime::init::init_params;
 use isample::runtime::tensor::HostTensor;
-use isample::runtime::{Backend, Layer, NativeEngine, NativeModelSpec};
+use isample::runtime::{
+    set_forced_kernel_path, Backend, Layer, NativeEngine, NativeModelSpec, KERNEL_PATHS,
+};
 use isample::util::digest::digest_f32;
 use isample::util::json::Json;
 use isample::util::prop::{check, Gen};
@@ -268,39 +270,49 @@ fn prop_block_kernels_match_the_scalar_reference_bitwise() {
                 }
             }
 
-            // block path, split into random-size blocks (1..=32 rows)
-            let mut bs = m.block_scratch();
-            let mut grads = m.zero_grads();
-            let mut loss = vec![0.0f32; n];
-            let mut score = vec![0.0f32; n];
-            let mut start = 0usize;
-            while start < n {
-                let rows = g.usize_in(1..(n - start + 1).min(33));
-                let xb = &x.data[start * d..(start + rows) * d];
-                m.scores_block(
-                    &params,
-                    xb,
-                    &y[start..start + rows],
-                    rows,
-                    &mut bs,
-                    &mut loss[start..start + rows],
-                    &mut score[start..start + rows],
-                );
-                let pm = bs.probs_mut();
-                for r in 0..rows {
-                    let yy = m.clamp_label(y[start + r]);
-                    let gz = &mut pm[r * c..(r + 1) * c];
-                    gz[yy] -= 1.0;
-                    for gv in gz.iter_mut() {
-                        *gv *= coeff[start + r];
+            // block path, split into random-size blocks (1..=32 rows).
+            // Run once per dispatch path — the ISSUE 9 SIMD tiles must be
+            // bit-identical to the scalar tiles, so both legs compare
+            // against the same scalar-row reference. (Forcing the global
+            // path is process-wide, but that is harmless to concurrent
+            // tests precisely because the paths are bit-identical.)
+            for path in KERNEL_PATHS {
+                set_forced_kernel_path(Some(path));
+                let mut bs = m.block_scratch();
+                let mut grads = m.zero_grads();
+                let mut loss = vec![0.0f32; n];
+                let mut score = vec![0.0f32; n];
+                let mut start = 0usize;
+                while start < n {
+                    let rows = g.usize_in(1..(n - start + 1).min(33));
+                    let xb = &x.data[start * d..(start + rows) * d];
+                    m.scores_block(
+                        &params,
+                        xb,
+                        &y[start..start + rows],
+                        rows,
+                        &mut bs,
+                        &mut loss[start..start + rows],
+                        &mut score[start..start + rows],
+                    );
+                    let pm = bs.probs_mut();
+                    for r in 0..rows {
+                        let yy = m.clamp_label(y[start + r]);
+                        let gz = &mut pm[r * c..(r + 1) * c];
+                        gz[yy] -= 1.0;
+                        for gv in gz.iter_mut() {
+                            *gv *= coeff[start + r];
+                        }
                     }
+                    m.backward_block(&params, xb, rows, &mut bs, &mut grads);
+                    start += rows;
                 }
-                m.backward_block(&params, xb, rows, &mut bs, &mut grads);
-                start += rows;
+                let pname = path.name();
+                assert_eq!(loss, loss_ref, "losses diverged (n={n}, path={pname})");
+                assert_eq!(score, score_ref, "scores diverged (n={n}, path={pname})");
+                assert_eq!(grads, grads_ref, "gradients diverged (n={n}, path={pname})");
             }
-            assert_eq!(loss, loss_ref, "losses diverged (n={n})");
-            assert_eq!(score, score_ref, "scores diverged (n={n})");
-            assert_eq!(grads, grads_ref, "gradients diverged (n={n})");
+            set_forced_kernel_path(None);
         }
     });
 }

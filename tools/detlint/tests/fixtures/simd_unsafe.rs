@@ -1,0 +1,27 @@
+// Fixture: unsafe-needs-safety satisfied on the SIMD-intrinsic shape —
+// the runtime/kernels.rs `mod simd` model: a `core::arch` tile body where
+// one SAFETY comment covers a whole intrinsic block (loads, arithmetic,
+// stores), not one comment per intrinsic call.
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_tile(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let xs = &x[..8];
+    let ys = &mut y[..8];
+    // SAFETY: SSE2 is unconditionally available on x86_64 (baseline ABI).
+    // Every `loadu`/`storeu` reads or writes 4 f32s through the pointer of
+    // a slice bounds-checked to exactly 8 elements (offsets 0 and 4), so
+    // all accesses stay in bounds; the `u` variants carry no alignment
+    // requirement.
+    unsafe {
+        let ab = _mm_set1_ps(alpha);
+        let lo = _mm_add_ps(_mm_loadu_ps(ys.as_ptr()), _mm_mul_ps(ab, _mm_loadu_ps(xs.as_ptr())));
+        let hi = _mm_add_ps(
+            _mm_loadu_ps(ys.as_ptr().add(4)),
+            _mm_mul_ps(ab, _mm_loadu_ps(xs.as_ptr().add(4))),
+        );
+        _mm_storeu_ps(ys.as_mut_ptr(), lo);
+        _mm_storeu_ps(ys.as_mut_ptr().add(4), hi);
+    }
+}

@@ -68,6 +68,9 @@ fn unsafe_requires_an_adjacent_safety_comment() {
     let bad = rules_in(&r, "bad_unsafe.rs");
     assert_eq!(bad, vec![("unsafe-needs-safety", 3)]);
     assert!(rules_in(&r, "good_unsafe.rs").is_empty(), "SAFETY block must satisfy the rule");
+    // the ISSUE 9 SIMD-intrinsic shape: one SAFETY comment over a whole
+    // core::arch tile body must satisfy the rule (and trip nothing else)
+    assert!(rules_in(&r, "simd_unsafe.rs").is_empty(), "SAFETY'd intrinsic block must pass");
 }
 
 #[test]
