@@ -44,6 +44,13 @@
 //! iterations — the ISSUE 6 acceptance floor), writing
 //! `BENCH_streaming.json` (`--out-json-streaming PATH`).
 //!
+//! The `dist/` section benchmarks the distributed coordinator (ISSUE 10):
+//! fixed-seed training steps farmed out over the wire protocol at 1/2/4
+//! workers vs the in-process serial engine (steps/sec each, digests
+//! asserted bit-identical), plus a worker-killed-mid-run recovery leg
+//! whose worst-case step time lands in `recovery_after_kill_ms` — all
+//! written to `BENCH_distributed.json` (`--out-json-dist PATH`).
+//!
 //! The `sampler/scale` section sweeps the Fenwick resampler over pool
 //! sizes n ∈ {1k, 131k, 1M}: full build vs a warm-cache 512-leaf
 //! partial-update cycle vs a 128-draw plan, asserts the update path is at
@@ -66,12 +73,14 @@ use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::data::shard;
 use isample::data::synthetic::SyntheticImages;
 use isample::data::Dataset;
+use isample::dist::{DistEngine, FaultPlan};
 use isample::runtime::checkpoint::state_checksum;
 use isample::runtime::init::init_params;
 use isample::runtime::kernels::MAX_BLOCK_ROWS;
 use isample::runtime::score::{default_score_workers, NativeScorer, ScoreBackend, ScoreKind};
 use isample::runtime::{
-    default_train_workers, set_forced_kernel_path, BlockScratch, Engine, KernelPath, NativeEngine,
+    default_train_workers, set_forced_kernel_path, Backend, BlockScratch, Engine, KernelPath,
+    NativeEngine, NativeModelSpec,
 };
 use isample::util::bench::{bench, black_box, target_from_env, BenchSuite};
 use isample::util::digest::digest_f64;
@@ -680,6 +689,100 @@ fn main() -> anyhow::Result<()> {
         let out = args.flag("out-json-train").unwrap_or("BENCH_train.json");
         suite.write_json(out)?;
         println!("training bench results -> {out}");
+    }
+
+    // ---------------- distributed coordinator scaling (ISSUE 10) --------
+    // The multi-process engine over in-process thread workers (same wire
+    // protocol, coordinator, leases and merge path as subprocess mode,
+    // minus process spawn noise): steps/sec at 1/2/4 workers vs the
+    // in-process serial engine, plus a recovery leg that kills a worker
+    // mid-run under a short lease and reports the worst-case step time
+    // (`recovery_after_kill_ms` — lease expiry + requeue + re-dispatch).
+    // Every leg's trajectory digest and final state checksum must equal
+    // the in-process serial run bit-for-bit; faults may only move time.
+    if run("dist/") {
+        let mut suite = BenchSuite::new();
+        let dist_steps = ((120 * target.as_millis() as u64) / 1500).clamp(24, 120);
+        let mk_local = || {
+            let mut ne = NativeEngine::new();
+            ne.register(NativeModelSpec::mlp("dgold", 32, 24, 4, 32, 64, vec![128]));
+            ne
+        };
+        let pool = SyntheticImages::builder(32, 4).samples(2_048).seed(11).build();
+        let b = 32usize;
+        // drive `dist_steps` fixed-seed steps on any backend; returns the
+        // loss digest, the final state checksum and per-step wall millis
+        let drive = |backend: &dyn Backend| -> anyhow::Result<(u64, u64, Vec<f64>)> {
+            let mut state = backend.init_state("dgold", 7)?;
+            let w = vec![1.0f32; b];
+            let mut losses = Vec::with_capacity(dist_steps as usize);
+            let mut step_ms = Vec::with_capacity(dist_steps as usize);
+            for step in 0..dist_steps {
+                let mut r = SplitMix64::tensor_stream(0xD15C0, step);
+                let idx: Vec<usize> = (0..b).map(|_| r.below(pool.len())).collect();
+                let (x, y) = pool.batch(&idx, 0);
+                let sw = Stopwatch::new();
+                let out = backend.train_step(&mut state, &x, &y, &w, 0.1)?;
+                step_ms.push(sw.elapsed_secs() * 1e3);
+                losses.push(out.loss as f64);
+            }
+            let digest = digest_f64(losses.iter().copied());
+            Ok((digest, state_checksum(&state)?, step_ms))
+        };
+
+        let serial_local = mk_local();
+        let (serial_digest, serial_state, serial_ms) = drive(&serial_local)?;
+        let serial_secs = serial_ms.iter().sum::<f64>() / 1e3;
+        let serial_sps = dist_steps as f64 / serial_secs.max(1e-9);
+        println!("dist/serial_inprocess: {dist_steps} steps -> {serial_sps:.1} steps/s");
+        suite.metric("dist_serial_steps_per_sec", serial_sps);
+
+        for workers in [1usize, 2, 4] {
+            let engine = DistEngine::new(mk_local(), 2_000)?;
+            engine.spawn_thread_workers(workers, &FaultPlan::parse("")?);
+            engine.wait_for_workers(workers)?;
+            let (digest, state, step_ms) = drive(&engine)?;
+            assert_eq!(
+                (digest, state),
+                (serial_digest, serial_state),
+                "dist/w{workers}: distributed run diverged from in-process serial"
+            );
+            let secs = step_ms.iter().sum::<f64>() / 1e3;
+            let sps = dist_steps as f64 / secs.max(1e-9);
+            println!(
+                "dist/w{workers}: {dist_steps} steps -> {sps:.1} steps/s \
+                 ({:.2}x vs in-process serial)",
+                sps / serial_sps.max(1e-9)
+            );
+            suite.metric(&format!("dist_w{workers}_steps_per_sec"), sps);
+        }
+
+        // recovery leg: 2 workers under a short lease, worker 1 killed
+        // mid-run; the worst step eats lease expiry + requeue, and the
+        // digest still may not move. Named *_ms (not *_per_sec) on
+        // purpose: recovery time is environment noise, tracked but not
+        // regression-gated by bench_trend.
+        let kill_at = dist_steps / 2;
+        let engine = DistEngine::new(mk_local(), 200)?;
+        engine.spawn_thread_workers(2, &FaultPlan::parse(&format!("kill@{kill_at}:1:0"))?);
+        engine.wait_for_workers(2)?;
+        let (digest, state, step_ms) = drive(&engine)?;
+        assert_eq!(
+            (digest, state),
+            (serial_digest, serial_state),
+            "dist/recovery: killed-worker run diverged from in-process serial"
+        );
+        let recovery_ms = step_ms.iter().copied().fold(0.0f64, f64::max);
+        println!(
+            "dist/recovery: worker killed at step {kill_at} under a 200ms lease; \
+             worst step {recovery_ms:.1}ms, digest unchanged"
+        );
+        suite.metric("recovery_after_kill_ms", recovery_ms);
+        suite.metric("dist_steps", dist_steps as f64);
+        suite.metric("dist_lease_ms", 200.0);
+        let out = args.flag("out-json-dist").unwrap_or("BENCH_distributed.json");
+        suite.write_json(out)?;
+        println!("distributed bench results -> {out}");
     }
 
     // ---------------- streaming data plane ----------------

@@ -101,6 +101,29 @@ impl Args {
         Ok(n)
     }
 
+    /// `--dist-workers N` — number of out-of-process worker processes for
+    /// the distributed engine (`dist::DistEngine`). `0` (or unset) keeps
+    /// everything in-process; any `N >= 1` spawns `N` copies of this binary
+    /// in worker mode and farms chunk work out over localhost TCP. Every
+    /// value — including mid-run worker loss — is bit-identical to serial
+    /// (fixed chunk plan, ordered merge).
+    pub fn flag_dist_workers(&self) -> Result<usize> {
+        self.flag_usize("dist-workers", 0)
+    }
+
+    /// `--dist-timeout-ms MS` — per-chunk lease in milliseconds for the
+    /// distributed coordinator: a worker that does not answer a heartbeat
+    /// or a chunk within the lease is dropped and its chunk requeued (or
+    /// computed in-process). 0 is rejected — a zero lease would drop every
+    /// worker before it could answer.
+    pub fn flag_dist_timeout_ms(&self) -> Result<u64> {
+        let ms = self.flag_u64("dist-timeout-ms", 2_000)?;
+        if ms == 0 {
+            bail!("--dist-timeout-ms must be >= 1 (got 0)");
+        }
+        Ok(ms)
+    }
+
     /// `--score-refresh-budget K|inf` — staleness budget (in steps) for
     /// the presample score cache (`coordinator::cache`). `inf` (or unset)
     /// means an unlimited refresh budget: every presampled row is
@@ -284,6 +307,19 @@ mod tests {
             Ok(ScorePrecision::Bf16)
         ));
         assert!(args("train --score-precision fp16").flag_score_precision().is_err());
+    }
+
+    #[test]
+    fn dist_flags() -> Result<()> {
+        // `?`/`matches!` (not unwrap) honor the detlint ratchet on this file
+        assert_eq!(args("train").flag_dist_workers()?, 0);
+        assert_eq!(args("train --dist-workers 4").flag_dist_workers()?, 4);
+        assert!(args("train --dist-workers some").flag_dist_workers().is_err());
+        assert_eq!(args("train").flag_dist_timeout_ms()?, 2_000);
+        assert_eq!(args("train --dist-timeout-ms=250").flag_dist_timeout_ms()?, 250);
+        assert!(args("train --dist-timeout-ms 0").flag_dist_timeout_ms().is_err());
+        assert!(args("train --dist-timeout-ms never").flag_dist_timeout_ms().is_err());
+        Ok(())
     }
 
     #[test]

@@ -101,6 +101,13 @@ impl ScoreCache {
     pub fn counters(&self) -> (u64, u64) {
         (self.scored, self.reused)
     }
+
+    /// Fraction of requested rows served from cache over the run's
+    /// lifetime; `None` before the first presample cycle.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.scored + self.reused;
+        (total > 0).then(|| self.reused as f64 / total as f64)
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +135,11 @@ mod tests {
         cache.record(&batch, &[0, 1, 2], &[0.5, 1.5, 2.5], 14);
         assert_eq!(cache.stale_positions(&[1, 2, 4], 15), vec![1]);
         assert_eq!(cache.counters(), (6, 0));
+        assert_eq!(cache.hit_rate(), Some(0.0));
+        // a partial refresh serves the other rows from cache
+        cache.record(&[1, 2, 4], &[1], &[9.0], 15);
+        assert_eq!(cache.counters(), (7, 2));
+        assert_eq!(ScoreCache::new(4, Some(1)).hit_rate(), None);
     }
 
     #[test]

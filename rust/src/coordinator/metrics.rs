@@ -31,11 +31,22 @@ pub struct MetricsLog {
     pub rows: Vec<Row>,
     /// (phase, total seconds) pairs from the trainer's PhaseTimers
     pub phase_seconds: Vec<(String, f64)>,
+    /// Operational events: `(step, message)` pairs drained from the
+    /// backend (worker losses, chunk requeues, degradation to in-process
+    /// compute) plus trainer-side notes. Events describe *scheduling*,
+    /// never results — a run with events is still bit-identical to one
+    /// without.
+    pub events: Vec<(u64, String)>,
 }
 
 impl MetricsLog {
     pub fn push(&mut self, row: Row) {
         self.rows.push(row);
+    }
+
+    /// Record an operational event at `step`.
+    pub fn note(&mut self, step: u64, msg: String) {
+        self.events.push((step, msg));
     }
 
     pub fn last_train_loss(&self) -> Option<f64> {
@@ -78,6 +89,11 @@ impl MetricsLog {
                 r.test_loss,
                 r.test_err
             )?;
+        }
+        // events ride along as comment lines so the numeric shape of the
+        // CSV (header + one line per row) is unchanged for event-free runs
+        for (step, msg) in &self.events {
+            writeln!(f, "# event,{step},{msg}")?;
         }
         Ok(())
     }
@@ -154,6 +170,23 @@ mod tests {
         assert!(lines[0].starts_with("step,secs"));
         assert!(lines[2].contains(",1,")); // is_active column
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn events_ride_csv_as_comment_lines() -> Result<()> {
+        let dir = std::env::temp_dir().join(format!("isample_csv_ev_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("m.csv");
+        let mut log = MetricsLog::default();
+        log.push(row(0, false, 0.9));
+        log.note(7, "worker 1 lost; chunk 3 requeued".to_string());
+        log.to_csv(&path)?;
+        let text = std::fs::read_to_string(&path)?;
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + row + event comment");
+        assert_eq!(lines[2], "# event,7,worker 1 lost; chunk 3 requeued");
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
     }
 
     #[test]

@@ -58,16 +58,18 @@ use super::tau::{mixture, TauEstimator};
 /// on the native backend each chunk's `fwd_scores` call is the
 /// **score-only block forward** (`LayerModel::scores_block`: no gradient
 /// scratch, pooled arenas), so the Eq.-6 selection overhead is pure
-/// forward cost. `GradNorm` is special-cased: once the backend
-/// data-parallelizes
-/// `grad_norms` internally (`train_workers > 1`, native), its shared pool
-/// is the *only* real parallel layer — outer score threads would merely
-/// funnel their chunks into that same pool and block, adding dispatch
-/// overhead without adding parallelism — so the outer layer goes serial
-/// and the pool shards the full presample itself. Either layering
-/// produces bit-identical scores; this is purely a scheduling choice.
+/// forward cost. The backend itself reports when a kind's scoring pass is
+/// already sharded across its own compute
+/// ([`Backend::scores_sharded_internally`]): the native grad-norm oracle
+/// over a multi-worker train pool, or the distributed engine's chunk
+/// fan-out to worker processes. There the backend's layer is the *only*
+/// real parallel one — outer score threads would merely funnel their
+/// chunks into it and block, adding dispatch overhead without adding
+/// parallelism — so the outer layer goes serial and the backend shards
+/// the full presample itself. Either layering produces bit-identical
+/// scores; this is purely a scheduling choice.
 fn score_backend(backend: &dyn Backend, score_workers: usize, kind: ScoreKind) -> ScoreBackend {
-    if kind == ScoreKind::GradNorm && backend.train_workers() > 1 {
+    if backend.scores_sharded_internally(kind) {
         ScoreBackend::Serial
     } else {
         ScoreBackend::from_workers(score_workers)
@@ -813,6 +815,12 @@ impl<'e> Trainer<'e> {
             if is_active && switch_step.is_none() {
                 switch_step = Some(step);
             }
+            // operational events (worker losses, chunk requeues, fallback
+            // to in-process compute) describe scheduling, never results —
+            // log them for the postmortem and move on
+            for ev in self.backend.drain_events() {
+                log.note(step, ev);
+            }
 
             // -- logging / eval -------------------------------------------------
             let mut row_due = step % self.cfg.log_every.max(1) == 0 || step == 1;
@@ -840,6 +848,22 @@ impl<'e> Trainer<'e> {
                     test_loss,
                     test_err,
                 });
+            }
+        }
+
+        // run-end cache accounting (only interesting under a finite
+        // staleness budget; the unlimited default re-scores everything)
+        if let Some(cache) = cache.as_ref().filter(|c| c.budget().is_some()) {
+            if let Some(rate) = cache.hit_rate() {
+                let (scored, reused) = cache.counters();
+                log.note(
+                    step,
+                    format!(
+                        "score cache served {reused} of {} lookups ({:.1}%)",
+                        scored + reused,
+                        rate * 100.0
+                    ),
+                );
             }
         }
 

@@ -21,6 +21,8 @@ pub mod sequence;
 pub mod shard;
 pub mod synthetic;
 
+use anyhow::Result;
+
 use crate::runtime::HostTensor;
 
 /// Difficulty tier assigned to each sample by the generators. The tier mix
@@ -67,6 +69,15 @@ pub trait Dataset {
             y.push(self.label(i));
         }
         (x, y)
+    }
+
+    /// Fallible batch assembly. In-memory generators cannot fail, so the
+    /// default wraps [`batch`](Self::batch); out-of-core stores (the
+    /// [`shard`] module) override it to surface IO failures — a shard file
+    /// truncated *after* open-time validation — as descriptive errors
+    /// instead of panics.
+    fn try_batch(&self, indices: &[usize], epoch: u64) -> Result<(HostTensor, Vec<i32>)> {
+        Ok(self.batch(indices, epoch))
     }
 }
 

@@ -32,7 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Context, Result};
 
 use super::Dataset;
-use crate::runtime::WorkerPool;
+use crate::runtime::{HostTensor, WorkerPool};
 use crate::util::json::Json;
 
 /// Current on-disk format version (bump on layout changes).
@@ -188,9 +188,15 @@ struct ShardCache {
 
 impl ShardCache {
     fn is_known(&self, s: usize) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = lock(self);
         st.resident.contains_key(&s) || st.inflight.contains(&s)
     }
+}
+
+/// Cache-state lock that shrugs off poisoning: the state is a plain
+/// LRU map, valid after any panic unwound past it.
+fn lock(cache: &ShardCache) -> std::sync::MutexGuard<'_, CacheState> {
+    cache.state.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Streaming [`Dataset`] over a directory written by [`ShardWriter`].
@@ -302,9 +308,9 @@ impl ShardedDataset {
         }
     }
 
-    fn fetch(&self, s: usize) -> Arc<ShardData> {
+    fn try_fetch(&self, s: usize) -> Result<Arc<ShardData>> {
         let (d, budget) = (self.feature_dim, self.resident_budget);
-        let data = fetch_shard(&self.cache, &self.dir, s, self.shard_rows(s), d, budget);
+        let data = try_fetch_shard(&self.cache, &self.dir, s, self.shard_rows(s), d, budget)?;
         if let Some(pool) = &self.readahead {
             let next = s + 1;
             if next < self.shards && !self.cache.is_known(next) {
@@ -312,49 +318,68 @@ impl ShardedDataset {
                 let dir = self.dir.clone();
                 let rows = self.shard_rows(next);
                 pool.submit(move || {
-                    fetch_shard(&cache, &dir, next, rows, d, budget);
+                    // background readahead is advisory: a failure here is
+                    // retried — and surfaced — by the foreground fetch
+                    let _ = try_fetch_shard(&cache, &dir, next, rows, d, budget);
                 });
             }
         }
-        data
+        Ok(data)
+    }
+
+    /// Infallible fetch for the infallible [`Dataset`] accessors; batch
+    /// assembly goes through [`Dataset::try_batch`] instead, which
+    /// surfaces IO failures as errors.
+    fn fetch(&self, s: usize) -> Arc<ShardData> {
+        self.try_fetch(s).unwrap_or_else(|e| panic!("shard store: {e:#}"))
     }
 }
 
 /// Load shard `s` through the cache: return the resident copy, wait on a
 /// concurrent loader, or read + decode the file and insert it (evicting
-/// least-recently-used shards beyond `budget`). Panics on IO errors — the
-/// store was fully size-validated at [`ShardedDataset::open`] time, so a
-/// failure here means the files changed underneath us.
-fn fetch_shard(
+/// least-recently-used shards beyond `budget`). The store was fully
+/// size-validated at [`ShardedDataset::open`] time, so a read failure here
+/// means the files changed underneath us: the in-flight marker is removed
+/// and every waiter woken *before* the descriptive `Err` surfaces, so
+/// concurrent and later fetches retry (and fail loudly themselves) instead
+/// of deadlocking on a loader that never finished.
+fn try_fetch_shard(
     cache: &ShardCache,
     dir: &Path,
     s: usize,
     rows: usize,
     d: usize,
     budget: usize,
-) -> Arc<ShardData> {
-    let mut st = cache.state.lock().unwrap();
+) -> Result<Arc<ShardData>> {
+    let mut st = lock(cache);
     loop {
         if st.resident.contains_key(&s) {
             st.tick += 1;
             let tick = st.tick;
-            let e = st.resident.get_mut(&s).unwrap();
-            e.tick = tick;
-            return Arc::clone(&e.data);
+            if let Some(e) = st.resident.get_mut(&s) {
+                e.tick = tick;
+                return Ok(Arc::clone(&e.data));
+            }
         }
         if st.inflight.contains(&s) {
-            st = cache.ready.wait(st).unwrap();
+            st = cache.ready.wait(st).unwrap_or_else(|e| e.into_inner());
             continue;
         }
         st.inflight.insert(s);
         break;
     }
     drop(st);
-    let data = Arc::new(
-        read_shard_file(&shard_path(dir, s), rows, d)
-            .unwrap_or_else(|e| panic!("shard store: shard {s} became unreadable: {e:#}")),
-    );
-    let mut st = cache.state.lock().unwrap();
+    let data = match read_shard_file(&shard_path(dir, s), rows, d) {
+        Ok(data) => Arc::new(data),
+        Err(e) => {
+            let mut st = lock(cache);
+            st.inflight.remove(&s);
+            drop(st);
+            cache.ready.notify_all();
+            return Err(e.context(format!("shard {s} became unreadable after open")));
+        }
+    };
+    let mut st = lock(cache);
     st.tick += 1;
     let tick = st.tick;
     st.resident.insert(s, Resident { data: Arc::clone(&data), tick });
@@ -375,7 +400,7 @@ fn fetch_shard(
     }
     drop(st);
     cache.ready.notify_all();
-    data
+    Ok(data)
 }
 
 fn read_shard_file(path: &Path, rows: usize, d: usize) -> Result<ShardData> {
@@ -420,6 +445,24 @@ impl Dataset for ShardedDataset {
         let shard = self.fetch(i / self.shard_len);
         let r = i % self.shard_len;
         out.copy_from_slice(&shard.x[r * self.feature_dim..(r + 1) * self.feature_dim]);
+    }
+
+    /// Batch assembly that surfaces shard read failures (a file truncated
+    /// or deleted after open-time validation) as errors instead of panics.
+    fn try_batch(&self, indices: &[usize], _epoch: u64) -> Result<(HostTensor, Vec<i32>)> {
+        let d = self.feature_dim;
+        let mut x = HostTensor::zeros(vec![indices.len(), d]);
+        let mut y = Vec::with_capacity(indices.len());
+        for (row, &i) in indices.iter().enumerate() {
+            if i >= self.samples {
+                bail!("sample {i} out of range ({})", self.samples);
+            }
+            let shard = self.try_fetch(i / self.shard_len)?;
+            let r = i % self.shard_len;
+            x.data[row * d..(row + 1) * d].copy_from_slice(&shard.x[r * d..(r + 1) * d]);
+            y.push(shard.y[r]);
+        }
+        Ok((x, y))
     }
 }
 
@@ -485,5 +528,33 @@ mod tests {
         let err = ShardedDataset::open(&dir).unwrap_err().to_string();
         assert!(err.contains("bytes on disk"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_read_truncation_surfaces_an_error_and_recovers() -> Result<()> {
+        let ds = SyntheticImages::builder(8, 3).samples(96).seed(6).build();
+        let dir = tmp_dir("midread");
+        write_dataset(&dir, &ds, 32)?; // 3 shards of 32 rows
+        let sharded = ShardedDataset::open(&dir)?.with_resident_shards(1);
+        let (_, y) = sharded.try_batch(&[0, 1], 0)?;
+        assert_eq!(y.len(), 2);
+        // the last shard changes underneath us after open's validation
+        let victim = shard_path(&dir, 2);
+        let bytes = std::fs::read(&victim)?;
+        std::fs::write(&victim, &bytes[..bytes.len() - 4])?;
+        // twice: a failed load must clear its in-flight marker, or the
+        // second attempt would wait forever on a loader that never finished
+        for attempt in 0..2 {
+            let err = match sharded.try_batch(&[64, 65], 0) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => String::new(),
+            };
+            assert!(err.contains("shard 2 became unreadable"), "attempt {attempt}: got {err:?}");
+        }
+        // untouched shards keep working through the same cache
+        let (_, y) = sharded.try_batch(&[33], 0)?;
+        assert_eq!(y, vec![ds.label(33)]);
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
     }
 }

@@ -1,0 +1,414 @@
+//! The coordinator side of the distributed data plane.
+//!
+//! One [`Coordinator`] owns a localhost TCP listener, a registry of worker
+//! connections (each registered through a `Hello` handshake), and the
+//! scatter/gather engine behind [`execute`](Coordinator::execute): chunks
+//! are leased to workers from a shared in-order queue, replies land in
+//! per-chunk slots, and any failure — a missed heartbeat, an expired
+//! lease, a broken socket, a protocol mismatch — requeues the chunk and
+//! drops the whole connection (framing can no longer be trusted mid
+//! request/reply). Dropped workers recover by reconnecting with backoff
+//! and re-registering; chunks nobody completed are reported as `None`
+//! slots for the caller's in-process fallback.
+//!
+//! Determinism: *which* worker computes a chunk (or whether it falls back
+//! locally) is pure scheduling. Every reply is a pure function of the
+//! round's parameters and the chunk's rows, the chunk plan depends only on
+//! the batch size, and the caller merges replies in fixed chunk order — so
+//! any worker count, fault pattern, or lease outcome produces the same
+//! bits as the serial in-process path.
+//!
+//! Deadlines are carried by the sockets themselves
+//! (`set_read_timeout`/`set_write_timeout` = the lease), never by clock
+//! reads — the repo's wallclock-in-logic lint stays intact.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::fault::FaultPlan;
+use super::wire::{self, Msg, WorkReply, WorkRequest};
+use super::worker::{run_worker, WorkerConfig};
+use crate::runtime::native::NativeEngine;
+
+/// Poison-tolerant lock: a panicking holder must not wedge the data plane
+/// (the robustness layer exists precisely for misbehaving participants).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One registered worker connection.
+struct Conn {
+    id: u32,
+    stream: TcpStream,
+    /// Parameter version last sent over this connection (0 = none yet);
+    /// `SetState` is re-sent only when the round's version differs.
+    sent_version: u64,
+    sent_model: String,
+}
+
+/// The model content one scatter/gather round runs against. `version`
+/// uniquely identifies the parameter content (callers use
+/// `state.step + 1`), which is what lets workers cache the last
+/// `SetState` across the round's chunks.
+pub struct Round<'a> {
+    pub step: u64,
+    pub version: u64,
+    pub model: &'a str,
+    pub params: &'a [Vec<f32>],
+}
+
+/// Spawns/attaches workers and farms chunk work out to them. Dropping the
+/// coordinator shuts the data plane down: registered workers get a
+/// `Shutdown`, worker threads are joined, worker processes are reaped.
+pub struct Coordinator {
+    addr: String,
+    registry: Arc<Mutex<Vec<Conn>>>,
+    accept: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    lease_ms: u64,
+    /// Robustness events (worker losses, requeues, degradation), drained
+    /// into the trainer's metrics log.
+    events: Mutex<Vec<String>>,
+    remote_chunks: AtomicU64,
+    local_chunks: AtomicU64,
+    requeued: AtomicU64,
+    worker_losses: AtomicU64,
+    /// Serializes rounds: one scatter/gather owns the registry at a time.
+    exec: Mutex<()>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    children: Mutex<Vec<Child>>,
+    /// Cooperative stop flag shared with in-thread workers.
+    stop_workers: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Bind an ephemeral localhost listener and start accepting workers.
+    /// `lease_ms` (clamped to ≥ 1) is both the heartbeat deadline and the
+    /// per-chunk reply lease, carried by the connection's socket timeouts.
+    pub fn new(lease_ms: u64) -> Result<Self> {
+        let lease_ms = lease_ms.max(1);
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("dist: binding coordinator listener")?;
+        let addr = listener.local_addr().context("dist: coordinator address")?.to_string();
+        let registry: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let reg = Arc::clone(&registry);
+        let stop = Arc::clone(&shutdown);
+        let accept = thread::Builder::new()
+            .name("dist-accept".to_string())
+            .spawn(move || accept_loop(listener, reg, stop, lease_ms))
+            .context("dist: spawning accept thread")?;
+        Ok(Self {
+            addr,
+            registry,
+            accept: Some(accept),
+            shutdown,
+            lease_ms,
+            events: Mutex::new(Vec::new()),
+            remote_chunks: AtomicU64::new(0),
+            local_chunks: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            worker_losses: AtomicU64::new(0),
+            exec: Mutex::new(()),
+            threads: Mutex::new(Vec::new()),
+            children: Mutex::new(Vec::new()),
+            stop_workers: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The listener address workers dial (`127.0.0.1:<port>`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn lease_ms(&self) -> u64 {
+        self.lease_ms
+    }
+
+    /// Currently registered (idle) worker connections.
+    pub fn worker_count(&self) -> usize {
+        lock(&self.registry).len()
+    }
+
+    /// Poll (bounded, ~10 s) until `n` workers are registered.
+    pub fn wait_for_workers(&self, n: usize) -> Result<()> {
+        for _ in 0..2_000u32 {
+            if self.worker_count() >= n {
+                return Ok(());
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        bail!("dist: timed out waiting for {n} workers (have {})", self.worker_count());
+    }
+
+    /// Attach `n` in-thread workers sharing `engine` (the test/bench
+    /// harness form; same protocol, no process boundary).
+    pub fn spawn_thread_workers(&self, n: usize, engine: Arc<NativeEngine>, plan: &FaultPlan) {
+        let mut threads = lock(&self.threads);
+        for id in 0..n as u32 {
+            let engine = Arc::clone(&engine);
+            let addr = self.addr.clone();
+            let cfg = WorkerConfig {
+                worker_id: id,
+                fault_plan: plan.clone(),
+                stop: Some(Arc::clone(&self.stop_workers)),
+                ..WorkerConfig::default()
+            };
+            let spawned = thread::Builder::new()
+                .name(format!("dist-worker-{id}"))
+                .spawn(move || {
+                    let _ = run_worker(&engine, &addr, &cfg);
+                });
+            if let Ok(handle) = spawned {
+                threads.push(handle);
+            }
+        }
+    }
+
+    /// Spawn `n` worker processes: `program worker --connect <addr>
+    /// --worker-id <id> [--fault-plan <spec>]` — the same binary in
+    /// worker mode. Children are killed and reaped on drop.
+    pub fn spawn_process_workers(&self, n: usize, program: &Path, plan: &FaultPlan) -> Result<()> {
+        let mut children = lock(&self.children);
+        for id in 0..n as u32 {
+            let mut cmd = Command::new(program);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(&self.addr)
+                .arg("--worker-id")
+                .arg(id.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null());
+            if !plan.is_empty() {
+                cmd.arg("--fault-plan").arg(plan.to_spec());
+            }
+            let child =
+                cmd.spawn().with_context(|| format!("dist: spawning worker process {id}"))?;
+            children.push(child);
+        }
+        Ok(())
+    }
+
+    /// Record a robustness event (drained by the trainer into its log).
+    pub fn note(&self, msg: String) {
+        lock(&self.events).push(msg);
+    }
+
+    /// Take every event recorded since the last drain.
+    pub fn drain_events(&self) -> Vec<String> {
+        std::mem::take(&mut *lock(&self.events))
+    }
+
+    /// Chunks completed by remote workers.
+    pub fn remote_chunks(&self) -> u64 {
+        self.remote_chunks.load(Ordering::SeqCst)
+    }
+
+    /// Chunks that fell back to in-process compute.
+    pub fn local_chunks(&self) -> u64 {
+        self.local_chunks.load(Ordering::SeqCst)
+    }
+
+    /// Chunks requeued after a lease expiry or disconnect.
+    pub fn requeued_chunks(&self) -> u64 {
+        self.requeued.load(Ordering::SeqCst)
+    }
+
+    /// Connections dropped (heartbeat misses + mid-chunk losses).
+    pub fn worker_losses(&self) -> u64 {
+        self.worker_losses.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn count_local_chunks(&self, n: u64) {
+        self.local_chunks.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Farm `jobs` (one per chunk, in chunk order) out to the registered
+    /// workers. Returns one slot per chunk **in chunk order**; `None`
+    /// means no worker completed that chunk before its lease expired (or
+    /// none were alive) and the caller must compute it in-process. The
+    /// scatter is work-stealing — chunk→worker assignment is pure
+    /// scheduling — while every reply is a pure function of (params,
+    /// chunk rows), so any completion pattern merges to the same bits.
+    pub fn execute(&self, round: &Round<'_>, jobs: &[WorkRequest]) -> Vec<Option<WorkReply>> {
+        let mut slots: Vec<Option<WorkReply>> = Vec::new();
+        slots.resize_with(jobs.len(), || None);
+        if jobs.is_empty() {
+            return slots;
+        }
+        let _serial = lock(&self.exec);
+        let conns: Vec<Conn> = std::mem::take(&mut *lock(&self.registry));
+        // Heartbeat gate: only workers that answer a ping within the
+        // deadline are leased chunks this round.
+        let mut live: Vec<Conn> = Vec::new();
+        for mut conn in conns {
+            if heartbeat(&mut conn, round.step).is_ok() {
+                live.push(conn);
+            } else {
+                self.worker_losses.fetch_add(1, Ordering::SeqCst);
+                self.note(format!(
+                    "worker {} missed its heartbeat at step {} and was dropped",
+                    conn.id, round.step
+                ));
+            }
+        }
+        if live.is_empty() {
+            return slots;
+        }
+        let queue: Mutex<VecDeque<u32>> = Mutex::new((0..jobs.len() as u32).collect());
+        let results = Mutex::new(slots);
+        let survivors: Mutex<Vec<Conn>> = Mutex::new(Vec::new());
+        thread::scope(|s| {
+            for mut conn in live {
+                let queue = &queue;
+                let results = &results;
+                let survivors = &survivors;
+                s.spawn(move || loop {
+                    let chunk = match lock(queue).pop_front() {
+                        Some(c) => c,
+                        None => {
+                            lock(survivors).push(conn);
+                            return;
+                        }
+                    };
+                    match dispatch(&mut conn, round, &jobs[chunk as usize], chunk) {
+                        Ok(reply) => {
+                            lock(results)[chunk as usize] = Some(reply);
+                            self.remote_chunks.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => {
+                            // Requeue first so an idle peer can pick the
+                            // chunk up, then drop the connection — the
+                            // worker re-registers via a fresh handshake.
+                            lock(queue).push_front(chunk);
+                            self.requeued.fetch_add(1, Ordering::SeqCst);
+                            self.worker_losses.fetch_add(1, Ordering::SeqCst);
+                            self.note(format!(
+                                "worker {} lost at step {} ({e:#}); chunk {chunk} requeued",
+                                conn.id, round.step
+                            ));
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        lock(&self.registry).append(&mut lock(&survivors));
+        results.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Lease one chunk to a connection: sync parameters if stale, send the
+/// work order, await the reply under the socket deadline. Any failure
+/// invalidates the connection as a whole — mid-exchange framing cannot be
+/// resynced — so the caller requeues and drops it.
+fn dispatch(
+    conn: &mut Conn,
+    round: &Round<'_>,
+    job: &WorkRequest,
+    chunk: u32,
+) -> Result<WorkReply> {
+    if conn.sent_version != round.version || conn.sent_model != round.model {
+        wire::write_set_state(&mut conn.stream, round.version, round.model, round.params)?;
+        conn.sent_version = round.version;
+        conn.sent_model = round.model.to_string();
+    }
+    wire::write_work(&mut conn.stream, round.version, round.step, chunk, job)?;
+    match wire::read_frame(&mut conn.stream)? {
+        Msg::Reply { chunk: got, out } if got == chunk => Ok(out),
+        Msg::Reply { chunk: got, .. } => bail!("reply for chunk {got} while awaiting {chunk}"),
+        _ => bail!("unexpected message while awaiting chunk {chunk}"),
+    }
+}
+
+/// Ping/pong under the socket deadline; the nonce (the step) must echo.
+fn heartbeat(conn: &mut Conn, nonce: u64) -> Result<()> {
+    wire::write_frame(&mut conn.stream, &Msg::Ping { nonce })?;
+    match wire::read_frame(&mut conn.stream)? {
+        Msg::Pong { nonce: got } if got == nonce => Ok(()),
+        _ => bail!("bad heartbeat reply"),
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Mutex<Vec<Conn>>>,
+    shutdown: Arc<AtomicBool>,
+    lease_ms: u64,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(conn) = handshake(stream, lease_ms) {
+            lock(&registry).push(conn);
+        }
+    }
+}
+
+/// Read the dialer's `Hello` under the lease deadline and arm both socket
+/// deadlines; a dialer that never completes the handshake is dropped
+/// without wedging later accepts.
+fn handshake(mut stream: TcpStream, lease_ms: u64) -> Option<Conn> {
+    let deadline = Some(Duration::from_millis(lease_ms));
+    stream.set_read_timeout(deadline).ok()?;
+    stream.set_write_timeout(deadline).ok()?;
+    let _ = stream.set_nodelay(true);
+    match wire::read_frame(&mut stream) {
+        Ok(Msg::Hello { worker_id }) => {
+            Some(Conn { id: worker_id, stream, sent_version: 0, sent_model: String::new() })
+        }
+        _ => None,
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.stop_workers.store(true, Ordering::SeqCst);
+        for conn in lock(&self.registry).iter_mut() {
+            let _ = wire::write_frame(&mut conn.stream, &Msg::Shutdown);
+        }
+        lock(&self.registry).clear();
+        // Unblock the accept loop (it checks the flag after every accept),
+        // then join it so no late registration can slip past the sweep.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        // A worker may have re-registered between the first sweep and the
+        // accept join; shut those down too before joining worker threads.
+        for conn in lock(&self.registry).iter_mut() {
+            let _ = wire::write_frame(&mut conn.stream, &Msg::Shutdown);
+        }
+        lock(&self.registry).clear();
+        let threads: Vec<JoinHandle<()>> = lock(&self.threads).drain(..).collect();
+        for handle in threads {
+            let _ = handle.join();
+        }
+        let children: Vec<Child> = lock(&self.children).drain(..).collect();
+        for mut child in children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! [`DistEngine`] — the multi-process distributed [`Backend`].
+//!
+//! Wraps an in-process [`NativeEngine`] (model registry, fallback compute,
+//! SGD update) and a [`Coordinator`] that farms chunk work out to worker
+//! processes/threads. Every batch-level entry builds its chunk jobs from
+//! the same worker-count-independent planners the native backend uses
+//! ([`train_chunk_plan`] / [`grad_chunk_plan`]), scatters them, fills any
+//! unserved chunk with the identical in-process per-chunk body, and merges
+//! **in fixed chunk order** — so N worker processes, any fault pattern,
+//! and the pure in-process path all produce the same bits.
+//!
+//! Degradation ladder: remote workers → per-chunk in-process fallback
+//! (expired leases, lost workers) → fully in-process when every remote
+//! worker is gone. Downgrades and recoveries are logged as events the
+//! trainer drains into its metrics log.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::coordinator::{Coordinator, Round};
+use super::fault::FaultPlan;
+use super::wire::{WorkReply, WorkRequest};
+use crate::runtime::backend::Backend;
+use crate::runtime::engine::{ModelState, StepOutput};
+use crate::runtime::layers::LayerModel;
+use crate::runtime::manifest::ModelInfo;
+use crate::runtime::native::{self, grad_chunk_plan, train_chunk_plan, NativeEngine};
+use crate::runtime::score::{ScoreKind, ScorePrecision};
+use crate::runtime::tensor::HostTensor;
+
+/// The distributed backend. See the module docs.
+pub struct DistEngine {
+    local: Arc<NativeEngine>,
+    coord: Coordinator,
+    /// Whether the last round ran fully in-process (drives one-shot
+    /// degradation/recovery events instead of per-step spam).
+    degraded: AtomicBool,
+}
+
+impl DistEngine {
+    /// Wrap `local` and start a coordinator with the given chunk lease.
+    pub fn new(local: NativeEngine, lease_ms: u64) -> Result<Self> {
+        Ok(Self {
+            local: Arc::new(local),
+            coord: Coordinator::new(lease_ms)?,
+            degraded: AtomicBool::new(false),
+        })
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Attach `n` in-thread workers sharing this engine's model registry.
+    pub fn spawn_thread_workers(&self, n: usize, plan: &FaultPlan) {
+        self.coord.spawn_thread_workers(n, Arc::clone(&self.local), plan);
+    }
+
+    /// Spawn `n` worker processes of `program` (the `isample` binary).
+    pub fn spawn_process_workers(&self, n: usize, program: &Path, plan: &FaultPlan) -> Result<()> {
+        self.coord.spawn_process_workers(n, program, plan)
+    }
+
+    /// Block (bounded) until `n` workers have registered.
+    pub fn wait_for_workers(&self, n: usize) -> Result<()> {
+        self.coord.wait_for_workers(n)
+    }
+
+    /// Scatter chunk jobs, fill unserved chunks via `local` (the
+    /// in-process twin of the remote body), and return every chunk's
+    /// reply in chunk order.
+    fn scatter<F>(
+        &self,
+        round: &Round<'_>,
+        jobs: &[WorkRequest],
+        mut local: F,
+    ) -> Result<Vec<WorkReply>>
+    where
+        F: FnMut(usize) -> Result<WorkReply>,
+    {
+        let slots = self.coord.execute(round, jobs);
+        let total = slots.len();
+        let mut fallback = 0usize;
+        let mut filled = Vec::with_capacity(total);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(reply) => filled.push(reply),
+                None => {
+                    fallback += 1;
+                    filled.push(local(i)?);
+                }
+            }
+        }
+        if fallback > 0 {
+            self.coord.count_local_chunks(fallback as u64);
+        }
+        if fallback == total {
+            if !self.degraded.swap(true, Ordering::SeqCst) {
+                self.coord.note(format!(
+                    "step {}: all remote workers lost; continuing on the in-process engine",
+                    round.step
+                ));
+            }
+        } else {
+            if fallback > 0 {
+                self.coord.note(format!(
+                    "step {}: {fallback} of {total} chunks fell back to the in-process engine",
+                    round.step
+                ));
+            }
+            if self.degraded.swap(false, Ordering::SeqCst) {
+                self.coord.note(format!("step {}: remote workers restored", round.step));
+            }
+        }
+        Ok(filled)
+    }
+}
+
+/// Batch-shape validation (the [`NativeEngine`] contract, restated here
+/// because chunk jobs are sliced before the local engine ever sees them).
+fn check_batch(model: &LayerModel, x: &HostTensor, y: &[i32]) -> Result<usize> {
+    let d = model.in_dim();
+    if x.shape.len() != 2 || x.shape[1] != d {
+        bail!("x shape {:?} does not match model expectation [n, {d}]", x.shape);
+    }
+    let n = x.shape[0];
+    if n == 0 {
+        bail!("empty batch");
+    }
+    if y.len() != n {
+        bail!("y length {} != batch {n}", y.len());
+    }
+    Ok(n)
+}
+
+/// Copy one chunk's rows into a standalone tensor (what travels the wire,
+/// and what the in-process fallback computes on — identical inputs).
+fn chunk_tensor(x: &HostTensor, d: usize, start: usize, len: usize) -> HostTensor {
+    HostTensor::new(vec![len, d], x.data[start * d..(start + len) * d].to_vec())
+}
+
+/// Validate a merged gradient buffer against the model's parameter specs
+/// (a defense line against a wrong-shaped remote reply).
+fn check_grads(model: &LayerModel, grads: &[Vec<f32>]) -> Result<()> {
+    if grads.len() != model.num_param_tensors()
+        || grads.iter().zip(model.param_elems()).any(|(g, &n)| g.len() != n)
+    {
+        bail!("dist: remote gradient buffers do not match the model's parameter shapes");
+    }
+    Ok(())
+}
+
+impl Backend for DistEngine {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn model_info(&self, model: &str) -> Result<&ModelInfo> {
+        self.local.model_info(model)
+    }
+
+    fn supports(&self, model: &str, entry: &str, batch: usize) -> Result<bool> {
+        self.local.supports(model, entry, batch)
+    }
+
+    fn prepare(&self, model: &str, entry: &str, batch: usize) -> Result<()> {
+        self.local.prepare(model, entry, batch)
+    }
+
+    fn init_state(&self, model: &str, seed: u64) -> Result<ModelState> {
+        self.local.init_state(model, seed)
+    }
+
+    fn set_train_workers(&self, workers: usize) {
+        self.local.set_train_workers(workers);
+    }
+
+    fn train_workers(&self) -> usize {
+        NativeEngine::train_workers(&self.local)
+    }
+
+    fn set_score_precision(&self, precision: ScorePrecision) {
+        self.local.set_score_precision(precision);
+    }
+
+    fn scores_sharded_internally(&self, _kind: ScoreKind) -> bool {
+        // Scoring parallelism is the coordinator's job: chunked fan-out to
+        // worker processes. An outer `--score-workers` shard layer would
+        // only serialize on the coordinator's round lock.
+        true
+    }
+
+    fn drain_events(&self) -> Vec<String> {
+        self.coord.drain_events()
+    }
+
+    fn train_step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let info = self.local.model_info(&state.model)?;
+        let model = self.local.layer_model(&state.model)?;
+        let n = check_batch(model, x, y)?;
+        if w.len() != n {
+            bail!("w length {} != batch {n}", w.len());
+        }
+        let nt = info.params.len();
+        let mut params = native::host_tensors(&state.params, nt, "parameter")?;
+        let mut mom = native::host_tensors(&state.mom, nt, "momentum")?;
+        let inv_n = 1.0 / n as f32;
+        let d = x.shape[1];
+        let plan = grad_chunk_plan(n);
+        let jobs: Vec<WorkRequest> = plan
+            .iter()
+            .map(|&(start, len)| WorkRequest::Grad {
+                dim: d as u32,
+                x: x.data[start * d..(start + len) * d].to_vec(),
+                y: y[start..start + len].to_vec(),
+                w: Some(w[start..start + len].to_vec()),
+                scale: inv_n,
+            })
+            .collect();
+        let round = Round {
+            step: state.step,
+            version: state.step + 1,
+            model: &state.model,
+            params: &params,
+        };
+        let replies = self.scatter(&round, &jobs, |i| {
+            let (start, len) = plan[i];
+            let t = chunk_tensor(x, d, start, len);
+            let out = native::grad_chunk(
+                model,
+                &params,
+                &t,
+                &y[start..start + len],
+                Some(&w[start..start + len]),
+                inv_n,
+            )?;
+            Ok(WorkReply::Grad {
+                grads: out.grads,
+                weighted_loss: out.weighted_loss,
+                loss: out.loss,
+                scores: out.scores,
+            })
+        })?;
+        // Fixed-order merge, seeded with chunk 0 — the exact reduction of
+        // the in-process `batch_pass`.
+        let mut loss_vec: Vec<f32> = Vec::with_capacity(n);
+        let mut scores: Vec<f32> = Vec::with_capacity(n);
+        let mut merged: Option<(Vec<Vec<f32>>, f64)> = None;
+        for (i, reply) in replies.into_iter().enumerate() {
+            let WorkReply::Grad { grads, weighted_loss, loss, scores: sc } = reply else {
+                bail!("dist: mismatched reply type for a gradient chunk");
+            };
+            let len = plan[i].1;
+            if loss.len() != len || sc.len() != len {
+                bail!("dist: chunk {i} returned {} rows, expected {len}", loss.len());
+            }
+            check_grads(model, &grads)?;
+            loss_vec.extend_from_slice(&loss);
+            scores.extend_from_slice(&sc);
+            match merged.as_mut() {
+                None => merged = Some((grads, weighted_loss)),
+                Some((acc, wl)) => {
+                    for (gt, ot) in acc.iter_mut().zip(&grads) {
+                        for (gv, &ov) in gt.iter_mut().zip(ot) {
+                            *gv += ov;
+                        }
+                    }
+                    *wl += weighted_loss;
+                }
+            }
+        }
+        let (grads, weighted_loss) = merged.context("chunk plan is never empty")?;
+        native::sgd_update(
+            &mut params,
+            &mut mom,
+            &grads,
+            lr,
+            self.local.momentum,
+            self.local.weight_decay,
+        );
+        state.params = native::lits_from(info, &params)?;
+        state.mom = native::lits_from(info, &mom)?;
+        state.step += 1;
+        Ok(StepOutput { loss: weighted_loss as f32, loss_vec, scores })
+    }
+
+    fn fwd_scores(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let info = self.local.model_info(&state.model)?;
+        let model = self.local.layer_model(&state.model)?;
+        let n = check_batch(model, x, y)?;
+        let params = native::host_tensors(&state.params, info.params.len(), "parameter")?;
+        let d = x.shape[1];
+        let precision = self.local.score_precision();
+        let plan = train_chunk_plan(n);
+        let jobs: Vec<WorkRequest> = plan
+            .iter()
+            .map(|&(start, len)| WorkRequest::Score {
+                dim: d as u32,
+                x: x.data[start * d..(start + len) * d].to_vec(),
+                y: y[start..start + len].to_vec(),
+                precision: precision.code(),
+            })
+            .collect();
+        let round = Round {
+            step: state.step,
+            version: state.step + 1,
+            model: &state.model,
+            params: &params,
+        };
+        // bf16 shadow for local fallbacks, built at most once per call
+        // (`quantize_params` is pure, so laziness is bit-invisible).
+        let mut qp: Option<Vec<Vec<u16>>> = None;
+        let replies = self.scatter(&round, &jobs, |i| {
+            let (start, len) = plan[i];
+            let t = chunk_tensor(x, d, start, len);
+            if precision == ScorePrecision::Bf16 && qp.is_none() {
+                qp = Some(model.quantize_params(&params));
+            }
+            let (loss, sc) =
+                native::score_chunk(model, &params, qp.as_deref(), &t, &y[start..start + len])?;
+            Ok(WorkReply::Score { loss, scores: sc })
+        })?;
+        let mut loss_vec: Vec<f32> = Vec::with_capacity(n);
+        let mut scores: Vec<f32> = Vec::with_capacity(n);
+        for (i, reply) in replies.into_iter().enumerate() {
+            let WorkReply::Score { loss, scores: sc } = reply else {
+                bail!("dist: mismatched reply type for a score chunk");
+            };
+            let len = plan[i].1;
+            if loss.len() != len || sc.len() != len {
+                bail!("dist: chunk {i} returned {} rows, expected {len}", loss.len());
+            }
+            loss_vec.extend_from_slice(&loss);
+            scores.extend_from_slice(&sc);
+        }
+        Ok((loss_vec, scores))
+    }
+
+    fn eval_metrics(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<(f64, i64)> {
+        let info = self.local.model_info(&state.model)?;
+        let model = self.local.layer_model(&state.model)?;
+        let n = check_batch(model, x, y)?;
+        let params = native::host_tensors(&state.params, info.params.len(), "parameter")?;
+        let d = x.shape[1];
+        let plan = train_chunk_plan(n);
+        let jobs: Vec<WorkRequest> = plan
+            .iter()
+            .map(|&(start, len)| WorkRequest::Eval {
+                dim: d as u32,
+                x: x.data[start * d..(start + len) * d].to_vec(),
+                y: y[start..start + len].to_vec(),
+            })
+            .collect();
+        let round = Round {
+            step: state.step,
+            version: state.step + 1,
+            model: &state.model,
+            params: &params,
+        };
+        let replies = self.scatter(&round, &jobs, |i| {
+            let (start, len) = plan[i];
+            let t = chunk_tensor(x, d, start, len);
+            let (sum_loss, correct) =
+                native::eval_chunk(model, &params, &t, &y[start..start + len])?;
+            Ok(WorkReply::Eval { sum_loss, correct })
+        })?;
+        // fixed-order (chunk index) merge: bit-identical for any workers
+        let mut sum_loss = 0.0f64;
+        let mut correct = 0i64;
+        for reply in replies {
+            let WorkReply::Eval { sum_loss: l, correct: k } = reply else {
+                bail!("dist: mismatched reply type for an eval chunk");
+            };
+            sum_loss += l;
+            correct += k;
+        }
+        Ok((sum_loss, correct))
+    }
+
+    fn grad_norms(&self, state: &ModelState, x: &HostTensor, y: &[i32]) -> Result<Vec<f32>> {
+        let info = self.local.model_info(&state.model)?;
+        let model = self.local.layer_model(&state.model)?;
+        let n = check_batch(model, x, y)?;
+        let params = native::host_tensors(&state.params, info.params.len(), "parameter")?;
+        let d = x.shape[1];
+        let plan = train_chunk_plan(n);
+        let jobs: Vec<WorkRequest> = plan
+            .iter()
+            .map(|&(start, len)| WorkRequest::GradNorm {
+                dim: d as u32,
+                x: x.data[start * d..(start + len) * d].to_vec(),
+                y: y[start..start + len].to_vec(),
+            })
+            .collect();
+        let round = Round {
+            step: state.step,
+            version: state.step + 1,
+            model: &state.model,
+            params: &params,
+        };
+        let replies = self.scatter(&round, &jobs, |i| {
+            let (start, len) = plan[i];
+            let t = chunk_tensor(x, d, start, len);
+            let norms = native::grad_norm_chunk(model, &params, &t, &y[start..start + len])?;
+            Ok(WorkReply::GradNorm { norms })
+        })?;
+        let mut out: Vec<f32> = Vec::with_capacity(n);
+        for (i, reply) in replies.into_iter().enumerate() {
+            let WorkReply::GradNorm { norms } = reply else {
+                bail!("dist: mismatched reply type for a grad-norm chunk");
+            };
+            if norms.len() != plan[i].1 {
+                bail!("dist: chunk {i} returned {} norms, expected {}", norms.len(), plan[i].1);
+            }
+            out.extend_from_slice(&norms);
+        }
+        Ok(out)
+    }
+
+    fn grad(
+        &self,
+        model: &str,
+        params: &[Literal],
+        x: &HostTensor,
+        y: &[i32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        // Host-composed SVRG substrate runs in-process: it evaluates
+        // arbitrary (snapshot) parameters, not the trainer state the
+        // version protocol tracks.
+        self.local.grad(model, params, x, y)
+    }
+
+    fn weighted_grad(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &[i32],
+        w: &[f32],
+    ) -> Result<(Vec<Literal>, f32)> {
+        self.local.weighted_grad(state, x, y, w)
+    }
+}

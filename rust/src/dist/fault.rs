@@ -1,0 +1,164 @@
+//! Deterministic fault injection for the distributed data plane.
+//!
+//! A [`FaultPlan`] is a finite list of `(step, worker, chunk) -> fault`
+//! triples, parsed from a compact spec string (the `ISAMPLE_FAULT_PLAN`
+//! environment variable, or the `--fault-plan` flag a worker process is
+//! spawned with). The plan is consulted by the *worker* right before it
+//! computes a chunk, and is a pure function of the work order's
+//! coordinates — never of wall-clock time, scheduling, or randomness — so
+//! a fixed seed plus a fixed plan replays the exact same fault sequence
+//! on every run. Faults perturb scheduling only (which worker computes
+//! which chunk, and when); the merged results are bit-identical to a
+//! fault-free run by the chunk-plan invariant.
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable holding the default fault-plan spec.
+pub const ENV_FAULT_PLAN: &str = "ISAMPLE_FAULT_PLAN";
+
+/// What a worker does when its fault trigger matches a work order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Die mid-lease: a worker process exits abruptly (status 17); a
+    /// worker thread returns and never reconnects.
+    Kill,
+    /// Sleep this long before computing the chunk. Below the lease this
+    /// only delays the reply; above it the coordinator requeues the chunk
+    /// and drops the connection.
+    Stall { ms: u64 },
+    /// Compute nothing and never reply; the coordinator's lease expires,
+    /// the chunk is requeued, and the connection is dropped.
+    DropReply,
+}
+
+/// One trigger: fire `kind` when worker `worker` receives `chunk` of step
+/// `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultAction {
+    pub step: u64,
+    pub worker: u32,
+    pub chunk: u32,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule (empty by default).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    /// Parse a spec: comma-separated `kind@step:worker:chunk` entries,
+    /// where `kind` is `kill`, `drop`, or `stall` (which takes a fourth
+    /// `:ms` field) — e.g. `kill@3:1:0,stall@5:0:2:250,drop@7:2:1`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut actions = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, coords) = entry.split_once('@').with_context(|| {
+                format!("fault plan entry {entry:?}: expected kind@step:worker:chunk")
+            })?;
+            let fields = coords
+                .split(':')
+                .map(|f| {
+                    f.trim().parse::<u64>().with_context(|| {
+                        format!("fault plan entry {entry:?}: bad number {f:?}")
+                    })
+                })
+                .collect::<Result<Vec<u64>>>()?;
+            let (step, worker, chunk, rest) = match fields.as_slice() {
+                [s, w, c, rest @ ..] => (*s, *w as u32, *c as u32, rest),
+                _ => bail!("fault plan entry {entry:?}: expected step:worker:chunk"),
+            };
+            let kind = match (kind, rest) {
+                ("kill", []) => FaultKind::Kill,
+                ("drop", []) => FaultKind::DropReply,
+                ("stall", [ms]) => FaultKind::Stall { ms: *ms },
+                ("stall", []) => bail!("fault plan entry {entry:?}: stall needs a :ms field"),
+                _ => bail!("fault plan entry {entry:?}: unknown kind {kind:?} or extra fields"),
+            };
+            actions.push(FaultAction { step, worker, chunk, kind });
+        }
+        Ok(Self { actions })
+    }
+
+    /// The plan named by [`ENV_FAULT_PLAN`] (empty when unset).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var(ENV_FAULT_PLAN) {
+            Ok(spec) => Self::parse(&spec),
+            Err(_) => Ok(Self::default()),
+        }
+    }
+
+    /// Serialize back to the spec grammar `parse` accepts (used to hand a
+    /// coordinator-side plan to spawned worker processes).
+    pub fn to_spec(&self) -> String {
+        self.actions
+            .iter()
+            .map(|a| {
+                let at = format!("{}:{}:{}", a.step, a.worker, a.chunk);
+                match a.kind {
+                    FaultKind::Kill => format!("kill@{at}"),
+                    FaultKind::DropReply => format!("drop@{at}"),
+                    FaultKind::Stall { ms } => format!("stall@{at}:{ms}"),
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// The fault (if any) scheduled for this work order.
+    pub fn at(&self, step: u64, worker: u32, chunk: u32) -> Option<FaultKind> {
+        self.actions
+            .iter()
+            .find(|a| a.step == step && a.worker == worker && a.chunk == chunk)
+            .map(|a| a.kind)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fires_and_roundtrips() -> Result<()> {
+        let plan = FaultPlan::parse("kill@3:1:0, stall@5:0:2:250 ,drop@7:2:1")?;
+        assert!(!plan.is_empty());
+        assert_eq!(plan.at(3, 1, 0), Some(FaultKind::Kill));
+        assert_eq!(plan.at(5, 0, 2), Some(FaultKind::Stall { ms: 250 }));
+        assert_eq!(plan.at(7, 2, 1), Some(FaultKind::DropReply));
+        assert_eq!(plan.at(3, 1, 1), None);
+        assert_eq!(plan.at(4, 1, 0), None);
+        let respec = plan.to_spec();
+        assert_eq!(FaultPlan::parse(&respec)?, plan);
+        assert_eq!(respec, "kill@3:1:0,stall@5:0:2:250,drop@7:2:1");
+        Ok(())
+    }
+
+    #[test]
+    fn empty_specs_mean_no_faults() -> Result<()> {
+        for spec in ["", "  ", ","] {
+            let plan = FaultPlan::parse(spec)?;
+            assert!(plan.is_empty());
+            assert_eq!(plan.to_spec(), "");
+        }
+        assert_eq!(FaultPlan::default().at(0, 0, 0), None);
+        Ok(())
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for spec in
+            ["kill", "kill@1:2", "boom@1:2:3", "stall@1:2:3", "kill@1:2:3:4", "kill@a:2:3"]
+        {
+            let err = match FaultPlan::parse(spec) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => String::new(),
+            };
+            assert!(err.contains("fault plan entry"), "{spec:?} -> {err:?}");
+        }
+    }
+}

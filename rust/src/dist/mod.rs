@@ -1,0 +1,35 @@
+//! Fault-tolerant multi-process distribution of chunk compute.
+//!
+//! The process model: one **coordinator** (the trainer process) owns the
+//! training loop, the sampler, and all state; N **workers** — the same
+//! binary in `worker` mode, or in-thread twins in tests — dial it over
+//! localhost TCP and serve chunk-sized work orders (gradient, score, eval
+//! and gradient-norm chunks cut by the same planners the in-process
+//! engine uses). Replies are merged **in fixed chunk order**, so any
+//! worker count, any interleaving, and any fault pattern produce bits
+//! identical to the serial in-process run.
+//!
+//! The layers, bottom-up:
+//!
+//! * [`wire`] — length-prefixed, std-only message codec (floats travel as
+//!   IEEE-754 bit patterns; transport is bit-exact).
+//! * [`fault`] — deterministic fault injection: kill/stall/drop-reply at
+//!   `(step, worker, chunk)` triples, a pure function of the work order.
+//! * [`worker`] — the serve loop plus bounded-backoff reconnect.
+//! * [`coordinator`] — registry, heartbeats, chunk leases with
+//!   requeue-on-timeout, per-round scatter/gather.
+//! * [`engine`] — [`DistEngine`], the [`Backend`](crate::runtime::backend::Backend)
+//!   that ties it together and degrades to the in-process engine when all
+//!   workers are lost.
+
+pub mod coordinator;
+pub mod engine;
+pub mod fault;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{Coordinator, Round};
+pub use engine::DistEngine;
+pub use fault::{FaultKind, FaultPlan, ENV_FAULT_PLAN};
+pub use wire::{Msg, WorkReply, WorkRequest};
+pub use worker::{run_worker, WorkerConfig};

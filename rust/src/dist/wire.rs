@@ -1,0 +1,575 @@
+//! Length-prefixed, std-only wire protocol for the distributed data plane.
+//!
+//! Framing: every message is a `u32` little-endian payload length followed
+//! by the payload; the payload's first byte is the message tag. All scalars
+//! are little-endian and floats travel as raw IEEE-754 bits (`to_bits` /
+//! `from_bits`), so every value round-trips **bit-exactly** — the transport
+//! can never perturb the repo's bit-determinism contract. No serde, no
+//! bincode: the whole codec is the cursor below, and any decode error is
+//! treated by both ends as a broken connection (there is no resync point
+//! inside a stream).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Sanity cap on a single frame (256 MiB): a corrupt length prefix fails
+/// fast instead of attempting a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// Cap on decoded string fields (model names).
+const MAX_STR_BYTES: usize = 1 << 16;
+
+const TAG_HELLO: u8 = 1;
+const TAG_PING: u8 = 2;
+const TAG_PONG: u8 = 3;
+const TAG_SET_STATE: u8 = 4;
+const TAG_WORK: u8 = 5;
+const TAG_REPLY: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+const REQ_GRAD: u8 = 1;
+const REQ_SCORE: u8 = 2;
+const REQ_EVAL: u8 = 3;
+const REQ_GRAD_NORM: u8 = 4;
+
+const REP_GRAD: u8 = 1;
+const REP_SCORE: u8 = 2;
+const REP_EVAL: u8 = 3;
+const REP_GRAD_NORM: u8 = 4;
+
+/// Every message either end can send. Workers send `Hello` once per
+/// connection, then answer `Ping`/`SetState`/`Work`/`Shutdown`; the
+/// coordinator sends everything else and reads `Pong`/`Reply`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello { worker_id: u32 },
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+    SetState { version: u64, model: String, params: Vec<Vec<f32>> },
+    Work { version: u64, step: u64, chunk: u32, req: WorkRequest },
+    Reply { chunk: u32, out: WorkReply },
+    Shutdown,
+}
+
+/// One chunk of batch-level work: the chunk's rows (row-major `x`, labels
+/// `y`) plus the entry-specific extras. `dim` is the feature dimension, so
+/// the row count is `x.len() / dim`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkRequest {
+    Grad { dim: u32, x: Vec<f32>, y: Vec<i32>, w: Option<Vec<f32>>, scale: f32 },
+    Score { dim: u32, x: Vec<f32>, y: Vec<i32>, precision: u8 },
+    Eval { dim: u32, x: Vec<f32>, y: Vec<i32> },
+    GradNorm { dim: u32, x: Vec<f32>, y: Vec<i32> },
+}
+
+/// A chunk's result, mirroring [`WorkRequest`] variant for variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkReply {
+    Grad { grads: Vec<Vec<f32>>, weighted_loss: f64, loss: Vec<f32>, scores: Vec<f32> },
+    Score { loss: Vec<f32>, scores: Vec<f32> },
+    Eval { sum_loss: f64, correct: i64 },
+    GradNorm { norms: Vec<f32> },
+}
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    put_u64(b, v.to_bits());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    put_u32(b, v.len() as u32);
+    for &x in v {
+        put_f32(b, x);
+    }
+}
+
+fn put_i32s(b: &mut Vec<u8>, v: &[i32]) {
+    put_u32(b, v.len() as u32);
+    for &x in v {
+        put_u32(b, x as u32);
+    }
+}
+
+fn put_mat(b: &mut Vec<u8>, m: &[Vec<f32>]) {
+    put_u32(b, m.len() as u32);
+    for t in m {
+        put_f32s(b, t);
+    }
+}
+
+/// Bounds-checked decode cursor; every take bails (never panics) on a
+/// truncated or oversized field.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("wire: truncated frame ({} bytes left, {n} needed)", self.buf.len() - self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > MAX_STR_BYTES {
+            bail!("wire: string field of {n} bytes exceeds the cap");
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("wire: string field is not utf-8")
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let nb = n.checked_mul(4).context("wire: vector length overflow")?;
+        let bytes = self.take(nb)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let nb = n.checked_mul(4).context("wire: vector length overflow")?;
+        let bytes = self.take(nb)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i32)
+            .collect())
+    }
+
+    fn mat(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.u32()? as usize;
+        if n > self.buf.len() - self.pos {
+            bail!("wire: tensor count {n} exceeds the frame");
+        }
+        (0..n).map(|_| self.f32s()).collect()
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("wire: {} trailing bytes in frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn encode_set_state_into(b: &mut Vec<u8>, version: u64, model: &str, params: &[Vec<f32>]) {
+    put_u8(b, TAG_SET_STATE);
+    put_u64(b, version);
+    put_str(b, model);
+    put_mat(b, params);
+}
+
+fn encode_work_into(b: &mut Vec<u8>, version: u64, step: u64, chunk: u32, req: &WorkRequest) {
+    put_u8(b, TAG_WORK);
+    put_u64(b, version);
+    put_u64(b, step);
+    put_u32(b, chunk);
+    put_req(b, req);
+}
+
+fn put_req(b: &mut Vec<u8>, req: &WorkRequest) {
+    match req {
+        WorkRequest::Grad { dim, x, y, w, scale } => {
+            put_u8(b, REQ_GRAD);
+            put_u32(b, *dim);
+            put_f32s(b, x);
+            put_i32s(b, y);
+            match w {
+                Some(w) => {
+                    put_u8(b, 1);
+                    put_f32s(b, w);
+                }
+                None => put_u8(b, 0),
+            }
+            put_f32(b, *scale);
+        }
+        WorkRequest::Score { dim, x, y, precision } => {
+            put_u8(b, REQ_SCORE);
+            put_u32(b, *dim);
+            put_f32s(b, x);
+            put_i32s(b, y);
+            put_u8(b, *precision);
+        }
+        WorkRequest::Eval { dim, x, y } => {
+            put_u8(b, REQ_EVAL);
+            put_u32(b, *dim);
+            put_f32s(b, x);
+            put_i32s(b, y);
+        }
+        WorkRequest::GradNorm { dim, x, y } => {
+            put_u8(b, REQ_GRAD_NORM);
+            put_u32(b, *dim);
+            put_f32s(b, x);
+            put_i32s(b, y);
+        }
+    }
+}
+
+fn put_reply(b: &mut Vec<u8>, out: &WorkReply) {
+    match out {
+        WorkReply::Grad { grads, weighted_loss, loss, scores } => {
+            put_u8(b, REP_GRAD);
+            put_mat(b, grads);
+            put_f64(b, *weighted_loss);
+            put_f32s(b, loss);
+            put_f32s(b, scores);
+        }
+        WorkReply::Score { loss, scores } => {
+            put_u8(b, REP_SCORE);
+            put_f32s(b, loss);
+            put_f32s(b, scores);
+        }
+        WorkReply::Eval { sum_loss, correct } => {
+            put_u8(b, REP_EVAL);
+            put_f64(b, *sum_loss);
+            put_u64(b, *correct as u64);
+        }
+        WorkReply::GradNorm { norms } => {
+            put_u8(b, REP_GRAD_NORM);
+            put_f32s(b, norms);
+        }
+    }
+}
+
+fn take_req(c: &mut Cursor<'_>) -> Result<WorkRequest> {
+    match c.u8()? {
+        REQ_GRAD => {
+            let dim = c.u32()?;
+            let x = c.f32s()?;
+            let y = c.i32s()?;
+            let w = match c.u8()? {
+                0 => None,
+                1 => Some(c.f32s()?),
+                other => bail!("wire: bad option tag {other}"),
+            };
+            let scale = c.f32()?;
+            Ok(WorkRequest::Grad { dim, x, y, w, scale })
+        }
+        REQ_SCORE => {
+            let dim = c.u32()?;
+            let x = c.f32s()?;
+            let y = c.i32s()?;
+            let precision = c.u8()?;
+            Ok(WorkRequest::Score { dim, x, y, precision })
+        }
+        REQ_EVAL => {
+            let dim = c.u32()?;
+            let x = c.f32s()?;
+            let y = c.i32s()?;
+            Ok(WorkRequest::Eval { dim, x, y })
+        }
+        REQ_GRAD_NORM => {
+            let dim = c.u32()?;
+            let x = c.f32s()?;
+            let y = c.i32s()?;
+            Ok(WorkRequest::GradNorm { dim, x, y })
+        }
+        other => bail!("wire: unknown request tag {other}"),
+    }
+}
+
+fn take_reply(c: &mut Cursor<'_>) -> Result<WorkReply> {
+    match c.u8()? {
+        REP_GRAD => {
+            let grads = c.mat()?;
+            let weighted_loss = c.f64()?;
+            let loss = c.f32s()?;
+            let scores = c.f32s()?;
+            Ok(WorkReply::Grad { grads, weighted_loss, loss, scores })
+        }
+        REP_SCORE => {
+            let loss = c.f32s()?;
+            let scores = c.f32s()?;
+            Ok(WorkReply::Score { loss, scores })
+        }
+        REP_EVAL => Ok(WorkReply::Eval { sum_loss: c.f64()?, correct: c.i64()? }),
+        REP_GRAD_NORM => Ok(WorkReply::GradNorm { norms: c.f32s()? }),
+        other => bail!("wire: unknown reply tag {other}"),
+    }
+}
+
+impl Msg {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Msg::Hello { worker_id } => {
+                put_u8(&mut b, TAG_HELLO);
+                put_u32(&mut b, *worker_id);
+            }
+            Msg::Ping { nonce } => {
+                put_u8(&mut b, TAG_PING);
+                put_u64(&mut b, *nonce);
+            }
+            Msg::Pong { nonce } => {
+                put_u8(&mut b, TAG_PONG);
+                put_u64(&mut b, *nonce);
+            }
+            Msg::SetState { version, model, params } => {
+                encode_set_state_into(&mut b, *version, model, params);
+            }
+            Msg::Work { version, step, chunk, req } => {
+                encode_work_into(&mut b, *version, *step, *chunk, req);
+            }
+            Msg::Reply { chunk, out } => {
+                put_u8(&mut b, TAG_REPLY);
+                put_u32(&mut b, *chunk);
+                put_reply(&mut b, out);
+            }
+            Msg::Shutdown => put_u8(&mut b, TAG_SHUTDOWN),
+        }
+        b
+    }
+}
+
+/// Decode one payload (without the length prefix).
+pub fn decode(buf: &[u8]) -> Result<Msg> {
+    let mut c = Cursor::new(buf);
+    let msg = match c.u8()? {
+        TAG_HELLO => Msg::Hello { worker_id: c.u32()? },
+        TAG_PING => Msg::Ping { nonce: c.u64()? },
+        TAG_PONG => Msg::Pong { nonce: c.u64()? },
+        TAG_SET_STATE => {
+            Msg::SetState { version: c.u64()?, model: c.string()?, params: c.mat()? }
+        }
+        TAG_WORK => Msg::Work {
+            version: c.u64()?,
+            step: c.u64()?,
+            chunk: c.u32()?,
+            req: take_req(&mut c)?,
+        },
+        TAG_REPLY => Msg::Reply { chunk: c.u32()?, out: take_reply(&mut c)? },
+        TAG_SHUTDOWN => Msg::Shutdown,
+        other => bail!("wire: unknown message tag {other}"),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+fn write_payload(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        bail!("wire: frame of {} bytes exceeds the cap", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes()).context("wire: writing frame length")?;
+    w.write_all(payload).context("wire: writing frame payload")?;
+    w.flush().context("wire: flushing frame")?;
+    Ok(())
+}
+
+/// Write one framed message.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    write_payload(w, &msg.encode())
+}
+
+/// Borrowed-field writer for the hot path: identical bytes to
+/// `write_frame(&Msg::SetState { .. })` without cloning the parameters.
+pub fn write_set_state(
+    w: &mut impl Write,
+    version: u64,
+    model: &str,
+    params: &[Vec<f32>],
+) -> Result<()> {
+    let mut b = Vec::new();
+    encode_set_state_into(&mut b, version, model, params);
+    write_payload(w, &b)
+}
+
+/// Borrowed-field writer for work orders (same bytes as
+/// `write_frame(&Msg::Work { .. })` without cloning the chunk).
+pub fn write_work(
+    w: &mut impl Write,
+    version: u64,
+    step: u64,
+    chunk: u32,
+    req: &WorkRequest,
+) -> Result<()> {
+    let mut b = Vec::new();
+    encode_work_into(&mut b, version, step, chunk, req);
+    write_payload(w, &b)
+}
+
+/// Read one framed message (blocking; honors the stream's read timeout —
+/// the coordinator's lease deadline rides on exactly this).
+pub fn read_frame(r: &mut impl Read) -> Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("wire: reading frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        bail!("wire: bad frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("wire: reading frame payload")?;
+    decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Result<Msg> {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, msg)?;
+        read_frame(&mut &buf[..])
+    }
+
+    #[test]
+    fn every_message_roundtrips_bit_exactly() -> Result<()> {
+        let msgs = vec![
+            Msg::Hello { worker_id: 3 },
+            Msg::Ping { nonce: u64::MAX },
+            Msg::Pong { nonce: 0 },
+            Msg::SetState {
+                version: 7,
+                model: "mlp10".to_string(),
+                params: vec![vec![1.5, -0.0, f32::MIN_POSITIVE], vec![]],
+            },
+            Msg::Work {
+                version: 7,
+                step: 11,
+                chunk: 2,
+                req: WorkRequest::Grad {
+                    dim: 3,
+                    x: vec![0.25; 6],
+                    y: vec![-1, 2],
+                    w: Some(vec![0.5, 2.0]),
+                    scale: 0.125,
+                },
+            },
+            Msg::Work {
+                version: 8,
+                step: 12,
+                chunk: 0,
+                req: WorkRequest::Score { dim: 2, x: vec![1.0, 2.0], y: vec![1], precision: 1 },
+            },
+            Msg::Work {
+                version: 8,
+                step: 12,
+                chunk: 1,
+                req: WorkRequest::Eval { dim: 1, x: vec![3.0], y: vec![0] },
+            },
+            Msg::Work {
+                version: 8,
+                step: 13,
+                chunk: 4,
+                req: WorkRequest::GradNorm { dim: 1, x: vec![4.0], y: vec![2] },
+            },
+            Msg::Reply {
+                chunk: 9,
+                out: WorkReply::Grad {
+                    grads: vec![vec![1.0e-30, -2.5]],
+                    weighted_loss: 0.1f64.sin(),
+                    loss: vec![0.5],
+                    scores: vec![0.25],
+                },
+            },
+            Msg::Reply { chunk: 1, out: WorkReply::Score { loss: vec![], scores: vec![] } },
+            Msg::Reply { chunk: 2, out: WorkReply::Eval { sum_loss: -4.25, correct: -3 } },
+            Msg::Reply { chunk: 3, out: WorkReply::GradNorm { norms: vec![0.0, 1.0] } },
+            Msg::Shutdown,
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg)?, msg);
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn borrowed_writers_match_the_owned_encoding() -> Result<()> {
+        let params = vec![vec![1.0, 2.0], vec![3.0]];
+        let mut a: Vec<u8> = Vec::new();
+        write_set_state(&mut a, 5, "gold", &params)?;
+        let mut b: Vec<u8> = Vec::new();
+        write_frame(
+            &mut b,
+            &Msg::SetState { version: 5, model: "gold".to_string(), params: params.clone() },
+        )?;
+        assert_eq!(a, b);
+
+        let req = WorkRequest::Eval { dim: 2, x: vec![1.0, 2.0], y: vec![1] };
+        let mut a: Vec<u8> = Vec::new();
+        write_work(&mut a, 5, 9, 3, &req)?;
+        let mut b: Vec<u8> = Vec::new();
+        write_frame(&mut b, &Msg::Work { version: 5, step: 9, chunk: 3, req })?;
+        assert_eq!(a, b);
+        Ok(())
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_panicking() -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Msg::Ping { nonce: 1 })?;
+        // truncated payload
+        assert!(read_frame(&mut &buf[..buf.len() - 1]).is_err());
+        // zero / oversized length prefixes
+        assert!(read_frame(&mut &0u32.to_le_bytes()[..]).is_err());
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // unknown tag and trailing garbage
+        assert!(decode(&[99]).is_err());
+        assert!(decode(&[TAG_SHUTDOWN, 0]).is_err());
+        // truncated vector length inside a reply
+        let mut b = vec![TAG_REPLY];
+        put_u32(&mut b, 0);
+        put_u8(&mut b, REP_GRAD_NORM);
+        put_u32(&mut b, 1000);
+        assert!(decode(&b).is_err());
+        Ok(())
+    }
+}

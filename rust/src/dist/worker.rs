@@ -1,0 +1,235 @@
+//! The worker side of the distributed data plane.
+//!
+//! A worker is the same binary in `worker` mode (or an in-process thread in
+//! the test/bench harnesses): it dials the coordinator, sends `Hello`, and
+//! then serves a strict request/reply loop — `Ping`→`Pong`, `SetState`
+//! (cache the parameter content for the coming chunks), `Work`→`Reply`,
+//! `Shutdown`→exit. Chunk compute goes through the exact per-chunk bodies
+//! the in-process engine uses (`runtime::native::{grad_chunk, score_chunk,
+//! eval_chunk, grad_norm_chunk}`), so a remote chunk is bit-identical to
+//! the same chunk computed locally.
+//!
+//! Robustness: a broken or timed-out connection sends the worker into a
+//! bounded exponential-backoff reconnect loop (the coordinator drops a
+//! worker's socket whenever a lease expires; re-registering through a
+//! fresh `Hello` is the recovery path). The [`FaultPlan`] hook fires
+//! deterministically on (step, worker, chunk) work orders — see
+//! [`super::fault`].
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::fault::{FaultKind, FaultPlan};
+use super::wire::{self, Msg, WorkReply, WorkRequest};
+use crate::runtime::layers::LayerModel;
+use crate::runtime::native::{self, NativeEngine};
+use crate::runtime::score::ScorePrecision;
+use crate::runtime::tensor::HostTensor;
+
+/// Worker identity, fault schedule and reconnect policy.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub worker_id: u32,
+    pub fault_plan: FaultPlan,
+    /// Process mode: a `Kill` fault exits the process with status 17 — an
+    /// abrupt death the coordinator only observes as a broken socket.
+    /// Thread mode leaves this false and lets the worker thread end.
+    pub exit_on_kill: bool,
+    /// Reconnect attempts before giving up (backoff doubles from
+    /// `backoff_base_ms` up to `backoff_cap_ms`).
+    pub max_reconnect_attempts: u32,
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Cooperative stop flag for in-thread workers, checked between
+    /// reconnect attempts so a coordinator teardown never waits out the
+    /// whole backoff schedule. Process workers leave it `None`.
+    pub stop: Option<Arc<AtomicBool>>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            worker_id: 0,
+            fault_plan: FaultPlan::default(),
+            exit_on_kill: false,
+            max_reconnect_attempts: 8,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            stop: None,
+        }
+    }
+}
+
+/// Why one connection's serve loop ended.
+enum ServeExit {
+    /// A `Kill` fault fired.
+    Killed,
+    /// The coordinator said `Shutdown`.
+    Shutdown,
+    /// The socket broke (coordinator gone, or it dropped us on an expired
+    /// lease) — reconnect with backoff.
+    Disconnected,
+}
+
+/// Last `SetState` received on this connection: the parameter content all
+/// following work orders run against.
+struct HeldState {
+    version: u64,
+    model: String,
+    params: Vec<Vec<f32>>,
+    /// bf16 shadow of `params`, built once per version on the first bf16
+    /// score chunk (`quantize_params` is a pure function of the
+    /// parameters, so caching is bit-invisible).
+    qparams: Option<Vec<Vec<u16>>>,
+}
+
+/// Dial the coordinator and serve until shutdown, a kill fault, or the
+/// reconnect budget runs out. The engine provides the model registry; the
+/// parameters always come over the wire.
+pub fn run_worker(engine: &NativeEngine, addr: &str, cfg: &WorkerConfig) -> Result<()> {
+    let mut attempt = 0u32;
+    loop {
+        if stopped(cfg) {
+            return Ok(());
+        }
+        if let Ok(stream) = TcpStream::connect(addr) {
+            attempt = 0;
+            match serve(engine, stream, cfg) {
+                Ok(ServeExit::Shutdown) => return Ok(()),
+                Ok(ServeExit::Killed) => {
+                    if cfg.exit_on_kill {
+                        std::process::exit(17);
+                    }
+                    return Ok(());
+                }
+                Ok(ServeExit::Disconnected) | Err(_) => {}
+            }
+        }
+        attempt += 1;
+        if attempt > cfg.max_reconnect_attempts {
+            bail!(
+                "worker {}: no coordinator after {} reconnect attempts",
+                cfg.worker_id,
+                attempt - 1
+            );
+        }
+        let backoff = (cfg.backoff_base_ms << (attempt - 1).min(6)).min(cfg.backoff_cap_ms);
+        sleep_interruptibly(backoff, cfg);
+    }
+}
+
+fn stopped(cfg: &WorkerConfig) -> bool {
+    cfg.stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst))
+}
+
+/// Backoff sleep in small slices so the stop flag cuts it short.
+fn sleep_interruptibly(ms: u64, cfg: &WorkerConfig) {
+    let mut left = ms;
+    while left > 0 && !stopped(cfg) {
+        let slice = left.min(10);
+        thread::sleep(Duration::from_millis(slice));
+        left -= slice;
+    }
+}
+
+fn serve(engine: &NativeEngine, mut stream: TcpStream, cfg: &WorkerConfig) -> Result<ServeExit> {
+    let _ = stream.set_nodelay(true);
+    wire::write_frame(&mut stream, &Msg::Hello { worker_id: cfg.worker_id })?;
+    let mut held: Option<HeldState> = None;
+    loop {
+        let msg = match wire::read_frame(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(ServeExit::Disconnected),
+        };
+        match msg {
+            Msg::Ping { nonce } => wire::write_frame(&mut stream, &Msg::Pong { nonce })?,
+            Msg::Shutdown => return Ok(ServeExit::Shutdown),
+            Msg::SetState { version, model, params } => {
+                held = Some(HeldState { version, model, params, qparams: None });
+            }
+            Msg::Work { version, step, chunk, req } => {
+                match cfg.fault_plan.at(step, cfg.worker_id, chunk) {
+                    Some(FaultKind::Kill) => return Ok(ServeExit::Killed),
+                    Some(FaultKind::Stall { ms }) => thread::sleep(Duration::from_millis(ms)),
+                    Some(FaultKind::DropReply) => continue,
+                    None => {}
+                }
+                let state = held
+                    .as_mut()
+                    .with_context(|| format!("worker {}: Work before SetState", cfg.worker_id))?;
+                if state.version != version {
+                    bail!(
+                        "worker {}: work wants version {version} but holding {}",
+                        cfg.worker_id,
+                        state.version
+                    );
+                }
+                let out = compute(engine, state, req)?;
+                wire::write_frame(&mut stream, &Msg::Reply { chunk, out })?;
+            }
+            Msg::Hello { .. } | Msg::Pong { .. } | Msg::Reply { .. } => {
+                bail!("worker {}: unexpected coordinator message", cfg.worker_id)
+            }
+        }
+    }
+}
+
+/// Run one work order through the shared per-chunk bodies.
+fn compute(engine: &NativeEngine, state: &mut HeldState, req: WorkRequest) -> Result<WorkReply> {
+    let model = engine.layer_model(&state.model)?;
+    match req {
+        WorkRequest::Grad { dim, x, y, w, scale } => {
+            let t = chunk_tensor(model, dim, x, y.len())?;
+            let out = native::grad_chunk(model, &state.params, &t, &y, w.as_deref(), scale)?;
+            Ok(WorkReply::Grad {
+                grads: out.grads,
+                weighted_loss: out.weighted_loss,
+                loss: out.loss,
+                scores: out.scores,
+            })
+        }
+        WorkRequest::Score { dim, x, y, precision } => {
+            let t = chunk_tensor(model, dim, x, y.len())?;
+            let precision = ScorePrecision::from_code(precision)
+                .with_context(|| format!("worker: unknown score precision code {precision}"))?;
+            let qp = match precision {
+                ScorePrecision::F32 => None,
+                ScorePrecision::Bf16 => {
+                    if state.qparams.is_none() {
+                        state.qparams = Some(model.quantize_params(&state.params));
+                    }
+                    state.qparams.as_deref()
+                }
+            };
+            let (loss, scores) = native::score_chunk(model, &state.params, qp, &t, &y)?;
+            Ok(WorkReply::Score { loss, scores })
+        }
+        WorkRequest::Eval { dim, x, y } => {
+            let t = chunk_tensor(model, dim, x, y.len())?;
+            let (sum_loss, correct) = native::eval_chunk(model, &state.params, &t, &y)?;
+            Ok(WorkReply::Eval { sum_loss, correct })
+        }
+        WorkRequest::GradNorm { dim, x, y } => {
+            let t = chunk_tensor(model, dim, x, y.len())?;
+            let norms = native::grad_norm_chunk(model, &state.params, &t, &y)?;
+            Ok(WorkReply::GradNorm { norms })
+        }
+    }
+}
+
+/// Validate wire geometry against the model and wrap the rows in a tensor.
+fn chunk_tensor(model: &LayerModel, dim: u32, x: Vec<f32>, rows: usize) -> Result<HostTensor> {
+    let d = dim as usize;
+    if d != model.in_dim() {
+        bail!("wire: chunk dim {d} does not match model in_dim {}", model.in_dim());
+    }
+    if rows == 0 || x.len() != rows * d {
+        bail!("wire: chunk geometry mismatch ({} floats, {rows} rows of dim {d})", x.len());
+    }
+    Ok(HostTensor::new(vec![rows, d], x))
+}

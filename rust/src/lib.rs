@@ -18,6 +18,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod figures;
 pub mod runtime;
 pub mod util;

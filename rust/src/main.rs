@@ -9,14 +9,16 @@
 //!                                 [--seeds 1,2,3] [--quick] [--model NAME]
 //! isample selfcheck                      # manifest numerics vs live execution
 //! isample info [--backend native|pjrt]   # list models + artifacts
+//! isample worker --connect HOST:PORT     # internal: distributed chunk worker
 //! ```
 
 use anyhow::{bail, Context, Result};
 use isample::config::Args;
 use isample::coordinator::trainer::{Trainer, TrainerConfig};
 use isample::coordinator::StrategyKind;
+use isample::dist::{DistEngine, FaultPlan, WorkerConfig};
 use isample::figures::runner::{dataset_for, run_figure, FigOptions};
-use isample::runtime::{backend, checkpoint, Engine, NativeEngine};
+use isample::runtime::{backend, checkpoint, Backend, Engine, NativeEngine};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -26,6 +28,7 @@ fn main() -> Result<()> {
         "figure" => cmd_figure(&args, &artifacts),
         "selfcheck" => cmd_selfcheck(&artifacts),
         "info" => cmd_info(&args, &artifacts),
+        "worker" => cmd_worker(&args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -57,7 +60,17 @@ FLAGS     --presample B  --tau-th X  --a-tau X  --lr F  --seed S
                              to K steps of age; inf = re-score every cycle)
           --score-precision f32|bf16 (presample scoring precision; bf16 =
                              cheaper scoring, ranking-fidelity contract)
+          --dist-workers N (spawn N worker processes of this binary and farm
+                             chunk work over localhost TCP; native backend;
+                             bit-identical to serial for any N, including
+                             mid-run worker loss)
+          --dist-timeout-ms MS (per-chunk lease before a silent worker is
+                             dropped and its chunk requeued; default 2000)
           --eval-every SECS  --out PATH  --checkpoint PATH  --artifacts DIR
+
+WORKER    isample worker --connect HOST:PORT [--worker-id N] [--fault-plan SPEC]
+          (internal: spawned by --dist-workers; SPEC also read from
+           ISAMPLE_FAULT_PLAN, e.g. kill@3:1:0,stall@5:0:2:250,drop@7:2:1)
 "#;
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
@@ -65,7 +78,24 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let strategy_name = args.flag("strategy").unwrap_or("upper-bound");
     let strategy = StrategyKind::parse(strategy_name)
         .with_context(|| format!("unknown strategy {strategy_name:?}"))?;
-    let backend = backend::load(args.flag_backend()?, artifacts)?;
+    let dist_workers = args.flag_dist_workers()?;
+    let backend: Box<dyn Backend> = if dist_workers > 0 {
+        if args.flag("backend").is_some_and(|b| b != "native") {
+            bail!("--dist-workers shards the native engine; use --backend native or drop the flag");
+        }
+        let engine =
+            DistEngine::new(NativeEngine::with_default_models(), args.flag_dist_timeout_ms()?)?;
+        let exe = std::env::current_exe().context("locating the isample binary to spawn workers")?;
+        engine.spawn_process_workers(dist_workers, &exe, &FaultPlan::from_env()?)?;
+        engine.wait_for_workers(dist_workers)?;
+        println!(
+            "distributed: {dist_workers} worker process(es) connected to {}",
+            engine.coordinator().addr()
+        );
+        Box::new(engine)
+    } else {
+        backend::load(args.flag_backend()?, artifacts)?
+    };
     let mut cfg = TrainerConfig::base(&model, strategy);
     cfg.presample = args.flag_usize("presample", 0)?;
     cfg.tau_th = args.flag_f64("tau-th", cfg.tau_th)?;
@@ -104,6 +134,9 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         report.is_switch_step
     );
     println!("{}", trainer.timers.report());
+    for (step, msg) in &report.log.events {
+        println!("event @{step}: {msg}");
+    }
     if let Some(out) = args.flag("out") {
         report.log.to_csv(out)?;
         println!("metrics -> {out}");
@@ -153,6 +186,28 @@ fn cmd_selfcheck(artifacts: &str) -> Result<()> {
         bail!("{failed} selfchecks failed");
     }
     Ok(())
+}
+
+/// Internal entry point for the processes `--dist-workers` spawns: connect
+/// to the coordinator and serve chunk work until told to shut down. Faults
+/// come from `--fault-plan` or, failing that, the `ISAMPLE_FAULT_PLAN`
+/// environment variable (CI's deterministic injection channel).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .flag("connect")
+        .context("usage: isample worker --connect HOST:PORT [--worker-id N] [--fault-plan SPEC]")?;
+    let fault_plan = match args.flag("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::from_env()?,
+    };
+    let cfg = WorkerConfig {
+        worker_id: args.flag_u64("worker-id", 0)? as u32,
+        fault_plan,
+        exit_on_kill: true,
+        ..WorkerConfig::default()
+    };
+    let engine = NativeEngine::with_default_models();
+    isample::dist::run_worker(&engine, addr, &cfg)
 }
 
 fn cmd_info(args: &Args, artifacts: &str) -> Result<()> {

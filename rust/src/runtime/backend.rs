@@ -32,7 +32,7 @@ use xla::Literal;
 use super::engine::{Engine, ModelState, StepOutput};
 use super::manifest::ModelInfo;
 use super::native::NativeEngine;
-use super::score::ScorePrecision;
+use super::score::{ScoreKind, ScorePrecision};
 use super::tensor::HostTensor;
 
 /// An execution substrate for training, scoring and evaluation.
@@ -166,6 +166,24 @@ pub trait Backend: Sync {
         }
         *params = next;
         Ok(loss)
+    }
+
+    /// Whether a `kind` scoring pass already fans out across this
+    /// backend's own compute shards (distributed chunk fan-out, an
+    /// internally parallel oracle). When true the trainer runs its outer
+    /// `--score-workers` shard layer serially instead of stacking a second
+    /// parallelism layer on the same resources. Sharding is a scheduling
+    /// choice only — results are bit-identical either way.
+    fn scores_sharded_internally(&self, _kind: ScoreKind) -> bool {
+        false
+    }
+
+    /// Drain operational events (worker losses, chunk requeues,
+    /// degradation to in-process compute) accumulated since the last call.
+    /// Events describe *scheduling*, never results — the trainer logs them
+    /// without acting on them. Backends with no event stream return none.
+    fn drain_events(&self) -> Vec<String> {
+        Vec::new()
     }
 }
 

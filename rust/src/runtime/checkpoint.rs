@@ -1,18 +1,27 @@
 //! Checkpointing: save/restore a [`ModelState`] to a small self-describing
-//! binary format (magic, version, model name, per-tensor shape + f32 data).
-//! No external serialization crates are available offline, so the format is
-//! hand-rolled and covered by round-trip tests.
+//! binary format (magic, version, model name, per-tensor shape + f32 data,
+//! checksum trailer). No external serialization crates are available
+//! offline, so the format is hand-rolled and covered by round-trip tests.
+//!
+//! Crash safety: [`save`] writes a `<file>.tmp` sibling, fsyncs it, and
+//! atomically renames it into place — a crash mid-save leaves either the
+//! previous checkpoint or a stray `.tmp`, never a half-written file under
+//! the real name. The v2 format ends with the [`state_checksum`] of the
+//! serialized state; [`load`] recomputes it and fails with a descriptive
+//! error (never a panic) on corrupt or truncated files.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
+use xla::Literal;
 
 use super::engine::ModelState;
 use super::tensor::HostTensor;
 use crate::util::digest::{fnv1a64, fnv1a64_from};
 
-const MAGIC: &[u8; 8] = b"ISAMPLE\x01";
+const MAGIC: &[u8; 8] = b"ISAMPLE\x02";
+const MAGIC_V1: &[u8; 8] = b"ISAMPLE\x01";
 
 /// Order-sensitive checksum over everything [`save`] serializes (model
 /// name, step counter, parameter and momentum tensors by bit pattern).
@@ -33,67 +42,109 @@ pub fn state_checksum(state: &ModelState) -> Result<u64> {
     Ok(h)
 }
 
-/// Serialize params + momentum + step counter.
+/// `<file>.tmp` sibling [`save`] writes before renaming into place.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Serialize params + momentum + step counter, crash-safely: the bytes
+/// (including the checksum trailer) land in `<file>.tmp`, are fsynced, and
+/// only then renamed over `path`.
 pub fn save(state: &ModelState, path: impl AsRef<Path>) -> Result<()> {
-    let mut f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("creating {:?}", path.as_ref()))?;
-    f.write_all(MAGIC)?;
-    write_str(&mut f, &state.model)?;
-    f.write_all(&state.step.to_le_bytes())?;
-    for group in [&state.params, &state.mom] {
-        f.write_all(&(group.len() as u32).to_le_bytes())?;
-        for lit in group {
-            let t = HostTensor::from_literal(lit)?;
-            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-            for &d in &t.shape {
-                f.write_all(&(d as u32).to_le_bytes())?;
+    let path = path.as_ref();
+    let checksum = state_checksum(state)?;
+    let tmp = tmp_path(path);
+    {
+        let mut f =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &state.model)?;
+        f.write_all(&state.step.to_le_bytes())?;
+        for group in [&state.params, &state.mom] {
+            f.write_all(&(group.len() as u32).to_le_bytes())?;
+            for lit in group {
+                let t = HostTensor::from_literal(lit)?;
+                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    f.write_all(&(d as u32).to_le_bytes())?;
+                }
+                let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+                f.write_all(&bytes)?;
             }
-            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
-            f.write_all(&bytes)?;
+        }
+        f.write_all(&checksum.to_le_bytes())?;
+        // fsync before the rename: the rename must never expose bytes the
+        // kernel has not durably accepted
+        f.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+    // best-effort directory sync so the rename itself survives a crash
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
         }
     }
     Ok(())
 }
 
-/// Restore a state saved by [`save`].
+/// One tensor group (params or momentum) of the serialized body.
+fn read_group(f: &mut impl Read) -> Result<Vec<Literal>> {
+    let count = read_u32(f)? as usize;
+    let mut lits = Vec::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        let rank = read_u32(f)? as usize;
+        if rank > 16 {
+            bail!("unreasonable tensor rank {rank} in checkpoint");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(f)? as usize);
+        }
+        let nbytes = read_u64(f)? as usize;
+        if nbytes != shape.iter().product::<usize>() * 4 {
+            bail!("checkpoint tensor size mismatch");
+        }
+        let mut buf = vec![0u8; nbytes];
+        f.read_exact(&mut buf).context("checkpoint truncated mid-tensor")?;
+        let data: Vec<f32> =
+            buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        lits.push(HostTensor::new(shape, data).to_literal()?);
+    }
+    Ok(lits)
+}
+
+/// Restore a state saved by [`save`], verifying the checksum trailer: a
+/// corrupt or truncated file is a descriptive `Err`, never a panic.
 pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
-    let mut f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let path = path.as_ref();
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).context("checkpoint truncated before its magic")?;
+    if &magic == MAGIC_V1 {
+        bail!("checkpoint {path:?} is the pre-checksum v1 format; re-create it with this build");
+    }
     if &magic != MAGIC {
         bail!("not an isample checkpoint: bad magic");
     }
     let model = read_str(&mut f)?;
     let step = read_u64(&mut f)?;
-    let mut groups = Vec::with_capacity(2);
-    for _ in 0..2 {
-        let count = read_u32(&mut f)? as usize;
-        let mut lits = Vec::with_capacity(count);
-        for _ in 0..count {
-            let rank = read_u32(&mut f)? as usize;
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(read_u32(&mut f)? as usize);
-            }
-            let nbytes = read_u64(&mut f)? as usize;
-            if nbytes != shape.iter().product::<usize>() * 4 {
-                bail!("checkpoint tensor size mismatch");
-            }
-            let mut buf = vec![0u8; nbytes];
-            f.read_exact(&mut buf)?;
-            let data: Vec<f32> = buf
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            lits.push(HostTensor::new(shape, data).to_literal()?);
-        }
-        groups.push(lits);
+    let params = read_group(&mut f)?;
+    let mom = read_group(&mut f)?;
+    let expect = read_u64(&mut f).context("checkpoint truncated before its checksum trailer")?;
+    let state = ModelState { model, params, mom, step };
+    let got = state_checksum(&state)?;
+    if got != expect {
+        bail!(
+            "checkpoint {path:?} failed its checksum (stored {expect:#018x}, recomputed \
+             {got:#018x}): the file is corrupt"
+        );
     }
-    let mom = groups.pop().unwrap();
-    let params = groups.pop().unwrap();
-    Ok(ModelState { model, params, mom, step })
+    Ok(state)
 }
 
 fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
@@ -108,19 +159,19 @@ fn read_str(f: &mut impl Read) -> Result<String> {
         bail!("unreasonable string length in checkpoint");
     }
     let mut buf = vec![0u8; len];
-    f.read_exact(&mut buf)?;
+    f.read_exact(&mut buf).context("checkpoint truncated mid-string")?;
     String::from_utf8(buf).context("invalid utf8 in checkpoint")
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
+    f.read_exact(&mut b).context("checkpoint truncated")?;
     Ok(u32::from_le_bytes(b))
 }
 
 fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
+    f.read_exact(&mut b).context("checkpoint truncated")?;
     Ok(u64::from_le_bytes(b))
 }
 
@@ -185,6 +236,50 @@ mod tests {
         let back = load(&path).unwrap();
         assert_eq!(base, state_checksum(&back).unwrap(), "save/load must preserve the checksum");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_corruption_fails_with_a_clear_error() -> Result<()> {
+        let dir = std::env::temp_dir().join(format!("isample_ckpt_a_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("t.ckpt");
+        save(&tiny_state(), &path)?;
+        // the scratch file was renamed into place, not left behind
+        assert!(!tmp_path(&path).exists());
+        let bytes = std::fs::read(&path)?;
+        // flip one bit of tensor payload (just before the 8-byte trailer)
+        let mut bad = bytes.clone();
+        let k = bad.len() - 12;
+        bad[k] ^= 0x40;
+        std::fs::write(&path, &bad)?;
+        let err = match load(&path) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => String::new(),
+        };
+        assert!(err.contains("checksum"), "corruption must fail loudly, got {err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    }
+
+    #[test]
+    fn truncated_checkpoints_error_instead_of_panicking() -> Result<()> {
+        let dir = std::env::temp_dir().join(format!("isample_ckpt_t_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("t.ckpt");
+        save(&tiny_state(), &path)?;
+        let bytes = std::fs::read(&path)?;
+        // cut mid-body and mid-trailer: both must surface as descriptive
+        // errors, and a v2 file shorn of its trailer must never load
+        for cut in [bytes.len() / 2, bytes.len() - 4] {
+            std::fs::write(&path, &bytes[..cut])?;
+            let err = match load(&path) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => String::new(),
+            };
+            assert!(err.contains("truncated"), "cut={cut}: {err:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
     }
 
     #[test]

@@ -69,7 +69,7 @@ use super::kernels::MAX_BLOCK_ROWS;
 use super::layers::{row_loss, row_score, BlockScratch, Layer, LayerModel};
 use super::manifest::{ModelInfo, Selfcheck};
 use super::pool::{default_train_workers, ObjectPool, Task, WorkerPool};
-use super::score::{split_rows, NativeScorer, ScorePrecision};
+use super::score::{split_rows, NativeScorer, ScoreKind, ScorePrecision};
 use super::tensor::{f32_literal, literal_to_f32_vec, HostTensor};
 
 /// Row granularity of the deterministic train-side chunk plan. Chunks are
@@ -349,18 +349,12 @@ impl NativeEngine {
     /// Interior-mutable like [`set_train_workers`](Self::set_train_workers);
     /// takes effect on the next `fwd_scores` call.
     pub fn set_score_precision(&self, precision: ScorePrecision) {
-        let v = match precision {
-            ScorePrecision::F32 => 0,
-            ScorePrecision::Bf16 => 1,
-        };
-        self.score_precision.store(v, Ordering::SeqCst);
+        self.score_precision.store(precision.code(), Ordering::SeqCst);
     }
 
     pub fn score_precision(&self) -> ScorePrecision {
-        match self.score_precision.load(Ordering::SeqCst) {
-            0 => ScorePrecision::F32,
-            _ => ScorePrecision::Bf16,
-        }
+        ScorePrecision::from_code(self.score_precision.load(Ordering::SeqCst))
+            .unwrap_or(ScorePrecision::Bf16)
     }
 
     /// The shared pool at the current worker count (lazily spawned).
@@ -594,7 +588,7 @@ fn zero_grads_into(model: &LayerModel, grads: &mut Vec<Vec<f32>>) {
 }
 
 /// Pull a literal list to host tensors, checking the expected count.
-fn host_tensors(lits: &[Literal], expect: usize, what: &str) -> Result<Vec<Vec<f32>>> {
+pub(crate) fn host_tensors(lits: &[Literal], expect: usize, what: &str) -> Result<Vec<Vec<f32>>> {
     if lits.len() != expect {
         bail!("native model expects {expect} {what} tensors, got {}", lits.len());
     }
@@ -604,7 +598,7 @@ fn host_tensors(lits: &[Literal], expect: usize, what: &str) -> Result<Vec<Vec<f
 /// Rebuild the literal list from host tensors, in manifest param order.
 /// Borrows the tensors (the literal copies the data), so pooled buffers
 /// can be recycled after conversion.
-fn lits_from(info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<Vec<Literal>> {
+pub(crate) fn lits_from(info: &ModelInfo, tensors: &[Vec<f32>]) -> Result<Vec<Literal>> {
     info.params.iter().zip(tensors).map(|(spec, data)| f32_literal(&spec.shape, data)).collect()
 }
 
@@ -681,6 +675,186 @@ fn backward_pass_range(
     weighted_loss
 }
 
+/// One chunk's partial results from [`grad_chunk`]: a full-parameter-shape
+/// partial gradient, the chunk's `Σ coeffᵢ·lossᵢ` contribution, and the
+/// per-row losses and Eq.-20 scores the forward pass produced for free.
+#[derive(Debug, Clone)]
+pub struct ChunkGrad {
+    pub grads: Vec<Vec<f32>>,
+    pub weighted_loss: f64,
+    pub loss: Vec<f32>,
+    pub scores: Vec<f32>,
+}
+
+/// Chunk-level validation for the standalone chunk entry points: `x` is
+/// `[n, in_dim]`, labels match, and `params` matches the model's parameter
+/// specs. These entries run on wire-fed inputs (the distributed data
+/// plane), so they bail instead of trusting the caller.
+fn check_chunk(
+    model: &LayerModel,
+    params: &[Vec<f32>],
+    x: &HostTensor,
+    y: &[i32],
+) -> Result<usize> {
+    if params.len() != model.num_param_tensors()
+        || params.iter().zip(model.param_elems()).any(|(p, &e)| p.len() != e)
+    {
+        bail!("chunk params do not match the model's parameter shapes");
+    }
+    let d = model.in_dim();
+    if x.shape.len() != 2 || x.shape[1] != d {
+        bail!("chunk x shape {:?} does not match model expectation [n, {d}]", x.shape);
+    }
+    let n = x.shape[0];
+    if n == 0 {
+        bail!("empty chunk");
+    }
+    if y.len() != n {
+        bail!("chunk y length {} != rows {n}", y.len());
+    }
+    Ok(n)
+}
+
+/// One gradient chunk as a standalone computation: forward + backward over
+/// every row of `x` (a chunk already cut from its batch), scaling row `r`'s
+/// gradient contribution by `w[r]·scale` (or by `scale` alone when `w` is
+/// `None`). The body is exactly one chunk task of [`NativeEngine`]'s
+/// `batch_pass` — the distributed data plane runs chunks through here on
+/// workers and merges the partials in chunk order, bit-identical to the
+/// in-process run. Allocates its own scratch (no engine pools), so it is
+/// safe from any thread or process.
+pub fn grad_chunk(
+    model: &LayerModel,
+    params: &[Vec<f32>],
+    x: &HostTensor,
+    y: &[i32],
+    w: Option<&[f32]>,
+    scale: f32,
+) -> Result<ChunkGrad> {
+    let n = check_chunk(model, params, x, y)?;
+    let coeff = match w {
+        Some(w) => {
+            if w.len() != n {
+                bail!("chunk w length {} != rows {n}", w.len());
+            }
+            RowCoeff::Scaled { w, scale }
+        }
+        None => RowCoeff::Uniform(scale),
+    };
+    let mut arena = BlockScratch::new();
+    let mut grads = Vec::new();
+    zero_grads_into(model, &mut grads);
+    let mut loss = vec![0.0f32; n];
+    let mut scores = vec![0.0f32; n];
+    let weighted_loss = backward_pass_range(
+        model, params, x, y, coeff, 0, n, &mut arena, &mut grads, &mut loss, &mut scores,
+    );
+    Ok(ChunkGrad { grads, weighted_loss, loss, scores })
+}
+
+/// Score-only chunk: per-row (loss, Eq.-20 score) via the same block walk
+/// as `fwd_scores`. Pass `qparams` (from [`LayerModel::quantize_params`])
+/// to walk the bf16 kernels — the caller owns the narrowing so it can be
+/// cached per parameter version.
+pub fn score_chunk(
+    model: &LayerModel,
+    params: &[Vec<f32>],
+    qparams: Option<&[Vec<u16>]>,
+    x: &HostTensor,
+    y: &[i32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let n = check_chunk(model, params, x, y)?;
+    let d = x.shape[1];
+    let mut loss = vec![0.0f32; n];
+    let mut scores = vec![0.0f32; n];
+    let mut arena = BlockScratch::new();
+    let mut start = 0usize;
+    while start < n {
+        let rows = (n - start).min(MAX_BLOCK_ROWS);
+        let xb = &x.data[start * d..(start + rows) * d];
+        let yb = &y[start..start + rows];
+        let lw = &mut loss[start..start + rows];
+        let uw = &mut scores[start..start + rows];
+        if let Some(qp) = qparams {
+            model.scores_block_bf16(qp, xb, yb, rows, &mut arena, lw, uw);
+        } else {
+            model.scores_block(params, xb, yb, rows, &mut arena, lw, uw);
+        }
+        start += rows;
+    }
+    Ok((loss, scores))
+}
+
+/// Evaluation chunk: (sum of losses, number of correct predictions) over
+/// every row of `x` — one term of `eval_metrics`' fixed-order merge.
+pub fn eval_chunk(
+    model: &LayerModel,
+    params: &[Vec<f32>],
+    x: &HostTensor,
+    y: &[i32],
+) -> Result<(f64, i64)> {
+    let n = check_chunk(model, params, x, y)?;
+    let d = x.shape[1];
+    let mut arena = BlockScratch::new();
+    let mut sum_loss = 0.0f64;
+    let mut correct = 0i64;
+    let mut done = 0usize;
+    while done < n {
+        let rows = (n - done).min(MAX_BLOCK_ROWS);
+        model.eval_block(
+            params,
+            &x.data[done * d..(done + rows) * d],
+            &y[done..done + rows],
+            rows,
+            &mut arena,
+            &mut sum_loss,
+            &mut correct,
+        );
+        done += rows;
+    }
+    Ok((sum_loss, correct))
+}
+
+/// Gradient-norm chunk: the exact per-sample oracle over every row of `x`
+/// — one disjoint window of `grad_norms`' output.
+pub fn grad_norm_chunk(
+    model: &LayerModel,
+    params: &[Vec<f32>],
+    x: &HostTensor,
+    y: &[i32],
+) -> Result<Vec<f32>> {
+    let n = check_chunk(model, params, x, y)?;
+    let d = x.shape[1];
+    let mut arena = BlockScratch::new();
+    let mut out = vec![0.0f32; n];
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &x.data[r * d..(r + 1) * d];
+        *o = model.grad_norm_row(params, row, y[r], &mut arena);
+    }
+    Ok(out)
+}
+
+/// Eq. 2 with the manifest's optimizer: `g' = g + wd·θ; v ← μ·v + g';
+/// θ ← θ - lr·v`, element-wise in parameter order. Factored out of
+/// `train_step` so the distributed backend applies the byte-identical
+/// update to its merged gradient.
+pub fn sgd_update(
+    params: &mut [Vec<f32>],
+    mom: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    for ((pt, vt), gt) in params.iter_mut().zip(mom.iter_mut()).zip(grads) {
+        for ((pv, vv), &gv) in pt.iter_mut().zip(vt.iter_mut()).zip(gt) {
+            let g = gv + weight_decay * *pv;
+            *vv = momentum * *vv + g;
+            *pv -= lr * *vv;
+        }
+    }
+}
+
 impl Backend for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
@@ -696,6 +870,15 @@ impl Backend for NativeEngine {
 
     fn set_score_precision(&self, precision: ScorePrecision) {
         NativeEngine::set_score_precision(self, precision);
+    }
+
+    fn scores_sharded_internally(&self, kind: ScoreKind) -> bool {
+        // Once `grad_norms` is chunk-parallel over the train pool, that
+        // pool is the only real parallel layer — an outer `--score-workers`
+        // shard on top would funnel its chunks into the same pool and
+        // block. Forward-pass scoring is serial per call, so the outer
+        // layer keeps its threads there.
+        kind == ScoreKind::GradNorm && NativeEngine::train_workers(self) > 1
     }
 
     fn model_info(&self, model: &str) -> Result<&ModelInfo> {
@@ -746,15 +929,7 @@ impl Backend for NativeEngine {
             &mut loss_vec,
             &mut scores,
         );
-        // Eq. 2 with the manifest's optimizer: g' = g + wd·θ;
-        // v <- μ·v + g'; θ <- θ - lr·v.
-        for ((pt, vt), gt) in params.iter_mut().zip(mom.iter_mut()).zip(&grads) {
-            for ((pv, vv), &gv) in pt.iter_mut().zip(vt.iter_mut()).zip(gt) {
-                let g = gv + self.weight_decay * *pv;
-                *vv = self.momentum * *vv + g;
-                *pv -= lr * *vv;
-            }
-        }
+        sgd_update(&mut params, &mut mom, &grads, lr, self.momentum, self.weight_decay);
         self.grad_bufs.put(grads);
         state.params = lits_from(&m.info, &params)?;
         state.mom = lits_from(&m.info, &mom)?;

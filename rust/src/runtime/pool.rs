@@ -29,6 +29,7 @@
 //! engine fans out allocate nothing in steady state.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -55,6 +56,8 @@ pub struct WorkerPool {
     /// toolchain; `run` clones the sender once per call.
     tx: Mutex<Option<Sender<Job>>>,
     handles: Vec<JoinHandle<()>>,
+    /// Advisory jobs whose panic [`submit`](Self::submit) swallowed.
+    panicked: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
@@ -69,11 +72,18 @@ impl WorkerPool {
                 std::thread::spawn(move || worker_loop(&rx))
             })
             .collect();
-        Self { workers, tx: Mutex::new(Some(tx)), handles }
+        Self { workers, tx: Mutex::new(Some(tx)), handles, panicked: Arc::new(AtomicUsize::new(0)) }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// How many advisory jobs queued through [`submit`](Self::submit) have
+    /// panicked so far. Diagnostics only: `run` task panics are re-raised
+    /// on the caller instead and never counted here.
+    pub fn panicked_jobs(&self) -> usize {
+        self.panicked.load(Ordering::Relaxed)
     }
 
     /// Fire-and-forget: queue a self-contained (`'static`) job on the pool
@@ -87,8 +97,11 @@ impl WorkerPool {
         let Some(tx) = self.tx.lock().unwrap().clone() else {
             return;
         };
+        let panicked = Arc::clone(&self.panicked);
         let job: Job = Box::new(move || {
-            let _ = catch_unwind(AssertUnwindSafe(job));
+            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                panicked.fetch_add(1, Ordering::Relaxed);
+            }
         });
         let _ = tx.send(job);
     }

@@ -107,6 +107,26 @@ impl ScorePrecision {
             _ => None,
         }
     }
+
+    /// Wire/atomic encoding of the precision (0 = f32, 1 = bf16) — the
+    /// byte that travels in a distributed score work order and sits in
+    /// `NativeEngine`'s interior-mutable precision cell.
+    pub fn code(self) -> u8 {
+        match self {
+            ScorePrecision::F32 => 0,
+            ScorePrecision::Bf16 => 1,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code); `None` on unknown bytes (a
+    /// malformed wire frame, never a panic).
+    pub fn from_code(code: u8) -> Option<ScorePrecision> {
+        match code {
+            0 => Some(ScorePrecision::F32),
+            1 => Some(ScorePrecision::Bf16),
+            _ => None,
+        }
+    }
 }
 
 /// Scoring workers to use when the user does not say: one per core.
@@ -586,8 +606,10 @@ mod tests {
         assert_eq!(ScorePrecision::default(), ScorePrecision::F32);
         for p in [ScorePrecision::F32, ScorePrecision::Bf16] {
             assert_eq!(ScorePrecision::parse(p.name()), Some(p));
+            assert_eq!(ScorePrecision::from_code(p.code()), Some(p));
         }
         assert_eq!(ScorePrecision::parse("fp16"), None);
+        assert_eq!(ScorePrecision::from_code(2), None);
     }
 
     #[test]

@@ -96,6 +96,38 @@ fn submitted_jobs_drain_before_drop_and_panics_are_swallowed() {
     assert_eq!(count.load(Ordering::Relaxed), n);
 }
 
+/// A panicking advisory job must not poison later `run` rounds: the
+/// `submit` wrapper swallows the unwind on the worker thread (counting it
+/// in `panicked_jobs`), and the *same* thread then serves borrowed-task
+/// rounds correctly. One worker + the FIFO job channel make this
+/// deterministic without timing loops: the first `run` round's tasks queue
+/// behind every submitted job, so its return is a barrier proving all the
+/// panics already unwound and were contained.
+#[test]
+fn panicking_submitted_jobs_do_not_poison_later_run_rounds() {
+    let scale = stress_scale();
+    let n = 3 * scale;
+    let pool = WorkerPool::new(1);
+    let ran = Arc::new(AtomicUsize::new(0));
+    for i in 0..n {
+        let ran = Arc::clone(&ran);
+        pool.submit(move || {
+            ran.fetch_add(1, Ordering::Relaxed);
+            panic!("advisory job {i} exploding on purpose");
+        });
+    }
+    let data: Vec<u64> = (0..(16 * scale as u64)).collect();
+    for round in 0..3usize {
+        let chunks: Vec<&[u64]> = data.chunks(5).collect();
+        let tasks: Vec<Task<u64>> =
+            chunks.iter().map(|c| Box::new(move || c.iter().sum()) as Task<u64>).collect();
+        let want: Vec<u64> = chunks.iter().map(|c| c.iter().sum()).collect();
+        assert_eq!(pool.run(tasks), want, "round {round} after swallowed panics");
+    }
+    assert_eq!(pool.panicked_jobs(), n, "every advisory panic is counted, none escaped");
+    assert_eq!(ran.load(Ordering::Relaxed), n);
+}
+
 /// Concurrent strided readers over a shard store with a resident budget of
 /// one — constant eviction — plus background readahead racing the readers
 /// through the `Mutex`/`Condvar` in-flight protocol. The determinism

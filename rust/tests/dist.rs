@@ -1,0 +1,169 @@
+//! Golden determinism + fault-tolerance tests for the distributed engine
+//! (ISSUE 10 tentpole): the fixed-seed 200-step Algorithm-1 run pinned by
+//! `golden_native.rs` must produce the *same* loss-trajectory digest and
+//! final-state checksum when its chunk work is farmed out to 1, 2 or 4
+//! workers over the wire protocol — and when deterministic fault injection
+//! kills, stalls and silences workers mid-run. Faults may change
+//! scheduling (who computes which chunk, and when); they may never change
+//! results (fixed chunk plan + ordered merge).
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use isample::coordinator::trainer::{Trainer, TrainerConfig};
+use isample::data::synthetic::SyntheticImages;
+use isample::dist::{DistEngine, FaultPlan, ENV_FAULT_PLAN};
+use isample::runtime::checkpoint::state_checksum;
+use isample::runtime::{Backend, HostTensor, NativeEngine, NativeModelSpec};
+use isample::util::digest::digest_f64;
+
+fn gold_engine() -> NativeEngine {
+    let mut ne = NativeEngine::new();
+    ne.register(NativeModelSpec::mlp("gold", 32, 24, 4, 32, 64, vec![128]));
+    ne
+}
+
+fn gold_split() -> isample::data::Split<SyntheticImages> {
+    SyntheticImages::builder(32, 4).samples(2_048).test_samples(256).seed(11).split()
+}
+
+fn gold_config() -> TrainerConfig {
+    TrainerConfig::upper_bound("gold")
+        .with_steps(200)
+        .with_presample(128)
+        .with_tau_th(0.95)
+        .with_seed(5)
+        .with_score_workers(2)
+        .with_train_workers(1)
+}
+
+/// Run the pinned 200-step golden config on `backend`; returns the
+/// (loss-trajectory digest, final-state checksum) fingerprint plus the
+/// operational events the run logged.
+fn fingerprint(backend: &dyn Backend) -> ((u64, u64), Vec<(u64, String)>) {
+    let split = gold_split();
+    let mut tr = Trainer::new(backend, gold_config()).unwrap();
+    let report = tr.run(&split.train, None).unwrap();
+    assert_eq!(report.steps, 200);
+    assert_eq!(report.is_switch_step, Some(2), "IS must engage right after warmup");
+    let traj = digest_f64(report.log.rows.iter().map(|r| r.train_loss));
+    ((traj, state_checksum(&tr.state).unwrap()), report.log.events)
+}
+
+/// The in-process serial reference, computed once per test binary.
+fn serial_golden() -> (u64, u64) {
+    static SERIAL: OnceLock<(u64, u64)> = OnceLock::new();
+    *SERIAL.get_or_init(|| fingerprint(&gold_engine()).0)
+}
+
+/// Golden run over `workers` in-process thread workers (same wire
+/// protocol, coordinator and chunk leases as process mode) with the given
+/// fault plan; returns the fingerprint and events.
+fn dist_run(workers: usize, lease_ms: u64, plan: &str) -> ((u64, u64), Vec<(u64, String)>) {
+    let engine = DistEngine::new(gold_engine(), lease_ms).unwrap();
+    let plan = FaultPlan::parse(plan).unwrap();
+    engine.spawn_thread_workers(workers, &plan);
+    engine.wait_for_workers(workers).unwrap();
+    fingerprint(&engine)
+}
+
+#[test]
+fn dist_golden_matches_serial_w1() {
+    assert_eq!(dist_run(1, 2_000, "").0, serial_golden());
+}
+
+#[test]
+fn dist_golden_matches_serial_w2() {
+    assert_eq!(dist_run(2, 2_000, "").0, serial_golden());
+}
+
+#[test]
+fn dist_golden_matches_serial_w4() {
+    assert_eq!(dist_run(4, 2_000, "").0, serial_golden());
+}
+
+/// Deterministic fault injection: a worker killed mid-run, another stalled
+/// past nothing (50ms, within the lease), a third silently dropping a
+/// reply (which *must* blow the lease and requeue). The digest may not
+/// move by a single bit.
+#[test]
+fn dist_golden_survives_fault_injection() {
+    let (got, _) = dist_run(4, 250, "kill@80:1:0,stall@40:2:1:50,drop@120:3:0");
+    assert_eq!(got, serial_golden(), "faults changed the trajectory — determinism broken");
+}
+
+/// Degradation ladder, bottom rung: the only worker dies and the
+/// coordinator finishes the run on the in-process engine, logging the
+/// transition — and the digest still matches serial exactly.
+#[test]
+fn all_workers_lost_falls_back_in_process() {
+    let (got, events) = dist_run(1, 250, "kill@50:0:0");
+    assert_eq!(got, serial_golden());
+    assert!(
+        events.iter().any(|(_, m)| m.contains("all remote workers lost")),
+        "degradation to in-process compute must be logged; events: {events:?}"
+    );
+}
+
+/// CI's env-driven fault leg: when `ISAMPLE_FAULT_PLAN` is set, rerun the
+/// golden under that plan and require the fault-free digest. A plain
+/// `cargo test` (no env) skips — the deterministic plans above already
+/// cover the library-level contract.
+#[test]
+fn ci_env_fault_plan_reproduces_digest() {
+    let Ok(spec) = std::env::var(ENV_FAULT_PLAN) else {
+        return;
+    };
+    let (got, _) = dist_run(2, 500, &spec);
+    assert_eq!(got, serial_golden(), "fault plan {spec:?} changed the golden digest");
+}
+
+/// A deterministic pseudo-random batch sized for `model` on `backend`.
+fn demo_batch(backend: &dyn Backend, model: &str, n: usize) -> (HostTensor, Vec<i32>) {
+    let info = backend.model_info(model).unwrap();
+    let d = info.feature_dim;
+    let mut x = vec![0.0f32; n * d];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40) as f32 / 16_777_216.0;
+    }
+    let y = (0..n).map(|i| (i % info.num_classes) as i32).collect();
+    (HostTensor::new(vec![n, d], x), y)
+}
+
+/// Real subprocess workers (the `isample worker` mode CI's dist-smoke
+/// exercises): two processes serve train/score/eval/grad-norm chunks, one
+/// is killed by fault injection on the second step, and every output stays
+/// bit-identical to a pure in-process engine.
+#[test]
+fn process_workers_are_bit_identical_and_survive_kill() {
+    let reference = NativeEngine::with_default_models();
+    let dist = DistEngine::new(NativeEngine::with_default_models(), 1_500).unwrap();
+    let exe = Path::new(env!("CARGO_BIN_EXE_isample"));
+    let plan = FaultPlan::parse("kill@1:1:0").unwrap();
+    dist.spawn_process_workers(2, exe, &plan).unwrap();
+    dist.wait_for_workers(2).unwrap();
+
+    let model = "mlp10";
+    let (x, y) = demo_batch(&reference, model, 48);
+    let w = vec![1.0f32; 48];
+    let mut rs = reference.init_state(model, 9).unwrap();
+    let mut ds = dist.init_state(model, 9).unwrap();
+    for step in 0..4 {
+        let a = reference.train_step(&mut rs, &x, &y, &w, 0.05).unwrap();
+        let b = dist.train_step(&mut ds, &x, &y, &w, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+        assert_eq!(a.loss_vec, b.loss_vec, "step {step} loss vector");
+        assert_eq!(a.scores, b.scores, "step {step} scores");
+    }
+    assert_eq!(
+        state_checksum(&rs).unwrap(),
+        state_checksum(&ds).unwrap(),
+        "post-kill parameter state diverged from in-process"
+    );
+    assert_eq!(reference.fwd_scores(&rs, &x, &y).unwrap(), dist.fwd_scores(&ds, &x, &y).unwrap());
+    assert_eq!(
+        reference.eval_metrics(&rs, &x, &y).unwrap(),
+        dist.eval_metrics(&ds, &x, &y).unwrap()
+    );
+    assert_eq!(reference.grad_norms(&rs, &x, &y).unwrap(), dist.grad_norms(&ds, &x, &y).unwrap());
+}
